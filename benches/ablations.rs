@@ -1,0 +1,76 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   1. n-step returns for MAD4PG (n = 1 vs 5)
+//!   2. replay stabilisation fingerprints on smac_lite MADQN
+//!   3. samples-per-insert rate limiting (2 vs 16)
+//!   4. networked vs centralised vs decentralised critics on spread
+//!
+//! Scale with MAVA_BENCH_SCALE (default: short 15-20k-step curves).
+
+use mava::arch::Architecture;
+use mava::bench;
+use mava::config::TrainConfig;
+
+fn base(system: &str, preset: &str, steps: u64, seed: u64) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.system = system.into();
+    c.preset = preset.into();
+    c.num_executors = 2;
+    c.max_env_steps = steps;
+    c.min_replay = 500;
+    c.samples_per_insert = 8.0;
+    c.lr = 1e-3;
+    c.eval_every_steps = (steps / 8).max(1);
+    c.eval_episodes = 8;
+    c.seed = seed;
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = (16_000.0 * bench::scale()) as u64;
+
+    bench::section("ablation: MAD4PG n-step (spread3)");
+    for n_step in [1usize, 5] {
+        let mut c = base("mad4pg", "spread3", steps, 21);
+        c.n_step = n_step;
+        c.noise_sigma = 0.3;
+        bench::figure_run("abl_nstep", &format!("n{n_step}"), &c, 600)?;
+    }
+
+    bench::section("ablation: fingerprint stabilisation (smac MADQN)");
+    for (preset, label) in [("smac3m", "plain"), ("smac3m_fp", "fingerprint")] {
+        let mut c = base("madqn", preset, steps, 23);
+        c.eps_decay_steps = steps / 2;
+        bench::figure_run("abl_fingerprint", label, &c, 600)?;
+    }
+
+    bench::section("ablation: samples-per-insert rate limit (vdn smac)");
+    for spi in [8.0f64, 64.0] {
+        let mut c = base("vdn", "smac3m", steps, 25);
+        c.samples_per_insert = spi;
+        c.eps_decay_steps = steps / 2;
+        let r = bench::figure_run(
+            "abl_spi",
+            &format!("spi{spi}"),
+            &c,
+            600,
+        )?;
+        println!(
+            "  spi={spi}: {} train steps for {} env steps",
+            r.train_steps, r.env_steps
+        );
+    }
+
+    bench::section("ablation: critic architecture (mad4pg spread3)");
+    for arch in [
+        Architecture::Decentralised,
+        Architecture::Centralised,
+        Architecture::Networked,
+    ] {
+        let mut c = base("mad4pg", "spread3", steps, 27);
+        c.arch = arch;
+        c.n_step = 5;
+        c.noise_sigma = 0.3;
+        bench::figure_run("abl_arch", arch.tag(), &c, 600)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Paper Figure 4 (top): switch riddle — MADQN with communication (DIAL)
+//! vs plain recurrent MADQN. Expected shape: DIAL's return climbs toward
+//! +1 (learned protocol), plain MADQN hovers near the guessing baseline.
+//!
+//! Scale with MAVA_BENCH_SCALE (default curves: 30k env steps each).
+
+use mava::bench;
+use mava::config::TrainConfig;
+
+fn cfg(system: &str, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.system = system.into();
+    c.preset = "switch3".into();
+    c.num_executors = 2;
+    c.max_env_steps = steps;
+    c.min_replay = 200;
+    c.replay_size = 20_000;
+    c.samples_per_insert = 32.0;
+    c.lr = 5e-4;
+    c.tau = 0.01;
+    c.eps_decay_steps = steps * 2 / 3;
+    c.eps_end = 0.02;
+    c.eval_every_steps = (steps / 12).max(1);
+    c.eval_episodes = 40;
+    c.seed = 7;
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = (30_000.0 * bench::scale()) as u64;
+    bench::section("Fig 4 (top): switch riddle — communication ablation");
+    let dial = bench::figure_run("fig4_switch", "dial", &cfg("dial", steps), 600)?;
+    let plain =
+        bench::figure_run("fig4_switch", "madqn_rec", &cfg("madqn_rec", steps), 600)?;
+    println!(
+        "\nshape check: DIAL best {:+.3} vs plain MADQN best {:+.3} \
+         (paper: comm wins)",
+        dial.best_return(),
+        plain.best_return()
+    );
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Paper Figure 6 (bottom-right): distributed training — evaluation
+//! return vs *wall-clock time* for 1, 2 and 4 executors (MAD4PG on
+//! multi-walker). Expected shape: >1 executor reaches good returns in
+//! less wall time, with diminishing returns from 2 -> 4.
+//!
+//! Every run gets the same wall-clock budget; the curves differ in how
+//! fast data is generated (replay's SampleToInsertRatio keeps the
+//! trainer honest as executors are added).
+//!
+//! Scale with MAVA_BENCH_SCALE (default: 60s budget per setting).
+
+use mava::bench;
+use mava::config::TrainConfig;
+
+fn cfg(executors: usize, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.system = "mad4pg".into();
+    c.preset = "walker3".into();
+    c.num_executors = executors;
+    c.max_env_steps = steps;
+    c.n_step = 5;
+    c.noise_sigma = 0.3;
+    c.min_replay = 1_000;
+    c.replay_size = 100_000;
+    c.samples_per_insert = 32.0;
+    c.lr = 1e-3;
+    c.eval_every_steps = 2_000;
+    c.eval_episodes = 5;
+    c.seed = 17;
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget_s = (60.0 * bench::scale()) as u64;
+    // env-step cap high enough that wall clock is the binding budget
+    let steps = 10_000_000;
+    bench::section(
+        "Fig 6 (bottom-right): return vs wall time for 1/2/4 executors",
+    );
+    let mut results = Vec::new();
+    for n in [1usize, 2, 4] {
+        let r = bench::figure_run(
+            "fig6_distribution",
+            &format!("executors_{n}"),
+            &cfg(n, steps),
+            budget_s,
+        )?;
+        results.push((n, r));
+    }
+    println!("\nshape check (same wall budget {budget_s}s):");
+    for (n, r) in &results {
+        println!(
+            "  {n} executor(s): {:>8} env steps, {:>6} train steps, \
+             best return {:.2}, time-to(5.0) {:?}",
+            r.env_steps,
+            r.train_steps,
+            r.best_return(),
+            r.time_to(5.0)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Paper Figure 6 (mid-right): Multi-Walker — decentralised vs
+//! centralised MAD4PG. Expected shape: decentralised solves the task;
+//! the centralised critic does *not* help (paper: "centralised training
+//! does not seem to help ... consistent with Gupta et al. (2017)").
+//!
+//! Scale with MAVA_BENCH_SCALE (default: 40k env steps per arch).
+
+use mava::arch::Architecture;
+use mava::bench;
+use mava::config::TrainConfig;
+
+fn cfg(arch: Architecture, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.system = "mad4pg".into();
+    c.preset = "walker3".into();
+    c.arch = arch;
+    c.num_executors = 2;
+    c.max_env_steps = steps;
+    c.n_step = 5;
+    c.noise_sigma = 0.3;
+    c.min_replay = 1_000;
+    c.replay_size = 100_000;
+    c.samples_per_insert = 32.0;
+    c.lr = 1e-3;
+    c.tau = 0.01;
+    c.eval_every_steps = (steps / 10).max(1);
+    c.eval_episodes = 10;
+    c.seed = 13;
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = (40_000.0 * bench::scale()) as u64;
+    bench::section("Fig 6 (mid-right): multi-walker — dec vs cen MAD4PG");
+    let dec = bench::figure_run(
+        "fig6_walker",
+        "decentralised",
+        &cfg(Architecture::Decentralised, steps),
+        900,
+    )?;
+    let cen = bench::figure_run(
+        "fig6_walker",
+        "centralised",
+        &cfg(Architecture::Centralised, steps),
+        900,
+    )?;
+    println!(
+        "\nshape check: decentralised best {:.2}, centralised best {:.2} \
+         (paper: centralised does not help)",
+        dec.best_return(),
+        cen.best_return()
+    );
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! Micro-benchmarks of the hot paths: replay insert/sample, environment
+//! stepping, PJRT policy-call latency and train-step latency. These are
+//! the numbers the §Perf pass in EXPERIMENTS.md tracks.
+
+use std::sync::Arc;
+
+use mava::bench::{report, section, time};
+use mava::core::{Actions, HostTensor, StepType};
+use mava::replay::{Item, Table, Transition};
+use mava::rng::Rng;
+use mava::runtime::Engine;
+use mava::systems::{self, Executor, SystemKind, Trainer};
+
+fn bench_replay() {
+    section("replay table");
+    let table = Arc::new(Table::uniform(100_000, 1, 0));
+    let tr = Transition {
+        obs: vec![0.5; 90],
+        state: vec![0.5; 90],
+        actions_disc: vec![1; 3],
+        actions_cont: vec![],
+        rewards: vec![0.1; 3],
+        discount: 1.0,
+        next_obs: vec![0.5; 90],
+        next_state: vec![0.5; 90],
+    };
+    let t2 = table.clone();
+    let trc = tr.clone();
+    let s = time(100, 20_000, move || {
+        t2.insert(Item::Transition(trc.clone()), 1.0);
+    });
+    report("replay_insert_smac_transition", &s);
+
+    for _ in 0..10_000 {
+        table.insert(Item::Transition(tr.clone()), 1.0);
+    }
+    let t3 = table.clone();
+    let s = time(10, 500, move || {
+        let b = t3.sample(128).unwrap();
+        std::hint::black_box(b.len());
+    });
+    report("replay_sample_batch128", &s);
+}
+
+fn bench_envs() {
+    section("environment stepping (per env step)");
+    let mut rng = Rng::new(0);
+    for preset in ["matrix2", "switch3", "smac3m", "spread3", "walker3"] {
+        let mut env = systems::env_for_preset(preset, 0, None).unwrap();
+        let spec = env.spec().clone();
+        let mut ts = env.reset();
+        let mut r = rng.fork();
+        let s = time(100, 20_000, move || {
+            if ts.step_type == StepType::Last {
+                ts = env.reset();
+            }
+            let actions = if spec.discrete() {
+                Actions::Discrete(
+                    (0..spec.n_agents)
+                        .map(|i| {
+                            if let Some(l) = &ts.legal_actions {
+                                let ids: Vec<usize> = (0..spec.n_actions())
+                                    .filter(|&k| l[i][k])
+                                    .collect();
+                                ids[r.below(ids.len())] as i32
+                            } else {
+                                r.below(spec.n_actions()) as i32
+                            }
+                        })
+                        .collect(),
+                )
+            } else {
+                Actions::Continuous(vec![
+                    vec![0.1; spec.n_actions()];
+                    spec.n_agents
+                ])
+            };
+            ts = env.step(&actions);
+        });
+        report(&format!("env_step_{preset}"), &s);
+    }
+}
+
+fn bench_runtime() {
+    section("PJRT runtime (policy call B=1, train step)");
+    let Ok(mut engine) = Engine::load("artifacts") else {
+        println!("artifacts missing; skipping runtime benches");
+        return;
+    };
+    // policy latency: smac3m madqn (pallas agent_net path)
+    let policy = engine.artifact("smac3m_madqn_policy").unwrap();
+    let p = engine.read_init("smac3m_madqn_train", "params0").unwrap();
+    let params = HostTensor::f32(vec![p.len()], p.clone());
+    let obs = HostTensor::f32(vec![1, 3, 30], vec![0.3; 90]);
+    let s = time(50, 2_000, || {
+        let out = policy.call(&[&params, &obs]).unwrap();
+        std::hint::black_box(out[0].as_f32()[0]);
+    });
+    report("policy_call_smac3m_madqn", &s);
+
+    // full executor act (tensor assembly + call + eps-greedy)
+    let mut executor = Executor::new(
+        SystemKind::Madqn,
+        policy.clone(),
+        p.clone(),
+        3,
+    )
+    .unwrap();
+    let mut env = systems::env_for_preset("smac3m", 1, None).unwrap();
+    let mut ts = env.reset();
+    let s = time(50, 2_000, move || {
+        if ts.step_type == StepType::Last {
+            ts = env.reset();
+        }
+        let a = executor.select_actions(&ts, 0.1, 0.0).unwrap();
+        ts = env.step(&a);
+    });
+    report("executor_step_smac3m_madqn", &s);
+
+    // train step latency per system family
+    for name in [
+        "smac3m_madqn_train",
+        "smac3m_vdn_train",
+        "smac3m_qmix_train",
+        "spread3_mad4pg_dec_train",
+        "switch3_dial_train",
+    ] {
+        let art = engine.artifact(name).unwrap();
+        let params0 = engine.read_init(name, "params0").unwrap();
+        let opt0 = engine.read_init(name, "opt0").unwrap();
+        let kind = if name.contains("vdn") {
+            SystemKind::Vdn
+        } else if name.contains("qmix") {
+            SystemKind::Qmix
+        } else if name.contains("mad4pg") {
+            SystemKind::Mad4pg
+        } else if name.contains("dial") {
+            SystemKind::Dial
+        } else {
+            SystemKind::Madqn
+        };
+        let mut trainer = Trainer::new(
+            kind.family(),
+            art.clone(),
+            params0,
+            opt0,
+            1e-3,
+            0.01,
+            7,
+        )
+        .unwrap();
+        trainer.init_target_from_params();
+        // feed a synthetic table
+        let table = Arc::new(Table::uniform(4_096, 1, 0));
+        fill_table(&table, kind, &art.spec, trainer.batch_size());
+        let s = time(3, 30, move || {
+            trainer.step(&table).unwrap();
+        });
+        report(&format!("train_step_{name}"), &s);
+    }
+}
+
+fn fill_table(
+    table: &Arc<Table>,
+    kind: SystemKind,
+    spec: &mava::runtime::ArtifactSpec,
+    batch: usize,
+) {
+    let n = spec.meta_usize("n_agents").unwrap();
+    let o = spec.meta_usize("obs_dim").unwrap();
+    let a = spec.meta_usize("act_dim").unwrap();
+    let s_dim = spec.meta_usize("state_dim").unwrap();
+    let t_len = spec.meta_usize("seq_len").unwrap();
+    let mut rng = Rng::new(3);
+    for _ in 0..(batch * 4) {
+        if kind.sequences() {
+            let seq = mava::replay::Sequence {
+                t: t_len,
+                obs: (0..(t_len + 1) * n * o).map(|_| rng.f32()).collect(),
+                actions: (0..t_len * n).map(|_| rng.below(a) as i32).collect(),
+                rewards: vec![0.1; t_len * n],
+                discounts: vec![1.0; t_len],
+                mask: vec![1.0; t_len],
+            };
+            table.insert(Item::Sequence(seq), 1.0);
+        } else {
+            let tr = Transition {
+                obs: (0..n * o).map(|_| rng.f32()).collect(),
+                state: vec![0.2; s_dim],
+                actions_disc: if kind.discrete() {
+                    (0..n).map(|_| rng.below(a) as i32).collect()
+                } else {
+                    vec![]
+                },
+                actions_cont: if kind.discrete() {
+                    vec![]
+                } else {
+                    vec![0.3; n * a]
+                },
+                rewards: vec![0.1; n],
+                discount: 1.0,
+                next_obs: (0..n * o).map(|_| rng.f32()).collect(),
+                next_state: vec![0.2; s_dim],
+            };
+            table.insert(Item::Transition(tr), 1.0);
+        }
+    }
+}
+
+fn main() {
+    bench_replay();
+    bench_envs();
+    bench_runtime();
+}

@@ -1,0 +1,53 @@
+//! MAD4PG (distributional MADDPG, n-step) on MPE simple_spread —
+//! the continuous-control workload of paper Fig 6 (top-right).
+//!
+//! ```bash
+//! cargo run --release --example train_mpe_mad4pg -- [env_steps] [arch]
+//! # arch: dec | cen | net
+//! ```
+
+use anyhow::Result;
+use mava::arch::Architecture;
+use mava::config::TrainConfig;
+use mava::systems;
+
+fn main() -> Result<()> {
+    let max_env_steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(40_000);
+    let arch = std::env::args()
+        .nth(2)
+        .and_then(|s| Architecture::parse(&s))
+        .unwrap_or(Architecture::Decentralised);
+
+    let mut cfg = TrainConfig::default();
+    cfg.system = "mad4pg".into();
+    cfg.preset = "spread3".into();
+    cfg.arch = arch;
+    cfg.num_executors = 2;
+    cfg.max_env_steps = max_env_steps;
+    cfg.n_step = 5;
+    cfg.noise_sigma = 0.3;
+    cfg.min_replay = 1_000;
+    cfg.samples_per_insert = 8.0;
+    cfg.lr = 1e-3;
+    cfg.eval_every_steps = max_env_steps / 16;
+    cfg.eval_episodes = 10;
+    systems::check_artifacts(&cfg)?;
+
+    println!("MAD4PG ({arch}) on simple_spread: {max_env_steps} env steps");
+    let result = systems::train(&cfg, None)?;
+    for e in &result.evals {
+        println!(
+            "  t={:>7.1}s env={:>7} return={:>8.2}",
+            e.wall_s, e.env_steps, e.mean_return
+        );
+    }
+    println!(
+        "best eval return {:.2} (higher = landmarks covered; random ~ -60)",
+        result.best_return()
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+"""AOT driver: lower every artifact in the catalogue to HLO text.
+
+Emits, under ``--out-dir`` (default ../artifacts):
+  <name>.hlo.txt        — HLO text (NOT a serialized proto: the runtime's
+                          xla_extension 0.5.1 rejects jax>=0.5's 64-bit
+                          instruction ids; the text parser reassigns ids)
+  <name>_params0.f32bin — raw little-endian f32 initial parameters
+  <name>_opt0.f32bin    — raw little-endian f32 initial Adam state
+  manifest.txt          — line-based artifact index parsed by
+                          rust/src/runtime/manifest.rs
+
+Usage: (from python/) python -m compile.aot [--out-dir DIR] [--only SUBSTR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+from .hlo import lower_to_hlo_text
+from .model import catalogue
+
+_DT = {"float32": "f32", "int32": "i32"}
+
+
+def _manifest_entry(art, fname: str, inits: list) -> str:
+    lines = [f"artifact {art.name}", f"file {fname}"]
+    for (name, dt, shape) in art.inputs:
+        dims = " ".join(str(d) for d in shape)
+        lines.append(f"input {name} {_DT[dt]} {dims}".rstrip())
+    for (name, dt, shape) in art.outputs:
+        dims = " ".join(str(d) for d in shape)
+        lines.append(f"output {name} {_DT[dt]} {dims}".rstrip())
+    for k, v in art.meta.items():
+        lines.append(f"meta {k} {v}")
+    for (name, f, n) in inits:
+        lines.append(f"init {name} {f} {n}")
+    lines.append("end")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None,
+                    help="only lower artifacts whose name contains SUBSTR")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    t_all = time.time()
+    for art in catalogue():
+        if args.only and args.only not in art.name:
+            continue
+        t0 = time.time()
+        text = lower_to_hlo_text(art.fn, *art.example_args())
+        fname = f"{art.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        inits = []
+        for init_name, arr in art.init.items():
+            arr = np.asarray(arr, dtype=np.float32)
+            bin_name = f"{art.name}_{init_name}.f32bin"
+            arr.tofile(os.path.join(out_dir, bin_name))
+            inits.append((init_name, bin_name, arr.size))
+        entries.append(_manifest_entry(art, fname, inits))
+        print(f"  lowered {art.name:<40s} {len(text):>9d} chars "
+              f"({time.time() - t0:.1f}s)", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(entries) + "\n")
+    print(f"wrote {len(entries)} artifacts to {out_dir} "
+          f"in {time.time() - t_all:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""AOT lowering helpers: jax function -> HLO *text* for the rust runtime.
+
+HLO text (not ``lowered.compile().serialize()`` / HloModuleProto bytes) is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser on the rust side reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, *example_args) -> str:
+    """Lower ``jax.jit(fn)`` at the example args' shapes and return HLO text.
+
+    The computation is lowered with ``return_tuple=True`` so the rust side
+    always unwraps a tuple (``Literal::to_tuple``), regardless of arity,
+    and with ``keep_unused=True`` so the parameter list always matches the
+    manifest even when a system ignores an input (e.g. VDN's global
+    state, which only QMIX consumes).
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def abstract(shape, dtype="float32"):
+    """Shorthand for a ShapeDtypeStruct example arg."""
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))

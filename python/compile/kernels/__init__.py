@@ -1,0 +1,17 @@
+"""Pallas kernels (L1) — the compute hot-spots of mava-rs.
+
+* ``agent_net``  — fused per-agent MLP forward (every system's acting path)
+* ``qmix_mixer`` — QMIX monotonic mixing network with hypernetwork weight
+  generation, differentiable via a custom_vjp whose forward AND backward
+  are pallas kernels (used inside the QMIX train-step artifact)
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so real-TPU lowering is treated as a compile-only
+target and numerics are validated through the interpret path (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from .agent_net import agent_net, agent_net_from_params
+from .qmix_mixer import qmix_mixer
+
+__all__ = ["agent_net", "agent_net_from_params", "qmix_mixer"]

@@ -1,0 +1,94 @@
+"""Fused per-agent MLP forward as a pallas kernel.
+
+This is the acting hot-spot shared by every mava-rs system: all N agents'
+3-layer MLP towers evaluated in a single kernel launch instead of N
+separate network calls (or one call + N-way vmap dispatch).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is
+(batch-tiles, agents); for each grid step one agent's full weight set is
+resident in VMEM (< 1 MiB for hidden <= 256, far under the ~16 MiB budget)
+while a 128-row activation tile streams HBM->VMEM. The three matmuls use
+``preferred_element_type=float32`` so they target the MXU with f32
+accumulation. On CPU we run interpret=True; correctness is asserted
+against ``ref.agent_net_ref`` (pure jnp) by the pytest/hypothesis suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# batch tile: one VPU-aligned block of rows (8x128 lanes). For acting
+# (B == 1) the tile degenerates to a single row, which interpret mode and
+# the TPU grid both handle (the block is padded internally).
+DEFAULT_BLOCK_B = 128
+
+
+def _kernel(obs_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, out_ref):
+    x = obs_ref[:, 0, :]  # [Bt, O]
+    w1, b1 = w1_ref[0], b1_ref[0]
+    w2, b2 = w2_ref[0], b2_ref[0]
+    w3, b3 = w3_ref[0], b3_ref[0]
+    h = jnp.maximum(
+        jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1, 0.0
+    )
+    h = jnp.maximum(
+        jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2, 0.0
+    )
+    out_ref[:, 0, :] = (
+        jnp.dot(h, w3, preferred_element_type=jnp.float32) + b3
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def agent_net(obs, w1, b1, w2, b2, w3, b3, *, block_b: int = DEFAULT_BLOCK_B):
+    """Per-agent 3-layer MLP: relu(relu(x@W1+b1)@W2+b2)@W3+b3, fused.
+
+    Args:
+      obs: [B, N, O] observations.
+      w1/b1: [N, O, H] / [N, H]   first-layer weights per agent.
+      w2/b2: [N, H, H] / [N, H]   second layer.
+      w3/b3: [N, H, A] / [N, A]   output head (no activation).
+      block_b: batch tile size.
+
+    Returns: [B, N, A].
+    """
+    batch, n_agents, obs_dim = obs.shape
+    hidden = w1.shape[-1]
+    out_dim = w3.shape[-1]
+    bt = min(block_b, batch)
+    grid = (pl.cdiv(batch, bt), n_agents)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 1, obs_dim), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, obs_dim, hidden), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, hidden), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, hidden, hidden), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, hidden), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, hidden, out_dim), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, out_dim), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1, out_dim), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_agents, out_dim), jnp.float32),
+        interpret=True,
+    )(obs, w1, b1, w2, b2, w3, b3)
+
+
+def agent_net_from_params(params, obs, *, block_b: int = DEFAULT_BLOCK_B):
+    """Call ``agent_net`` from a stacked per-agent MLP pytree.
+
+    ``params`` is the output of ``networks.init_per_agent_mlp`` with
+    exactly three layers: a list of {"w": [N, in, out], "b": [N, out]}.
+    """
+    assert len(params) == 3, "agent_net kernel is specialised to 3 layers"
+    (l1, l2, l3) = params
+    return agent_net(
+        obs, l1["w"], l1["b"], l2["w"], l2["b"], l3["w"], l3["b"],
+        block_b=block_b,
+    )

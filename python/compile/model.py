@@ -1,0 +1,46 @@
+"""L2 entry point: the full catalogue of AOT artifacts.
+
+``catalogue()`` assembles every (preset, system, architecture) artifact the
+rust coordinator can run.  ``aot.py`` lowers them to HLO text; the pytest
+suite executes them directly (pre-lowering) against hand-written checks.
+"""
+
+from __future__ import annotations
+
+from .presets import PRESETS
+from .systems import dial, madqn, maddpg, value_decomp
+
+
+def catalogue():
+    """All artifacts, grouped exactly as DESIGN.md §4 specifies."""
+    arts = []
+    # tiny preset for fast rust integration tests (all three Q families)
+    arts += madqn.build(PRESETS["matrix2"])
+    arts += value_decomp.build(PRESETS["matrix2"], mixer="vdn")
+    arts += value_decomp.build(PRESETS["matrix2"], mixer="qmix")
+    # Fig 4 top: switch riddle — recurrent MADQN baseline vs DIAL
+    arts += madqn.build_recurrent(PRESETS["switch3"])
+    arts += dial.build(PRESETS["switch3"])
+    # Fig 4 bottom: smac_lite — independent MADQN vs VDN (+ QMIX)
+    arts += madqn.build(PRESETS["smac3m"])
+    arts += madqn.build(PRESETS["smac3m_fp"])       # fingerprint module
+    arts += value_decomp.build(PRESETS["smac3m"], mixer="vdn")
+    arts += value_decomp.build(PRESETS["smac3m"], mixer="qmix")
+    # Fig 6 top-right: MPE — MADDPG vs MAD4PG
+    arts += maddpg.build(PRESETS["spread3"], arch="decentralised")
+    arts += maddpg.build(PRESETS["spread3"], arch="decentralised",
+                         distributional=True)
+    arts += maddpg.build(PRESETS["speaker2"], arch="centralised")
+    arts += maddpg.build(PRESETS["speaker2"], arch="centralised",
+                         distributional=True)
+    # Fig 6 mid-right: multi-walker — decentralised vs centralised MAD4PG
+    arts += maddpg.build(PRESETS["walker3"], arch="decentralised",
+                         distributional=True)
+    arts += maddpg.build(PRESETS["walker3"], arch="centralised",
+                         distributional=True)
+    # architecture sweep on spread3 (ablation bench): cen + networked
+    arts += maddpg.build(PRESETS["spread3"], arch="centralised",
+                         distributional=True)
+    arts += maddpg.build(PRESETS["spread3"], arch="networked",
+                         distributional=True)
+    return arts

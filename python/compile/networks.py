@@ -1,0 +1,132 @@
+"""Neural network building blocks (pure jnp, params as pytrees).
+
+Every network here is a pair of functions:
+
+* ``init_*(key, ...) -> params``   — a pytree of arrays
+* ``*_apply(params, x, ...) -> y`` — pure forward pass
+
+Systems flatten the full parameter pytree with
+``jax.flatten_util.ravel_pytree`` so the rust coordinator only ever sees a
+single flat ``f32[P]`` vector; the unravel closure is baked into the lowered
+HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def glorot(key, shape):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_mlp(key, sizes):
+    """MLP params: sizes = [in, h1, ..., out]."""
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (n_in, n_out) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        params.append(
+            {"w": glorot(k, (n_in, n_out)), "b": jnp.zeros((n_out,), jnp.float32)}
+        )
+    return params
+
+
+def mlp_apply(params, x, activation=jax.nn.relu, final_activation=None):
+    """Apply an MLP; hidden layers use ``activation``."""
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+def init_per_agent_mlp(key, n_agents, sizes, shared=False):
+    """Per-agent MLP towers, stacked on a leading agent axis.
+
+    With ``shared=True`` a single tower is initialised and broadcast —
+    Mava's parameter-sharing option (RLlib-style) — but the stacked layout
+    is kept so downstream code (and the pallas ``agent_net`` kernel) is
+    identical either way.
+    """
+    if shared:
+        tower = init_mlp(key, sizes)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_agents,) + a.shape), tower
+        )
+    keys = jax.random.split(key, n_agents)
+    towers = [init_mlp(k, sizes) for k in keys]
+    return jax.tree.map(lambda *a: jnp.stack(a), *towers)
+
+
+def per_agent_mlp_apply(params, obs, final_activation=None):
+    """Reference per-agent MLP forward: obs [..., N, O] -> [..., N, out].
+
+    vmaps each agent's tower over the agent axis.  The pallas kernel
+    ``kernels.agent_net`` computes the same function fused; this is the
+    oracle / training-path version (XLA fuses it well under jit).
+    """
+
+    def one_agent(tower, x):
+        return mlp_apply(tower, x, final_activation=final_activation)
+
+    # move agent axis to front of both params (already leading) and obs
+    obs_a = jnp.moveaxis(obs, -2, 0)  # [N, ..., O]
+    out = jax.vmap(one_agent)(params, obs_a)  # [N, ..., out]
+    return jnp.moveaxis(out, 0, -2)
+
+
+def init_gru(key, in_dim, hidden):
+    """GRU cell params (fused gate matrices)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": glorot(k1, (in_dim, 3 * hidden)),
+        "wh": glorot(k2, (hidden, 3 * hidden)),
+        "bi": jnp.zeros((3 * hidden,), jnp.float32),
+        "bh": jnp.zeros((3 * hidden,), jnp.float32),
+    }
+
+
+def gru_apply(params, x, h):
+    """GRU cell: returns new hidden state. x [..., I], h [..., H]."""
+    hidden = h.shape[-1]
+    gi = x @ params["wi"] + params["bi"]
+    gh = h @ params["wh"] + params["bh"]
+    i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
+    h_r, h_z, h_n = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    del hidden
+    return (1.0 - z) * n + z * h
+
+
+def init_per_agent_gru(key, n_agents, in_dim, hidden, shared=False):
+    if shared:
+        cell = init_gru(key, in_dim, hidden)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_agents,) + a.shape), cell
+        )
+    keys = jax.random.split(key, n_agents)
+    cells = [init_gru(k, in_dim, hidden) for k in keys]
+    return jax.tree.map(lambda *a: jnp.stack(a), *cells)
+
+
+def per_agent_gru_apply(params, x, h):
+    """Per-agent GRU: x [..., N, I], h [..., N, H] -> [..., N, H]."""
+    x_a = jnp.moveaxis(x, -2, 0)
+    h_a = jnp.moveaxis(h, -2, 0)
+    out = jax.vmap(gru_apply)(params, x_a, h_a)
+    return jnp.moveaxis(out, 0, -2)
+
+
+def flatten_params(params):
+    """ravel_pytree wrapper: returns (flat f32[P], unravel closure)."""
+    from jax.flatten_util import ravel_pytree
+
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel

@@ -1,0 +1,41 @@
+"""Adam on a flat parameter vector.
+
+The optimiser state is a single flat f32 vector ``[t, m(P), v(P)]`` so the
+rust trainer can treat it as an opaque buffer threaded through the
+functional ``train_step`` artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adam_init(n_params: int) -> jnp.ndarray:
+    return jnp.zeros((1 + 2 * n_params,), jnp.float32)
+
+
+def adam_update(opt_state, flat_params, flat_grads, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step. Returns (new_params, new_opt_state)."""
+    p = flat_params.shape[0]
+    t = opt_state[0] + 1.0
+    m = opt_state[1 : 1 + p]
+    v = opt_state[1 + p :]
+    m = b1 * m + (1.0 - b1) * flat_grads
+    v = b2 * v + (1.0 - b2) * jnp.square(flat_grads)
+    mhat = m / (1.0 - jnp.power(b1, t))
+    vhat = v / (1.0 - jnp.power(b2, t))
+    new_params = flat_params - lr * mhat / (jnp.sqrt(vhat) + eps)
+    new_state = jnp.concatenate([t[None], m, v])
+    return new_params, new_state
+
+
+def clip_grads(flat_grads, max_norm: float):
+    """Global-norm gradient clipping (Acme/Mava default: 40.0 for DQN)."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(flat_grads)) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / norm)
+    return flat_grads * scale
+
+
+def polyak(target, online, tau: float):
+    """Soft target-network update."""
+    return (1.0 - tau) * target + tau * online

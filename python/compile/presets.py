@@ -1,0 +1,78 @@
+"""Artifact presets: the fixed shapes every AOT artifact is lowered at.
+
+AOT compilation freezes shapes, so each (environment, system) pair gets a
+preset pinning agent count, observation/action dims, global-state dim,
+batch size and network width.  The rust side reads the same numbers back
+from ``artifacts/manifest.txt`` and its environments must produce matching
+shapes (checked at startup).
+
+Heterogeneous agent specs (speaker-listener) are padded to the per-preset
+max dims — Mava supports per-agent specs natively; padding is the
+fixed-shape AOT equivalent (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    env: str
+    n_agents: int
+    obs_dim: int
+    act_dim: int          # discrete: number of actions; continuous: dim
+    discrete: bool
+    state_dim: int = 0    # global state (mixers / centralised critics)
+    hidden: int = 64
+    embed: int = 32       # QMIX mixing embed dim
+    msg_dim: int = 0      # DIAL message size
+    seq_len: int = 0      # recurrent training sequence length
+    batch: int = 128
+    atoms: int = 51       # MAD4PG distributional critic
+    vmin: float = -50.0
+    vmax: float = 10.0
+    extras: dict = field(default_factory=dict)
+
+
+PRESETS = {
+    # tiny 2-agent repeated matrix game — fast integration tests
+    "matrix2": Preset(
+        name="matrix2", env="matrix", n_agents=2, obs_dim=4, act_dim=3,
+        discrete=True, state_dim=8, hidden=32, embed=16, batch=16,
+    ),
+    # switch riddle (Foerster et al. 2016), 3 agents — Fig 4 top
+    "switch3": Preset(
+        name="switch3", env="switch", n_agents=3, obs_dim=5, act_dim=2,
+        discrete=True, hidden=64, msg_dim=1, seq_len=8, batch=32,
+    ),
+    # smac_lite 3 marines vs 3 marines — Fig 4 bottom
+    "smac3m": Preset(
+        name="smac3m", env="smac_lite", n_agents=3, obs_dim=30, act_dim=9,
+        discrete=True, state_dim=90, hidden=64, embed=32, batch=128,
+    ),
+    # smac_lite with replay-stabilisation fingerprint ([eps, step]) appended
+    "smac3m_fp": Preset(
+        name="smac3m_fp", env="smac_lite", n_agents=3, obs_dim=32, act_dim=9,
+        discrete=True, state_dim=96, hidden=64, embed=32, batch=128,
+    ),
+    # MPE simple_spread, 3 agents — Fig 6 top-right
+    "spread3": Preset(
+        name="spread3", env="mpe_spread", n_agents=3, obs_dim=14, act_dim=2,
+        discrete=False, state_dim=42, hidden=64, batch=128,
+        vmin=-50.0, vmax=0.0,
+    ),
+    # MPE simple_speaker_listener (padded hetero specs) — Fig 6 top-right
+    "speaker2": Preset(
+        name="speaker2", env="mpe_speaker_listener", n_agents=2, obs_dim=11,
+        act_dim=3, discrete=False, state_dim=22, hidden=64, batch=128,
+        vmin=-40.0, vmax=0.0,
+    ),
+    # simplified multi-walker, 3 walkers — Fig 6 mid/bottom-right
+    "walker3": Preset(
+        name="walker3", env="multiwalker", n_agents=3, obs_dim=20, act_dim=4,
+        discrete=False, state_dim=60, hidden=64, batch=128,
+        vmin=-60.0, vmax=60.0,
+    ),
+}

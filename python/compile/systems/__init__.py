@@ -1,0 +1,10 @@
+"""System definitions (L2): policy-forward + fused train-step per system.
+
+Each module exposes ``build(preset, **variant) -> list[ArtifactDef]``.
+``aot.py`` lowers every ArtifactDef to HLO text + a manifest entry.
+"""
+
+from .base import ArtifactDef
+from . import madqn, dial, value_decomp, maddpg
+
+__all__ = ["ArtifactDef", "madqn", "dial", "value_decomp", "maddpg"]

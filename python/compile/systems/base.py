@@ -1,0 +1,76 @@
+"""Shared plumbing for system artifact builders."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+import zlib
+
+from ..networks import flatten_params
+from ..optim import adam_init
+
+
+@dataclass
+class ArtifactDef:
+    """One AOT artifact: a pure jax function + the shapes it is lowered at.
+
+    ``inputs``/``outputs`` are (name, dtype, shape) triples recorded in the
+    manifest so the rust runtime can type-check its calls. ``init`` maps
+    name -> concrete initial array (parameters, optimiser state) that
+    aot.py serialises alongside the HLO so rust starts from the same init.
+    """
+
+    name: str
+    fn: Callable
+    inputs: Sequence[tuple]          # (name, dtype_str, shape_tuple)
+    outputs: Sequence[tuple]         # (name, dtype_str, shape_tuple)
+    meta: dict = field(default_factory=dict)
+    init: dict = field(default_factory=dict)  # name -> np/jnp array
+
+    def example_args(self):
+        return [
+            jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dt))
+            for (_, dt, shape) in self.inputs
+        ]
+
+
+def huber(x, delta: float = 1.0):
+    absx = jnp.abs(x)
+    return jnp.where(absx <= delta, 0.5 * x * x, delta * (absx - 0.5 * delta))
+
+
+def flat_init(params):
+    """(flat0, unravel, P) for a parameter pytree."""
+    flat0, unravel = flatten_params(params)
+    return flat0, unravel, int(flat0.shape[0])
+
+
+def std_meta(preset, P: int, **extra) -> dict:
+    m = {
+        "n_agents": preset.n_agents,
+        "obs_dim": preset.obs_dim,
+        "act_dim": preset.act_dim,
+        "discrete": int(preset.discrete),
+        "state_dim": preset.state_dim,
+        "hidden": preset.hidden,
+        "msg_dim": preset.msg_dim,
+        "seq_len": preset.seq_len,
+        "batch": preset.batch,
+        "params": P,
+        "opt": 1 + 2 * P,
+    }
+    m.update(extra)
+    return m
+
+
+def opt0(P: int):
+    return adam_init(P)
+
+
+def stable_seed(s: str) -> int:
+    """Deterministic string seed (``hash()`` is per-process randomised)."""
+    return zlib.crc32(s.encode()) & 0x7FFFFFFF

@@ -1,0 +1,146 @@
+"""DIAL: differentiable inter-agent learning (Foerster et al., 2016).
+
+Agents exchange messages through a differentiable channel during
+centralised training; gradients flow across agents through the channel.
+The discretise/regularise unit (DRU) adds Gaussian noise + sigmoid during
+training and hard-thresholds at execution.
+
+Message routing is part of the architecture and is baked into the
+artifact: with the broadcast architecture each agent's inbox at t+1 is the
+mean of the *other* agents' messages at t (channel noise optional, paper
+§5 "Modules"); with the networked architecture the mean is taken over the
+adjacency neighbourhood only.
+
+Artifact contracts:
+  {p}_dial_policy : (params, obs[1,N,O], h[1,N,H], inbox[1,N,M])
+                    -> (q[1,N,A], h', inbox')     # inbox' already routed,
+                                                  # messages hard DRU
+  {p}_dial_train  : (params, target, opt, obs[B,T+1,N,O], act[B,T,N]i32,
+                     rew[B,T], disc[B,T], mask[B,T], noise[B,T+1,N,M],
+                     lr[], tau[]) -> (params', target', opt', loss[1])
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks as nets
+from ..optim import adam_update, clip_grads, polyak
+from .base import ArtifactDef, flat_init, huber, opt0, std_meta, stable_seed
+
+DRU_SIGMA = 2.0  # channel noise std during training (DIAL paper value)
+
+
+def _routing_matrix(n_agents: int, topology: str) -> jnp.ndarray:
+    """R[i, j] = weight with which agent i receives agent j's message."""
+    if topology == "broadcast":
+        mask = 1.0 - jnp.eye(n_agents)
+    elif topology == "line":
+        idx = jnp.arange(n_agents)
+        mask = (jnp.abs(idx[:, None] - idx[None, :]) == 1).astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    return mask / jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+
+
+def _init(key, p):
+    k1, k2 = jax.random.split(key)
+    return {
+        "gru": nets.init_per_agent_gru(
+            k1, p.n_agents, p.obs_dim + p.msg_dim, p.hidden
+        ),
+        "head": nets.init_per_agent_mlp(
+            k2, p.n_agents, [p.hidden, p.hidden, p.act_dim + p.msg_dim]
+        ),
+    }
+
+
+def _step(params, route, obs_t, h, inbox, act_dim):
+    """One comm step. Returns (q, h', msg_pre). inbox routing is external."""
+    x = jnp.concatenate([obs_t, inbox], axis=-1)
+    h = nets.per_agent_gru_apply(params["gru"], x, h)
+    out = nets.per_agent_mlp_apply(params["head"], h)
+    q, msg_pre = out[..., :act_dim], out[..., act_dim:]
+    del route
+    return q, h, msg_pre
+
+
+def build(preset, *, gamma: float = 1.0, topology: str = "broadcast",
+          channel_noise: float = 0.0):
+    p = preset
+    route = _routing_matrix(p.n_agents, topology)
+    key = jax.random.PRNGKey(stable_seed(p.name + "dial" + topology))
+    params0 = _init(key, p)
+    flat0, unravel, P = flat_init(params0)
+    B, T = p.batch, p.seq_len
+    N, O, A, H, M = p.n_agents, p.obs_dim, p.act_dim, p.hidden, p.msg_dim
+
+    def policy(params, obs, h, inbox):
+        q, h2, msg_pre = _step(unravel(params), route, obs, h, inbox, A)
+        msg = (msg_pre > 0.0).astype(jnp.float32)      # hard DRU (execution)
+        inbox2 = jnp.einsum("ij,bjm->bim", route, msg)  # routed
+        return q, h2, inbox2
+
+    def _unroll(params, obs, noise, steps):
+        """Soft-DRU unroll: returns qs [B,steps,N,A]."""
+        h = jnp.zeros((B, N, H), jnp.float32)
+        inbox = jnp.zeros((B, N, M), jnp.float32)
+
+        def step(carry, inp):
+            h, inbox = carry
+            obs_t, noise_t = inp
+            q, h, msg_pre = _step(params, route, obs_t, h, inbox, A)
+            msg = jax.nn.sigmoid(msg_pre + DRU_SIGMA * noise_t)
+            inbox = jnp.einsum("ij,bjm->bim", route, msg)
+            if channel_noise > 0.0:
+                inbox = inbox + channel_noise * noise_t
+            return (h, inbox), q
+
+        xs = (
+            jnp.moveaxis(obs[:, :steps], 1, 0),
+            jnp.moveaxis(noise[:, :steps], 1, 0),
+        )
+        _, qs = jax.lax.scan(step, (h, inbox), xs)
+        return jnp.moveaxis(qs, 0, 1)
+
+    def train(params, target, opt, obs, act, rew, disc, mask, noise, lr, tau):
+        def loss_fn(flat):
+            qs = _unroll(unravel(flat), obs, noise, T)          # [B,T,N,A]
+            chosen = jnp.take_along_axis(qs, act[..., None], -1)[..., 0]
+            tqs = _unroll(unravel(target), obs, noise, T + 1)
+            tmax = tqs[:, 1:].max(-1)                           # [B,T,N]
+            y = rew[..., None] + gamma * disc[..., None] * tmax
+            err = huber(chosen - jax.lax.stop_gradient(y))
+            m = mask[..., None]
+            return jnp.sum(err * m) / jnp.maximum(jnp.sum(m) * N, 1.0)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        g = clip_grads(g, 40.0)
+        new_params, new_opt = adam_update(opt, params, g, lr)
+        new_target = polyak(target, new_params, tau)
+        return new_params, new_target, new_opt, loss[None]
+
+    f, i = "float32", "int32"
+    meta = std_meta(p, P, gamma=gamma, recurrent=1, topology=topology)
+    suffix = "" if topology == "broadcast" else f"_{topology}"
+    return [
+        ArtifactDef(
+            f"{p.name}_dial{suffix}_policy", policy,
+            [("params", f, (P,)), ("obs", f, (1, N, O)),
+             ("hidden", f, (1, N, H)), ("inbox", f, (1, N, M))],
+            [("q", f, (1, N, A)), ("hidden", f, (1, N, H)),
+             ("inbox", f, (1, N, M))], meta,
+        ),
+        ArtifactDef(
+            f"{p.name}_dial{suffix}_train", train,
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("obs", f, (B, T + 1, N, O)),
+             ("act", i, (B, T, N)), ("rew", f, (B, T)),
+             ("disc", f, (B, T)), ("mask", f, (B, T)),
+             ("noise", f, (B, T + 1, N, M)), ("lr", f, ()), ("tau", f, ())],
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("loss", f, (1,))],
+            meta, init={"params0": flat0, "opt0": opt0(P)},
+        ),
+    ]

@@ -1,0 +1,211 @@
+"""MADDPG (Lowe et al., 2017) and MAD4PG (its distributional scale-up,
+Barth-Maron et al., 2018 applied per Mava §4).
+
+Actor-critic systems for continuous control.  The *architecture* — which
+agents' observations/actions each agent's critic may condition on — is a
+row-normalised mask matrix baked into the lowered graph:
+
+  decentralised : identity mask        (independent DDPG agents)
+  centralised   : all-ones mask        (CentralisedQValueCritic)
+  networked     : line-adjacency mask  (NetworkedQValueCritic)
+
+All three variants share the same parameter count (masked inputs are
+zeroed, their first-layer weights receive zero gradient), so the rust
+coordinator can swap architectures by swapping artifacts only.
+
+MAD4PG replaces the scalar critic with a C51 categorical distribution over
+``preset.atoms`` fixed atoms in [vmin, vmax]; targets are projected with
+the standard distributional projection.  N-step returns are produced by
+the rust n-step adder: ``rew`` arrives already summed/discounted and
+``disc`` is gamma^n * (1 - done).
+
+Artifact contracts:
+  {p}_{sys}_{arch}_policy : (params, obs[1,N,O]) -> (act[1,N,A],)  # tanh
+  {p}_{sys}_{arch}_train  : (params, target, opt, obs[B,N,O], act[B,N,A],
+                             rew[B,N], disc[B], next_obs[B,N,O], lr[],
+                             tau[]) -> (params', target', opt',
+                                        loss[2]=[critic, actor])
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks as nets
+from ..kernels import agent_net_from_params
+from ..optim import adam_update, clip_grads, polyak
+from .base import ArtifactDef, flat_init, opt0, std_meta, stable_seed
+
+ARCHS = ("decentralised", "centralised", "networked")
+
+
+def arch_mask(n_agents: int, arch: str) -> jnp.ndarray:
+    if arch == "decentralised":
+        return jnp.eye(n_agents, dtype=jnp.float32)
+    if arch == "centralised":
+        return jnp.ones((n_agents, n_agents), jnp.float32)
+    if arch == "networked":
+        idx = jnp.arange(n_agents)
+        adj = (jnp.abs(idx[:, None] - idx[None, :]) <= 1).astype(jnp.float32)
+        return adj
+    raise ValueError(f"unknown architecture {arch!r}")
+
+
+def critic_inputs(mask, obs, act):
+    """Masked joint critic input per agent: [B, N, N*(O+A)].
+
+    Row i of ``mask`` selects which agents' (obs, action) pairs critic i
+    conditions on; de-selected slots are zeroed so every architecture
+    shares one input layout (and parameter count).
+    """
+    b = obs.shape[0]
+    n = mask.shape[0]
+    joint = jnp.concatenate([obs, act], axis=-1)          # [B, N, F]
+    f = joint.shape[-1]
+    masked = mask[None, :, :, None] * joint[:, None, :, :]  # [B, Nc, Na, F]
+    return masked.reshape(b, n, n * f)
+
+
+def build(preset, *, arch: str = "decentralised", distributional: bool = False,
+          gamma: float = 0.99, sys_name: str | None = None):
+    """MADDPG (``distributional=False``) / MAD4PG (``True``) artifacts."""
+    assert arch in ARCHS
+    p = preset
+    sys_name = sys_name or ("mad4pg" if distributional else "maddpg")
+    mask = arch_mask(p.n_agents, arch)
+    critic_out = p.atoms if distributional else 1
+    critic_in = p.n_agents * (p.obs_dim + p.act_dim)
+    key = jax.random.PRNGKey(stable_seed(p.name + sys_name + arch))
+    k1, k2 = jax.random.split(key)
+    params0 = {
+        "actor": nets.init_per_agent_mlp(
+            k1, p.n_agents, [p.obs_dim, p.hidden, p.hidden, p.act_dim]
+        ),
+        "critic": nets.init_per_agent_mlp(
+            k2, p.n_agents, [critic_in, p.hidden, p.hidden, critic_out]
+        ),
+    }
+    flat0, unravel, P = flat_init(params0)
+    atoms = jnp.linspace(p.vmin, p.vmax, p.atoms)
+
+    def actor_apply(ps, obs):
+        return jnp.tanh(nets.per_agent_mlp_apply(ps["actor"], obs))
+
+    def critic_apply(ps, obs, act):
+        """Returns scalar Q [B,N] (maddpg) or logits [B,N,atoms] (mad4pg)."""
+        x = critic_inputs(mask, obs, act)
+        out = nets.per_agent_mlp_apply(ps["critic"], x)
+        return out[..., 0] if not distributional else out
+
+    def expected_q(logits):
+        return jnp.sum(jax.nn.softmax(logits, -1) * atoms, -1)
+
+    def project(rew, disc, next_probs):
+        """C51 categorical projection. rew [B,N], disc [B], probs [B,N,K]."""
+        z = rew[..., None] + (gamma * disc)[:, None, None] * atoms
+        z = jnp.clip(z, p.vmin, p.vmax)
+        dz = (p.vmax - p.vmin) / (p.atoms - 1)
+        bj = (z - p.vmin) / dz                           # [B,N,K]
+        lo = jnp.floor(bj)
+        hi = jnp.ceil(bj)
+        lo_w = next_probs * (hi - bj + (lo == hi))
+        hi_w = next_probs * (bj - lo)
+        proj = jnp.zeros_like(next_probs)
+        lo_i = lo.astype(jnp.int32)
+        hi_i = jnp.minimum(hi, p.atoms - 1).astype(jnp.int32)
+        # scatter-add along the atom axis
+        onehot_lo = jax.nn.one_hot(lo_i, p.atoms)        # [B,N,K,K]
+        onehot_hi = jax.nn.one_hot(hi_i, p.atoms)
+        proj = jnp.einsum("bnk,bnkj->bnj", lo_w, onehot_lo) + jnp.einsum(
+            "bnk,bnkj->bnj", hi_w, onehot_hi
+        )
+        return proj
+
+    def policy(params, obs):
+        ps = unravel(params)
+        pre = agent_net_from_params(ps["actor"], obs)
+        return (jnp.tanh(pre),)
+
+    def train(params, target, opt, obs, act, rew, disc, next_obs, lr, tau):
+        tps = unravel(target)
+
+        def loss_fn(flat):
+            ps = unravel(flat)
+            ps_sg = jax.lax.stop_gradient(ps)
+
+            # --- critic loss ---
+            next_act = actor_apply(tps, next_obs)
+            if distributional:
+                t_logits = critic_apply(tps, next_obs, next_act)
+                t_proj = project(rew, disc, jax.nn.softmax(t_logits, -1))
+                logits = critic_apply(ps, obs, act)
+                logp = jax.nn.log_softmax(logits, -1)
+                critic_loss = -jnp.mean(
+                    jnp.sum(jax.lax.stop_gradient(t_proj) * logp, -1)
+                )
+            else:
+                tq = critic_apply(tps, next_obs, next_act)       # [B,N]
+                y = rew + gamma * disc[:, None] * tq
+                q = critic_apply(ps, obs, act)
+                critic_loss = jnp.mean(
+                    jnp.square(q - jax.lax.stop_gradient(y))
+                )
+
+            # --- actor loss: own action from policy, others from replay;
+            # critic params frozen so actor grads don't reshape the critic.
+            pi = actor_apply(ps, obs)                            # [B,N,A]
+            n = p.n_agents
+            eye = jnp.eye(n)[None, :, :, None]                   # [1,N,N,1]
+            # for critic of agent i: action matrix with row i replaced by pi_i
+            act_b = jnp.broadcast_to(act[:, None], (act.shape[0], n) + act.shape[1:])
+            pi_b = jnp.broadcast_to(pi[:, None], act_b.shape)
+            mixed = eye * pi_b + (1.0 - eye) * act_b             # [B,N,N,A]
+
+            # evaluate critic for each agent's own-action substitution
+            qs = []
+            for i in range(n):
+                out = critic_apply(ps_sg, obs, mixed[:, i])
+                if distributional:
+                    qs.append(expected_q(out)[:, i])
+                else:
+                    qs.append(out[:, i])
+            actor_loss = -jnp.mean(jnp.stack(qs, -1))
+            return critic_loss + actor_loss, (critic_loss, actor_loss)
+
+        # NOTE on gradient flow: ps_sg freezes critic params in the actor
+        # term; the critic term's own grads flow normally. The actor term
+        # still differentiates through `pi` (actor params) because `mixed`
+        # uses the non-frozen `pi`.
+        (loss, (cl, al)), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        del loss
+        g = clip_grads(g, 40.0)
+        new_params, new_opt = adam_update(opt, params, g, lr)
+        new_target = polyak(target, new_params, tau)
+        return new_params, new_target, new_opt, jnp.stack([cl, al])
+
+    B, N, O, A = p.batch, p.n_agents, p.obs_dim, p.act_dim
+    f = "float32"
+    short = {"decentralised": "dec", "centralised": "cen", "networked": "net"}
+    tag = f"{p.name}_{sys_name}_{short[arch]}"
+    meta = std_meta(
+        p, P, gamma=gamma, arch=arch, distributional=int(distributional),
+        atoms=p.atoms if distributional else 0, vmin=p.vmin, vmax=p.vmax,
+    )
+    return [
+        ArtifactDef(
+            f"{tag}_policy", policy,
+            [("params", f, (P,)), ("obs", f, (1, N, O))],
+            [("act", f, (1, N, A))], meta,
+        ),
+        ArtifactDef(
+            f"{tag}_train", train,
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("obs", f, (B, N, O)),
+             ("act", f, (B, N, A)), ("rew", f, (B, N)), ("disc", f, (B,)),
+             ("next_obs", f, (B, N, O)), ("lr", f, ()), ("tau", f, ())],
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("loss", f, (2,))],
+            meta, init={"params0": flat0, "opt0": opt0(P)},
+        ),
+    ]

@@ -1,0 +1,167 @@
+"""MADQN: independent multi-agent deep Q-networks (Tampuu et al., 2017).
+
+Feedforward variant: the acting path is the fused pallas ``agent_net``
+kernel; the train-step is a single HLO module computing the per-agent TD
+loss, global-norm-clipped Adam update and Polyak target update.
+
+Recurrent variant (paper: "feed-forward or recurrent actors"): per-agent
+GRU + MLP head, trained on stored sequences (burn-in-free unroll from a
+zero initial state, as in Mava's recurrent MADQN).
+
+Artifact contracts (all params are ONE flat f32[P] vector):
+  {p}_madqn_policy : (params, obs[1,N,O])                  -> (q[1,N,A],)
+  {p}_madqn_train  : (params, target, opt, obs[B,N,O], act[B,N]i32,
+                      rew[B,N], disc[B], next_obs[B,N,O], lr[], tau[])
+                     -> (params', target', opt', loss[1])
+  {p}_madqn_rec_policy : (params, obs[1,N,O], h[1,N,H]) -> (q, h')
+  {p}_madqn_rec_train  : (params, target, opt, obs[B,T+1,N,O],
+                          act[B,T,N]i32, rew[B,T,N], disc[B,T], mask[B,T],
+                          lr[], tau[]) -> (params', target', opt', loss[1])
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks as nets
+from ..kernels import agent_net_from_params
+from ..optim import adam_update, clip_grads, polyak
+from .base import ArtifactDef, flat_init, huber, opt0, std_meta, stable_seed
+
+
+def _q_apply(params, obs):
+    return nets.per_agent_mlp_apply(params, obs)
+
+
+def build(preset, *, gamma: float = 0.99, shared_weights: bool = False):
+    """Feedforward MADQN artifacts for ``preset``."""
+    p = preset
+    key = jax.random.PRNGKey(stable_seed(p.name))
+    qnet = nets.init_per_agent_mlp(
+        key, p.n_agents, [p.obs_dim, p.hidden, p.hidden, p.act_dim],
+        shared=shared_weights,
+    )
+    flat0, unravel, P = flat_init(qnet)
+
+    def policy(params, obs):
+        return (agent_net_from_params(unravel(params), obs),)
+
+    def train(params, target, opt, obs, act, rew, disc, next_obs, lr, tau):
+        def loss_fn(flat):
+            q = _q_apply(unravel(flat), obs)                       # [B,N,A]
+            chosen = jnp.take_along_axis(q, act[..., None], -1)[..., 0]
+            tq = _q_apply(unravel(target), next_obs).max(-1)       # [B,N]
+            y = rew + gamma * disc[:, None] * tq
+            return jnp.mean(huber(chosen - jax.lax.stop_gradient(y)))
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        g = clip_grads(g, 40.0)
+        new_params, new_opt = adam_update(opt, params, g, lr)
+        new_target = polyak(target, new_params, tau)
+        return new_params, new_target, new_opt, loss[None]
+
+    B, N, O, A = p.batch, p.n_agents, p.obs_dim, p.act_dim
+    f, i = "float32", "int32"
+    meta = std_meta(p, P, gamma=gamma)
+    return [
+        ArtifactDef(
+            f"{p.name}_madqn_policy", policy,
+            [("params", f, (P,)), ("obs", f, (1, N, O))],
+            [("q", f, (1, N, A))], meta,
+        ),
+        ArtifactDef(
+            f"{p.name}_madqn_train", train,
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("obs", f, (B, N, O)),
+             ("act", i, (B, N)), ("rew", f, (B, N)), ("disc", f, (B,)),
+             ("next_obs", f, (B, N, O)), ("lr", f, ()), ("tau", f, ())],
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("loss", f, (1,))],
+            meta, init={"params0": flat0, "opt0": opt0(P)},
+        ),
+    ]
+
+
+def _rec_init(key, p):
+    k1, k2 = jax.random.split(key)
+    return {
+        "gru": nets.init_per_agent_gru(k1, p.n_agents, p.obs_dim, p.hidden),
+        "head": nets.init_per_agent_mlp(
+            k2, p.n_agents, [p.hidden, p.hidden, p.act_dim]
+        ),
+    }
+
+
+def _rec_step(params, obs_t, h):
+    """One recurrent step: obs_t [B,N,O], h [B,N,H] -> (q [B,N,A], h')."""
+    h = nets.per_agent_gru_apply(params["gru"], obs_t, h)
+    q = nets.per_agent_mlp_apply(params["head"], h)
+    return q, h
+
+
+def _rec_unroll(params, obs_seq, h0):
+    """Unroll over time: obs_seq [B,T,N,O] -> qs [B,T,N,A]."""
+
+    def step(h, obs_t):
+        q, h = _rec_step(params, obs_t, h)
+        return h, q
+
+    obs_tmajor = jnp.moveaxis(obs_seq, 1, 0)  # [T,B,N,O]
+    _, qs = jax.lax.scan(step, h0, obs_tmajor)
+    return jnp.moveaxis(qs, 0, 1)  # [B,T,N,A]
+
+
+def build_recurrent(preset, *, gamma: float = 1.0):
+    """Recurrent MADQN artifacts (switch uses undiscounted returns)."""
+    p = preset
+    key = jax.random.PRNGKey(stable_seed(p.name + "rec"))
+    params0 = _rec_init(key, p)
+    flat0, unravel, P = flat_init(params0)
+    B, T = p.batch, p.seq_len
+    N, O, A, H = p.n_agents, p.obs_dim, p.act_dim, p.hidden
+
+    def policy(params, obs, h):
+        q, h2 = _rec_step(unravel(params), obs, h)
+        return q, h2
+
+    def train(params, target, opt, obs, act, rew, disc, mask, lr, tau):
+        h0 = jnp.zeros((B, N, H), jnp.float32)
+
+        def loss_fn(flat):
+            qs = _rec_unroll(unravel(flat), obs[:, :T], h0)        # [B,T,N,A]
+            chosen = jnp.take_along_axis(qs, act[..., None], -1)[..., 0]
+            tqs = _rec_unroll(unravel(target), obs, h0)            # [B,T+1,...]
+            tmax = tqs[:, 1:].max(-1)                              # [B,T,N]
+            y = rew + gamma * disc[..., None] * tmax
+            err = huber(chosen - jax.lax.stop_gradient(y))
+            m = mask[..., None]
+            return jnp.sum(err * m) / jnp.maximum(jnp.sum(m) * N, 1.0)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        g = clip_grads(g, 40.0)
+        new_params, new_opt = adam_update(opt, params, g, lr)
+        new_target = polyak(target, new_params, tau)
+        return new_params, new_target, new_opt, loss[None]
+
+    f, i = "float32", "int32"
+    meta = std_meta(p, P, gamma=gamma, recurrent=1)
+    return [
+        ArtifactDef(
+            f"{p.name}_madqn_rec_policy", policy,
+            [("params", f, (P,)), ("obs", f, (1, N, O)),
+             ("hidden", f, (1, N, H))],
+            [("q", f, (1, N, A)), ("hidden", f, (1, N, H))], meta,
+        ),
+        ArtifactDef(
+            f"{p.name}_madqn_rec_train", train,
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("obs", f, (B, T + 1, N, O)),
+             ("act", i, (B, T, N)), ("rew", f, (B, T, N)),
+             ("disc", f, (B, T)), ("mask", f, (B, T)),
+             ("lr", f, ()), ("tau", f, ())],
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("loss", f, (1,))],
+            meta, init={"params0": flat0, "opt0": opt0(P)},
+        ),
+    ]

@@ -1,0 +1,105 @@
+"""Value decomposition systems: VDN (Sunehag 2017) and QMIX (Rashid 2018).
+
+Both share the MADQN per-agent Q-network for acting; training decomposes a
+joint (team) value.  VDN mixes by summation ("additive mixing" module in
+Mava); QMIX mixes monotonically through the pallas ``qmix_mixer`` kernel
+with state-conditioned hypernetworks — the kernel is differentiable
+(custom_vjp, forward and backward both pallas), so it sits directly inside
+the lowered train step.
+
+Artifact contracts:
+  {p}_{vdn|qmix}_policy : (params, obs[1,N,O]) -> (q[1,N,A],)
+  {p}_{vdn|qmix}_train  : (params, target, opt, obs[B,N,O], state[B,S],
+                           act[B,N]i32, rew[B], disc[B],
+                           next_obs[B,N,O], next_state[B,S], lr[], tau[])
+                          -> (params', target', opt', loss[1])
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import networks as nets
+from ..kernels import agent_net_from_params
+from ..kernels.qmix_mixer import init_qmix_params, qmix_mixer
+from ..optim import adam_update, clip_grads, polyak
+from .base import ArtifactDef, flat_init, opt0, std_meta, stable_seed
+
+
+def build(preset, *, mixer: str = "vdn", gamma: float = 0.99,
+          double_q: bool = True):
+    """Artifacts for VDN (``mixer='vdn'``) or QMIX (``mixer='qmix'``)."""
+    assert mixer in ("vdn", "qmix")
+    p = preset
+    key = jax.random.PRNGKey(stable_seed(p.name + mixer))
+    k1, k2 = jax.random.split(key)
+    params0 = {
+        "qnet": nets.init_per_agent_mlp(
+            k1, p.n_agents, [p.obs_dim, p.hidden, p.hidden, p.act_dim]
+        )
+    }
+    if mixer == "qmix":
+        params0["mixer"] = init_qmix_params(
+            k2, p.n_agents, p.state_dim, p.embed
+        )
+    flat0, unravel, P = flat_init(params0)
+
+    def mix(params, chosen_q, state):
+        if mixer == "vdn":
+            return jnp.sum(chosen_q, axis=-1)
+        return qmix_mixer(chosen_q, state, params["mixer"])
+
+    def policy(params, obs):
+        return (agent_net_from_params(unravel(params)["qnet"], obs),)
+
+    def train(params, target, opt, obs, state, act, rew, disc, next_obs,
+              next_state, lr, tau):
+        def loss_fn(flat):
+            ps = unravel(flat)
+            tps = unravel(target)
+            q = nets.per_agent_mlp_apply(ps["qnet"], obs)          # [B,N,A]
+            chosen = jnp.take_along_axis(q, act[..., None], -1)[..., 0]
+            q_tot = mix(ps, chosen, state)                         # [B]
+
+            tq_next = nets.per_agent_mlp_apply(tps["qnet"], next_obs)
+            if double_q:
+                # online net selects, target net evaluates
+                sel = nets.per_agent_mlp_apply(ps["qnet"], next_obs)
+                amax = jnp.argmax(sel, axis=-1)
+                next_best = jnp.take_along_axis(
+                    tq_next, amax[..., None], -1
+                )[..., 0]
+            else:
+                next_best = tq_next.max(-1)
+            y_tot = rew + gamma * disc * mix(tps, next_best, next_state)
+            td = q_tot - jax.lax.stop_gradient(y_tot)
+            return jnp.mean(jnp.square(td))
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        g = clip_grads(g, 10.0)
+        new_params, new_opt = adam_update(opt, params, g, lr)
+        new_target = polyak(target, new_params, tau)
+        return new_params, new_target, new_opt, loss[None]
+
+    B, N, O, A, S = p.batch, p.n_agents, p.obs_dim, p.act_dim, p.state_dim
+    f, i = "float32", "int32"
+    meta = std_meta(p, P, gamma=gamma, mixer=mixer, embed=p.embed)
+    return [
+        ArtifactDef(
+            f"{p.name}_{mixer}_policy", policy,
+            [("params", f, (P,)), ("obs", f, (1, N, O))],
+            [("q", f, (1, N, A))], meta,
+        ),
+        ArtifactDef(
+            f"{p.name}_{mixer}_train", train,
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("obs", f, (B, N, O)),
+             ("state", f, (B, S)), ("act", i, (B, N)), ("rew", f, (B,)),
+             ("disc", f, (B,)), ("next_obs", f, (B, N, O)),
+             ("next_state", f, (B, S)), ("lr", f, ()), ("tau", f, ())],
+            [("params", f, (P,)), ("target", f, (P,)),
+             ("opt", f, (1 + 2 * P,)), ("loss", f, (1,))],
+            meta, init={"params0": flat0, "opt0": opt0(P)},
+        ),
+    ]

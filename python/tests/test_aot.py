@@ -1,0 +1,100 @@
+"""AOT pipeline tests: lowering, manifest format and init blobs."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import _manifest_entry
+from compile.hlo import lower_to_hlo_text
+from compile.model import catalogue
+from compile.presets import PRESETS
+from compile.systems import madqn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_catalogue_names_unique_and_paired():
+    arts = catalogue()
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    policies = {n[: -len("_policy")] for n in names if n.endswith("_policy")}
+    trains = {n[: -len("_train")] for n in names if n.endswith("_train")}
+    assert policies == trains, "every system needs a policy+train pair"
+    # every train artifact carries its init blobs
+    for a in arts:
+        if a.name.endswith("_train"):
+            assert set(a.init) == {"params0", "opt0"}, a.name
+
+
+def test_lowering_produces_parsable_hlo_text():
+    arts = madqn.build(PRESETS["matrix2"])
+    text = lower_to_hlo_text(arts[0].fn, *arts[0].example_args())
+    assert text.startswith("HloModule")
+    assert "parameter(0)" in text
+    # the rust loader needs ROOT tuple outputs (return_tuple=True)
+    assert "ROOT" in text
+
+
+def test_lowered_policy_matches_eager():
+    arts = madqn.build(PRESETS["matrix2"])
+    policy = arts[0]
+    params = jnp.asarray(arts[1].init["params0"])
+    obs = jnp.asarray(np.random.RandomState(3).randn(1, 2, 4), jnp.float32)
+    eager = policy.fn(params, obs)[0]
+    jitted = jax.jit(policy.fn)(params, obs)[0]
+    np.testing.assert_allclose(eager, jitted, rtol=1e-5, atol=1e-6)
+
+
+def test_manifest_entry_format():
+    art = madqn.build(PRESETS["matrix2"])[1]
+    entry = _manifest_entry(
+        art, f"{art.name}.hlo.txt", [("params0", "x.f32bin", 10)]
+    )
+    lines = entry.splitlines()
+    assert lines[0] == f"artifact {art.name}"
+    assert lines[1] == f"file {art.name}.hlo.txt"
+    assert lines[-1] == "end"
+    assert any(l.startswith("input params f32 ") for l in lines)
+    assert any(l == "input lr f32" for l in lines), "scalars have no dims"
+    assert any(l.startswith("meta params ") for l in lines)
+    assert "init params0 x.f32bin 10" in lines
+
+
+def test_aot_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "arts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--only", "matrix2",
+         "--out-dir", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    files = os.listdir(out)
+    assert "manifest.txt" in files
+    assert "matrix2_madqn_policy.hlo.txt" in files
+    assert "matrix2_madqn_train_params0.f32bin" in files
+    blob = np.fromfile(out / "matrix2_madqn_train_params0.f32bin", "<f4")
+    train = [a for a in catalogue() if a.name == "matrix2_madqn_train"][0]
+    assert blob.shape == train.init["params0"].shape
+    np.testing.assert_allclose(blob, train.init["params0"], rtol=1e-6)
+
+
+def test_shape_metadata_consistency():
+    """Manifest meta dims must match the declared tensor shapes."""
+    for art in catalogue():
+        n = art.meta["n_agents"]
+        o = art.meta["obs_dim"]
+        if art.name.endswith("_policy"):
+            obs = next(t for t in art.inputs if t[0] == "obs")
+            assert obs[2][-2:] == (n, o), art.name
+        if art.name.endswith("_train"):
+            p = art.meta["params"]
+            params = next(t for t in art.inputs if t[0] == "params")
+            assert params[2] == (p,), art.name
+            opt = next(t for t in art.inputs if t[0] == "opt")
+            assert opt[2] == (1 + 2 * p,), art.name

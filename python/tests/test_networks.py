@@ -1,0 +1,111 @@
+"""Unit tests for the L2 network building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import networks as nets
+from compile.optim import adam_init, adam_update, clip_grads, polyak
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_mlp_shapes_and_activation():
+    key = jax.random.PRNGKey(0)
+    params = nets.init_mlp(key, [4, 8, 3])
+    x = jnp.ones((5, 4))
+    y = nets.mlp_apply(params, x)
+    assert y.shape == (5, 3)
+    t = nets.mlp_apply(params, x, final_activation=jnp.tanh)
+    assert np.all(np.abs(np.asarray(t)) <= 1.0)
+
+
+def test_per_agent_mlp_independent_towers():
+    key = jax.random.PRNGKey(1)
+    params = nets.init_per_agent_mlp(key, 3, [4, 8, 2])
+    obs = jnp.zeros((7, 3, 4)).at[:, 1].set(1.0)
+    out = nets.per_agent_mlp_apply(params, obs)
+    assert out.shape == (7, 3, 2)
+    # different towers -> different outputs for identical inputs
+    same_in = jnp.ones((1, 3, 4))
+    o = nets.per_agent_mlp_apply(params, same_in)
+    assert not np.allclose(o[0, 0], o[0, 1])
+
+
+def test_shared_weights_tie_towers():
+    key = jax.random.PRNGKey(2)
+    params = nets.init_per_agent_mlp(key, 3, [4, 8, 2], shared=True)
+    o = nets.per_agent_mlp_apply(params, jnp.ones((1, 3, 4)))
+    np.testing.assert_allclose(o[0, 0], o[0, 1], rtol=1e-6)
+
+
+def test_gru_state_update_bounds():
+    key = jax.random.PRNGKey(3)
+    cell = nets.init_gru(key, 5, 8)
+    x = jax.random.normal(key, (4, 5))
+    h = jnp.zeros((4, 8))
+    h1 = nets.gru_apply(cell, x, h)
+    assert h1.shape == (4, 8)
+    assert np.all(np.abs(np.asarray(h1)) <= 1.0), "GRU state in (-1,1)"
+    # zero update gate keeps memory: with x=0 and h large, state persists
+    h_big = 0.9 * jnp.ones((4, 8))
+    h2 = nets.gru_apply(cell, jnp.zeros((4, 5)), h_big)
+    assert h2.shape == h_big.shape
+
+
+def test_per_agent_gru_vmap_consistency():
+    key = jax.random.PRNGKey(4)
+    cells = nets.init_per_agent_gru(key, 3, 5, 8)
+    x = jax.random.normal(key, (2, 3, 5))
+    h = jnp.zeros((2, 3, 8))
+    out = nets.per_agent_gru_apply(cells, x, h)
+    # agent 1 alone must match slicing its tower
+    tower1 = jax.tree.map(lambda a: a[1], cells)
+    ref = nets.gru_apply(tower1, x[:, 1], h[:, 1])
+    np.testing.assert_allclose(out[:, 1], ref, rtol=1e-5, atol=1e-6)
+
+
+def test_flatten_roundtrip():
+    key = jax.random.PRNGKey(5)
+    params = {
+        "a": nets.init_mlp(key, [3, 4, 2]),
+        "b": nets.init_gru(key, 3, 4),
+    }
+    flat, unravel = nets.flatten_params(params)
+    back = unravel(flat)
+    for x, y in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_allclose(x, y, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(1, 300), seed=st.integers(0, 1000))
+def test_adam_decreases_quadratic(p, seed):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (p,))
+    params = jnp.zeros((p,))
+    opt = adam_init(p)
+
+    def loss(w):
+        return jnp.sum(jnp.square(w - target))
+
+    l0 = loss(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = adam_update(opt, params, g, 0.05)
+    assert loss(params) < 0.1 * l0
+
+
+def test_clip_grads_bounds_norm():
+    g = jnp.full((100,), 10.0)
+    c = clip_grads(g, 5.0)
+    assert np.linalg.norm(np.asarray(c)) <= 5.0 + 1e-4
+    small = jnp.full((4,), 0.01)
+    np.testing.assert_allclose(clip_grads(small, 5.0), small, rtol=1e-5)
+
+
+def test_polyak_interpolates():
+    t = jnp.zeros((4,))
+    o = jnp.ones((4,))
+    np.testing.assert_allclose(polyak(t, o, 0.25), 0.25 * np.ones(4))
+    np.testing.assert_allclose(polyak(t, o, 1.0), np.ones(4))

@@ -1,0 +1,254 @@
+"""System-level tests: every train-step artifact must run at its lowered
+shapes, produce finite losses, and *learn* (loss decreases on a fixed
+batch). Policy artifacts must be consistent with the training forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.presets import PRESETS, Preset
+from compile.systems import dial, madqn, maddpg, value_decomp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_args(art, seed=0):
+    """Concrete random inputs at an artifact's declared shapes."""
+    rng = np.random.RandomState(seed)
+    args = []
+    for (name, dt, shape) in art.inputs:
+        if name == "params" and "params0" in art.init:
+            args.append(jnp.asarray(art.init["params0"]))
+        elif name == "target" and "params0" in art.init:
+            args.append(jnp.asarray(art.init["params0"]))
+        elif name == "opt" and "opt0" in art.init:
+            args.append(jnp.asarray(art.init["opt0"]))
+        elif name == "lr":
+            args.append(jnp.float32(1e-3))
+        elif name == "tau":
+            args.append(jnp.float32(0.01))
+        elif dt == "int32":
+            hi = art.meta["act_dim"]
+            args.append(jnp.asarray(rng.randint(0, hi, shape), jnp.int32))
+        elif name == "disc":
+            args.append(jnp.asarray(rng.rand(*shape), jnp.float32))
+        elif name == "mask":
+            args.append(jnp.ones(shape, jnp.float32))
+        else:
+            args.append(
+                jnp.asarray(rng.randn(*shape) * 0.5, jnp.float32)
+            )
+    return args
+
+
+def run_train_repeatedly(arts, steps=30, lr=3e-3):
+    """Run a (policy, train) artifact pair on a fixed batch; return the
+    loss trajectory."""
+    train = next(a for a in arts if a.name.endswith("_train"))
+    args = make_args(train)
+    fn = jax.jit(train.fn)
+    names = [n for (n, _, _) in train.inputs]
+    losses = []
+    params, target, opt = args[0], args[1], args[2]
+    rest = args[3:-2]
+    for _ in range(steps):
+        out = fn(params, target, opt, *rest, jnp.float32(lr), jnp.float32(0.01))
+        params, target, opt = out[0], out[1], out[2]
+        losses.append(float(jnp.sum(out[3])))
+    del names
+    return losses
+
+
+tiny = PRESETS["matrix2"]
+
+
+@pytest.mark.parametrize(
+    "arts,label",
+    [
+        (madqn.build(tiny), "madqn"),
+        (value_decomp.build(tiny, mixer="vdn"), "vdn"),
+        (value_decomp.build(tiny, mixer="qmix"), "qmix"),
+    ],
+    ids=["madqn", "vdn", "qmix"],
+)
+def test_discrete_train_losses_decrease(arts, label):
+    losses = run_train_repeatedly(arts, steps=40)
+    assert all(np.isfinite(losses)), losses[:5]
+    assert losses[-1] < 0.5 * losses[0], f"{label}: {losses[0]} -> {losses[-1]}"
+
+
+def test_madqn_policy_matches_training_forward():
+    arts = madqn.build(tiny)
+    policy = next(a for a in arts if a.name.endswith("_policy"))
+    train = next(a for a in arts if a.name.endswith("_train"))
+    params = jnp.asarray(train.init["params0"])
+    obs = jnp.asarray(np.random.RandomState(0).randn(1, 2, 4), jnp.float32)
+    (q,) = policy.fn(params, obs)
+    assert q.shape == (1, 2, 3)
+    assert np.all(np.isfinite(np.asarray(q)))
+
+
+def test_madqn_recurrent_unroll_and_policy():
+    p = PRESETS["switch3"]
+    arts = madqn.build_recurrent(p)
+    policy = next(a for a in arts if a.name.endswith("_policy"))
+    train = next(a for a in arts if a.name.endswith("_train"))
+    params = jnp.asarray(train.init["params0"])
+    obs = jnp.asarray(np.random.RandomState(0).randn(1, 3, 5), jnp.float32)
+    h = jnp.zeros((1, 3, 64))
+    q1, h1 = policy.fn(params, obs, h)
+    assert q1.shape == (1, 3, 2) and h1.shape == (1, 3, 64)
+    # hidden state must influence the next step
+    q2, _ = policy.fn(params, obs, h1)
+    assert not np.allclose(np.asarray(q1), np.asarray(q2))
+    # training reduces loss on a fixed batch
+    losses = run_train_repeatedly(arts, steps=25)
+    assert losses[-1] < losses[0]
+
+
+class TestDial:
+    p = PRESETS["switch3"]
+    arts = dial.build(p)
+
+    def _policy(self):
+        return next(a for a in self.arts if a.name.endswith("_policy"))
+
+    def test_policy_messages_are_binary_and_routed(self):
+        policy = self._policy()
+        train = next(a for a in self.arts if a.name.endswith("_train"))
+        params = jnp.asarray(train.init["params0"])
+        obs = jnp.asarray(
+            np.random.RandomState(1).randn(1, 3, 5), jnp.float32
+        )
+        h = jnp.zeros((1, 3, 64))
+        inbox = jnp.zeros((1, 3, 1))
+        q, h2, inbox2 = policy.fn(params, obs, h, inbox)
+        assert q.shape == (1, 3, 2)
+        # routed inbox values are means of others' hard bits -> in [0,1]
+        arr = np.asarray(inbox2)
+        assert np.all((arr >= 0.0) & (arr <= 1.0))
+
+    def test_messages_affect_qvalues(self):
+        policy = self._policy()
+        train = next(a for a in self.arts if a.name.endswith("_train"))
+        params = jnp.asarray(train.init["params0"])
+        obs = jnp.zeros((1, 3, 5))
+        h = jnp.zeros((1, 3, 64))
+        q0, _, _ = policy.fn(params, obs, h, jnp.zeros((1, 3, 1)))
+        q1, _, _ = policy.fn(params, obs, h, jnp.ones((1, 3, 1)))
+        assert not np.allclose(np.asarray(q0), np.asarray(q1)), (
+            "the communication channel must reach the Q-network"
+        )
+
+    def test_train_loss_decreases(self):
+        losses = run_train_repeatedly(self.arts, steps=25)
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0]
+
+    def test_line_topology_routing(self):
+        r = dial._routing_matrix(3, "line")
+        arr = np.asarray(r)
+        assert arr[0, 1] == 1.0 and arr[0, 2] == 0.0
+        np.testing.assert_allclose(arr[1], [0.5, 0.0, 0.5])
+
+
+class TestMaddpg:
+    p = PRESETS["matrix2"]
+
+    # continuous variant of the tiny preset for speed
+    tiny_cont = Preset(
+        name="tinyc", env="matrix", n_agents=2, obs_dim=4, act_dim=2,
+        discrete=False, state_dim=8, hidden=32, batch=16,
+        atoms=11, vmin=-5.0, vmax=5.0,
+    )
+
+    def test_arch_masks(self):
+        np.testing.assert_allclose(
+            maddpg.arch_mask(3, "decentralised"), np.eye(3)
+        )
+        np.testing.assert_allclose(
+            maddpg.arch_mask(3, "centralised"), np.ones((3, 3))
+        )
+        net = np.asarray(maddpg.arch_mask(4, "networked"))
+        assert net[0, 1] == 1 and net[0, 2] == 0 and net[1, 2] == 1
+
+    def test_critic_inputs_masking(self):
+        mask = maddpg.arch_mask(2, "decentralised")
+        obs = jnp.ones((3, 2, 4))
+        act = 2.0 * jnp.ones((3, 2, 2))
+        x = maddpg.critic_inputs(mask, obs, act)
+        assert x.shape == (3, 2, 12)
+        arr = np.asarray(x)
+        # critic 0 sees its own slot, zeros for agent 1
+        assert np.all(arr[:, 0, :6] != 0)
+        assert np.all(arr[:, 0, 6:] == 0)
+
+    @pytest.mark.parametrize("distributional", [False, True],
+                             ids=["maddpg", "mad4pg"])
+    @pytest.mark.parametrize("arch", ["decentralised", "centralised"])
+    def test_train_losses_finite_and_critic_learns(self, distributional, arch):
+        arts = maddpg.build(
+            self.tiny_cont, arch=arch, distributional=distributional
+        )
+        train = next(a for a in arts if a.name.endswith("_train"))
+        args = make_args(train)
+        fn = jax.jit(train.fn)
+        params, target, opt = args[0], args[1], args[2]
+        rest = args[3:-2]
+        critic_losses = []
+        for _ in range(40):
+            out = fn(params, target, opt, *rest, jnp.float32(3e-3),
+                     jnp.float32(0.01))
+            params, target, opt = out[0], out[1], out[2]
+            critic_losses.append(float(out[3][0]))
+        assert all(np.isfinite(critic_losses))
+        assert critic_losses[-1] < critic_losses[0]
+
+    def test_policy_outputs_bounded(self):
+        arts = maddpg.build(self.tiny_cont, arch="decentralised")
+        policy = next(a for a in arts if a.name.endswith("_policy"))
+        train = next(a for a in arts if a.name.endswith("_train"))
+        params = jnp.asarray(train.init["params0"])
+        obs = jnp.asarray(
+            np.random.RandomState(2).randn(1, 2, 4) * 3, jnp.float32
+        )
+        (act,) = policy.fn(params, obs)
+        assert act.shape == (1, 2, 2)
+        assert np.all(np.abs(np.asarray(act)) <= 1.0)
+
+    def test_projection_preserves_probability_mass(self):
+        arts = maddpg.build(
+            self.tiny_cont, arch="decentralised", distributional=True
+        )
+        # the projection is internal; verify via the train fn running with
+        # extreme rewards without NaNs
+        train = next(a for a in arts if a.name.endswith("_train"))
+        args = make_args(train)
+        # blow up rewards beyond [vmin, vmax]
+        names = [n for (n, _, _) in train.inputs]
+        i_rew = names.index("rew")
+        args[i_rew] = 100.0 * jnp.ones_like(args[i_rew])
+        out = train.fn(*args)
+        assert np.all(np.isfinite(np.asarray(out[3])))
+
+
+def test_param_counts_match_meta():
+    for arts in (
+        madqn.build(tiny),
+        value_decomp.build(tiny, mixer="qmix"),
+        maddpg.build(TestMaddpg.tiny_cont, arch="centralised"),
+    ):
+        train = next(a for a in arts if a.name.endswith("_train"))
+        p = train.meta["params"]
+        assert train.init["params0"].shape == (p,)
+        assert train.init["opt0"].shape == (1 + 2 * p,)
+        # all architectures share the same P for the same preset (maddpg)
+
+
+def test_maddpg_arch_swap_preserves_param_count():
+    arts_dec = maddpg.build(TestMaddpg.tiny_cont, arch="decentralised")
+    arts_cen = maddpg.build(TestMaddpg.tiny_cont, arch="centralised")
+    arts_net = maddpg.build(TestMaddpg.tiny_cont, arch="networked")
+    ps = {a[1].meta["params"] for a in (arts_dec, arts_cen, arts_net)}
+    assert len(ps) == 1, "architecture swap must not change P"

@@ -1,0 +1,99 @@
+//! System architectures (paper §4, Figure 3).
+//!
+//! The architecture defines the information flow between agents: fully
+//! independent (decentralised), via a shared central unit (centralised),
+//! or along a topology (networked). In mava-rs the flow is *baked into
+//! the lowered artifact* (the critic-input mask / message-routing matrix
+//! is a compile-time constant), so picking an architecture means picking
+//! the matching artifact variant — this module maps the paper's
+//! architecture classes to artifact name tags and exposes the adjacency
+//! logic used by networked systems.
+
+use std::fmt;
+
+/// Paper Figure 3: decentralised / centralised / networked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Architecture {
+    /// `DecentralisedPolicyActor` / `DecentralisedQValueCritic`
+    Decentralised,
+    /// `CentralisedQValueCritic`
+    Centralised,
+    /// `NetworkedQValueCritic` (line topology by default)
+    Networked,
+}
+
+impl Architecture {
+    /// The tag used in artifact names (`*_dec_*`, `*_cen_*`, `*_net_*`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Architecture::Decentralised => "dec",
+            Architecture::Centralised => "cen",
+            Architecture::Networked => "net",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Architecture> {
+        match s {
+            "decentralised" | "dec" => Some(Architecture::Decentralised),
+            "centralised" | "cen" => Some(Architecture::Centralised),
+            "networked" | "net" => Some(Architecture::Networked),
+            _ => None,
+        }
+    }
+
+    /// Information-flow mask: may agent `i` observe agent `j`'s
+    /// observation/action during centralised training? Mirrors
+    /// `python/compile/systems/maddpg.py::arch_mask`.
+    pub fn allows(&self, i: usize, j: usize) -> bool {
+        match self {
+            Architecture::Decentralised => i == j,
+            Architecture::Centralised => true,
+            Architecture::Networked => (i as isize - j as isize).abs() <= 1,
+        }
+    }
+
+    /// Neighbourhood of agent `i` in an `n`-agent system.
+    pub fn neighbours(&self, i: usize, n: usize) -> Vec<usize> {
+        (0..n).filter(|&j| self.allows(i, j)).collect()
+    }
+}
+
+impl fmt::Display for Architecture {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Architecture::Decentralised => "decentralised",
+            Architecture::Centralised => "centralised",
+            Architecture::Networked => "networked",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in [
+            Architecture::Decentralised,
+            Architecture::Centralised,
+            Architecture::Networked,
+        ] {
+            assert_eq!(Architecture::parse(&a.to_string()), Some(a));
+            assert_eq!(Architecture::parse(a.tag()), Some(a));
+        }
+        assert_eq!(Architecture::parse("bogus"), None);
+    }
+
+    #[test]
+    fn masks_match_paper_figure_3() {
+        let dec = Architecture::Decentralised;
+        assert_eq!(dec.neighbours(1, 3), vec![1]);
+        let cen = Architecture::Centralised;
+        assert_eq!(cen.neighbours(1, 3), vec![0, 1, 2]);
+        let net = Architecture::Networked;
+        assert_eq!(net.neighbours(0, 4), vec![0, 1]);
+        assert_eq!(net.neighbours(2, 4), vec![1, 2, 3]);
+    }
+}

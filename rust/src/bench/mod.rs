@@ -1,0 +1,122 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Provides timed closures with warmup + simple statistics, and a table
+//! printer used by the figure-reproduction benches to emit the paper's
+//! rows/series in a uniform format that EXPERIMENTS.md records.
+
+use std::time::Instant;
+
+/// Timing statistics in nanoseconds per iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn time<F: FnMut()>(warmup: u64, iters: u64, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut min = f64::INFINITY;
+    let mut max = 0.0f64;
+    let mut total = 0.0f64;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        total += ns;
+        min = min.min(ns);
+        max = max.max(ns);
+    }
+    BenchStats { iters: iters.max(1), mean_ns: total / iters.max(1) as f64, min_ns: min, max_ns: max }
+}
+
+/// Report one benchmark line in a stable grep-able format.
+pub fn report(name: &str, stats: &BenchStats) {
+    println!(
+        "bench {name:<44} {:>12.0} ns/iter  ({:.1}/s, min {:.0}, max {:.0})",
+        stats.mean_ns,
+        stats.per_sec(),
+        stats.min_ns,
+        stats.max_ns
+    );
+}
+
+/// Print a labelled table row of (x, series values) — the benches emit
+/// the paper's figures as these rows.
+pub fn curve_row(fig: &str, series: &str, x: f64, y: f64) {
+    println!("curve {fig} {series} {x} {y}");
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Scale factor for bench workloads: `MAVA_BENCH_SCALE=4 cargo bench`
+/// runs 4x longer curves (the EXPERIMENTS.md runs use larger scales).
+pub fn scale() -> f64 {
+    std::env::var("MAVA_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Run one training configuration and emit its learning curve as
+/// `curve <fig> <series> <env_steps> <return>` rows (plus a walltime
+/// variant `curvet` keyed on seconds) — the figure-reproduction benches
+/// are built from these.
+pub fn figure_run(
+    fig: &str,
+    series: &str,
+    cfg: &crate::config::TrainConfig,
+    deadline_s: u64,
+) -> anyhow::Result<crate::systems::TrainResult> {
+    let result = crate::systems::train(
+        cfg,
+        Some(std::time::Duration::from_secs(deadline_s)),
+    )?;
+    for e in &result.evals {
+        curve_row(fig, series, e.env_steps as f64, e.mean_return as f64);
+    }
+    for e in &result.evals {
+        println!(
+            "curvet {fig} {series} {:.2} {:.4}",
+            e.wall_s, e.mean_return
+        );
+    }
+    println!(
+        "summary {fig} {series} best={:.3} final_train={:.3} steps={} \
+         train_steps={} wall_s={:.1}",
+        result.best_return(),
+        result.train_return,
+        result.env_steps,
+        result.train_steps,
+        result.wall_s
+    );
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_sane() {
+        let s = time(1, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min_ns <= s.mean_ns && s.mean_ns <= s.max_ns);
+        assert!(s.per_sec() > 0.0);
+    }
+}

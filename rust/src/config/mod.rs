@@ -1,0 +1,243 @@
+//! Configuration system: a TOML-subset parser (serde is unavailable
+//! offline) + the typed experiment config, with CLI overrides.
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs (string,
+//! float, int, bool), `#` comments. Every training/bench entry point is
+//! driven by a [`TrainConfig`], which can be loaded from a file
+//! (`configs/*.toml`) and overridden with `--key value` CLI flags.
+
+mod raw;
+
+pub use raw::RawConfig;
+
+use crate::arch::Architecture;
+use anyhow::{bail, Context, Result};
+
+/// Full experiment configuration (paper Block 2's program arguments plus
+/// the usual hyperparameters).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// System name: madqn | madqn_rec | dial | vdn | qmix | maddpg | mad4pg
+    pub system: String,
+    /// Artifact preset (DESIGN.md §4): matrix2 | switch3 | smac3m | ...
+    pub preset: String,
+    pub arch: Architecture,
+    /// Number of executor processes (paper `num_executors`).
+    pub num_executors: usize,
+    /// Stop after this many total environment steps.
+    pub max_env_steps: u64,
+    /// Stop after this many trainer steps (0 = unlimited).
+    pub max_train_steps: u64,
+
+    // optimisation
+    pub lr: f32,
+    pub tau: f32,
+    pub n_step: usize,
+
+    // exploration
+    pub eps_start: f32,
+    pub eps_end: f32,
+    pub eps_decay_steps: u64,
+    pub noise_sigma: f32,
+
+    // replay
+    pub replay_size: usize,
+    pub min_replay: usize,
+    pub samples_per_insert: f64,
+
+    // bookkeeping
+    pub seed: u64,
+    pub artifacts_dir: String,
+    pub log_dir: String,
+    pub eval_every_steps: u64,
+    pub eval_episodes: usize,
+    pub params_sync_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            system: "madqn".into(),
+            preset: "matrix2".into(),
+            arch: Architecture::Decentralised,
+            num_executors: 1,
+            max_env_steps: 10_000,
+            max_train_steps: 0,
+            lr: 1e-3,
+            tau: 0.01,
+            n_step: 1,
+            eps_start: 1.0,
+            eps_end: 0.05,
+            eps_decay_steps: 5_000,
+            noise_sigma: 0.2,
+            replay_size: 50_000,
+            min_replay: 256,
+            samples_per_insert: 4.0,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            log_dir: "logs".into(),
+            eval_every_steps: 1_000,
+            eval_episodes: 10,
+            params_sync_every: 16,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply a parsed config file section (`[train]`) on top of defaults.
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let mut c = TrainConfig::default();
+        let sec = "train";
+        macro_rules! get {
+            ($field:ident, $getter:ident) => {
+                if let Some(v) = raw.$getter(sec, stringify!($field)) {
+                    c.$field = v.try_into().ok().context(concat!(
+                        "bad value for ",
+                        stringify!($field)
+                    ))?;
+                }
+            };
+        }
+        if let Some(v) = raw.get_str(sec, "system") {
+            c.system = v.to_string();
+        }
+        if let Some(v) = raw.get_str(sec, "preset") {
+            c.preset = v.to_string();
+        }
+        if let Some(v) = raw.get_str(sec, "arch") {
+            c.arch = Architecture::parse(v)
+                .with_context(|| format!("bad arch {v:?}"))?;
+        }
+        if let Some(v) = raw.get_str(sec, "artifacts_dir") {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = raw.get_str(sec, "log_dir") {
+            c.log_dir = v.to_string();
+        }
+        get!(num_executors, get_usize);
+        get!(max_env_steps, get_u64);
+        get!(max_train_steps, get_u64);
+        get!(n_step, get_usize);
+        get!(replay_size, get_usize);
+        get!(min_replay, get_usize);
+        get!(eval_episodes, get_usize);
+        get!(seed, get_u64);
+        get!(eps_decay_steps, get_u64);
+        get!(eval_every_steps, get_u64);
+        get!(params_sync_every, get_u64);
+        if let Some(v) = raw.get_f64(sec, "lr") {
+            c.lr = v as f32;
+        }
+        if let Some(v) = raw.get_f64(sec, "tau") {
+            c.tau = v as f32;
+        }
+        if let Some(v) = raw.get_f64(sec, "eps_start") {
+            c.eps_start = v as f32;
+        }
+        if let Some(v) = raw.get_f64(sec, "eps_end") {
+            c.eps_end = v as f32;
+        }
+        if let Some(v) = raw.get_f64(sec, "noise_sigma") {
+            c.noise_sigma = v as f32;
+        }
+        if let Some(v) = raw.get_f64(sec, "samples_per_insert") {
+            c.samples_per_insert = v;
+        }
+        Ok(c)
+    }
+
+    /// Apply `--key value` CLI overrides (after an optional config file).
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let key = args[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", args[i]))?;
+            let val = args
+                .get(i + 1)
+                .with_context(|| format!("--{key} requires a value"))?;
+            self.set(key, val)?;
+            i += 2;
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "system" => self.system = val.into(),
+            "preset" => self.preset = val.into(),
+            "arch" => {
+                self.arch = Architecture::parse(val)
+                    .with_context(|| format!("bad arch {val:?}"))?
+            }
+            "num_executors" | "executors" => self.num_executors = val.parse()?,
+            "max_env_steps" | "steps" => self.max_env_steps = val.parse()?,
+            "max_train_steps" => self.max_train_steps = val.parse()?,
+            "lr" => self.lr = val.parse()?,
+            "tau" => self.tau = val.parse()?,
+            "n_step" => self.n_step = val.parse()?,
+            "eps_start" => self.eps_start = val.parse()?,
+            "eps_end" => self.eps_end = val.parse()?,
+            "eps_decay_steps" => self.eps_decay_steps = val.parse()?,
+            "noise_sigma" => self.noise_sigma = val.parse()?,
+            "replay_size" => self.replay_size = val.parse()?,
+            "min_replay" => self.min_replay = val.parse()?,
+            "samples_per_insert" => self.samples_per_insert = val.parse()?,
+            "seed" => self.seed = val.parse()?,
+            "artifacts_dir" => self.artifacts_dir = val.into(),
+            "log_dir" => self.log_dir = val.into(),
+            "eval_every_steps" => self.eval_every_steps = val.parse()?,
+            "eval_episodes" => self.eval_episodes = val.parse()?,
+            "params_sync_every" => self.params_sync_every = val.parse()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Name tag used by artifact lookup, e.g. `smac3m_vdn` or
+    /// `spread3_mad4pg_dec`.
+    pub fn artifact_prefix(&self) -> String {
+        match self.system.as_str() {
+            "maddpg" | "mad4pg" => {
+                format!("{}_{}_{}", self.preset, self.system, self.arch.tag())
+            }
+            _ => format!("{}_{}", self.preset, self.system),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_file_then_cli() {
+        let raw = RawConfig::parse(
+            "# comment\n[train]\nsystem = \"vdn\"\npreset = \"smac3m\"\n\
+             lr = 0.0005\nnum_executors = 4\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.system, "vdn");
+        assert_eq!(c.num_executors, 4);
+        assert!((c.lr - 5e-4).abs() < 1e-9);
+        c.apply_cli(&["--num_executors".into(), "2".into()]).unwrap();
+        assert_eq!(c.num_executors, 2);
+        assert_eq!(c.artifact_prefix(), "smac3m_vdn");
+    }
+
+    #[test]
+    fn actor_critic_prefix_includes_arch() {
+        let mut c = TrainConfig::default();
+        c.system = "mad4pg".into();
+        c.preset = "walker3".into();
+        c.arch = Architecture::Centralised;
+        assert_eq!(c.artifact_prefix(), "walker3_mad4pg_cen");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = TrainConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal TOML-subset parser: sections, scalar key/values, comments.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::from("");
+        for (lineno, line) in text.lines().enumerate() {
+            let line = match line.find('#') {
+                Some(i) => &line[..i],
+                None => line,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let Some(name) = name.strip_suffix(']') else {
+                    bail!("line {}: malformed section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = k.trim().to_string();
+            let mut val = v.trim().to_string();
+            if val.len() >= 2
+                && ((val.starts_with('"') && val.ends_with('"'))
+                    || (val.starts_with('\'') && val.ends_with('\'')))
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<RawConfig> {
+        let text = std::fs::read_to_string(path)?;
+        RawConfig::parse(&text)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get_str(section, key)?.parse().ok()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get_str(section, key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get_str(section, key)?.parse().ok()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get_str(section, key)? {
+            "true" | "1" | "yes" => Some(true),
+            "false" | "0" | "no" => Some(false),
+            _ => None,
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_comments() {
+        let c = RawConfig::parse(
+            "top = 1\n[a]\nx = 2.5 # trailing comment\nname = \"hi\"\n\
+             flag = true\n[b]\ny = -3\n",
+        )
+        .unwrap();
+        assert_eq!(c.get_u64("", "top"), Some(1));
+        assert_eq!(c.get_f64("a", "x"), Some(2.5));
+        assert_eq!(c.get_str("a", "name"), Some("hi"));
+        assert_eq!(c.get_bool("a", "flag"), Some(true));
+        assert_eq!(c.get_f64("b", "y"), Some(-3.0));
+        assert_eq!(c.get_str("a", "missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(RawConfig::parse("[oops\n").is_err());
+        assert!(RawConfig::parse("keyonly\n").is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Core multi-agent types: timesteps, specs, actions and host tensors.
+//!
+//! These mirror Mava's multi-agent extensions of the dm_env API: a
+//! [`TimeStep`] carries per-agent observations and rewards (the paper's
+//! "set of dictionaries indexed by agent ids" — here dense `Vec`s indexed
+//! by agent position), a shared discount and the step type. The extra
+//! `state` field carries the global state used by mixers / centralised
+//! critics (SMAC-style), and `legal_actions` the per-agent action masks.
+
+mod tensor;
+
+pub use tensor::{Dtype, HostTensor};
+
+/// Index of an agent within a system (Mava: `"agent_0"` etc.).
+pub type AgentId = usize;
+
+/// dm_env step type: first / transition / last step of an episode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepType {
+    First,
+    Mid,
+    Last,
+}
+
+/// A multi-agent environment transition (dm_env TimeStep, multi-agent).
+#[derive(Clone, Debug)]
+pub struct TimeStep {
+    pub step_type: StepType,
+    /// Per-agent observation vectors (padded to the spec's `obs_dim`).
+    pub observations: Vec<Vec<f32>>,
+    /// Per-agent rewards. On `First` steps these are zero.
+    pub rewards: Vec<f32>,
+    /// Shared discount: 1.0 mid-episode, 0.0 on terminal `Last` steps,
+    /// 1.0 on truncation (time-limit) `Last` steps.
+    pub discount: f32,
+    /// Global environment state for mixers / centralised critics
+    /// (empty when the preset does not use one).
+    pub state: Vec<f32>,
+    /// Per-agent legal-action masks (discrete envs only).
+    pub legal_actions: Option<Vec<Vec<bool>>>,
+}
+
+impl TimeStep {
+    pub fn is_last(&self) -> bool {
+        self.step_type == StepType::Last
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.observations.len()
+    }
+
+    /// Team (summed) reward.
+    pub fn team_reward(&self) -> f32 {
+        self.rewards.iter().sum()
+    }
+}
+
+/// Joint action for all agents.
+#[derive(Clone, Debug)]
+pub enum Actions {
+    Discrete(Vec<i32>),
+    Continuous(Vec<Vec<f32>>),
+}
+
+impl Actions {
+    pub fn n_agents(&self) -> usize {
+        match self {
+            Actions::Discrete(v) => v.len(),
+            Actions::Continuous(v) => v.len(),
+        }
+    }
+
+    pub fn as_discrete(&self) -> &[i32] {
+        match self {
+            Actions::Discrete(v) => v,
+            _ => panic!("expected discrete actions"),
+        }
+    }
+
+    pub fn as_continuous(&self) -> &[Vec<f32>] {
+        match self {
+            Actions::Continuous(v) => v,
+            _ => panic!("expected continuous actions"),
+        }
+    }
+
+    /// Flatten continuous actions to a single [N*A] buffer.
+    pub fn flat_continuous(&self) -> Vec<f32> {
+        self.as_continuous().iter().flatten().copied().collect()
+    }
+}
+
+/// Action space of one agent.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ActionSpec {
+    Discrete { n: usize },
+    Continuous { dim: usize },
+}
+
+/// Multi-agent environment spec (Mava's multi-agent `specs`).
+#[derive(Clone, Debug)]
+pub struct EnvSpec {
+    pub name: String,
+    pub n_agents: usize,
+    /// Per-agent observation dim (already padded for hetero agents).
+    pub obs_dim: usize,
+    pub action: ActionSpec,
+    /// Global state dim (0 when unused).
+    pub state_dim: usize,
+    /// Hard episode length cap (environments truncate themselves).
+    pub episode_limit: usize,
+}
+
+impl EnvSpec {
+    pub fn discrete(&self) -> bool {
+        matches!(self.action, ActionSpec::Discrete { .. })
+    }
+
+    pub fn n_actions(&self) -> usize {
+        match self.action {
+            ActionSpec::Discrete { n } => n,
+            ActionSpec::Continuous { dim } => dim,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timestep_helpers() {
+        let ts = TimeStep {
+            step_type: StepType::Last,
+            observations: vec![vec![0.0; 3]; 2],
+            rewards: vec![1.0, 2.0],
+            discount: 0.0,
+            state: vec![],
+            legal_actions: None,
+        };
+        assert!(ts.is_last());
+        assert_eq!(ts.n_agents(), 2);
+        assert_eq!(ts.team_reward(), 3.0);
+    }
+
+    #[test]
+    fn actions_accessors() {
+        let a = Actions::Discrete(vec![0, 2, 1]);
+        assert_eq!(a.n_agents(), 3);
+        assert_eq!(a.as_discrete(), &[0, 2, 1]);
+        let c = Actions::Continuous(vec![vec![0.1, 0.2], vec![0.3, 0.4]]);
+        assert_eq!(c.flat_continuous(), vec![0.1, 0.2, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn spec_helpers() {
+        let s = EnvSpec {
+            name: "t".into(),
+            n_agents: 2,
+            obs_dim: 4,
+            action: ActionSpec::Discrete { n: 3 },
+            state_dim: 8,
+            episode_limit: 10,
+        };
+        assert!(s.discrete());
+        assert_eq!(s.n_actions(), 3);
+    }
+}

@@ -1,0 +1,108 @@
+//! Host-side tensors: the typed buffers exchanged with the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// A dense host tensor (row-major), either f32 or i32.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    data_f32: Vec<f32>,
+    data_i32: Vec<i32>,
+    pub dtype: Dtype,
+}
+
+impl HostTensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data_f32: data, data_i32: vec![], dtype: Dtype::F32 }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data_f32: vec![], data_i32: data, dtype: Dtype::I32 }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::f32(vec![], vec![x])
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        HostTensor::f32(dims, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        match self.dtype {
+            Dtype::F32 => self.data_f32.len(),
+            Dtype::I32 => self.data_i32.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        debug_assert_eq!(self.dtype, Dtype::F32);
+        &self.data_f32
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        debug_assert_eq!(self.dtype, Dtype::F32);
+        &mut self.data_f32
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        debug_assert_eq!(self.dtype, Dtype::I32);
+        &self.data_i32
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        debug_assert_eq!(self.dtype, Dtype::F32);
+        self.data_f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.as_f32()[4], 5.0);
+        let i = HostTensor::i32(vec![2], vec![7, 8]);
+        assert_eq!(i.as_i32(), &[7, 8]);
+    }
+
+    #[test]
+    fn scalar_has_empty_dims() {
+        let s = HostTensor::scalar_f32(3.5);
+        assert!(s.dims.is_empty());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

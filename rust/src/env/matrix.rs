@@ -1,0 +1,170 @@
+//! Repeated matrix games — tiny cooperative benchmarks used by the unit
+//! and integration tests (and as the `matrix2` artifact preset).
+//!
+//! The climbing game (Claus & Boutilier, 1998) is the classic coordination
+//! testbed: two agents, payoff matrix
+//!
+//! ```text
+//!            a2=0    a2=1   a2=2
+//!   a1=0      11     -30      0
+//!   a1=1     -30       7      6
+//!   a1=2       0       0      5
+//! ```
+//!
+//! with a deceptive optimum at (0,0) surrounded by punishing
+//! miscoordination. Episodes are `episode_limit` repeats; observations
+//! encode the previous joint action so that recurrent-free Q-learners can
+//! still condition on history.
+
+use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::env::MultiAgentEnv;
+use crate::rng::Rng;
+
+pub const CLIMBING: [[f32; 3]; 3] =
+    [[11.0, -30.0, 0.0], [-30.0, 7.0, 6.0], [0.0, 0.0, 5.0]];
+
+pub const PENALTY: [[f32; 3]; 3] =
+    [[10.0, 0.0, -10.0], [0.0, 2.0, 0.0], [-10.0, 0.0, 10.0]];
+
+pub struct ClimbingGame {
+    spec: EnvSpec,
+    payoff: [[f32; 3]; 3],
+    t: usize,
+    last: [i32; 2],
+    _rng: Rng,
+}
+
+impl ClimbingGame {
+    pub fn new(seed: u64) -> Self {
+        Self::with_payoff(CLIMBING, seed)
+    }
+
+    pub fn penalty(seed: u64) -> Self {
+        Self::with_payoff(PENALTY, seed)
+    }
+
+    pub fn with_payoff(payoff: [[f32; 3]; 3], seed: u64) -> Self {
+        ClimbingGame {
+            spec: EnvSpec {
+                name: "matrix".into(),
+                n_agents: 2,
+                obs_dim: 4,
+                action: ActionSpec::Discrete { n: 3 },
+                state_dim: 8,
+                episode_limit: 5,
+            },
+            payoff,
+            t: 0,
+            last: [-1, -1],
+            _rng: Rng::new(seed),
+        }
+    }
+
+    fn observe(&self) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let tfrac = self.t as f32 / self.spec.episode_limit as f32;
+        let obs: Vec<Vec<f32>> = (0..2)
+            .map(|i| {
+                vec![
+                    1.0,
+                    tfrac,
+                    (self.last[i] as f32 + 1.0) / 3.0,
+                    (self.last[1 - i] as f32 + 1.0) / 3.0,
+                ]
+            })
+            .collect();
+        let state = obs.concat();
+        (obs, state)
+    }
+}
+
+impl MultiAgentEnv for ClimbingGame {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        self.t = 0;
+        self.last = [-1, -1];
+        let (observations, state) = self.observe();
+        TimeStep {
+            step_type: StepType::First,
+            observations,
+            rewards: vec![0.0; 2],
+            discount: 1.0,
+            state,
+            legal_actions: None,
+        }
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        let a = actions.as_discrete();
+        let r = self.payoff[a[0] as usize][a[1] as usize];
+        self.last = [a[0], a[1]];
+        self.t += 1;
+        let last = self.t >= self.spec.episode_limit;
+        let (observations, state) = self.observe();
+        TimeStep {
+            step_type: if last { StepType::Last } else { StepType::Mid },
+            observations,
+            rewards: vec![r; 2],
+            discount: 1.0, // repeats truncate, never terminate
+            state,
+            legal_actions: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimal_joint_action_pays_eleven() {
+        let mut env = ClimbingGame::new(0);
+        env.reset();
+        let ts = env.step(&Actions::Discrete(vec![0, 0]));
+        assert_eq!(ts.rewards, vec![11.0, 11.0]);
+    }
+
+    #[test]
+    fn miscoordination_punished() {
+        let mut env = ClimbingGame::new(0);
+        env.reset();
+        let ts = env.step(&Actions::Discrete(vec![0, 1]));
+        assert_eq!(ts.rewards[0], -30.0);
+    }
+
+    #[test]
+    fn episode_length() {
+        let mut env = ClimbingGame::new(0);
+        let mut ts = env.reset();
+        let mut n = 0;
+        while !ts.is_last() {
+            ts = env.step(&Actions::Discrete(vec![2, 2]));
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn obs_encode_last_actions() {
+        let mut env = ClimbingGame::new(0);
+        env.reset();
+        let ts = env.step(&Actions::Discrete(vec![1, 2]));
+        // agent 0 sees own=1 -> (1+1)/3, other=2 -> (2+1)/3
+        assert!((ts.observations[0][2] - 2.0 / 3.0).abs() < 1e-6);
+        assert!((ts.observations[0][3] - 1.0).abs() < 1e-6);
+        // agent 1 mirrored
+        assert!((ts.observations[1][2] - 1.0).abs() < 1e-6);
+        assert_eq!(ts.state.len(), 8);
+    }
+
+    #[test]
+    fn random_play_runs() {
+        let mut env = ClimbingGame::new(1);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            crate::env::random_episode(&mut env, &mut rng);
+        }
+    }
+}

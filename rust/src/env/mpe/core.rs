@@ -1,0 +1,185 @@
+//! MPE physics core: point-mass entities with damping and soft contacts.
+//!
+//! Matches openai/multiagent-particle-envs `core.py`:
+//!   p_vel <- p_vel * (1 - damping)
+//!   p_vel <- p_vel + (F / mass) * dt
+//!   p_pos <- p_pos + p_vel * dt
+//! with contact force between overlapping entities
+//!   f = k * log(1 + exp((d_min - d) / margin)) * margin  (softplus)
+//! where k = 100, margin = 1e-3.
+
+#[derive(Clone, Debug)]
+pub struct Entity {
+    pub pos: [f32; 2],
+    pub vel: [f32; 2],
+    pub size: f32,
+    pub mass: f32,
+    pub movable: bool,
+    pub collide: bool,
+}
+
+impl Entity {
+    pub fn new(size: f32, movable: bool, collide: bool) -> Self {
+        Entity {
+            pos: [0.0; 2],
+            vel: [0.0; 2],
+            size,
+            mass: 1.0,
+            movable,
+            collide,
+        }
+    }
+
+    pub fn dist(&self, other: &Entity) -> f32 {
+        let dx = self.pos[0] - other.pos[0];
+        let dy = self.pos[1] - other.pos[1];
+        (dx * dx + dy * dy).sqrt()
+    }
+
+    pub fn overlaps(&self, other: &Entity) -> bool {
+        self.dist(other) < self.size + other.size
+    }
+}
+
+pub const DT: f32 = 0.1;
+pub const DAMPING: f32 = 0.25;
+pub const CONTACT_FORCE: f32 = 100.0;
+pub const CONTACT_MARGIN: f32 = 1e-3;
+
+/// The physical world: `agents` move, `landmarks` are static scenery.
+#[derive(Clone, Debug, Default)]
+pub struct World {
+    pub agents: Vec<Entity>,
+    pub landmarks: Vec<Entity>,
+}
+
+impl World {
+    /// Integrate one physics step given per-agent control forces.
+    pub fn step(&mut self, forces: &[[f32; 2]]) {
+        assert_eq!(forces.len(), self.agents.len());
+        let n = self.agents.len();
+        let mut total: Vec<[f32; 2]> = forces.to_vec();
+
+        // pairwise contact forces between colliding agents
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !(self.agents[i].collide && self.agents[j].collide) {
+                    continue;
+                }
+                let (a, b) = (&self.agents[i], &self.agents[j]);
+                let delta = [a.pos[0] - b.pos[0], a.pos[1] - b.pos[1]];
+                let dist = (delta[0] * delta[0] + delta[1] * delta[1])
+                    .sqrt()
+                    .max(1e-6);
+                let dist_min = a.size + b.size;
+                // numerically stable softplus penetration:
+                // softplus(u) = max(u, 0) + ln(1 + exp(-|u|))
+                let k = CONTACT_MARGIN;
+                let u = (dist_min - dist) / k;
+                let pen = (u.max(0.0) + (-u.abs()).exp().ln_1p()) * k;
+                let f = CONTACT_FORCE * pen;
+                let fx = f * delta[0] / dist;
+                let fy = f * delta[1] / dist;
+                total[i][0] += fx;
+                total[i][1] += fy;
+                total[j][0] -= fx;
+                total[j][1] -= fy;
+            }
+        }
+
+        for (agent, f) in self.agents.iter_mut().zip(&total) {
+            if !agent.movable {
+                continue;
+            }
+            agent.vel[0] *= 1.0 - DAMPING;
+            agent.vel[1] *= 1.0 - DAMPING;
+            agent.vel[0] += f[0] / agent.mass * DT;
+            agent.vel[1] += f[1] / agent.mass * DT;
+            agent.pos[0] += agent.vel[0] * DT;
+            agent.pos[1] += agent.vel[1] * DT;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_particle_coasts_with_damping() {
+        let mut w = World::default();
+        let mut e = Entity::new(0.05, true, false);
+        e.vel = [1.0, 0.0];
+        w.agents.push(e);
+        w.step(&[[0.0, 0.0]]);
+        assert!((w.agents[0].vel[0] - 0.75).abs() < 1e-6);
+        assert!((w.agents[0].pos[0] - 0.075).abs() < 1e-6);
+    }
+
+    #[test]
+    fn force_accelerates() {
+        let mut w = World::default();
+        w.agents.push(Entity::new(0.05, true, false));
+        w.step(&[[5.0, 0.0]]);
+        assert!((w.agents[0].vel[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn immovable_entity_stays_put() {
+        let mut w = World::default();
+        let mut e = Entity::new(0.05, false, false);
+        e.vel = [1.0, 1.0];
+        w.agents.push(e);
+        w.step(&[[10.0, 10.0]]);
+        assert_eq!(w.agents[0].pos, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn overlapping_agents_repel() {
+        let mut w = World::default();
+        let mut a = Entity::new(0.15, true, true);
+        let mut b = Entity::new(0.15, true, true);
+        a.pos = [0.0, 0.0];
+        b.pos = [0.1, 0.0]; // heavily overlapping
+        w.agents.push(a);
+        w.agents.push(b);
+        w.step(&[[0.0, 0.0], [0.0, 0.0]]);
+        assert!(w.agents[0].vel[0] < 0.0, "a pushed left");
+        assert!(w.agents[1].vel[0] > 0.0, "b pushed right");
+    }
+
+    /// Regression: deep overlap must not overflow the softplus — forces
+    /// (and hence velocities/positions) stay finite even when entities
+    /// sit on top of each other (found as NaN replay data in MAD4PG).
+    #[test]
+    fn deep_overlap_force_is_finite() {
+        let mut w = World::default();
+        let mut a = Entity::new(0.15, true, true);
+        let mut b = Entity::new(0.15, true, true);
+        a.pos = [0.0, 0.0];
+        b.pos = [1e-4, 0.0];
+        w.agents.push(a);
+        w.agents.push(b);
+        for _ in 0..50 {
+            w.step(&[[0.0, 0.0], [0.0, 0.0]]);
+        }
+        for e in &w.agents {
+            assert!(e.pos[0].is_finite() && e.vel[0].is_finite());
+        }
+        // linear regime: penetration ~ dist_min - dist
+        assert!(w.agents[0].vel[0] < 0.0 && w.agents[1].vel[0] > 0.0);
+    }
+
+    #[test]
+    fn distant_agents_do_not_interact() {
+        let mut w = World::default();
+        let mut a = Entity::new(0.1, true, true);
+        let mut b = Entity::new(0.1, true, true);
+        a.pos = [0.0, 0.0];
+        b.pos = [2.0, 0.0];
+        w.agents.push(a);
+        w.agents.push(b);
+        w.step(&[[0.0, 0.0], [0.0, 0.0]]);
+        assert!(w.agents[0].vel[0].abs() < 1e-4);
+    }
+}

@@ -1,0 +1,12 @@
+//! Multi-agent Particle Environments (MPE, Lowe et al. 2017 /
+//! openai/multiagent-particle-envs) — paper Fig 6 (top-right).
+//!
+//! Faithful port of the point-mass physics core (dt = 0.1, velocity
+//! damping 0.25, soft contact forces) plus the two scenarios the paper
+//! benchmarks: `simple_spread` and `simple_speaker_listener`.
+
+pub mod core;
+pub mod speaker_listener;
+pub mod spread;
+
+pub use core::{Entity, World};

@@ -1,0 +1,175 @@
+//! MPE `simple_speaker_listener` — Fig 6 top-right.
+//!
+//! A static speaker observes which of three landmarks is the goal and
+//! emits a 3-dim continuous communication vector; a mobile listener
+//! observes the landmarks and the speaker's utterance and must navigate
+//! to the goal. Shared reward: minus the squared listener-goal distance.
+//!
+//! Heterogeneous specs are padded to the preset maxima (obs 11, act 3):
+//! the speaker's observation is its 3-dim goal one-hot + zeros; the
+//! listener's action uses only the first two dims (acceleration).
+
+use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::env::mpe::core::{Entity, World};
+use crate::env::MultiAgentEnv;
+use crate::rng::Rng;
+
+const ACCEL: f32 = 5.0;
+const EPISODE: usize = 25;
+pub const SPEAKER: usize = 0;
+pub const LISTENER: usize = 1;
+
+pub struct SpeakerListener {
+    spec: EnvSpec,
+    rng: Rng,
+    world: World, // agents[0] = listener body (speaker has no body)
+    goal: usize,
+    comm: [f32; 3], // last utterance (heard with one-step delay)
+    t: usize,
+}
+
+impl SpeakerListener {
+    pub fn new(seed: u64) -> Self {
+        SpeakerListener {
+            spec: EnvSpec {
+                name: "mpe_speaker_listener".into(),
+                n_agents: 2,
+                obs_dim: 11,
+                action: ActionSpec::Continuous { dim: 3 },
+                state_dim: 22,
+                episode_limit: EPISODE,
+            },
+            rng: Rng::new(seed),
+            world: World::default(),
+            goal: 0,
+            comm: [0.0; 3],
+            t: 0,
+        }
+    }
+
+    fn observe(&self) -> Vec<Vec<f32>> {
+        // speaker: goal one-hot, padded to 11
+        let mut sp = vec![0.0f32; self.spec.obs_dim];
+        sp[self.goal] = 1.0;
+        // listener: vel(2) + rel landmarks(6) + comm(3)
+        let li_body = &self.world.agents[0];
+        let mut li = Vec::with_capacity(self.spec.obs_dim);
+        li.extend_from_slice(&li_body.vel);
+        for lm in &self.world.landmarks {
+            li.push(lm.pos[0] - li_body.pos[0]);
+            li.push(lm.pos[1] - li_body.pos[1]);
+        }
+        li.extend_from_slice(&self.comm);
+        vec![sp, li]
+    }
+
+    fn reward(&self) -> f32 {
+        let d = self.world.agents[0].dist(&self.world.landmarks[self.goal]);
+        -(d * d)
+    }
+
+    fn timestep(&self, st: StepType, reward: f32) -> TimeStep {
+        let observations = self.observe();
+        let state = observations.concat();
+        TimeStep {
+            step_type: st,
+            observations,
+            rewards: vec![reward; 2],
+            discount: 1.0,
+            state,
+            legal_actions: None,
+        }
+    }
+}
+
+impl MultiAgentEnv for SpeakerListener {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        self.t = 0;
+        self.comm = [0.0; 3];
+        self.goal = self.rng.below(3);
+        self.world = World::default();
+        let mut body = Entity::new(0.075, true, false);
+        body.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
+        self.world.agents.push(body);
+        for _ in 0..3 {
+            let mut l = Entity::new(0.04, false, false);
+            l.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
+            self.world.landmarks.push(l);
+        }
+        self.timestep(StepType::First, 0.0)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        let acts = actions.as_continuous();
+        self.t += 1;
+        // speaker utterance: heard on the NEXT step (MPE comm delay)
+        self.comm = [
+            acts[SPEAKER][0].clamp(-1.0, 1.0),
+            acts[SPEAKER][1].clamp(-1.0, 1.0),
+            acts[SPEAKER][2].clamp(-1.0, 1.0),
+        ];
+        // listener motion: first two action dims
+        let f = [
+            acts[LISTENER][0].clamp(-1.0, 1.0) * ACCEL,
+            acts[LISTENER][1].clamp(-1.0, 1.0) * ACCEL,
+        ];
+        self.world.step(&[f]);
+        let r = self.reward();
+        let st = if self.t >= EPISODE { StepType::Last } else { StepType::Mid };
+        self.timestep(st, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_matches_preset() {
+        let env = SpeakerListener::new(0);
+        assert_eq!(env.spec().obs_dim, 11);
+        assert_eq!(env.spec().state_dim, 22);
+        assert_eq!(env.spec().n_actions(), 3);
+    }
+
+    #[test]
+    fn speaker_obs_is_goal_onehot() {
+        let mut env = SpeakerListener::new(1);
+        let ts = env.reset();
+        let sp = &ts.observations[SPEAKER];
+        assert_eq!(sp.iter().sum::<f32>(), 1.0);
+        assert_eq!(sp[env.goal], 1.0);
+    }
+
+    #[test]
+    fn comm_delayed_one_step() {
+        let mut env = SpeakerListener::new(2);
+        let ts0 = env.reset();
+        assert_eq!(&ts0.observations[LISTENER][8..11], &[0.0; 3]);
+        let a = Actions::Continuous(vec![vec![0.5, -0.5, 1.0], vec![0.0; 3]]);
+        let ts1 = env.step(&a);
+        assert_eq!(&ts1.observations[LISTENER][8..11], &[0.5, -0.5, 1.0]);
+    }
+
+    #[test]
+    fn moving_to_goal_improves_reward() {
+        let mut env = SpeakerListener::new(3);
+        env.reset();
+        let far = env.reward();
+        env.world.agents[0].pos = env.world.landmarks[env.goal].pos;
+        assert!(env.reward() > far);
+        assert!(env.reward().abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_episode_runs() {
+        let mut env = SpeakerListener::new(4);
+        let mut rng = Rng::new(5);
+        let (_, steps) = crate::env::random_episode(&mut env, &mut rng);
+        assert_eq!(steps, 25);
+    }
+}

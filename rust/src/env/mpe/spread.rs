@@ -1,0 +1,186 @@
+//! MPE `simple_spread`: N agents must cover N landmarks — Fig 6 top-right.
+//!
+//! Shared reward: minus the sum over landmarks of the distance to the
+//! closest agent, minus 1 per colliding agent pair (original scenario).
+//! Continuous actions: 2-D acceleration in [-1, 1], scaled by the MPE
+//! sensitivity factor.
+
+use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::env::mpe::core::{Entity, World};
+use crate::env::MultiAgentEnv;
+use crate::rng::Rng;
+
+const ACCEL: f32 = 5.0; // MPE u_multiplier for spread-like scenarios
+const EPISODE: usize = 25;
+
+pub struct Spread {
+    spec: EnvSpec,
+    rng: Rng,
+    world: World,
+    n: usize,
+    t: usize,
+}
+
+impl Spread {
+    pub fn new(n: usize, seed: u64) -> Self {
+        Spread {
+            spec: EnvSpec {
+                name: "mpe_spread".into(),
+                n_agents: n,
+                obs_dim: 4 + 2 * n + 2 * (n - 1),
+                action: ActionSpec::Continuous { dim: 2 },
+                state_dim: n * (4 + 2 * n + 2 * (n - 1)),
+                episode_limit: EPISODE,
+            },
+            rng: Rng::new(seed),
+            world: World::default(),
+            n,
+            t: 0,
+        }
+    }
+
+    fn observe(&self) -> Vec<Vec<f32>> {
+        (0..self.n)
+            .map(|i| {
+                let me = &self.world.agents[i];
+                let mut o = Vec::with_capacity(self.spec.obs_dim);
+                o.extend_from_slice(&me.vel);
+                o.extend_from_slice(&me.pos);
+                for lm in &self.world.landmarks {
+                    o.push(lm.pos[0] - me.pos[0]);
+                    o.push(lm.pos[1] - me.pos[1]);
+                }
+                for (j, other) in self.world.agents.iter().enumerate() {
+                    if j != i {
+                        o.push(other.pos[0] - me.pos[0]);
+                        o.push(other.pos[1] - me.pos[1]);
+                    }
+                }
+                o
+            })
+            .collect()
+    }
+
+    fn reward(&self) -> f32 {
+        let mut r = 0.0;
+        for lm in &self.world.landmarks {
+            let min_d = self
+                .world
+                .agents
+                .iter()
+                .map(|a| a.dist(lm))
+                .fold(f32::INFINITY, f32::min);
+            r -= min_d;
+        }
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if self.world.agents[i].overlaps(&self.world.agents[j]) {
+                    r -= 1.0;
+                }
+            }
+        }
+        r
+    }
+
+    fn timestep(&self, st: StepType, reward: f32) -> TimeStep {
+        let observations = self.observe();
+        let state = observations.concat();
+        TimeStep {
+            step_type: st,
+            observations,
+            rewards: vec![reward; self.n],
+            discount: 1.0, // spread truncates (time limit), never terminates
+            state,
+            legal_actions: None,
+        }
+    }
+}
+
+impl MultiAgentEnv for Spread {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        self.t = 0;
+        self.world = World::default();
+        for _ in 0..self.n {
+            let mut a = Entity::new(0.15, true, true);
+            a.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
+            self.world.agents.push(a);
+        }
+        for _ in 0..self.n {
+            let mut l = Entity::new(0.05, false, false);
+            l.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
+            self.world.landmarks.push(l);
+        }
+        self.timestep(StepType::First, 0.0)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        let acts = actions.as_continuous();
+        self.t += 1;
+        let forces: Vec<[f32; 2]> = acts
+            .iter()
+            .map(|a| [a[0].clamp(-1.0, 1.0) * ACCEL, a[1].clamp(-1.0, 1.0) * ACCEL])
+            .collect();
+        self.world.step(&forces);
+        let r = self.reward();
+        let st = if self.t >= EPISODE { StepType::Last } else { StepType::Mid };
+        self.timestep(st, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_matches_preset() {
+        let env = Spread::new(3, 0);
+        assert_eq!(env.spec().obs_dim, 14);
+        assert_eq!(env.spec().state_dim, 42);
+    }
+
+    #[test]
+    fn reward_improves_when_agents_reach_landmarks() {
+        let mut env = Spread::new(3, 1);
+        env.reset();
+        let r_far = env.reward();
+        // teleport agents onto landmarks
+        for i in 0..3 {
+            env.world.agents[i].pos = env.world.landmarks[i].pos;
+        }
+        let r_on = env.reward();
+        assert!(r_on > r_far, "{r_on} !> {r_far}");
+        assert!(r_on > -0.5, "covering all landmarks ~0 distance cost");
+    }
+
+    #[test]
+    fn collision_penalty_applies() {
+        let mut env = Spread::new(3, 2);
+        env.reset();
+        for a in &mut env.world.agents {
+            a.pos = [0.0, 0.0];
+        }
+        let r = env.reward();
+        // 3 overlapping pairs -> at least -3 from collisions
+        let dist_part: f32 = env
+            .world
+            .landmarks
+            .iter()
+            .map(|lm| {
+                env.world.agents.iter().map(|a| a.dist(lm)).fold(f32::INFINITY, f32::min)
+            })
+            .sum();
+        assert!((r + dist_part + 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn episode_runs_25_steps() {
+        let mut env = Spread::new(3, 3);
+        let mut rng = Rng::new(4);
+        let (_, steps) = crate::env::random_episode(&mut env, &mut rng);
+        assert_eq!(steps, 25);
+    }
+}

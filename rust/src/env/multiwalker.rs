@@ -1,0 +1,304 @@
+//! Simplified Multi-Walker (Gupta et al., 2017) — Fig 6 mid/bottom-right.
+//!
+//! The original is a Box2D bipedal-walker swarm jointly carrying a
+//! package. A full rigid-body port is orthogonal to the *systems*
+//! contribution the figure tests (cooperative continuous control where
+//! every agent's failure ends the episode), so walkers are modelled as
+//! force-controlled leg-carts: each walker has a horizontal position and
+//! a leg extension, the package rests across the walkers, and it falls if
+//! the walkers spread apart or the package tilts past a threshold.
+//! Reward: shared forward progress of the package, a control cost, and a
+//! large penalty on dropping it — the same learning signal structure
+//! (dense progress + catastrophic cooperative failure) as the original.
+//!
+//! Actions per walker: 4 torques in [-1,1] mapped to horizontal force
+//! (front+back hip) and leg extension force (front+back knee), mirroring
+//! the original's 4-dim joint-torque interface.
+
+use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::env::MultiAgentEnv;
+use crate::rng::Rng;
+
+const DT: f32 = 0.05;
+const SPACING: f32 = 1.0;
+const DRAG: f32 = 1.0;
+const LEG_K: f32 = 8.0; // leg spring toward nominal extension
+const G_EFF: f32 = 2.0; // effective load on the legs
+const FX_SCALE: f32 = 4.0;
+const FH_SCALE: f32 = 6.0;
+const TILT_LIMIT: f32 = 0.35;
+const SPREAD_LIMIT: f32 = 0.6;
+const H_MIN: f32 = 0.5;
+const H_MAX: f32 = 1.5;
+const EPISODE: usize = 100;
+const PROGRESS_SCALE: f32 = 10.0;
+const CTRL_COST: f32 = 0.02;
+const FALL_PENALTY: f32 = -10.0;
+
+#[derive(Clone, Debug)]
+struct Walker {
+    x: f32,
+    vx: f32,
+    h: f32,
+    vh: f32,
+}
+
+pub struct MultiWalker {
+    spec: EnvSpec,
+    rng: Rng,
+    n: usize,
+    walkers: Vec<Walker>,
+    package_x: f32,
+    prev_tilt: f32,
+    t: usize,
+    done: bool,
+}
+
+impl MultiWalker {
+    pub fn new(n: usize, seed: u64) -> Self {
+        MultiWalker {
+            spec: EnvSpec {
+                name: "multiwalker".into(),
+                n_agents: n,
+                obs_dim: 20,
+                action: ActionSpec::Continuous { dim: 4 },
+                state_dim: 20 * n,
+                episode_limit: EPISODE,
+            },
+            rng: Rng::new(seed),
+            n,
+            walkers: vec![],
+            package_x: 0.0,
+            prev_tilt: 0.0,
+            t: 0,
+            done: true,
+        }
+    }
+
+    fn tilt(&self) -> f32 {
+        let h0 = self.walkers.first().unwrap().h;
+        let h1 = self.walkers.last().unwrap().h;
+        ((h1 - h0) / ((self.n - 1) as f32 * SPACING)).atan()
+    }
+
+    fn spread_violation(&self) -> bool {
+        self.walkers.windows(2).any(|w| {
+            ((w[1].x - w[0].x) - SPACING).abs() > SPREAD_LIMIT
+        })
+    }
+
+    fn observe(&self) -> Vec<Vec<f32>> {
+        let tilt = self.tilt();
+        let vtilt = tilt - self.prev_tilt;
+        let pkg_vx =
+            self.walkers.iter().map(|w| w.vx).sum::<f32>() / self.n as f32;
+        (0..self.n)
+            .map(|i| {
+                let w = &self.walkers[i];
+                let nominal = self.package_x + (i as f32 - (self.n - 1) as f32 / 2.0) * SPACING;
+                let left = if i > 0 {
+                    let l = &self.walkers[i - 1];
+                    [(w.x - l.x) - SPACING, l.h - w.h, l.vx - w.vx]
+                } else {
+                    [0.0; 3]
+                };
+                let right = if i + 1 < self.n {
+                    let r = &self.walkers[i + 1];
+                    [(r.x - w.x) - SPACING, r.h - w.h, r.vx - w.vx]
+                } else {
+                    [0.0; 3]
+                };
+                let mut o = vec![
+                    w.h - 1.0,
+                    w.vh,
+                    w.vx,
+                    w.x - nominal,
+                    tilt,
+                    vtilt,
+                    pkg_vx,
+                    left[0],
+                    left[1],
+                    left[2],
+                    right[0],
+                    right[1],
+                    right[2],
+                    (i > 0) as u8 as f32,
+                    (i + 1 < self.n) as u8 as f32,
+                    self.t as f32 / EPISODE as f32,
+                    1.0,
+                ];
+                o.resize(self.spec.obs_dim, 0.0);
+                o
+            })
+            .collect()
+    }
+
+    fn timestep(&self, st: StepType, reward: f32, discount: f32) -> TimeStep {
+        let observations = self.observe();
+        let state = observations.concat();
+        TimeStep {
+            step_type: st,
+            observations,
+            rewards: vec![reward; self.n],
+            discount,
+            state,
+            legal_actions: None,
+        }
+    }
+}
+
+impl MultiAgentEnv for MultiWalker {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        self.t = 0;
+        self.done = false;
+        self.prev_tilt = 0.0;
+        self.package_x = 0.0;
+        self.walkers = (0..self.n)
+            .map(|i| Walker {
+                x: (i as f32 - (self.n - 1) as f32 / 2.0) * SPACING
+                    + self.rng.range_f32(-0.05, 0.05),
+                vx: 0.0,
+                h: 1.0 + self.rng.range_f32(-0.05, 0.05),
+                vh: 0.0,
+            })
+            .collect();
+        self.timestep(StepType::First, 0.0, 1.0)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        assert!(!self.done, "step() after episode end");
+        let acts = actions.as_continuous();
+        self.t += 1;
+        self.prev_tilt = self.tilt();
+
+        let mut ctrl = 0.0;
+        for (w, a) in self.walkers.iter_mut().zip(acts) {
+            let a: Vec<f32> = a.iter().map(|x| x.clamp(-1.0, 1.0)).collect();
+            ctrl += a.iter().map(|x| x * x).sum::<f32>();
+            let fx = FX_SCALE * 0.5 * (a[0] + a[2]);
+            let fh = FH_SCALE * 0.5 * (a[1] + a[3]);
+            w.vx += (fx - DRAG * w.vx) * DT;
+            w.x += w.vx * DT;
+            w.vh += (fh - LEG_K * (w.h - 1.0) - G_EFF) * DT;
+            w.h += w.vh * DT;
+            if w.h < H_MIN {
+                w.h = H_MIN;
+                w.vh = 0.0;
+            } else if w.h > H_MAX {
+                w.h = H_MAX;
+                w.vh = 0.0;
+            }
+        }
+
+        // the package rides the walkers
+        let old_pkg = self.package_x;
+        self.package_x =
+            self.walkers.iter().map(|w| w.x).sum::<f32>() / self.n as f32;
+        let progress = self.package_x - old_pkg;
+
+        let fell = self.tilt().abs() > TILT_LIMIT || self.spread_violation();
+        let truncated = !fell && self.t >= EPISODE;
+        self.done = fell || truncated;
+
+        let reward = if fell {
+            FALL_PENALTY
+        } else {
+            PROGRESS_SCALE * progress - CTRL_COST * ctrl / self.n as f32
+        };
+        let st = if self.done { StepType::Last } else { StepType::Mid };
+        self.timestep(st, reward, if fell { 0.0 } else { 1.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle(n: usize) -> Actions {
+        Actions::Continuous(vec![vec![0.0; 4]; n])
+    }
+
+    /// Legs sag under load without lift force, but uniformly: no tilt.
+    #[test]
+    fn idle_walkers_survive_briefly() {
+        let mut env = MultiWalker::new(3, 0);
+        let mut ts = env.reset();
+        for _ in 0..10 {
+            assert!(!ts.is_last());
+            ts = env.step(&idle(3));
+        }
+    }
+
+    #[test]
+    fn forward_force_earns_progress_reward() {
+        let mut env = MultiWalker::new(3, 1);
+        env.reset();
+        let fwd = Actions::Continuous(vec![vec![1.0, 0.3, 1.0, 0.3]; 3]);
+        let mut total = 0.0;
+        let mut ts;
+        for _ in 0..30 {
+            ts = env.step(&fwd);
+            total += ts.rewards[0];
+            if ts.is_last() {
+                break;
+            }
+        }
+        assert!(total > 0.0, "synchronised push must progress: {total}");
+    }
+
+    #[test]
+    fn uneven_legs_drop_the_package() {
+        let mut env = MultiWalker::new(3, 2);
+        env.reset();
+        // walker 0 pushes its legs all the way up, walker 2 down
+        let acts = Actions::Continuous(vec![
+            vec![0.0, 1.0, 0.0, 1.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![0.0, -1.0, 0.0, -1.0],
+        ]);
+        let mut fell = false;
+        for _ in 0..EPISODE {
+            let ts = env.step(&acts);
+            if ts.is_last() {
+                fell = ts.rewards[0] == FALL_PENALTY;
+                break;
+            }
+        }
+        assert!(fell, "tilting legs must drop the package");
+    }
+
+    #[test]
+    fn spreading_apart_fails() {
+        let mut env = MultiWalker::new(3, 3);
+        env.reset();
+        let acts = Actions::Continuous(vec![
+            vec![-1.0, 0.0, -1.0, 0.0],
+            vec![0.0; 4],
+            vec![1.0, 0.0, 1.0, 0.0],
+        ]);
+        let mut fell = false;
+        for _ in 0..EPISODE {
+            let ts = env.step(&acts);
+            if ts.is_last() {
+                fell = ts.rewards[0] == FALL_PENALTY;
+                break;
+            }
+        }
+        assert!(fell, "walkers pulling apart must drop the package");
+    }
+
+    #[test]
+    fn spec_and_random_play() {
+        let mut env = MultiWalker::new(3, 4);
+        assert_eq!(env.spec().obs_dim, 20);
+        assert_eq!(env.spec().state_dim, 60);
+        let mut rng = Rng::new(5);
+        for _ in 0..5 {
+            crate::env::random_episode(&mut env, &mut rng);
+        }
+    }
+}

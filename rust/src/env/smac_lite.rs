@@ -1,0 +1,416 @@
+//! smac_lite: a StarCraft-free reimplementation of the SMAC 3m
+//! micromanagement level — paper Fig 4 (bottom).
+//!
+//! SC2 is a closed binary, so we rebuild the decision problem the 3m map
+//! poses: 3 allied marines (controlled, one per agent) against 3 enemy
+//! marines driven by a focus-fire heuristic, on a bounded 2-D arena with
+//! SMAC's action set (no-op / stop / move x4 / attack x3), sight & shoot
+//! ranges, attack cooldown and the SMAC shaped reward
+//! (damage + kill bonus + win bonus, normalised so the maximum episode
+//! return is ~20). This keeps the cooperative focus-fire credit-assignment
+//! structure that VDN/QMIX exploit — the property Fig 4 (bottom) tests.
+
+use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::env::MultiAgentEnv;
+use crate::rng::Rng;
+
+const MAP: f32 = 16.0;
+const MAX_HEALTH: f32 = 45.0;
+const DAMAGE: f32 = 6.0;
+const COOLDOWN: u32 = 1; // steps between shots
+const SHOOT_RANGE: f32 = 6.0;
+const SIGHT_RANGE: f32 = 9.0;
+const MOVE_STEP: f32 = 2.0;
+const KILL_BONUS: f32 = 10.0;
+const WIN_BONUS: f32 = 200.0;
+const REWARD_CAP: f32 = 20.0;
+
+pub const ACT_NOOP: usize = 0;
+pub const ACT_STOP: usize = 1;
+pub const ACT_MOVE_N: usize = 2; // then S, E, W
+pub const ACT_ATTACK_0: usize = 6;
+
+#[derive(Clone, Copy, Debug)]
+struct Unit {
+    x: f32,
+    y: f32,
+    health: f32,
+    cooldown: u32,
+}
+
+impl Unit {
+    fn alive(&self) -> bool {
+        self.health > 0.0
+    }
+    fn dist(&self, o: &Unit) -> f32 {
+        ((self.x - o.x).powi(2) + (self.y - o.y).powi(2)).sqrt()
+    }
+}
+
+pub struct SmacLite {
+    spec: EnvSpec,
+    rng: Rng,
+    n: usize,
+    allies: Vec<Unit>,
+    enemies: Vec<Unit>,
+    t: usize,
+    done: bool,
+    max_reward: f32,
+}
+
+impl SmacLite {
+    pub fn new_3m(seed: u64) -> Self {
+        Self::new(3, seed)
+    }
+
+    pub fn new(n: usize, seed: u64) -> Self {
+        let obs_dim = 4 + 5 * (n - 1) + 5 * n + 1;
+        SmacLite {
+            spec: EnvSpec {
+                name: "smac_lite".into(),
+                n_agents: n,
+                obs_dim,
+                action: ActionSpec::Discrete { n: 6 + n },
+                state_dim: n * obs_dim,
+                episode_limit: 60,
+            },
+            rng: Rng::new(seed),
+            n,
+            allies: vec![],
+            enemies: vec![],
+            t: 0,
+            done: true,
+            max_reward: n as f32 * (MAX_HEALTH + KILL_BONUS) + WIN_BONUS,
+        }
+    }
+
+    fn spawn(&mut self) {
+        self.allies = (0..self.n)
+            .map(|i| Unit {
+                x: 4.0 + self.rng.range_f32(-0.5, 0.5),
+                y: 5.0 + 3.0 * i as f32 + self.rng.range_f32(-0.5, 0.5),
+                health: MAX_HEALTH,
+                cooldown: 0,
+            })
+            .collect();
+        self.enemies = (0..self.n)
+            .map(|i| Unit {
+                x: 12.0 + self.rng.range_f32(-0.5, 0.5),
+                y: 5.0 + 3.0 * i as f32 + self.rng.range_f32(-0.5, 0.5),
+                health: MAX_HEALTH,
+                cooldown: 0,
+            })
+            .collect();
+    }
+
+    fn unit_feats(me: &Unit, other: &Unit, range: f32) -> [f32; 5] {
+        if !other.alive() {
+            return [0.0; 5];
+        }
+        let d = me.dist(other);
+        if d > range {
+            return [0.0; 5];
+        }
+        [
+            1.0,
+            d / range,
+            (other.x - me.x) / range,
+            (other.y - me.y) / range,
+            other.health / MAX_HEALTH,
+        ]
+    }
+
+    fn observe(&self) -> Vec<Vec<f32>> {
+        (0..self.n)
+            .map(|i| {
+                let me = &self.allies[i];
+                let mut o = Vec::with_capacity(self.spec.obs_dim);
+                if !me.alive() {
+                    o.resize(self.spec.obs_dim, 0.0);
+                    return o;
+                }
+                o.extend_from_slice(&[
+                    me.health / MAX_HEALTH,
+                    me.x / (MAP / 2.0) - 1.0,
+                    me.y / (MAP / 2.0) - 1.0,
+                    me.cooldown as f32 / COOLDOWN.max(1) as f32,
+                ]);
+                for (j, ally) in self.allies.iter().enumerate() {
+                    if j != i {
+                        o.extend_from_slice(&Self::unit_feats(
+                            me, ally, SIGHT_RANGE,
+                        ));
+                    }
+                }
+                for enemy in &self.enemies {
+                    o.extend_from_slice(&Self::unit_feats(
+                        me, enemy, SIGHT_RANGE,
+                    ));
+                }
+                o.push(1.0);
+                o
+            })
+            .collect()
+    }
+
+    fn legal(&self) -> Vec<Vec<bool>> {
+        (0..self.n)
+            .map(|i| {
+                let me = &self.allies[i];
+                let mut l = vec![false; 6 + self.n];
+                if !me.alive() {
+                    l[ACT_NOOP] = true;
+                    return l;
+                }
+                l[ACT_STOP] = true;
+                for k in 0..4 {
+                    l[ACT_MOVE_N + k] = true;
+                }
+                for (e, enemy) in self.enemies.iter().enumerate() {
+                    l[ACT_ATTACK_0 + e] =
+                        enemy.alive() && me.dist(enemy) <= SHOOT_RANGE;
+                }
+                l
+            })
+            .collect()
+    }
+
+    fn timestep(&self, step_type: StepType, reward: f32, discount: f32) -> TimeStep {
+        let observations = self.observe();
+        let state = observations.concat();
+        TimeStep {
+            step_type,
+            observations,
+            rewards: vec![reward; self.n],
+            discount,
+            state,
+            legal_actions: Some(self.legal()),
+        }
+    }
+
+    fn enemy_turn(&mut self) -> f32 {
+        // Heuristic: enemies focus-fire — every living enemy targets the
+        // lowest-health reachable ally (ties broken by distance), moving
+        // into range if needed and firing when cooled down. Concentrated
+        // damage is what makes uncoordinated (independent) ally play
+        // lose; coordinated focus-fire + spreading is required to win —
+        // the credit-assignment structure Fig 4 (bottom) tests.
+        let mut damage_taken = 0.0;
+        for e in 0..self.n {
+            let enemy = self.enemies[e];
+            if !enemy.alive() {
+                continue;
+            }
+            let target = self
+                .allies
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.alive())
+                .min_by(|(_, a), (_, b)| {
+                    (a.health, enemy.dist(a))
+                        .partial_cmp(&(b.health, enemy.dist(b)))
+                        .unwrap()
+                })
+                .map(|(i, _)| i);
+            let Some(ti) = target else { continue };
+            let d = enemy.dist(&self.allies[ti]);
+            if d <= SHOOT_RANGE && self.enemies[e].cooldown == 0 {
+                let dmg = DAMAGE.min(self.allies[ti].health);
+                self.allies[ti].health -= dmg;
+                damage_taken += dmg;
+                self.enemies[e].cooldown = COOLDOWN;
+            } else if d > SHOOT_RANGE {
+                // advance toward the target
+                let (tx, ty) = (self.allies[ti].x, self.allies[ti].y);
+                let (dx, dy) = (tx - enemy.x, ty - enemy.y);
+                let norm = (dx * dx + dy * dy).sqrt().max(1e-6);
+                self.enemies[e].x =
+                    (enemy.x + MOVE_STEP * dx / norm).clamp(0.0, MAP);
+                self.enemies[e].y =
+                    (enemy.y + MOVE_STEP * dy / norm).clamp(0.0, MAP);
+            }
+            if self.enemies[e].cooldown > 0 && d <= SHOOT_RANGE {
+                // tick cooldown only when engaged (simplified weapon cycle)
+            }
+        }
+        for e in &mut self.enemies {
+            e.cooldown = e.cooldown.saturating_sub(1);
+        }
+        damage_taken
+    }
+}
+
+impl MultiAgentEnv for SmacLite {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        self.t = 0;
+        self.done = false;
+        self.spawn();
+        self.timestep(StepType::First, 0.0, 1.0)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        assert!(!self.done, "step() after episode end");
+        let acts = actions.as_discrete();
+        self.t += 1;
+        let mut reward_raw = 0.0;
+
+        // --- ally actions ---
+        for i in 0..self.n {
+            if !self.allies[i].alive() {
+                continue;
+            }
+            let a = acts[i] as usize;
+            match a {
+                ACT_NOOP | ACT_STOP => {}
+                m if (ACT_MOVE_N..ACT_MOVE_N + 4).contains(&m) => {
+                    let (dx, dy) = match m - ACT_MOVE_N {
+                        0 => (0.0, MOVE_STEP),
+                        1 => (0.0, -MOVE_STEP),
+                        2 => (MOVE_STEP, 0.0),
+                        _ => (-MOVE_STEP, 0.0),
+                    };
+                    self.allies[i].x = (self.allies[i].x + dx).clamp(0.0, MAP);
+                    self.allies[i].y = (self.allies[i].y + dy).clamp(0.0, MAP);
+                }
+                atk if atk >= ACT_ATTACK_0 && atk < ACT_ATTACK_0 + self.n => {
+                    let e = atk - ACT_ATTACK_0;
+                    let enemy_alive = self.enemies[e].alive();
+                    let in_range = self.allies[i].dist(&self.enemies[e])
+                        <= SHOOT_RANGE;
+                    if enemy_alive && in_range && self.allies[i].cooldown == 0 {
+                        let dmg = DAMAGE.min(self.enemies[e].health);
+                        self.enemies[e].health -= dmg;
+                        reward_raw += dmg;
+                        if !self.enemies[e].alive() {
+                            reward_raw += KILL_BONUS;
+                        }
+                        self.allies[i].cooldown = COOLDOWN;
+                    }
+                }
+                _ => {} // illegal action index: treated as stop
+            }
+        }
+        for a in &mut self.allies {
+            a.cooldown = a.cooldown.saturating_sub(1);
+        }
+
+        // --- enemy heuristic ---
+        self.enemy_turn();
+
+        let allies_alive = self.allies.iter().any(|u| u.alive());
+        let enemies_alive = self.enemies.iter().any(|u| u.alive());
+        let won = !enemies_alive;
+        if won {
+            reward_raw += WIN_BONUS;
+        }
+        let terminal = won || !allies_alive;
+        let truncated = !terminal && self.t >= self.spec.episode_limit;
+        self.done = terminal || truncated;
+
+        let reward = reward_raw / self.max_reward * REWARD_CAP;
+        let step_type = if self.done { StepType::Last } else { StepType::Mid };
+        let discount = if terminal { 0.0 } else { 1.0 };
+        self.timestep(step_type, reward, discount)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stop_all(n: usize) -> Actions {
+        Actions::Discrete(vec![ACT_STOP as i32; n])
+    }
+
+    #[test]
+    fn spec_shapes() {
+        let env = SmacLite::new_3m(0);
+        assert_eq!(env.spec().obs_dim, 30);
+        assert_eq!(env.spec().n_actions(), 9);
+        assert_eq!(env.spec().state_dim, 90);
+    }
+
+    #[test]
+    fn passive_team_eventually_loses() {
+        let mut env = SmacLite::new_3m(1);
+        let mut ts = env.reset();
+        let mut total = 0.0;
+        let mut steps = 0;
+        while !ts.is_last() {
+            ts = env.step(&stop_all(3));
+            total += ts.rewards[0];
+            steps += 1;
+        }
+        // passive allies deal no damage -> no positive reward
+        assert!(total <= 1e-6, "passive reward {total}");
+        assert!(steps <= 60);
+        // all allies dead -> enemies focused them down
+        assert!(env.allies.iter().all(|u| !u.alive()));
+    }
+
+    #[test]
+    fn attacking_earns_reward_and_can_win() {
+        // teleport-free win: scripted focus fire from in-range start
+        let mut env = SmacLite::new_3m(2);
+        let mut ts = env.reset();
+        // move east until enemies are in range, then focus enemy 0,1,2
+        let mut total = 0.0;
+        let mut wins = false;
+        for _ in 0..60 {
+            if ts.is_last() {
+                break;
+            }
+            let legal = ts.legal_actions.as_ref().unwrap();
+            let acts: Vec<i32> = (0..3)
+                .map(|i| {
+                    // attack lowest-index attackable enemy, else move east
+                    for e in 0..3 {
+                        if legal[i][ACT_ATTACK_0 + e] {
+                            return (ACT_ATTACK_0 + e) as i32;
+                        }
+                    }
+                    if legal[i][ACT_MOVE_N + 2] {
+                        (ACT_MOVE_N + 2) as i32
+                    } else {
+                        ACT_NOOP as i32
+                    }
+                })
+                .collect();
+            ts = env.step(&Actions::Discrete(acts));
+            total += ts.rewards[0];
+            if !env.enemies.iter().any(|u| u.alive()) {
+                wins = true;
+            }
+        }
+        assert!(total > 0.0, "attacking must earn shaped reward");
+        // the scripted policy reliably beats the heuristic on this seed
+        assert!(wins, "scripted focus fire should win");
+        assert!(total <= REWARD_CAP + 1e-4);
+    }
+
+    #[test]
+    fn dead_agents_have_zero_obs_and_only_noop() {
+        let mut env = SmacLite::new_3m(3);
+        env.reset();
+        env.allies[1].health = 0.0;
+        let legal = env.legal();
+        assert!(legal[1][ACT_NOOP]);
+        assert!(!legal[1][ACT_STOP]);
+        let obs = env.observe();
+        assert!(obs[1].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reward_normalised_below_cap() {
+        let mut env = SmacLite::new_3m(4);
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let (ret, _) = crate::env::random_episode(&mut env, &mut rng);
+            assert!(ret <= REWARD_CAP + 1e-4);
+        }
+    }
+}

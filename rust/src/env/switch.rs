@@ -1,0 +1,221 @@
+//! The switch riddle game (Foerster et al., 2016) — paper Fig 4 (top).
+//!
+//! N prisoners; each day one (uniformly random) prisoner is taken to an
+//! interrogation room. Agents may communicate only through a 1-bit channel
+//! (in DIAL, a learned message replacing the physical switch). Each agent
+//! can either do nothing or announce ("Tell") that every prisoner has
+//! visited the room. A correct announcement rewards the whole team +1,
+//! an incorrect one -1; running out of time gives 0. The optimal policy
+//! requires communication, which is what Fig 4 (top) demonstrates: plain
+//! (recurrent) MADQN cannot beat random guessing, MADQN + communication
+//! (DIAL) learns the riddle.
+//!
+//! Episode limit 4N-6 as in the original paper.
+
+use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::env::MultiAgentEnv;
+use crate::rng::Rng;
+
+pub const ACT_NONE: i32 = 0;
+pub const ACT_TELL: i32 = 1;
+
+pub struct SwitchGame {
+    spec: EnvSpec,
+    rng: Rng,
+    n: usize,
+    limit: usize,
+    t: usize,
+    in_room: usize,
+    has_been: Vec<bool>,
+    done: bool,
+}
+
+impl SwitchGame {
+    pub fn new(n_agents: usize, seed: u64) -> Self {
+        assert!(n_agents >= 2);
+        let limit = 4 * n_agents - 6;
+        SwitchGame {
+            spec: EnvSpec {
+                name: "switch".into(),
+                n_agents,
+                obs_dim: 5,
+                action: ActionSpec::Discrete { n: 2 },
+                state_dim: 0,
+                episode_limit: limit,
+            },
+            rng: Rng::new(seed),
+            n: n_agents,
+            limit,
+            t: 0,
+            in_room: 0,
+            has_been: vec![false; n_agents],
+            done: true,
+        }
+    }
+
+    fn observe(&self) -> Vec<Vec<f32>> {
+        (0..self.n)
+            .map(|i| {
+                vec![
+                    (self.in_room == i) as u8 as f32,
+                    self.has_been[i] as u8 as f32,
+                    self.t as f32 / self.limit as f32,
+                    self.n as f32 / 10.0,
+                    1.0,
+                ]
+            })
+            .collect()
+    }
+
+    fn all_visited(&self) -> bool {
+        self.has_been.iter().all(|&b| b)
+    }
+}
+
+impl MultiAgentEnv for SwitchGame {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        self.t = 0;
+        self.done = false;
+        self.has_been = vec![false; self.n];
+        self.in_room = self.rng.below(self.n);
+        self.has_been[self.in_room] = true;
+        TimeStep {
+            step_type: StepType::First,
+            observations: self.observe(),
+            rewards: vec![0.0; self.n],
+            discount: 1.0,
+            state: vec![],
+            legal_actions: None,
+        }
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        assert!(!self.done, "step() after episode end");
+        let acts = actions.as_discrete();
+        self.t += 1;
+
+        // Only the agent in the room can effectively announce.
+        let announced = acts[self.in_room] == ACT_TELL;
+        let (reward, terminal) = if announced {
+            (if self.all_visited() { 1.0 } else { -1.0 }, true)
+        } else if self.t >= self.limit {
+            (0.0, true)
+        } else {
+            (0.0, false)
+        };
+
+        if !terminal {
+            self.in_room = self.rng.below(self.n);
+            self.has_been[self.in_room] = true;
+        } else {
+            self.done = true;
+        }
+
+        TimeStep {
+            step_type: if terminal { StepType::Last } else { StepType::Mid },
+            observations: self.observe(),
+            rewards: vec![reward; self.n],
+            // announcement ends the game for real (discount 0); the time
+            // limit is a truncation (discount 1).
+            discount: if announced { 0.0 } else { 1.0 },
+            state: vec![],
+            legal_actions: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_op(n: usize) -> Actions {
+        Actions::Discrete(vec![ACT_NONE; n])
+    }
+
+    #[test]
+    fn episode_truncates_at_limit() {
+        let mut env = SwitchGame::new(3, 1);
+        let mut ts = env.reset();
+        let mut steps = 0;
+        while !ts.is_last() {
+            ts = env.step(&no_op(3));
+            steps += 1;
+        }
+        assert_eq!(steps, 6); // 4*3-6
+        assert_eq!(ts.rewards[0], 0.0);
+    }
+
+    #[test]
+    fn correct_tell_rewards_plus_one() {
+        // force all agents visited by running long enough, then tell with
+        // whoever is in the room
+        for seed in 0..20 {
+            let mut env = SwitchGame::new(3, seed);
+            let ts = env.reset();
+            drop(ts);
+            // step until everyone has visited
+            let mut steps = 0;
+            while !env.all_visited() && steps < 5 {
+                let ts = env.step(&no_op(3));
+                assert!(!ts.is_last() || steps == 5);
+                steps += 1;
+            }
+            if !env.all_visited() {
+                continue; // unlucky seed: ran out of room in the limit
+            }
+            let mut tell = vec![ACT_NONE; 3];
+            tell[env.in_room] = ACT_TELL;
+            let ts = env.step(&Actions::Discrete(tell));
+            assert!(ts.is_last());
+            assert_eq!(ts.rewards, vec![1.0; 3]);
+            assert_eq!(ts.discount, 0.0);
+        }
+    }
+
+    #[test]
+    fn wrong_tell_rewards_minus_one() {
+        let mut env = SwitchGame::new(3, 7);
+        env.reset();
+        // first step: only one agent has visited; a tell must be wrong
+        // unless all have visited (impossible after reset with n=3)
+        let mut tell = vec![ACT_NONE; 3];
+        tell[env.in_room] = ACT_TELL;
+        let ts = env.step(&Actions::Discrete(tell));
+        assert!(ts.is_last());
+        assert_eq!(ts.rewards, vec![-1.0; 3]);
+    }
+
+    #[test]
+    fn tell_outside_room_is_noop() {
+        let mut env = SwitchGame::new(3, 3);
+        env.reset();
+        let outside = (env.in_room + 1) % 3;
+        let mut tell = vec![ACT_NONE; 3];
+        tell[outside] = ACT_TELL;
+        let ts = env.step(&Actions::Discrete(tell));
+        assert!(!ts.is_last());
+        assert_eq!(ts.rewards, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn obs_shape_and_room_flag() {
+        let mut env = SwitchGame::new(3, 5);
+        let ts = env.reset();
+        assert_eq!(ts.observations.len(), 3);
+        let flags: f32 = ts.observations.iter().map(|o| o[0]).sum();
+        assert_eq!(flags, 1.0, "exactly one agent in the room");
+    }
+
+    #[test]
+    fn random_play_runs() {
+        let mut env = SwitchGame::new(3, 11);
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            crate::env::random_episode(&mut env, &mut rng);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Environment wrappers — Mava's composable observation modules.
+//!
+//! * [`FingerprintWrapper`] — replay-stabilisation fingerprints (Foerster
+//!   et al., 2017c): appends `[epsilon, training-progress]` to every
+//!   observation (and the global state) so the replay distribution is
+//!   identifiable, mitigating MARL non-stationarity. Mava exposes this as
+//!   `stabilising.FingerPrintStabalisation(architecture)`; here it is an
+//!   env wrapper feeding the `smac3m_fp` artifact preset.
+//! * [`AgentIdWrapper`] — appends a one-hot agent id (used with weight
+//!   sharing).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::core::{Actions, EnvSpec, TimeStep};
+use crate::env::MultiAgentEnv;
+
+/// Shared, mutable fingerprint the executor updates as training proceeds.
+#[derive(Clone, Default)]
+pub struct Fingerprint {
+    // f32 bits stored atomically so executor threads can update lock-free
+    eps: Arc<AtomicU32>,
+    progress: Arc<AtomicU32>,
+}
+
+impl Fingerprint {
+    pub fn new(eps: f32, progress: f32) -> Self {
+        let fp = Fingerprint::default();
+        fp.set(eps, progress);
+        fp
+    }
+
+    pub fn set(&self, eps: f32, progress: f32) {
+        self.eps.store(eps.to_bits(), Ordering::Relaxed);
+        self.progress.store(progress.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> (f32, f32) {
+        (
+            f32::from_bits(self.eps.load(Ordering::Relaxed)),
+            f32::from_bits(self.progress.load(Ordering::Relaxed)),
+        )
+    }
+}
+
+pub struct FingerprintWrapper<E> {
+    inner: E,
+    spec: EnvSpec,
+    pub fingerprint: Fingerprint,
+}
+
+impl<E: MultiAgentEnv> FingerprintWrapper<E> {
+    pub fn new(inner: E, fingerprint: Fingerprint) -> Self {
+        let mut spec = inner.spec().clone();
+        spec.obs_dim += 2;
+        spec.state_dim = if spec.state_dim > 0 {
+            spec.state_dim + 2 * spec.n_agents
+        } else {
+            0
+        };
+        FingerprintWrapper { inner, spec, fingerprint }
+    }
+
+    fn augment(&self, mut ts: TimeStep) -> TimeStep {
+        let (eps, prog) = self.fingerprint.get();
+        for obs in &mut ts.observations {
+            obs.push(eps);
+            obs.push(prog);
+        }
+        if !ts.state.is_empty() {
+            ts.state = ts.observations.concat();
+        }
+        ts
+    }
+}
+
+impl<E: MultiAgentEnv> MultiAgentEnv for FingerprintWrapper<E> {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        let ts = self.inner.reset();
+        self.augment(ts)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        let ts = self.inner.step(actions);
+        self.augment(ts)
+    }
+}
+
+/// Appends a one-hot agent id to each observation.
+pub struct AgentIdWrapper<E> {
+    inner: E,
+    spec: EnvSpec,
+}
+
+impl<E: MultiAgentEnv> AgentIdWrapper<E> {
+    pub fn new(inner: E) -> Self {
+        let mut spec = inner.spec().clone();
+        let n = spec.n_agents;
+        spec.obs_dim += n;
+        spec.state_dim = if spec.state_dim > 0 {
+            spec.state_dim + n * n
+        } else {
+            0
+        };
+        AgentIdWrapper { inner, spec }
+    }
+
+    fn augment(&self, mut ts: TimeStep) -> TimeStep {
+        let n = self.spec.n_agents;
+        for (i, obs) in ts.observations.iter_mut().enumerate() {
+            for j in 0..n {
+                obs.push((i == j) as u8 as f32);
+            }
+        }
+        if !ts.state.is_empty() {
+            ts.state = ts.observations.concat();
+        }
+        ts
+    }
+}
+
+impl<E: MultiAgentEnv> MultiAgentEnv for AgentIdWrapper<E> {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        let ts = self.inner.reset();
+        self.augment(ts)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        let ts = self.inner.step(actions);
+        self.augment(ts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::smac_lite::SmacLite;
+
+    #[test]
+    fn fingerprint_extends_obs_and_state() {
+        let fp = Fingerprint::new(0.3, 0.5);
+        let mut env = FingerprintWrapper::new(SmacLite::new_3m(0), fp.clone());
+        assert_eq!(env.spec().obs_dim, 32);
+        assert_eq!(env.spec().state_dim, 96);
+        let ts = env.reset();
+        for o in &ts.observations {
+            assert_eq!(o.len(), 32);
+            assert_eq!(o[30], 0.3);
+            assert_eq!(o[31], 0.5);
+        }
+        assert_eq!(ts.state.len(), 96);
+        // fingerprint updates are visible on the next step
+        fp.set(0.1, 0.9);
+        let ts = env.step(&Actions::Discrete(vec![1, 1, 1]));
+        assert_eq!(ts.observations[0][30], 0.1);
+        assert_eq!(ts.observations[0][31], 0.9);
+    }
+
+    #[test]
+    fn agent_id_onehot_appended() {
+        let mut env = AgentIdWrapper::new(SmacLite::new_3m(1));
+        assert_eq!(env.spec().obs_dim, 33);
+        let ts = env.reset();
+        assert_eq!(&ts.observations[1][30..33], &[0.0, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Evaluation utilities: greedy rollouts, summaries and solve detection.
+
+use anyhow::Result;
+
+use crate::env::MultiAgentEnv;
+use crate::systems::{eval_episode, EvalPoint, Executor};
+
+/// Summary of a batch of evaluation episodes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalSummary {
+    pub episodes: usize,
+    pub mean_return: f32,
+    pub min_return: f32,
+    pub max_return: f32,
+}
+
+/// Run `n` greedy episodes and summarise.
+pub fn evaluate(
+    executor: &mut Executor,
+    env: &mut dyn MultiAgentEnv,
+    n: usize,
+) -> Result<EvalSummary> {
+    let mut returns = Vec::with_capacity(n);
+    for _ in 0..n {
+        returns.push(eval_episode(executor, env)?);
+    }
+    Ok(EvalSummary {
+        episodes: n,
+        mean_return: returns.iter().sum::<f32>() / n.max(1) as f32,
+        min_return: returns.iter().copied().fold(f32::INFINITY, f32::min),
+        max_return: returns.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+    })
+}
+
+/// Whether a learning curve crossed and held a threshold: the last
+/// `hold` points all at or above `threshold`.
+pub fn solved(evals: &[EvalPoint], threshold: f32, hold: usize) -> bool {
+    if evals.len() < hold || hold == 0 {
+        return false;
+    }
+    evals[evals.len() - hold..]
+        .iter()
+        .all(|e| e.mean_return >= threshold)
+}
+
+/// Area under the (env_steps, return) learning curve — a scale-free
+/// score for comparing systems on the same budget (trapezoidal).
+pub fn auc(evals: &[EvalPoint]) -> f64 {
+    if evals.len() < 2 {
+        return 0.0;
+    }
+    let mut area = 0.0;
+    for w in evals.windows(2) {
+        let dx = (w[1].env_steps - w[0].env_steps) as f64;
+        area += dx * 0.5 * (w[0].mean_return as f64 + w[1].mean_return as f64);
+    }
+    area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(env_steps: u64, r: f32) -> EvalPoint {
+        EvalPoint { wall_s: 0.0, env_steps, train_steps: 0, mean_return: r }
+    }
+
+    #[test]
+    fn solved_requires_hold() {
+        let evals = vec![pt(0, 0.0), pt(1, 1.0), pt(2, 0.9), pt(3, 1.0)];
+        assert!(solved(&evals, 0.9, 2));
+        assert!(!solved(&evals, 0.95, 2));
+        assert!(!solved(&evals, 0.9, 10), "not enough points");
+    }
+
+    #[test]
+    fn auc_trapezoid() {
+        let evals = vec![pt(0, 0.0), pt(10, 1.0), pt(20, 1.0)];
+        assert!((auc(&evals) - (5.0 + 10.0)).abs() < 1e-9);
+    }
+}

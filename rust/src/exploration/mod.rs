@@ -1,0 +1,161 @@
+//! Exploration: ε-greedy schedules and continuous action noise.
+//!
+//! Lives in Rust (not in the lowered artifacts) so the AOT graphs stay
+//! deterministic and the same policy artifact serves both exploring
+//! executors and greedy evaluators.
+
+use crate::rng::Rng;
+
+/// Linearly decaying epsilon schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct EpsilonSchedule {
+    pub start: f32,
+    pub end: f32,
+    pub decay_steps: u64,
+}
+
+impl EpsilonSchedule {
+    pub fn new(start: f32, end: f32, decay_steps: u64) -> Self {
+        EpsilonSchedule { start, end, decay_steps }
+    }
+
+    pub fn value(&self, step: u64) -> f32 {
+        if step >= self.decay_steps {
+            return self.end;
+        }
+        let frac = step as f32 / self.decay_steps as f32;
+        self.start + (self.end - self.start) * frac
+    }
+}
+
+/// ε-greedy over per-agent Q-values with optional legal-action masks.
+pub fn epsilon_greedy(
+    q: &[f32],
+    n_actions: usize,
+    legal: Option<&[bool]>,
+    eps: f32,
+    rng: &mut Rng,
+) -> i32 {
+    debug_assert_eq!(q.len(), n_actions);
+    let legal_ids: Vec<usize> = match legal {
+        Some(mask) => (0..n_actions).filter(|&a| mask[a]).collect(),
+        None => (0..n_actions).collect(),
+    };
+    debug_assert!(!legal_ids.is_empty(), "no legal actions");
+    if rng.chance(eps) {
+        return legal_ids[rng.below(legal_ids.len())] as i32;
+    }
+    let mut best = legal_ids[0];
+    for &a in &legal_ids[1..] {
+        if q[a] > q[best] {
+            best = a;
+        }
+    }
+    best as i32
+}
+
+/// Additive Gaussian action noise, clipped to [-1, 1] (DDPG-style).
+pub fn gaussian_noise(action: &mut [f32], sigma: f32, rng: &mut Rng) {
+    for a in action.iter_mut() {
+        *a = (*a + sigma * rng.normal_f32()).clamp(-1.0, 1.0);
+    }
+}
+
+/// Ornstein-Uhlenbeck process (the original DDPG exploration noise).
+#[derive(Clone, Debug)]
+pub struct OuNoise {
+    theta: f32,
+    sigma: f32,
+    state: Vec<f32>,
+}
+
+impl OuNoise {
+    pub fn new(dim: usize, theta: f32, sigma: f32) -> Self {
+        OuNoise { theta, sigma, state: vec![0.0; dim] }
+    }
+
+    pub fn reset(&mut self) {
+        self.state.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn apply(&mut self, action: &mut [f32], rng: &mut Rng) {
+        for (a, s) in action.iter_mut().zip(self.state.iter_mut()) {
+            *s += -self.theta * *s + self.sigma * rng.normal_f32();
+            *a = (*a + *s).clamp(-1.0, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_decays_linearly() {
+        let s = EpsilonSchedule::new(1.0, 0.1, 100);
+        assert_eq!(s.value(0), 1.0);
+        assert!((s.value(50) - 0.55).abs() < 1e-6);
+        assert_eq!(s.value(100), 0.1);
+        assert_eq!(s.value(10_000), 0.1);
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(0);
+        let q = [0.1, 0.9, 0.3];
+        assert_eq!(epsilon_greedy(&q, 3, None, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn masked_greedy_respects_legality() {
+        let mut rng = Rng::new(0);
+        let q = [0.1, 0.9, 0.3];
+        let legal = [true, false, true];
+        assert_eq!(epsilon_greedy(&q, 3, Some(&legal), 0.0, &mut rng), 2);
+        // random branch also restricted to legal actions
+        for _ in 0..100 {
+            let a = epsilon_greedy(&q, 3, Some(&legal), 1.0, &mut rng);
+            assert_ne!(a, 1);
+        }
+    }
+
+    #[test]
+    fn full_epsilon_is_roughly_uniform() {
+        let mut rng = Rng::new(1);
+        let q = [0.0; 4];
+        let mut counts = [0; 4];
+        for _ in 0..4000 {
+            counts[epsilon_greedy(&q, 4, None, 1.0, &mut rng) as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 800, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_noise_clips() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let mut a = [0.9f32, -0.9];
+            gaussian_noise(&mut a, 1.0, &mut rng);
+            assert!(a.iter().all(|x| (-1.0..=1.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn ou_noise_is_correlated() {
+        let mut rng = Rng::new(3);
+        let mut ou = OuNoise::new(1, 0.15, 0.2);
+        let mut prev = [0.0f32];
+        let mut corr_hits = 0;
+        for _ in 0..200 {
+            let mut a = [0.0f32];
+            ou.apply(&mut a, &mut rng);
+            if a[0].signum() == prev[0].signum() {
+                corr_hits += 1;
+            }
+            prev = a;
+        }
+        assert!(corr_hits > 120, "OU should be temporally correlated");
+    }
+}

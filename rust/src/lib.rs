@@ -1,0 +1,44 @@
+//! # mava-rs — distributed multi-agent reinforcement learning
+//!
+//! A Rust + JAX + Pallas reproduction of *Mava: a research framework for
+//! distributed multi-agent reinforcement learning* (Pretorius et al.,
+//! 2021). The Rust layer (L3) owns everything the paper delegates to
+//! Launchpad / Reverb / Acme: the process topology, replay data flow,
+//! executor-trainer coordination and environments. Model compute (L2/L1)
+//! is AOT-compiled JAX+Pallas loaded as HLO artifacts and executed through
+//! the PJRT C API — Python never runs on the acting or training path.
+//!
+//! ## Layout
+//! - [`core`] — multi-agent timesteps, specs, host tensors
+//! - [`rng`] — deterministic xoshiro256++ RNG (no external crates)
+//! - [`config`] — TOML-subset config system + CLI parsing
+//! - [`env`] — environment suite: switch riddle, smac_lite, MPE, multiwalker
+//! - [`replay`] — Reverb-style tables: selectors, rate limiters, adders
+//! - [`params`] — versioned parameter server
+//! - [`launch`] — Launchpad-style program graph + local launcher
+//! - [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt`
+//! - [`arch`] — system architectures (decentralised / centralised / networked)
+//! - [`systems`] — MADQN, DIAL, VDN, QMIX, MADDPG, MAD4PG
+//! - [`exploration`] — ε-greedy schedules, Gaussian/OU noise
+//! - [`metrics`] — loggers, moving statistics, timers
+//! - [`eval`] — evaluation loops and solve detection
+//! - [`bench`] — shared mini-benchmark harness (criterion is unavailable
+//!   offline)
+
+pub mod arch;
+pub mod bench;
+pub mod config;
+pub mod core;
+pub mod env;
+pub mod eval;
+pub mod exploration;
+pub mod launch;
+pub mod metrics;
+pub mod params;
+pub mod replay;
+pub mod rng;
+pub mod runtime;
+pub mod systems;
+
+pub use crate::core::{Actions, EnvSpec, StepType, TimeStep};
+pub use env::MultiAgentEnv;

@@ -1,0 +1,131 @@
+//! `mava` CLI — the leader entrypoint.
+//!
+//! ```text
+//! mava train  [--config FILE] [--key value ...]   run a distributed system
+//! mava eval   [--config FILE] [--key value ...]   greedy evaluation only
+//! mava list                                       list artifacts
+//! mava info                                       runtime/platform info
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use mava::config::{RawConfig, TrainConfig};
+use mava::runtime::{Engine, Manifest};
+use mava::systems::{self, SystemKind};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mava <train|eval|list|info> [--config FILE] [--key value ...]\n\
+         keys: system preset arch num_executors max_env_steps lr tau n_step\n\
+         \x20     eps_start eps_end eps_decay_steps noise_sigma replay_size\n\
+         \x20     min_replay samples_per_insert seed artifacts_dir log_dir\n\
+         \x20     eval_every_steps eval_episodes"
+    );
+    std::process::exit(2);
+}
+
+fn parse_cfg(args: &[String]) -> Result<TrainConfig> {
+    let mut rest = Vec::new();
+    let mut cfg = TrainConfig::default();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--config" {
+            let path = args.get(i + 1).context("--config requires a path")?;
+            let raw = RawConfig::load(path)?;
+            cfg = TrainConfig::from_raw(&raw)?;
+            i += 2;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    cfg.apply_cli(&rest)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    systems::check_artifacts(&cfg)?;
+    println!(
+        "training {} on {} ({}, {} executors, {} env steps)",
+        cfg.system, cfg.preset, cfg.arch, cfg.num_executors, cfg.max_env_steps
+    );
+    let result = systems::train(&cfg, Some(Duration::from_secs(3600)))?;
+    println!(
+        "done: {} env steps, {} train steps, {} episodes in {:.1}s",
+        result.env_steps, result.train_steps, result.episodes, result.wall_s
+    );
+    println!("train return (moving avg): {:.3}", result.train_return);
+    for e in &result.evals {
+        println!(
+            "  eval t={:<7.1}s env_steps={:<8} train_steps={:<7} return={:.3}",
+            e.wall_s, e.env_steps, e.train_steps, e.mean_return
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let kind = SystemKind::parse(&cfg.system)?;
+    let prefix = cfg.artifact_prefix();
+    let mut engine = Engine::load(&cfg.artifacts_dir)?;
+    let artifact = engine.artifact(&format!("{prefix}_policy"))?;
+    let params = engine.read_init(&format!("{prefix}_train"), "params0")?;
+    let mut executor =
+        systems::Executor::new(kind, artifact, params, cfg.seed)?;
+    let mut env = systems::env_for_preset(&cfg.preset, cfg.seed, None)?;
+    let summary =
+        mava::eval::evaluate(&mut executor, env.as_mut(), cfg.eval_episodes)?;
+    println!(
+        "eval {} on {}: mean {:.3} (min {:.3}, max {:.3}) over {} episodes",
+        cfg.system,
+        cfg.preset,
+        summary.mean_return,
+        summary.min_return,
+        summary.max_return,
+        summary.episodes
+    );
+    Ok(())
+}
+
+fn cmd_list(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let mut names: Vec<_> = manifest.artifacts.keys().collect();
+    names.sort();
+    println!("{} artifacts in {}:", names.len(), cfg.artifacts_dir);
+    for n in names {
+        let a = &manifest.artifacts[n];
+        println!(
+            "  {n:<42} params={:<8} inputs={} outputs={}",
+            a.meta.get("params").map(String::as_str).unwrap_or("?"),
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let engine = Engine::load(&cfg.artifacts_dir)?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", engine.manifest.artifacts.len());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    match cmd.as_str() {
+        "train" => cmd_train(&args[1..]),
+        "eval" => cmd_eval(&args[1..]),
+        "list" => cmd_list(&args[1..]),
+        "info" => cmd_info(&args[1..]),
+        "-h" | "--help" | "help" => usage(),
+        other => bail!("unknown command {other:?}"),
+    }
+}

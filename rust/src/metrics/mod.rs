@@ -1,0 +1,165 @@
+//! Metrics: episode statistics, moving averages, CSV loggers and timers.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Exponential/windowed running statistics over a scalar stream.
+#[derive(Clone, Debug)]
+pub struct MovingStats {
+    window: usize,
+    buf: Vec<f32>,
+    next: usize,
+    count: u64,
+}
+
+impl MovingStats {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        MovingStats { window, buf: Vec::with_capacity(window), next: 0, count: 0 }
+    }
+
+    pub fn push(&mut self, x: f32) {
+        if self.buf.len() < self.window {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.window;
+        }
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f32>() / self.buf.len() as f32
+    }
+
+    pub fn min(&self) -> f32 {
+        self.buf.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.buf.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+/// Thread-safe CSV logger (one row per call, header written once).
+pub struct CsvLogger {
+    inner: Mutex<BufWriter<File>>,
+}
+
+impl CsvLogger {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvLogger { inner: Mutex::new(w) })
+    }
+
+    pub fn log(&self, row: &[f64]) {
+        let mut w = self.inner.lock().unwrap();
+        let s: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+        let _ = writeln!(w, "{}", s.join(","));
+        let _ = w.flush();
+    }
+}
+
+/// Wall-clock stopwatch with named laps (perf instrumentation).
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Lightweight counter bundle shared across executor/trainer threads.
+#[derive(Default)]
+pub struct Counters {
+    pub env_steps: std::sync::atomic::AtomicU64,
+    pub episodes: std::sync::atomic::AtomicU64,
+    pub train_steps: std::sync::atomic::AtomicU64,
+}
+
+impl Counters {
+    pub fn add_env_steps(&self, n: u64) {
+        self.env_steps.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+    }
+    pub fn add_episode(&self) {
+        self.episodes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    pub fn add_train_step(&self) {
+        self.train_steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    pub fn env_steps(&self) -> u64 {
+        self.env_steps.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    pub fn episodes(&self) -> u64 {
+        self.episodes.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    pub fn train_steps(&self) -> u64 {
+        self.train_steps.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moving_stats_windowed_mean() {
+        let mut m = MovingStats::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            m.push(x);
+        }
+        // window holds 4,2,3 -> mean 3
+        assert!((m.mean() - 3.0).abs() < 1e-6);
+        assert_eq!(m.count(), 4);
+        assert_eq!(m.min(), 2.0);
+        assert_eq!(m.max(), 4.0);
+    }
+
+    #[test]
+    fn csv_logger_writes_rows() {
+        let dir = std::env::temp_dir().join("mava_test_logs");
+        let path = dir.join("t.csv");
+        let log = CsvLogger::create(&path, &["a", "b"]).unwrap();
+        log.log(&[1.0, 2.5]);
+        log.log(&[3.0, 4.0]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,2.5\n"));
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::default();
+        c.add_env_steps(10);
+        c.add_env_steps(5);
+        c.add_episode();
+        c.add_train_step();
+        assert_eq!(c.env_steps(), 15);
+        assert_eq!(c.episodes(), 1);
+        assert_eq!(c.train_steps(), 1);
+    }
+}

@@ -1,0 +1,328 @@
+//! Adders: the client-side classes that turn executor timesteps into
+//! replay items (Acme/Mava's `adders` package; paper: "an internal adder
+//! class interfaces with a reverb replay table").
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::core::{Actions, TimeStep};
+use crate::replay::{Item, Sequence, Table, Transition};
+
+#[derive(Clone, Debug)]
+struct StepRecord {
+    obs: Vec<f32>,
+    state: Vec<f32>,
+    a_disc: Vec<i32>,
+    a_cont: Vec<f32>,
+    rewards: Vec<f32>,
+    discount: f32,
+}
+
+/// Builds (n-step) transitions — feedforward systems (MADQN, VDN, QMIX,
+/// MADDPG) and, with `n_step > 1`, MAD4PG's n-step targets: the emitted
+/// `rewards` are the discounted n-step sums and `discount` is
+/// `gamma^(n-1) * prod(discounts)`, so the train artifact's single
+/// `y = r + gamma * disc * Q(next)` stays correct for any n.
+pub struct TransitionAdder {
+    table: Arc<Table>,
+    n_step: usize,
+    gamma: f32,
+    pending: Option<(Vec<f32>, Vec<f32>)>, // (obs, state) awaiting action
+    buf: VecDeque<StepRecord>,
+}
+
+impl TransitionAdder {
+    pub fn new(table: Arc<Table>, n_step: usize, gamma: f32) -> Self {
+        assert!(n_step >= 1);
+        TransitionAdder { table, n_step, gamma, pending: None, buf: VecDeque::new() }
+    }
+
+    pub fn observe_first(&mut self, ts: &TimeStep) {
+        self.buf.clear();
+        self.pending = Some((ts.observations.concat(), ts.state.clone()));
+    }
+
+    pub fn observe(&mut self, actions: &Actions, next: &TimeStep) {
+        let (obs, state) = self
+            .pending
+            .take()
+            .expect("observe() before observe_first()");
+        let (a_disc, a_cont) = match actions {
+            Actions::Discrete(a) => (a.clone(), vec![]),
+            Actions::Continuous(a) => (vec![], a.concat()),
+        };
+        self.buf.push_back(StepRecord {
+            obs,
+            state,
+            a_disc,
+            a_cont,
+            rewards: next.rewards.clone(),
+            discount: next.discount,
+        });
+        let next_obs = next.observations.concat();
+        let next_state = next.state.clone();
+        if self.buf.len() == self.n_step {
+            self.emit_front(&next_obs, &next_state);
+        }
+        if next.is_last() {
+            while !self.buf.is_empty() {
+                self.emit_front(&next_obs, &next_state);
+            }
+            self.pending = None;
+        } else {
+            self.pending = Some((next_obs, next_state));
+        }
+    }
+
+    fn emit_front(&mut self, next_obs: &[f32], next_state: &[f32]) {
+        let n_agents = self.buf[0].rewards.len();
+        let mut rewards = vec![0.0f32; n_agents];
+        let mut disc = 1.0f32;
+        let mut g = 1.0f32;
+        for (k, rec) in self.buf.iter().enumerate() {
+            for (r, &x) in rewards.iter_mut().zip(&rec.rewards) {
+                *r += g * x;
+            }
+            disc *= rec.discount;
+            if k + 1 < self.buf.len() {
+                g *= self.gamma;
+            }
+        }
+        // gamma^(n-1): `g` already equals that after the loop
+        disc *= g;
+        let front = self.buf.pop_front().unwrap();
+        let t = Transition {
+            obs: front.obs,
+            state: front.state,
+            actions_disc: front.a_disc,
+            actions_cont: front.a_cont,
+            rewards,
+            discount: disc,
+            next_obs: next_obs.to_vec(),
+            next_state: next_state.to_vec(),
+        };
+        self.table.insert(Item::Transition(t), 1.0);
+    }
+}
+
+/// Builds fixed-length (padded, possibly overlapping) sequences for
+/// recurrent systems (recurrent MADQN, DIAL).
+pub struct SequenceAdder {
+    table: Arc<Table>,
+    seq_len: usize,
+    period: usize,
+    // episode accumulation
+    obs: Vec<Vec<f32>>, // length L+1 once episode ends
+    acts: Vec<Vec<i32>>,
+    rewards: Vec<Vec<f32>>,
+    discounts: Vec<f32>,
+}
+
+impl SequenceAdder {
+    pub fn new(table: Arc<Table>, seq_len: usize, period: usize) -> Self {
+        assert!(seq_len >= 1 && period >= 1);
+        SequenceAdder {
+            table,
+            seq_len,
+            period,
+            obs: vec![],
+            acts: vec![],
+            rewards: vec![],
+            discounts: vec![],
+        }
+    }
+
+    pub fn observe_first(&mut self, ts: &TimeStep) {
+        self.obs = vec![ts.observations.concat()];
+        self.acts.clear();
+        self.rewards.clear();
+        self.discounts.clear();
+    }
+
+    pub fn observe(&mut self, actions: &Actions, next: &TimeStep) {
+        assert!(!self.obs.is_empty(), "observe() before observe_first()");
+        self.acts.push(actions.as_discrete().to_vec());
+        self.rewards.push(next.rewards.clone());
+        self.discounts.push(next.discount);
+        self.obs.push(next.observations.concat());
+        if next.is_last() {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        let steps = self.acts.len();
+        if steps == 0 {
+            return;
+        }
+        let t_len = self.seq_len;
+        let obs_dim = self.obs[0].len();
+        let n_agents = self.acts[0].len();
+        let mut start = 0;
+        loop {
+            let valid = (steps - start).min(t_len);
+            let mut seq = Sequence {
+                t: t_len,
+                obs: Vec::with_capacity((t_len + 1) * obs_dim),
+                actions: Vec::with_capacity(t_len * n_agents),
+                rewards: Vec::with_capacity(t_len * n_agents),
+                discounts: Vec::with_capacity(t_len),
+                mask: Vec::with_capacity(t_len),
+            };
+            for t in 0..=t_len {
+                let idx = (start + t).min(steps); // repeat last obs as pad
+                seq.obs.extend_from_slice(&self.obs[idx]);
+            }
+            for t in 0..t_len {
+                if t < valid {
+                    let idx = start + t;
+                    seq.actions.extend_from_slice(&self.acts[idx]);
+                    seq.rewards.extend_from_slice(&self.rewards[idx]);
+                    seq.discounts.push(self.discounts[idx]);
+                    seq.mask.push(1.0);
+                } else {
+                    seq.actions.extend(std::iter::repeat(0).take(n_agents));
+                    seq.rewards
+                        .extend(std::iter::repeat(0.0).take(n_agents));
+                    seq.discounts.push(0.0);
+                    seq.mask.push(0.0);
+                }
+            }
+            self.table.insert(Item::Sequence(seq), 1.0);
+            start += self.period;
+            if start >= steps {
+                break;
+            }
+        }
+        self.obs.clear();
+        self.acts.clear();
+        self.rewards.clear();
+        self.discounts.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::StepType;
+
+    fn ts(step_type: StepType, obs: f32, rew: f32, disc: f32) -> TimeStep {
+        TimeStep {
+            step_type,
+            observations: vec![vec![obs; 2]; 2], // 2 agents, obs_dim 2
+            rewards: vec![rew; 2],
+            discount: disc,
+            state: vec![obs; 3],
+            legal_actions: None,
+        }
+    }
+
+    fn acts(a: i32) -> Actions {
+        Actions::Discrete(vec![a; 2])
+    }
+
+    #[test]
+    fn one_step_transition_fields() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = TransitionAdder::new(table.clone(), 1, 0.99);
+        adder.observe_first(&ts(StepType::First, 1.0, 0.0, 1.0));
+        adder.observe(&acts(3), &ts(StepType::Mid, 2.0, 0.5, 1.0));
+        let items = table.sample(1).unwrap();
+        let tr = items[0].as_transition();
+        assert_eq!(tr.obs, vec![1.0; 4]);
+        assert_eq!(tr.next_obs, vec![2.0; 4]);
+        assert_eq!(tr.actions_disc, vec![3, 3]);
+        assert_eq!(tr.rewards, vec![0.5; 2]);
+        assert_eq!(tr.discount, 1.0);
+        assert_eq!(tr.state, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn n_step_accumulates_discounted_rewards() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = TransitionAdder::new(table.clone(), 3, 0.5);
+        adder.observe_first(&ts(StepType::First, 0.0, 0.0, 1.0));
+        adder.observe(&acts(0), &ts(StepType::Mid, 1.0, 1.0, 1.0));
+        adder.observe(&acts(0), &ts(StepType::Mid, 2.0, 2.0, 1.0));
+        assert_eq!(table.stats().inserts, 0, "no item before n steps");
+        adder.observe(&acts(0), &ts(StepType::Mid, 3.0, 4.0, 1.0));
+        let tr_items = table.sample(1).unwrap();
+        let tr = tr_items[0].as_transition();
+        // R = 1 + 0.5*2 + 0.25*4 = 3 ; disc = 0.5^2 = 0.25
+        assert_eq!(tr.rewards, vec![3.0; 2]);
+        assert!((tr.discount - 0.25).abs() < 1e-6);
+        assert_eq!(tr.obs, vec![0.0; 4]);
+        assert_eq!(tr.next_obs, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn episode_end_flushes_short_transitions() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = TransitionAdder::new(table.clone(), 3, 0.5);
+        adder.observe_first(&ts(StepType::First, 0.0, 0.0, 1.0));
+        adder.observe(&acts(0), &ts(StepType::Mid, 1.0, 1.0, 1.0));
+        adder.observe(&acts(0), &ts(StepType::Last, 2.0, 2.0, 0.0));
+        // two transitions: horizons 2 and 1, both terminal -> disc 0
+        assert_eq!(table.stats().inserts, 2);
+        for it in table.sample(8).unwrap() {
+            assert_eq!(it.as_transition().discount, 0.0);
+            assert_eq!(it.as_transition().next_obs, vec![2.0; 4]);
+        }
+    }
+
+    #[test]
+    fn terminal_discount_zero_propagates() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = TransitionAdder::new(table.clone(), 1, 0.99);
+        adder.observe_first(&ts(StepType::First, 0.0, 0.0, 1.0));
+        adder.observe(&acts(1), &ts(StepType::Last, 1.0, 1.0, 0.0));
+        let items = table.sample(1).unwrap();
+        assert_eq!(items[0].as_transition().discount, 0.0);
+    }
+
+    #[test]
+    fn sequence_pads_and_masks() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = SequenceAdder::new(table.clone(), 4, 4);
+        adder.observe_first(&ts(StepType::First, 0.0, 0.0, 1.0));
+        adder.observe(&acts(1), &ts(StepType::Mid, 1.0, 0.1, 1.0));
+        adder.observe(&acts(2), &ts(StepType::Last, 2.0, 1.0, 0.0));
+        let seq_items = table.sample(1).unwrap();
+        let s = seq_items[0].as_sequence();
+        assert_eq!(s.mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(s.obs.len(), 5 * 4); // (T+1) * N*O
+        assert_eq!(s.actions[0..2], [1, 1]);
+        assert_eq!(s.actions[2..4], [2, 2]);
+        assert_eq!(s.discounts, vec![1.0, 0.0, 0.0, 0.0]);
+        // padded obs repeat the final observation
+        assert_eq!(&s.obs[3 * 4..4 * 4], &[2.0; 4]);
+        assert_eq!(&s.obs[4 * 4..5 * 4], &[2.0; 4]);
+    }
+
+    #[test]
+    fn long_episode_emits_overlapping_windows() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = SequenceAdder::new(table.clone(), 4, 2);
+        adder.observe_first(&ts(StepType::First, 0.0, 0.0, 1.0));
+        for t in 0..6 {
+            let st = if t == 5 { StepType::Last } else { StepType::Mid };
+            adder.observe(&acts(t), &ts(st, t as f32, 0.0, 1.0));
+        }
+        // windows at start 0, 2, 4 -> 3 items
+        assert_eq!(table.stats().inserts, 3);
+    }
+
+    #[test]
+    fn new_episode_resets_accumulation() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = SequenceAdder::new(table.clone(), 4, 4);
+        adder.observe_first(&ts(StepType::First, 0.0, 0.0, 1.0));
+        adder.observe(&acts(0), &ts(StepType::Mid, 1.0, 0.0, 1.0));
+        // abandoned episode (e.g. executor restart): observe_first again
+        adder.observe_first(&ts(StepType::First, 5.0, 0.0, 1.0));
+        adder.observe(&acts(1), &ts(StepType::Last, 6.0, 1.0, 0.0));
+        let items = table.sample(1).unwrap();
+        let s = items[0].as_sequence();
+        assert_eq!(&s.obs[0..4], &[5.0; 4], "stale episode leaked");
+    }
+}

@@ -1,0 +1,245 @@
+//! Replay-table checkpointing (Reverb ships table checkpoints; mava-rs
+//! mirrors the capability so long runs survive restarts).
+//!
+//! Format: a little-endian binary stream, one record per item:
+//! ```text
+//! magic "MAVARPL1"
+//! u64 item_count
+//! per item: u8 kind (0 transition, 1 sequence), then per-field
+//!           u64 length + payload (f32/i32 arrays as raw LE bytes)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::replay::{Item, Sequence, Table, Transition};
+
+const MAGIC: &[u8; 8] = b"MAVARPL1";
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_i32s(w: &mut impl Write, xs: &[i32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32s(r: &mut impl Read) -> Result<Vec<i32>> {
+    let n = read_u64(r)? as usize;
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn write_item(w: &mut impl Write, item: &Item) -> Result<()> {
+    match item {
+        Item::Transition(t) => {
+            w.write_all(&[0u8])?;
+            write_f32s(w, &t.obs)?;
+            write_f32s(w, &t.state)?;
+            write_i32s(w, &t.actions_disc)?;
+            write_f32s(w, &t.actions_cont)?;
+            write_f32s(w, &t.rewards)?;
+            write_f32s(w, &[t.discount])?;
+            write_f32s(w, &t.next_obs)?;
+            write_f32s(w, &t.next_state)?;
+        }
+        Item::Sequence(s) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&(s.t as u64).to_le_bytes())?;
+            write_f32s(w, &s.obs)?;
+            write_i32s(w, &s.actions)?;
+            write_f32s(w, &s.rewards)?;
+            write_f32s(w, &s.discounts)?;
+            write_f32s(w, &s.mask)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_item(r: &mut impl Read) -> Result<Item> {
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    Ok(match kind[0] {
+        0 => Item::Transition(Transition {
+            obs: read_f32s(r)?,
+            state: read_f32s(r)?,
+            actions_disc: read_i32s(r)?,
+            actions_cont: read_f32s(r)?,
+            rewards: read_f32s(r)?,
+            discount: {
+                let d = read_f32s(r)?;
+                anyhow::ensure!(d.len() == 1, "bad discount record");
+                d[0]
+            },
+            next_obs: read_f32s(r)?,
+            next_state: read_f32s(r)?,
+        }),
+        1 => Item::Sequence(Sequence {
+            t: read_u64(r)? as usize,
+            obs: read_f32s(r)?,
+            actions: read_i32s(r)?,
+            rewards: read_f32s(r)?,
+            discounts: read_f32s(r)?,
+            mask: read_f32s(r)?,
+        }),
+        k => bail!("unknown item kind {k}"),
+    })
+}
+
+impl Table {
+    /// Write every stored item to `path` (oldest first).
+    pub fn checkpoint<P: AsRef<Path>>(&self, path: P) -> Result<usize> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let items = self.snapshot();
+        let mut w = BufWriter::new(File::create(&path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(items.len() as u64).to_le_bytes())?;
+        for item in &items {
+            write_item(&mut w, item)?;
+        }
+        w.flush()?;
+        Ok(items.len())
+    }
+
+    /// Insert every item from a checkpoint file (appended in order, so a
+    /// fresh table reproduces the captured contents up to capacity).
+    pub fn restore<P: AsRef<Path>>(&self, path: P) -> Result<usize> {
+        let mut r = BufReader::new(
+            File::open(&path).context("open replay checkpoint")?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a mava replay checkpoint");
+        }
+        let count = read_u64(&mut r)? as usize;
+        for _ in 0..count {
+            let item = read_item(&mut r)?;
+            if !self.insert(item, 1.0) {
+                bail!("table closed during restore");
+            }
+        }
+        Ok(count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{RateLimiter, Selector};
+
+    fn tr(v: f32) -> Item {
+        Item::Transition(Transition {
+            obs: vec![v, v + 1.0],
+            state: vec![v],
+            actions_disc: vec![1, 2],
+            actions_cont: vec![],
+            rewards: vec![0.5, 0.5],
+            discount: 0.9,
+            next_obs: vec![v + 2.0, v + 3.0],
+            next_state: vec![v + 1.0],
+        })
+    }
+
+    fn sq(v: f32) -> Item {
+        Item::Sequence(Sequence {
+            t: 4,
+            obs: vec![v; 10],
+            actions: vec![0, 1, 2, 3],
+            rewards: vec![v; 4],
+            discounts: vec![1.0, 1.0, 0.0, 0.0],
+            mask: vec![1.0, 1.0, 0.0, 0.0],
+        })
+    }
+
+    #[test]
+    fn transition_roundtrip() {
+        let dir = std::env::temp_dir().join("mava_ckpt_t");
+        let path = dir.join("replay.ckpt");
+        let table = Table::uniform(64, 1, 0);
+        for i in 0..10 {
+            table.insert(tr(i as f32), 1.0);
+        }
+        assert_eq!(table.checkpoint(&path).unwrap(), 10);
+
+        let restored = Table::uniform(64, 1, 1);
+        assert_eq!(restored.restore(&path).unwrap(), 10);
+        assert_eq!(restored.stats().size, 10);
+        let got = restored.sample(32).unwrap();
+        for item in got {
+            let t = item.as_transition();
+            let v = t.obs[0];
+            assert_eq!(t.obs, vec![v, v + 1.0]);
+            assert_eq!(t.actions_disc, vec![1, 2]);
+            assert_eq!(t.discount, 0.9);
+            assert_eq!(t.next_state, vec![v + 1.0]);
+        }
+    }
+
+    #[test]
+    fn sequence_roundtrip() {
+        let dir = std::env::temp_dir().join("mava_ckpt_s");
+        let path = dir.join("replay.ckpt");
+        let table = Table::new(
+            32,
+            Selector::Uniform,
+            RateLimiter::min_size(1),
+            0,
+        );
+        for i in 0..5 {
+            table.insert(sq(i as f32), 1.0);
+        }
+        table.checkpoint(&path).unwrap();
+        let restored = Table::uniform(32, 1, 2);
+        assert_eq!(restored.restore(&path).unwrap(), 5);
+        let got = restored.sample(8).unwrap();
+        for item in got {
+            let s = item.as_sequence();
+            assert_eq!(s.t, 4);
+            assert_eq!(s.mask, vec![1.0, 1.0, 0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("mava_ckpt_g");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bogus.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let table = Table::uniform(8, 1, 0);
+        assert!(table.restore(&path).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Rate limiters: Reverb's insert/sample flow control.
+//!
+//! `SampleToInsertRatio` is the one that matters for distributed training
+//! (paper Fig 6 bottom-right): it pins the number of times each item is
+//! sampled on average, so adding executors genuinely increases data
+//! throughput instead of letting the trainer oversample a small buffer.
+
+/// Decides whether an insert/sample may proceed given table statistics.
+#[derive(Clone, Copy, Debug)]
+pub enum RateLimiter {
+    /// Sampling allowed once at least `min_size` items were inserted;
+    /// inserts are never blocked.
+    MinSize { min_size: usize },
+    /// Keep `samples / inserts` near `ratio` once `min_size` is reached,
+    /// within a tolerance of `error_buffer` samples.
+    SampleToInsertRatio {
+        ratio: f64,
+        min_size: usize,
+        error_buffer: f64,
+    },
+}
+
+impl RateLimiter {
+    pub fn min_size(min_size: usize) -> Self {
+        RateLimiter::MinSize { min_size }
+    }
+
+    pub fn sample_to_insert(ratio: f64, min_size: usize) -> Self {
+        RateLimiter::SampleToInsertRatio {
+            ratio,
+            min_size,
+            // Reverb default-ish: allow a couple of batches of slack
+            error_buffer: (ratio * min_size as f64).max(2.0 * ratio),
+        }
+    }
+
+    /// May a sample proceed given lifetime (inserts, samples)?
+    pub fn can_sample(&self, inserts: u64, samples: u64) -> bool {
+        match *self {
+            RateLimiter::MinSize { min_size } => inserts >= min_size as u64,
+            RateLimiter::SampleToInsertRatio { ratio, min_size, error_buffer } => {
+                if inserts < min_size as u64 {
+                    return false;
+                }
+                // samples may run ahead of ratio*inserts by error_buffer
+                (samples as f64) < ratio * inserts as f64 + error_buffer
+            }
+        }
+    }
+
+    /// May an insert proceed given lifetime (inserts, samples)?
+    pub fn can_insert(&self, inserts: u64, samples: u64) -> bool {
+        match *self {
+            RateLimiter::MinSize { .. } => true,
+            RateLimiter::SampleToInsertRatio { ratio, min_size, error_buffer } => {
+                if inserts < min_size as u64 {
+                    return true;
+                }
+                // inserts may run ahead of samples/ratio by error_buffer/ratio
+                ratio * (inserts as f64)
+                    < samples as f64 + error_buffer.max(1.0) * ratio
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_size_blocks_until_filled() {
+        let l = RateLimiter::min_size(10);
+        assert!(!l.can_sample(9, 0));
+        assert!(l.can_sample(10, 0));
+        assert!(l.can_insert(0, 0));
+        assert!(l.can_insert(1_000_000, 0));
+    }
+
+    #[test]
+    fn ratio_blocks_oversampling() {
+        let l = RateLimiter::SampleToInsertRatio {
+            ratio: 2.0,
+            min_size: 10,
+            error_buffer: 4.0,
+        };
+        assert!(!l.can_sample(5, 0), "below min size");
+        assert!(l.can_sample(10, 0));
+        // at 10 inserts, sampling allowed up to 2*10+4 = 24 samples
+        assert!(l.can_sample(10, 23));
+        assert!(!l.can_sample(10, 24));
+        // more inserts unblock sampling
+        assert!(l.can_sample(20, 24));
+    }
+
+    #[test]
+    fn ratio_blocks_overinserting() {
+        let l = RateLimiter::SampleToInsertRatio {
+            ratio: 2.0,
+            min_size: 4,
+            error_buffer: 4.0,
+        };
+        // before min_size inserts always allowed
+        assert!(l.can_insert(3, 0));
+        // 2*inserts must stay below samples + 4*2
+        assert!(l.can_insert(4, 1)); // 8 < 1+8
+        assert!(!l.can_insert(5, 1)); // 10 !< 9
+        assert!(l.can_insert(5, 4)); // 10 < 12
+    }
+}

@@ -1,0 +1,27 @@
+//! Reverb-style replay (Cassirer et al., 2021) — the data-flow substrate.
+//!
+//! The paper routes all executor→trainer data through Reverb tables. This
+//! module reimplements the semantics mava-rs needs, in-process:
+//!
+//! * [`Table`] — bounded item store with a pluggable [`Selector`]
+//!   (uniform / prioritized / FIFO / LIFO, paper §4 "dataset") and FIFO
+//!   eviction;
+//! * [`RateLimiter`] — Reverb's insert/sample flow control
+//!   (`MinSize`, `SampleToInsertRatio`), blocking on condvars;
+//! * adders ([`TransitionAdder`], [`SequenceAdder`]) — the Acme/Mava
+//!   client-side classes that turn executor timesteps into table items.
+//!
+//! Being in-process removes only the RPC hop; insertion blocking,
+//! sampling blocking and eviction order match Reverb's behaviour, which
+//! is what the distribution experiment (Fig 6, bottom-right) exercises.
+
+mod adders;
+mod checkpoint;
+mod limiter;
+mod selectors;
+mod table;
+
+pub use adders::{SequenceAdder, TransitionAdder};
+pub use limiter::RateLimiter;
+pub use selectors::{Selector, SumTree};
+pub use table::{Item, Sequence, Table, TableStats, Transition};

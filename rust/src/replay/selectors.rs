@@ -1,0 +1,111 @@
+//! Item-sampling strategies (Reverb "selectors").
+
+use crate::rng::Rng;
+
+/// How a table picks the next item to sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selector {
+    /// Uniform over stored items (default experience replay).
+    Uniform,
+    /// Proportional to priority^alpha via a sum-tree.
+    Prioritized, // alpha applied at insert time
+    /// Oldest stored item (queue semantics).
+    Fifo,
+    /// Newest stored item (stack semantics).
+    Lifo,
+}
+
+/// A classic sum-tree over item priorities for O(log n) proportional
+/// sampling; capacity is fixed at construction and slots are reused
+/// ring-buffer style in step with the table's FIFO eviction.
+#[derive(Clone, Debug)]
+pub struct SumTree {
+    capacity: usize,
+    tree: Vec<f64>, // 1-indexed binary heap layout, len = 2*capacity
+}
+
+impl SumTree {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        let cap = capacity.next_power_of_two();
+        SumTree { capacity: cap, tree: vec![0.0; 2 * cap] }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Set the priority of `slot`.
+    pub fn set(&mut self, slot: usize, priority: f64) {
+        debug_assert!(slot < self.capacity);
+        debug_assert!(priority >= 0.0);
+        let mut i = self.capacity + slot;
+        let delta = priority - self.tree[i];
+        while i >= 1 {
+            self.tree[i] += delta;
+            i /= 2;
+        }
+    }
+
+    pub fn get(&self, slot: usize) -> f64 {
+        self.tree[self.capacity + slot]
+    }
+
+    /// Sample a slot proportional to priority. Total must be > 0.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        debug_assert!(self.total() > 0.0);
+        let mut mass = rng.f64() * self.total();
+        let mut i = 1usize;
+        while i < self.capacity {
+            let left = 2 * i;
+            if mass < self.tree[left] {
+                i = left;
+            } else {
+                mass -= self.tree[left];
+                i = left + 1;
+            }
+        }
+        i - self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_tree_total_tracks_sets() {
+        let mut t = SumTree::new(5);
+        t.set(0, 1.0);
+        t.set(3, 2.0);
+        assert!((t.total() - 3.0).abs() < 1e-12);
+        t.set(0, 0.5);
+        assert!((t.total() - 2.5).abs() < 1e-12);
+        assert_eq!(t.get(3), 2.0);
+    }
+
+    #[test]
+    fn sum_tree_sampling_is_proportional() {
+        let mut t = SumTree::new(4);
+        t.set(0, 1.0);
+        t.set(1, 3.0);
+        let mut rng = Rng::new(0);
+        let mut counts = [0usize; 4];
+        for _ in 0..20_000 {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[2] + counts[3], 0);
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn sum_tree_zero_slots_never_sampled() {
+        let mut t = SumTree::new(8);
+        t.set(5, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert_eq!(t.sample(&mut rng), 5);
+        }
+    }
+}

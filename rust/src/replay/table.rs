@@ -1,0 +1,411 @@
+//! The replay table: a bounded, thread-safe item store with pluggable
+//! sampling, FIFO eviction and blocking flow control.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::replay::{RateLimiter, Selector, SumTree};
+use crate::rng::Rng;
+
+/// A single environment transition, flattened for batch assembly.
+/// `obs`/`next_obs` are `[N*O]`; exactly one of the action fields is
+/// non-empty depending on the action space.
+#[derive(Clone, Debug, Default)]
+pub struct Transition {
+    pub obs: Vec<f32>,
+    pub state: Vec<f32>,
+    pub actions_disc: Vec<i32>,
+    pub actions_cont: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub discount: f32,
+    pub next_obs: Vec<f32>,
+    pub next_state: Vec<f32>,
+}
+
+/// A fixed-length (padded) trajectory slice for recurrent training.
+/// `obs` holds T+1 steps (`[(T+1)*N*O]`), the rest T steps; `mask[t]`
+/// is 1.0 for valid steps.
+#[derive(Clone, Debug, Default)]
+pub struct Sequence {
+    pub t: usize,
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>, // [T*N] per-agent (team rewards replicated)
+    pub discounts: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub enum Item {
+    Transition(Transition),
+    Sequence(Sequence),
+}
+
+impl Item {
+    pub fn as_transition(&self) -> &Transition {
+        match self {
+            Item::Transition(t) => t,
+            _ => panic!("expected transition item"),
+        }
+    }
+
+    pub fn as_sequence(&self) -> &Sequence {
+        match self {
+            Item::Sequence(s) => s,
+            _ => panic!("expected sequence item"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TableStats {
+    pub size: usize,
+    pub inserts: u64,
+    pub samples: u64,
+    pub evictions: u64,
+}
+
+struct Inner {
+    items: VecDeque<Item>,
+    /// ring slot of items[0] within the sum-tree
+    head_slot: usize,
+    tree: SumTree,
+    rng: Rng,
+    stats: TableStats,
+}
+
+/// Thread-safe replay table (one Reverb table).
+pub struct Table {
+    max_size: usize,
+    selector: Selector,
+    limiter: RateLimiter,
+    priority_exponent: f64,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl Table {
+    pub fn new(
+        max_size: usize,
+        selector: Selector,
+        limiter: RateLimiter,
+        seed: u64,
+    ) -> Self {
+        assert!(max_size > 0);
+        Table {
+            max_size,
+            selector,
+            limiter,
+            priority_exponent: 0.6,
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(max_size),
+                head_slot: 0,
+                tree: SumTree::new(max_size),
+                rng: Rng::new(seed),
+                stats: TableStats::default(),
+            }),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Uniform table with a min-size limiter (the common configuration).
+    pub fn uniform(max_size: usize, min_size: usize, seed: u64) -> Self {
+        Table::new(
+            max_size,
+            Selector::Uniform,
+            RateLimiter::min_size(min_size),
+            seed,
+        )
+    }
+
+    pub fn stats(&self) -> TableStats {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.size = inner.items.len();
+        inner.stats
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Unblock all waiters; subsequent blocking calls return None/false.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    fn slot_of(&self, inner: &Inner, index: usize) -> usize {
+        (inner.head_slot + index) % self.max_size
+    }
+
+    /// Insert with priority, blocking while the rate limiter forbids it.
+    /// Returns false if the table was closed while waiting.
+    pub fn insert(&self, item: Item, priority: f64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                return false;
+            }
+            let st = inner.stats;
+            if self.limiter.can_insert(st.inserts, st.samples) {
+                break;
+            }
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(inner, Duration::from_millis(50))
+                .unwrap();
+            inner = guard;
+            let _ = timeout;
+        }
+        if inner.items.len() == self.max_size {
+            inner.items.pop_front();
+            let slot = inner.head_slot;
+            inner.tree.set(slot, 0.0);
+            inner.head_slot = (inner.head_slot + 1) % self.max_size;
+            inner.stats.evictions += 1;
+        }
+        let index = inner.items.len();
+        let slot = self.slot_of(&inner, index);
+        inner.items.push_back(item);
+        let pri = priority.max(1e-6).powf(self.priority_exponent);
+        inner.tree.set(slot, pri);
+        inner.stats.inserts += 1;
+        drop(inner);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Copy of every stored item, oldest first (checkpointing).
+    pub fn snapshot(&self) -> Vec<Item> {
+        let inner = self.inner.lock().unwrap();
+        inner.items.iter().cloned().collect()
+    }
+
+    /// Non-blocking: true when a sample would currently be admitted.
+    pub fn can_sample(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        let st = inner.stats;
+        !inner.items.is_empty()
+            && self.limiter.can_sample(st.inserts, st.samples)
+    }
+
+    /// Sample `n` items (with replacement), blocking until the limiter
+    /// admits it. Returns None if the table is closed.
+    pub fn sample(&self, n: usize) -> Option<Vec<Item>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                return None;
+            }
+            let st = inner.stats;
+            if !inner.items.is_empty()
+                && self.limiter.can_sample(st.inserts, st.samples)
+            {
+                break;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(inner, Duration::from_millis(50))
+                .unwrap();
+            inner = guard;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = inner.items.len();
+            let index = match self.selector {
+                Selector::Uniform => inner.rng.below(len),
+                Selector::Fifo => 0,
+                Selector::Lifo => len - 1,
+                Selector::Prioritized => {
+                    let inner = &mut *inner;
+                    let slot = inner.tree.sample(&mut inner.rng);
+                    (slot + self.max_size - inner.head_slot) % self.max_size
+                }
+            };
+            out.push(inner.items[index].clone());
+            if self.selector == Selector::Fifo {
+                // queue semantics: consume the item
+                inner.items.pop_front();
+                let slot = inner.head_slot;
+                inner.tree.set(slot, 0.0);
+                inner.head_slot = (inner.head_slot + 1) % self.max_size;
+                if inner.items.is_empty() {
+                    inner.stats.samples += 1;
+                    break;
+                }
+            }
+        }
+        inner.stats.samples += 1;
+        drop(inner);
+        self.cv.notify_all();
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn item(v: f32) -> Item {
+        Item::Transition(Transition { obs: vec![v], ..Default::default() })
+    }
+
+    fn val(i: &Item) -> f32 {
+        i.as_transition().obs[0]
+    }
+
+    #[test]
+    fn insert_and_uniform_sample() {
+        let t = Table::uniform(8, 1, 0);
+        for i in 0..5 {
+            assert!(t.insert(item(i as f32), 1.0));
+        }
+        let s = t.sample(16).unwrap();
+        assert_eq!(s.len(), 16);
+        for it in &s {
+            assert!((0.0..5.0).contains(&val(it)));
+        }
+        assert_eq!(t.stats().inserts, 5);
+    }
+
+    #[test]
+    fn fifo_eviction_at_capacity() {
+        let t = Table::uniform(3, 1, 0);
+        for i in 0..5 {
+            t.insert(item(i as f32), 1.0);
+        }
+        let st = t.stats();
+        assert_eq!(st.size, 3);
+        assert_eq!(st.evictions, 2);
+        // only items 2,3,4 remain
+        for it in t.sample(32).unwrap() {
+            assert!(val(&it) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn lifo_returns_newest() {
+        let t = Table::new(
+            8,
+            Selector::Lifo,
+            RateLimiter::min_size(1),
+            0,
+        );
+        for i in 0..4 {
+            t.insert(item(i as f32), 1.0);
+        }
+        let s = t.sample(1).unwrap();
+        assert_eq!(val(&s[0]), 3.0);
+    }
+
+    #[test]
+    fn fifo_consumes_like_a_queue() {
+        let t = Table::new(8, Selector::Fifo, RateLimiter::min_size(1), 0);
+        for i in 0..3 {
+            t.insert(item(i as f32), 1.0);
+        }
+        let a = t.sample(1).unwrap();
+        let b = t.sample(1).unwrap();
+        assert_eq!(val(&a[0]), 0.0);
+        assert_eq!(val(&b[0]), 1.0);
+        assert_eq!(t.stats().size, 1);
+    }
+
+    #[test]
+    fn prioritized_prefers_high_priority() {
+        let t = Table::new(
+            64,
+            Selector::Prioritized,
+            RateLimiter::min_size(1),
+            7,
+        );
+        t.insert(item(0.0), 0.01);
+        t.insert(item(1.0), 100.0);
+        let s = t.sample(200).unwrap();
+        let high = s.iter().filter(|i| val(i) == 1.0).count();
+        assert!(high > 150, "high-priority sampled {high}/200");
+    }
+
+    #[test]
+    fn prioritized_survives_eviction_wraparound() {
+        let t = Table::new(
+            4,
+            Selector::Prioritized,
+            RateLimiter::min_size(1),
+            9,
+        );
+        for i in 0..11 {
+            t.insert(item(i as f32), 1.0);
+        }
+        // slots wrapped nearly three times; samples must come from 7..=10
+        for it in t.sample(64).unwrap() {
+            assert!(val(&it) >= 7.0, "stale item {:?}", val(&it));
+        }
+    }
+
+    #[test]
+    fn sample_blocks_until_min_size() {
+        let t = Arc::new(Table::uniform(16, 4, 0));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.sample(2));
+        std::thread::sleep(Duration::from_millis(30));
+        for i in 0..4 {
+            t.insert(item(i as f32), 1.0);
+        }
+        let got = h.join().unwrap();
+        assert_eq!(got.unwrap().len(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_sampler() {
+        let t = Arc::new(Table::uniform(16, 100, 0));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.sample(1));
+        std::thread::sleep(Duration::from_millis(20));
+        t.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn ratio_limiter_throttles_sampler() {
+        // 1 sample per insert, tight buffer: a sampler thread must
+        // interleave with the inserter rather than running ahead.
+        let t = Arc::new(Table::new(
+            1024,
+            Selector::Uniform,
+            RateLimiter::SampleToInsertRatio {
+                ratio: 1.0,
+                min_size: 1,
+                error_buffer: 2.0,
+            },
+            0,
+        ));
+        let t2 = t.clone();
+        let sampler = std::thread::spawn(move || {
+            let mut n = 0;
+            while t2.sample(1).is_some() {
+                n += 1;
+            }
+            n
+        });
+        for i in 0..50 {
+            assert!(t.insert(item(i as f32), 1.0));
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let st = t.stats();
+        t.close();
+        let sampled: u64 = sampler.join().unwrap();
+        assert!(sampled >= st.inserts - 2, "sampler starved: {sampled}");
+        assert!(
+            (sampled as f64) <= st.inserts as f64 + 3.0,
+            "sampler ran ahead: {sampled} vs {}",
+            st.inserts
+        );
+    }
+}

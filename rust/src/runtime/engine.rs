@@ -1,0 +1,276 @@
+//! The PJRT engine: compile HLO-text artifacts once, execute repeatedly.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::{Dtype, HostTensor};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// A compiled artifact: PJRT executable + its manifest spec.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Argument to [`Artifact::call_mixed`]: host tensor (uploaded per call)
+/// or an already-resident device buffer (e.g. cached parameters).
+pub enum Arg<'a> {
+    Host(&'a HostTensor),
+    Dev(&'a xla::PjRtBuffer),
+}
+
+impl Artifact {
+    /// Upload a host tensor once and keep it on device — used by
+    /// executors to cache the (rarely changing) parameter vector so the
+    /// acting hot path skips a ~P*4-byte upload per environment step.
+    pub fn upload(&self, t: &HostTensor, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let client = self.exe.client();
+        let buf = match t.dtype {
+            Dtype::F32 => {
+                client.buffer_from_host_buffer(t.as_f32(), dims, None)
+            }
+            Dtype::I32 => {
+                client.buffer_from_host_buffer(t.as_i32(), dims, None)
+            }
+        };
+        buf.map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute with a mix of device-resident and host arguments.
+    pub fn call_mixed(&self, inputs: &[Arg]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, expected {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        // two passes: upload host args first (owned), then collect refs
+        for (arg, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if let Arg::Host(t) = arg {
+                owned.push(self.upload(t, &spec.dims)?);
+            }
+        }
+        let mut owned_it = owned.iter();
+        for arg in inputs {
+            match arg {
+                Arg::Host(_) => refs.push(owned_it.next().unwrap()),
+                Arg::Dev(b) => refs.push(b),
+            }
+        }
+        let bufs = self
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow::anyhow!("{}: execute_b: {e:?}", self.spec.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: fetch: {e:?}", self.spec.name))?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}: output arity mismatch", self.spec.name);
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| from_literal(&lit, spec.dtype, spec.dims.clone()))
+            .collect()
+    }
+    /// Execute with type/shape-checked host tensors.
+    pub fn call(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, expected {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.dtype != spec.dtype || t.len() != spec.numel() {
+                bail!(
+                    "{}: input {} mismatch (got {:?} x{}, want {:?} {:?})",
+                    self.spec.name,
+                    spec.name,
+                    t.dtype,
+                    t.len(),
+                    spec.dtype,
+                    spec.dims
+                );
+            }
+            literals.push(to_literal(t, &spec.dims)?);
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("{}: execute failed", self.spec.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{}: result fetch", self.spec.name))?;
+        // lowered with return_tuple=True -> always a tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, expected {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| from_literal(&lit, spec.dtype, spec.dims.clone()))
+            .collect()
+    }
+}
+
+fn to_literal(t: &HostTensor, dims: &[usize]) -> Result<xla::Literal> {
+    // single-copy path: bytes straight into a shaped literal (the naive
+    // vec1 + reshape round-trip costs a second copy — see §Perf)
+    let (ty, bytes): (xla::ElementType, &[u8]) = match t.dtype {
+        Dtype::F32 => {
+            if dims.is_empty() {
+                return Ok(xla::Literal::scalar(t.as_f32()[0]));
+            }
+            let d = t.as_f32();
+            (xla::ElementType::F32, unsafe {
+                std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len() * 4)
+            })
+        }
+        Dtype::I32 => {
+            if dims.is_empty() {
+                return Ok(xla::Literal::scalar(t.as_i32()[0]));
+            }
+            let d = t.as_i32();
+            (xla::ElementType::S32, unsafe {
+                std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len() * 4)
+            })
+        }
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)?)
+}
+
+fn from_literal(
+    lit: &xla::Literal,
+    dtype: Dtype,
+    dims: Vec<usize>,
+) -> Result<HostTensor> {
+    Ok(match dtype {
+        Dtype::F32 => HostTensor::f32(dims, lit.to_vec::<f32>()?),
+        Dtype::I32 => HostTensor::i32(dims, lit.to_vec::<i32>()?),
+    })
+}
+
+/// A per-thread PJRT CPU client plus its compiled artifact cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<Artifact>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn load(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn artifact(&mut self, name: &str) -> Result<std::rc::Rc<Artifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("{name}: parse HLO: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{name}: compile: {e:?}"))?;
+        let art = std::rc::Rc::new(Artifact { spec, exe });
+        self.cache.insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Read an init vector declared by artifact `name`.
+    pub fn read_init(&self, name: &str, init: &str) -> Result<Vec<f32>> {
+        let spec = self.manifest.get(name)?;
+        self.manifest.read_init(spec, init)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end: load the tiny matrix2 artifacts, run policy + train.
+    /// Requires `make artifacts` to have run (skipped otherwise).
+    #[test]
+    fn matrix2_policy_and_train_roundtrip() {
+        let Ok(mut engine) = Engine::load("artifacts") else {
+            eprintln!("artifacts/ missing; skipping");
+            return;
+        };
+        let policy = engine.artifact("matrix2_madqn_policy").unwrap();
+        let p = engine.read_init("matrix2_madqn_train", "params0").unwrap();
+        let n_params = p.len();
+        let params = HostTensor::f32(vec![n_params], p);
+        let obs = HostTensor::f32(vec![1, 2, 4], vec![0.1; 8]);
+        let out = policy.call(&[&params, &obs]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![1, 2, 3]);
+        assert!(out[0].as_f32().iter().all(|x| x.is_finite()));
+
+        // one train step reduces nothing yet but must run and mutate params
+        let train = engine.artifact("matrix2_madqn_train").unwrap();
+        let opt = HostTensor::f32(
+            vec![1 + 2 * n_params],
+            engine.read_init("matrix2_madqn_train", "opt0").unwrap(),
+        );
+        let b = 16;
+        let batch_obs = HostTensor::f32(vec![b, 2, 4], vec![0.2; b * 8]);
+        let act = HostTensor::i32(vec![b, 2], vec![1; b * 2]);
+        let rew = HostTensor::f32(vec![b, 2], vec![1.0; b * 2]);
+        let disc = HostTensor::f32(vec![b], vec![1.0; b]);
+        let next_obs = HostTensor::f32(vec![b, 2, 4], vec![0.3; b * 8]);
+        let lr = HostTensor::scalar_f32(1e-3);
+        let tau = HostTensor::scalar_f32(0.01);
+        let target = params.clone();
+        let out = train
+            .call(&[
+                &params, &target, &opt, &batch_obs, &act, &rew, &disc,
+                &next_obs, &lr, &tau,
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        let new_params = out[0].as_f32();
+        assert_ne!(new_params, params.as_f32(), "params must move");
+        let loss = out[3].as_f32()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Ok(mut engine) = Engine::load("artifacts") else {
+            return;
+        };
+        let policy = engine.artifact("matrix2_madqn_policy").unwrap();
+        let bad = HostTensor::f32(vec![3], vec![0.0; 3]);
+        let obs = HostTensor::f32(vec![1, 2, 4], vec![0.0; 8]);
+        assert!(policy.call(&[&bad, &obs]).is_err());
+        assert!(policy.call(&[&obs]).is_err());
+    }
+}

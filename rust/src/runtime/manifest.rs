@@ -1,0 +1,258 @@
+//! Parser for `artifacts/manifest.txt` — the line-based artifact index
+//! emitted by `python/compile/aot.py` (no serde offline, hence no JSON).
+//!
+//! Format, one block per artifact:
+//! ```text
+//! artifact <name>
+//! file <name>.hlo.txt
+//! input <name> <f32|i32> [dim ...]     # no dims = scalar
+//! output <name> <f32|i32> [dim ...]
+//! meta <key> <value>
+//! init <name> <file>.f32bin <len>
+//! end
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::Dtype;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InitSpec {
+    pub name: String,
+    pub file: String,
+    pub len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: HashMap<String, String>,
+    pub inits: Vec<InitSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("{}: missing meta {key}", self.name))?
+            .parse()
+            .with_context(|| format!("{}: bad meta {key}", self.name))
+    }
+
+    pub fn meta_f32(&self, key: &str) -> Result<f32> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("{}: missing meta {key}", self.name))?
+            .parse()
+            .with_context(|| format!("{}: bad meta {key}", self.name))
+    }
+
+    pub fn input(&self, name: &str) -> Option<&TensorSpec> {
+        self.inputs.iter().find(|t| t.name == name)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut m = Manifest { dir, artifacts: HashMap::new() };
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let tag = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            let err = || format!("manifest line {}: {line:?}", lineno + 1);
+            match tag {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: unterminated artifact block", err());
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: rest.first().with_context(err)?.to_string(),
+                        file: String::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                        meta: HashMap::new(),
+                        inits: vec![],
+                    });
+                }
+                "file" => {
+                    cur.as_mut().with_context(err)?.file =
+                        rest.first().with_context(err)?.to_string();
+                }
+                "input" | "output" => {
+                    let spec = TensorSpec {
+                        name: rest.first().with_context(err)?.to_string(),
+                        dtype: Dtype::parse(rest.get(1).with_context(err)?)?,
+                        dims: rest[2..]
+                            .iter()
+                            .map(|d| d.parse().with_context(err))
+                            .collect::<Result<_>>()?,
+                    };
+                    let art = cur.as_mut().with_context(err)?;
+                    if tag == "input" {
+                        art.inputs.push(spec);
+                    } else {
+                        art.outputs.push(spec);
+                    }
+                }
+                "meta" => {
+                    let art = cur.as_mut().with_context(err)?;
+                    art.meta.insert(
+                        rest.first().with_context(err)?.to_string(),
+                        rest[1..].join(" "),
+                    );
+                }
+                "init" => {
+                    let art = cur.as_mut().with_context(err)?;
+                    art.inits.push(InitSpec {
+                        name: rest.first().with_context(err)?.to_string(),
+                        file: rest.get(1).with_context(err)?.to_string(),
+                        len: rest.get(2).with_context(err)?.parse()?,
+                    });
+                }
+                "end" => {
+                    let art = cur.take().with_context(err)?;
+                    m.artifacts.insert(art.name.clone(), art);
+                }
+                other => bail!("{}: unknown tag {other:?}", err()),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest ended mid-artifact");
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Read an init blob (raw little-endian f32) belonging to `spec`.
+    pub fn read_init(&self, spec: &ArtifactSpec, name: &str) -> Result<Vec<f32>> {
+        let init = spec
+            .inits
+            .iter()
+            .find(|i| i.name == name)
+            .with_context(|| format!("{}: no init {name:?}", spec.name))?;
+        let bytes = std::fs::read(self.dir.join(&init.file))?;
+        if bytes.len() != init.len * 4 {
+            bail!(
+                "{}: init {} has {} bytes, expected {}",
+                spec.name,
+                init.file,
+                bytes.len(),
+                init.len * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact t_policy
+file t_policy.hlo.txt
+input params f32 100
+input obs f32 1 2 4
+input lr f32
+output q f32 1 2 3
+meta n_agents 2
+meta gamma 0.99
+init params0 t_params0.f32bin 100
+end
+artifact t_train
+file t_train.hlo.txt
+input params f32 100
+output params f32 100
+end
+";
+
+    #[test]
+    fn parses_two_blocks() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let p = m.get("t_policy").unwrap();
+        assert_eq!(p.file, "t_policy.hlo.txt");
+        assert_eq!(p.inputs.len(), 3);
+        assert_eq!(p.inputs[1].dims, vec![1, 2, 4]);
+        assert_eq!(p.inputs[1].numel(), 8);
+        assert!(p.inputs[2].dims.is_empty(), "scalar input");
+        assert_eq!(p.meta_usize("n_agents").unwrap(), 2);
+        assert!((p.meta_f32("gamma").unwrap() - 0.99).abs() < 1e-6);
+        assert_eq!(p.inits[0].len, 100);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("input x f32 1\n", "/tmp".into()).is_err());
+        assert!(
+            Manifest::parse("artifact a\nartifact b\n", "/tmp".into()).is_err()
+        );
+        assert!(Manifest::parse("artifact a\n", "/tmp".into()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // exercised against the actual AOT output when present
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.contains_key("matrix2_madqn_policy"));
+            let t = m.get("matrix2_madqn_train").unwrap();
+            assert_eq!(t.inits.len(), 2);
+            let p0 = m.read_init(t, "params0").unwrap();
+            assert_eq!(p0.len(), t.meta_usize("params").unwrap());
+        }
+    }
+}

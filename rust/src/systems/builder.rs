@@ -1,0 +1,404 @@
+//! System builder: wires executors, trainer, replay, parameter server and
+//! evaluator into a Launchpad-style program and runs it (paper Block 2).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::core::StepType;
+use crate::env::wrappers::{Fingerprint, FingerprintWrapper};
+use crate::env::{make_env, MultiAgentEnv};
+use crate::exploration::EpsilonSchedule;
+use crate::launch::{LocalLauncher, NodeKind, Program, StopSignal};
+use crate::metrics::{Counters, MovingStats};
+use crate::params::ParameterServer;
+use crate::replay::{
+    RateLimiter, Selector, SequenceAdder, Table, TransitionAdder,
+};
+use crate::runtime::{Engine, Manifest};
+use crate::systems::{Executor, SystemKind, Trainer};
+
+/// One evaluator measurement (a point on the paper's learning curves).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    pub wall_s: f64,
+    pub env_steps: u64,
+    pub train_steps: u64,
+    pub mean_return: f32,
+}
+
+/// Outcome of a full distributed training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainResult {
+    pub evals: Vec<EvalPoint>,
+    pub env_steps: u64,
+    pub train_steps: u64,
+    pub episodes: u64,
+    pub wall_s: f64,
+    /// moving-average training return at shutdown
+    pub train_return: f32,
+}
+
+impl TrainResult {
+    /// Best evaluator measurement of the run.
+    pub fn best_return(&self) -> f32 {
+        self.evals
+            .iter()
+            .map(|e| e.mean_return)
+            .fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// First wall-clock time at which the evaluator reached `threshold`.
+    pub fn time_to(&self, threshold: f32) -> Option<f64> {
+        self.evals
+            .iter()
+            .find(|e| e.mean_return >= threshold)
+            .map(|e| e.wall_s)
+    }
+}
+
+/// Environment for an artifact preset (DESIGN.md §4). The `_fp` presets
+/// wrap the base env with the fingerprint stabilisation module.
+pub fn env_for_preset(
+    preset: &str,
+    seed: u64,
+    fingerprint: Option<Fingerprint>,
+) -> Result<Box<dyn MultiAgentEnv>> {
+    let base = match preset {
+        "matrix2" => "matrix",
+        "switch3" => "switch",
+        "smac3m" | "smac3m_fp" => "smac_lite",
+        "spread3" => "mpe_spread",
+        "speaker2" => "mpe_speaker_listener",
+        "walker3" => "multiwalker",
+        other => bail!("unknown preset {other:?}"),
+    };
+    let env = make_env(base, seed)?;
+    if preset.ends_with("_fp") {
+        let fp = fingerprint.unwrap_or_default();
+        // wrap via a boxed adaptor
+        struct Boxed(Box<dyn MultiAgentEnv>);
+        impl MultiAgentEnv for Boxed {
+            fn spec(&self) -> &crate::core::EnvSpec {
+                self.0.spec()
+            }
+            fn reset(&mut self) -> crate::core::TimeStep {
+                self.0.reset()
+            }
+            fn step(
+                &mut self,
+                a: &crate::core::Actions,
+            ) -> crate::core::TimeStep {
+                self.0.step(a)
+            }
+        }
+        Ok(Box::new(FingerprintWrapper::new(Boxed(env), fp)))
+    } else {
+        Ok(env)
+    }
+}
+
+/// Run one greedy evaluation episode; returns the mean-over-agents
+/// episode return.
+pub fn eval_episode(
+    executor: &mut Executor,
+    env: &mut dyn MultiAgentEnv,
+) -> Result<f32> {
+    let mut ts = env.reset();
+    executor.reset_state();
+    let mut ret = 0.0;
+    while ts.step_type != StepType::Last {
+        let actions = executor.select_actions(&ts, 0.0, 0.0)?;
+        ts = env.step(&actions);
+        ret += ts.rewards.iter().sum::<f32>() / ts.rewards.len() as f32;
+    }
+    Ok(ret)
+}
+
+/// Build and run the full distributed system described by `cfg`.
+/// `deadline` bounds wall-clock time (benches); `None` = until
+/// `max_env_steps`.
+pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResult> {
+    let kind = SystemKind::parse(&cfg.system)?;
+    let prefix = cfg.artifact_prefix();
+    let policy_name = format!("{prefix}_policy");
+    let train_name = format!("{prefix}_train");
+
+    // --- initial parameters from the AOT init blobs ---
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let train_spec = manifest.get(&train_name)?.clone();
+    let params0 = manifest.read_init(&train_spec, "params0")?;
+    let opt0 = manifest.read_init(&train_spec, "opt0")?;
+    let seq_len = train_spec.meta_usize("seq_len")?;
+    let gamma = train_spec.meta_f32("gamma")?;
+    let batch = train_spec.meta_usize("batch")?;
+
+    // --- shared services (the "nodes" executors/trainer talk to) ---
+    let table = Arc::new(Table::new(
+        cfg.replay_size,
+        Selector::Uniform,
+        RateLimiter::sample_to_insert(
+            cfg.samples_per_insert / batch as f64,
+            cfg.min_replay,
+        ),
+        cfg.seed ^ 0x7ab1e,
+    ));
+    let server = Arc::new(ParameterServer::new(params0.clone()));
+    let counters = Arc::new(Counters::default());
+    let stop = StopSignal::new();
+    let evals = Arc::new(Mutex::new(Vec::<EvalPoint>::new()));
+    let train_returns = Arc::new(Mutex::new(MovingStats::new(64)));
+    let fingerprint = Fingerprint::new(cfg.eps_start, 0.0);
+    let started = Instant::now();
+
+    let mut program = Program::new();
+
+    // --- trainer node ---
+    {
+        let cfg = cfg.clone();
+        let table = table.clone();
+        let server = server.clone();
+        let counters = counters.clone();
+        let stop = stop.clone();
+        let train_name = train_name.clone();
+        let params0 = params0.clone();
+        program.add_node("trainer", NodeKind::Trainer, move || {
+            let run = || -> Result<()> {
+                let mut engine = Engine::load(&cfg.artifacts_dir)?;
+                let artifact = engine.artifact(&train_name)?;
+                let mut trainer = Trainer::new(
+                    kind.family(),
+                    artifact,
+                    params0,
+                    opt0,
+                    cfg.lr,
+                    cfg.tau,
+                    cfg.seed ^ 0x77aa,
+                )?;
+                trainer.init_target_from_params();
+                server.push(trainer.params());
+                while !stop.is_stopped() {
+                    match trainer.step_and_publish(&table, &server)? {
+                        None => break, // table closed
+                        Some(_) => counters.add_train_step(),
+                    }
+                    if cfg.max_train_steps > 0
+                        && trainer.stats.steps >= cfg.max_train_steps
+                    {
+                        break;
+                    }
+                }
+                Ok(())
+            };
+            if let Err(e) = run() {
+                eprintln!("[trainer] error: {e:#}");
+            }
+        });
+    }
+
+    // --- executor nodes ---
+    for worker in 0..cfg.num_executors {
+        let cfg = cfg.clone();
+        let table = table.clone();
+        let server = server.clone();
+        let counters = counters.clone();
+        let stop = stop.clone();
+        let policy_name = policy_name.clone();
+        let params0 = params0.clone();
+        let train_returns = train_returns.clone();
+        let fingerprint = fingerprint.clone();
+        program.add_node(
+            format!("executor_{worker}"),
+            NodeKind::Executor,
+            move || {
+                let run = || -> Result<()> {
+                    let mut engine = Engine::load(&cfg.artifacts_dir)?;
+                    let artifact = engine.artifact(&policy_name)?;
+                    let mut executor = Executor::new(
+                        kind,
+                        artifact,
+                        params0,
+                        cfg.seed + 1000 + worker as u64,
+                    )?;
+                    let mut env = env_for_preset(
+                        &cfg.preset,
+                        cfg.seed + worker as u64,
+                        Some(fingerprint.clone()),
+                    )?;
+                    let schedule = EpsilonSchedule::new(
+                        cfg.eps_start,
+                        cfg.eps_end,
+                        cfg.eps_decay_steps,
+                    );
+                    let mut tr_adder =
+                        TransitionAdder::new(table.clone(), cfg.n_step, gamma);
+                    let mut sq_adder = SequenceAdder::new(
+                        table.clone(),
+                        seq_len.max(1),
+                        seq_len.max(1),
+                    );
+                    let use_seq = kind.sequences();
+                    let mut episodes_since_sync = 0u64;
+                    'outer: while !stop.is_stopped()
+                        && counters.env_steps() < cfg.max_env_steps
+                    {
+                        let mut ts = env.reset();
+                        executor.reset_state();
+                        if use_seq {
+                            sq_adder.observe_first(&ts);
+                        } else {
+                            tr_adder.observe_first(&ts);
+                        }
+                        let mut ep_return = 0.0f32;
+                        while ts.step_type != StepType::Last {
+                            if stop.is_stopped() {
+                                break 'outer;
+                            }
+                            let eps = schedule.value(counters.env_steps());
+                            fingerprint.set(
+                                eps,
+                                (counters.env_steps() as f32
+                                    / cfg.max_env_steps as f32)
+                                    .min(1.0),
+                            );
+                            let actions = executor
+                                .select_actions(&ts, eps, cfg.noise_sigma)?;
+                            let next = env.step(&actions);
+                            if use_seq {
+                                sq_adder.observe(&actions, &next);
+                            } else {
+                                tr_adder.observe(&actions, &next);
+                            }
+                            counters.add_env_steps(1);
+                            ep_return += next.rewards.iter().sum::<f32>()
+                                / next.rewards.len() as f32;
+                            ts = next;
+                        }
+                        counters.add_episode();
+                        train_returns.lock().unwrap().push(ep_return);
+                        episodes_since_sync += 1;
+                        if episodes_since_sync >= 1 {
+                            // cheap version check every episode
+                            let mut buf = Vec::new();
+                            if let Some(v) = server
+                                .sync(executor.params_version, &mut buf)
+                            {
+                                executor.set_params(v, &buf);
+                            }
+                            episodes_since_sync = 0;
+                        }
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    eprintln!("[executor_{worker}] error: {e:#}");
+                }
+            },
+        );
+    }
+
+    // --- evaluator node ---
+    {
+        let cfg = cfg.clone();
+        let server = server.clone();
+        let counters = counters.clone();
+        let stop = stop.clone();
+        let policy_name = policy_name.clone();
+        let params0 = params0.clone();
+        let evals = evals.clone();
+        program.add_node("evaluator", NodeKind::Evaluator, move || {
+            let run = || -> Result<()> {
+                let mut engine = Engine::load(&cfg.artifacts_dir)?;
+                let artifact = engine.artifact(&policy_name)?;
+                let mut executor = Executor::new(
+                    kind,
+                    artifact,
+                    params0,
+                    cfg.seed ^ 0xe7a1,
+                )?;
+                let mut env = env_for_preset(
+                    &cfg.preset,
+                    cfg.seed ^ 0xeefa,
+                    Some(Fingerprint::new(0.0, 1.0)),
+                )?;
+                let mut next_eval_at = 0u64;
+                while !stop.is_stopped() {
+                    let steps = counters.env_steps();
+                    if steps < next_eval_at {
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                    next_eval_at = steps + cfg.eval_every_steps;
+                    let mut buf = Vec::new();
+                    if let Some(v) =
+                        server.sync(executor.params_version, &mut buf)
+                    {
+                        executor.set_params(v, &buf);
+                    }
+                    let mut total = 0.0;
+                    for _ in 0..cfg.eval_episodes {
+                        if stop.is_stopped() {
+                            return Ok(());
+                        }
+                        total += eval_episode(&mut executor, env.as_mut())?;
+                    }
+                    let point = EvalPoint {
+                        wall_s: started.elapsed().as_secs_f64(),
+                        env_steps: counters.env_steps(),
+                        train_steps: counters.train_steps(),
+                        mean_return: total / cfg.eval_episodes as f32,
+                    };
+                    evals.lock().unwrap().push(point);
+                }
+                Ok(())
+            };
+            if let Err(e) = run() {
+                eprintln!("[evaluator] error: {e:#}");
+            }
+        });
+    }
+
+    // --- launch and supervise ---
+    let handle = LocalLauncher::launch(program, stop.clone());
+    loop {
+        std::thread::sleep(Duration::from_millis(20));
+        if counters.env_steps() >= cfg.max_env_steps {
+            break;
+        }
+        if let Some(d) = deadline {
+            if started.elapsed() >= d {
+                break;
+            }
+        }
+        if stop.is_stopped() {
+            break;
+        }
+    }
+    stop.stop();
+    table.close();
+    handle.join();
+
+    let evals = Arc::try_unwrap(evals)
+        .map_err(|_| anyhow::anyhow!("eval history still shared"))?
+        .into_inner()
+        .unwrap();
+    let result = TrainResult {
+        evals,
+        env_steps: counters.env_steps(),
+        train_steps: counters.train_steps(),
+        episodes: counters.episodes(),
+        wall_s: started.elapsed().as_secs_f64(),
+        train_return: train_returns.lock().unwrap().mean(),
+    };
+    Ok(result)
+}
+
+/// Convenience wrapper used by tests and examples: errors if the
+/// artifacts directory is missing.
+pub fn check_artifacts(cfg: &TrainConfig) -> Result<()> {
+    Manifest::load(&cfg.artifacts_dir)
+        .context("artifacts missing — run `make artifacts`")?;
+    Ok(())
+}

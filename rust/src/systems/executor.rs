@@ -1,0 +1,189 @@
+//! The executor: Mava's multi-agent actor collection (paper Block 1).
+//!
+//! Runs the policy artifact for all agents in one fused call (the pallas
+//! `agent_net` path), applies exploration in rust, carries recurrent
+//! state / DIAL inboxes between steps, and forwards transitions to an
+//! adder. Parameters are refreshed from the parameter server between
+//! episodes.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::core::{Actions, HostTensor, TimeStep};
+use crate::exploration::{epsilon_greedy, gaussian_noise};
+use crate::rng::Rng;
+use crate::runtime::{Arg, Artifact};
+use crate::systems::SystemKind;
+
+/// Recurrent carry between environment steps.
+#[derive(Clone, Debug)]
+pub enum ActorState {
+    None,
+    /// GRU hidden state [1, N, H]
+    Hidden(HostTensor),
+    /// DIAL: hidden state + routed message inbox [1, N, M]
+    HiddenInbox(HostTensor, HostTensor),
+}
+
+/// Multi-agent actor: one policy artifact acting for all agents.
+pub struct Executor {
+    kind: SystemKind,
+    artifact: Rc<Artifact>,
+    pub params: HostTensor,
+    pub params_version: u64,
+    /// device-resident copy of `params`, rebuilt lazily after set_params
+    params_buf: Option<xla::PjRtBuffer>,
+    state: ActorState,
+    rng: Rng,
+    n_agents: usize,
+    obs_dim: usize,
+    n_actions: usize, // discrete count or continuous dim
+    hidden: usize,
+    msg_dim: usize,
+}
+
+impl Executor {
+    pub fn new(
+        kind: SystemKind,
+        artifact: Rc<Artifact>,
+        initial_params: Vec<f32>,
+        seed: u64,
+    ) -> Result<Executor> {
+        let spec = &artifact.spec;
+        let n_agents = spec.meta_usize("n_agents")?;
+        let obs_dim = spec.meta_usize("obs_dim")?;
+        let n_actions = spec.meta_usize("act_dim")?;
+        let hidden = spec.meta_usize("hidden")?;
+        let msg_dim = spec.meta_usize("msg_dim")?;
+        let p = spec.meta_usize("params")?;
+        anyhow::ensure!(
+            initial_params.len() == p,
+            "params len {} != artifact {}",
+            initial_params.len(),
+            p
+        );
+        let mut ex = Executor {
+            kind,
+            artifact,
+            params: HostTensor::f32(vec![p], initial_params),
+            params_version: 0,
+            params_buf: None,
+            state: ActorState::None,
+            rng: Rng::new(seed),
+            n_agents,
+            obs_dim,
+            n_actions,
+            hidden,
+            msg_dim,
+        };
+        ex.reset_state();
+        Ok(ex)
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    /// Zero recurrent state; call at every episode start.
+    pub fn reset_state(&mut self) {
+        self.state = match self.kind {
+            SystemKind::MadqnRec => ActorState::Hidden(HostTensor::zeros_f32(
+                vec![1, self.n_agents, self.hidden],
+            )),
+            SystemKind::Dial => ActorState::HiddenInbox(
+                HostTensor::zeros_f32(vec![1, self.n_agents, self.hidden]),
+                HostTensor::zeros_f32(vec![1, self.n_agents, self.msg_dim]),
+            ),
+            _ => ActorState::None,
+        };
+    }
+
+    /// Update parameters from the server copy.
+    pub fn set_params(&mut self, version: u64, params: &[f32]) {
+        self.params.as_f32_mut().copy_from_slice(params);
+        self.params_version = version;
+        self.params_buf = None; // stale device copy
+    }
+
+    fn obs_tensor(&self, ts: &TimeStep) -> HostTensor {
+        let mut data = Vec::with_capacity(self.n_agents * self.obs_dim);
+        for o in &ts.observations {
+            debug_assert_eq!(o.len(), self.obs_dim);
+            data.extend_from_slice(o);
+        }
+        HostTensor::f32(vec![1, self.n_agents, self.obs_dim], data)
+    }
+
+    /// Select actions for every agent. `eps`/`sigma` control exploration
+    /// (pass 0.0 for greedy evaluation).
+    pub fn select_actions(
+        &mut self,
+        ts: &TimeStep,
+        eps: f32,
+        sigma: f32,
+    ) -> Result<Actions> {
+        let obs = self.obs_tensor(ts);
+        // the parameter vector dominates upload bytes on the acting path;
+        // keep it device-resident and invalidate only on set_params.
+        if self.params_buf.is_none() {
+            let dims = [self.params.len()];
+            self.params_buf = Some(self.artifact.upload(&self.params, &dims)?);
+        }
+        let pbuf = self.params_buf.as_ref().unwrap();
+        let outputs = match &self.state {
+            ActorState::None => self
+                .artifact
+                .call_mixed(&[Arg::Dev(pbuf), Arg::Host(&obs)])?,
+            ActorState::Hidden(h) => self.artifact.call_mixed(&[
+                Arg::Dev(pbuf),
+                Arg::Host(&obs),
+                Arg::Host(h),
+            ])?,
+            ActorState::HiddenInbox(h, inbox) => self.artifact.call_mixed(&[
+                Arg::Dev(pbuf),
+                Arg::Host(&obs),
+                Arg::Host(h),
+                Arg::Host(inbox),
+            ])?,
+        };
+        // update carries
+        match &mut self.state {
+            ActorState::None => {}
+            ActorState::Hidden(h) => *h = outputs[1].clone(),
+            ActorState::HiddenInbox(h, inbox) => {
+                *h = outputs[1].clone();
+                *inbox = outputs[2].clone();
+            }
+        }
+
+        if self.kind.discrete() {
+            let q = outputs[0].as_f32(); // [1, N, A]
+            let a = (0..self.n_agents)
+                .map(|i| {
+                    let qi = &q[i * self.n_actions..(i + 1) * self.n_actions];
+                    let legal = ts
+                        .legal_actions
+                        .as_ref()
+                        .map(|l| l[i].as_slice());
+                    epsilon_greedy(qi, self.n_actions, legal, eps, &mut self.rng)
+                })
+                .collect();
+            Ok(Actions::Discrete(a))
+        } else {
+            let act = outputs[0].as_f32(); // [1, N, A]
+            let a = (0..self.n_agents)
+                .map(|i| {
+                    let mut ai = act
+                        [i * self.n_actions..(i + 1) * self.n_actions]
+                        .to_vec();
+                    if sigma > 0.0 {
+                        gaussian_noise(&mut ai, sigma, &mut self.rng);
+                    }
+                    ai
+                })
+                .collect();
+            Ok(Actions::Continuous(a))
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! MARL systems: the Executor-Trainer paradigm (paper §4, Figure 2).
+//!
+//! A *system* = executor(s) + trainer + dataset (replay table). The
+//! executor is the multi-agent actor collection: it runs the policy
+//! artifact, explores, and feeds an adder. The trainer is the multi-agent
+//! learner collection: it samples the table and runs the fused train-step
+//! artifact (loss + Adam + target update in one HLO module), then pushes
+//! fresh parameters to the parameter server.
+//!
+//! Implemented baseline systems (paper §4 "System implementations"):
+//! MADQN (feedforward + recurrent), DIAL, VDN, QMIX, MADDPG, MAD4PG.
+
+mod builder;
+mod executor;
+mod trainer;
+
+pub use builder::{
+    check_artifacts, env_for_preset, eval_episode, train, EvalPoint,
+    TrainResult,
+};
+pub use executor::{ActorState, Executor};
+pub use trainer::{Trainer, TrainerStats};
+
+use anyhow::{bail, Result};
+
+/// Which baseline system is running (selects artifacts + data plumbing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    Madqn,
+    MadqnRec,
+    Dial,
+    Vdn,
+    Qmix,
+    Maddpg,
+    Mad4pg,
+}
+
+/// Data-plumbing family: what the executor carries between steps and what
+/// batch layout the train artifact consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// feedforward Q: transition batch (obs, act, rew[B,N], disc, next)
+    DqnFf,
+    /// recurrent Q: sequence batch (obs, act, rew[B,T,N], disc, mask)
+    DqnRec,
+    /// DIAL: sequence batch + team reward + channel noise
+    Dial,
+    /// VDN/QMIX: transition batch + global state + team reward
+    ValueDecomp,
+    /// MADDPG/MAD4PG: continuous transition batch
+    Ddpg,
+}
+
+impl SystemKind {
+    pub fn parse(s: &str) -> Result<SystemKind> {
+        Ok(match s {
+            "madqn" => SystemKind::Madqn,
+            "madqn_rec" => SystemKind::MadqnRec,
+            "dial" => SystemKind::Dial,
+            "vdn" => SystemKind::Vdn,
+            "qmix" => SystemKind::Qmix,
+            "maddpg" => SystemKind::Maddpg,
+            "mad4pg" => SystemKind::Mad4pg,
+            other => bail!("unknown system {other:?}"),
+        })
+    }
+
+    pub fn family(&self) -> Family {
+        match self {
+            SystemKind::Madqn => Family::DqnFf,
+            SystemKind::MadqnRec => Family::DqnRec,
+            SystemKind::Dial => Family::Dial,
+            SystemKind::Vdn | SystemKind::Qmix => Family::ValueDecomp,
+            SystemKind::Maddpg | SystemKind::Mad4pg => Family::Ddpg,
+        }
+    }
+
+    pub fn discrete(&self) -> bool {
+        !matches!(self, SystemKind::Maddpg | SystemKind::Mad4pg)
+    }
+
+    /// Does the executor carry recurrent state across steps?
+    pub fn recurrent(&self) -> bool {
+        matches!(self, SystemKind::MadqnRec | SystemKind::Dial)
+    }
+
+    /// Does the trainer consume sequences rather than transitions?
+    pub fn sequences(&self) -> bool {
+        self.recurrent()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_family() {
+        assert_eq!(SystemKind::parse("vdn").unwrap(), SystemKind::Vdn);
+        assert_eq!(SystemKind::Vdn.family(), Family::ValueDecomp);
+        assert_eq!(SystemKind::Mad4pg.family(), Family::Ddpg);
+        assert!(!SystemKind::Mad4pg.discrete());
+        assert!(SystemKind::Dial.recurrent());
+        assert!(!SystemKind::Madqn.sequences());
+        assert!(SystemKind::parse("bogus").is_err());
+    }
+}

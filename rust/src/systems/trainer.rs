@@ -1,0 +1,352 @@
+//! The trainer: Mava's multi-agent learner collection.
+//!
+//! Samples the replay table, assembles the fixed-shape batch the train
+//! artifact expects, executes one fused train step (loss + clipped Adam +
+//! Polyak target update, a single HLO module) and publishes the updated
+//! parameters.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::core::HostTensor;
+use crate::params::ParameterServer;
+use crate::replay::{Item, Table};
+use crate::rng::Rng;
+use crate::runtime::Artifact;
+use crate::systems::Family;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainerStats {
+    pub steps: u64,
+    pub last_loss: f32,
+}
+
+pub struct Trainer {
+    family: Family,
+    artifact: Rc<Artifact>,
+    params: HostTensor,
+    target: HostTensor,
+    opt: HostTensor,
+    lr: HostTensor,
+    tau: HostTensor,
+    rng: Rng, // DIAL channel noise
+    // batch dims from artifact meta
+    batch: usize,
+    n_agents: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    state_dim: usize,
+    seq_len: usize,
+    msg_dim: usize,
+    pub stats: TrainerStats,
+}
+
+impl Trainer {
+    pub fn new(
+        family: Family,
+        artifact: Rc<Artifact>,
+        params0: Vec<f32>,
+        opt0: Vec<f32>,
+        lr: f32,
+        tau: f32,
+        seed: u64,
+    ) -> Result<Trainer> {
+        let spec = &artifact.spec;
+        let p = spec.meta_usize("params")?;
+        anyhow::ensure!(params0.len() == p, "params0 len mismatch");
+        anyhow::ensure!(opt0.len() == 1 + 2 * p, "opt0 len mismatch");
+        Ok(Trainer {
+            family,
+            batch: spec.meta_usize("batch")?,
+            n_agents: spec.meta_usize("n_agents")?,
+            obs_dim: spec.meta_usize("obs_dim")?,
+            act_dim: spec.meta_usize("act_dim")?,
+            state_dim: spec.meta_usize("state_dim")?,
+            seq_len: spec.meta_usize("seq_len")?,
+            msg_dim: spec.meta_usize("msg_dim")?,
+            artifact,
+            params: HostTensor::f32(vec![p], params0),
+            target: HostTensor::f32(vec![p], opt_target_init(p)),
+            opt: HostTensor::f32(vec![1 + 2 * p], opt0),
+            lr: HostTensor::scalar_f32(lr),
+            tau: HostTensor::scalar_f32(tau),
+            rng: Rng::new(seed),
+            stats: TrainerStats::default(),
+        })
+    }
+
+    /// Target network starts as a copy of the online parameters.
+    pub fn init_target_from_params(&mut self) {
+        let p = self.params.as_f32().to_vec();
+        self.target.as_f32_mut().copy_from_slice(&p);
+    }
+
+    pub fn params(&self) -> &[f32] {
+        self.params.as_f32()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Run one training step on a batch sampled from `table`. Returns
+    /// None when the table was closed (shutdown).
+    pub fn step(&mut self, table: &Arc<Table>) -> Result<Option<f32>> {
+        let Some(items) = table.sample(self.batch) else {
+            return Ok(None);
+        };
+        let inputs = self.assemble(&items)?;
+        if std::env::var_os("MAVA_TRACE_LOSS").is_some() {
+            for (i, t) in inputs.iter().enumerate() {
+                if t.dtype == crate::core::Dtype::F32 {
+                    let bad =
+                        t.as_f32().iter().filter(|x| !x.is_finite()).count();
+                    let mx = t
+                        .as_f32()
+                        .iter()
+                        .fold(0.0f32, |a, &b| a.max(b.abs()));
+                    if bad > 0 || self.stats.steps == 0 {
+                        eprintln!(
+                            "[trainer] input {i} dims {:?} nonfinite {bad} \
+                             max|x| {mx}",
+                            t.dims
+                        );
+                    }
+                }
+            }
+        }
+        let mut refs: Vec<&HostTensor> =
+            vec![&self.params, &self.target, &self.opt];
+        refs.extend(inputs.iter());
+        refs.push(&self.lr);
+        refs.push(&self.tau);
+        let out = self
+            .artifact
+            .call(&refs)
+            .context("train artifact execution")?;
+        // move (not clone) the big state tensors out of the result
+        let mut it = out.into_iter();
+        self.params = it.next().unwrap();
+        self.target = it.next().unwrap();
+        self.opt = it.next().unwrap();
+        let out: Vec<HostTensor> = it.collect();
+        let loss = out[0].as_f32()[0];
+        self.stats.steps += 1;
+        self.stats.last_loss = loss;
+        if std::env::var_os("MAVA_TRACE_LOSS").is_some() {
+            eprintln!(
+                "[trainer] step {} losses {:?}",
+                self.stats.steps,
+                out[0].as_f32()
+            );
+        }
+        if !loss.is_finite() {
+            eprintln!(
+                "[trainer] WARNING: non-finite loss at step {}: {:?}",
+                self.stats.steps,
+                out[0].as_f32()
+            );
+        }
+        Ok(Some(loss))
+    }
+
+    /// Persist the full training state (online + target params, Adam
+    /// state, step counter) as a little-endian f32/u64 blob so long runs
+    /// survive restarts.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use std::io::Write;
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(b"MAVATRN1")?;
+        w.write_all(&self.stats.steps.to_le_bytes())?;
+        for t in [&self.params, &self.target, &self.opt] {
+            w.write_all(&(t.len() as u64).to_le_bytes())?;
+            for x in t.as_f32() {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore state saved by [`Trainer::save_checkpoint`]. Shapes must
+    /// match the artifact this trainer was built for.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use std::io::Read;
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"MAVATRN1", "not a trainer checkpoint");
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        self.stats.steps = u64::from_le_bytes(b8);
+        for t in [&mut self.params, &mut self.target, &mut self.opt] {
+            r.read_exact(&mut b8)?;
+            let n = u64::from_le_bytes(b8) as usize;
+            anyhow::ensure!(
+                n == t.len(),
+                "checkpoint tensor len {n} != expected {}",
+                t.len()
+            );
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            for (dst, c) in
+                t.as_f32_mut().iter_mut().zip(bytes.chunks_exact(4))
+            {
+                *dst = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Step and publish to the parameter server.
+    pub fn step_and_publish(
+        &mut self,
+        table: &Arc<Table>,
+        server: &ParameterServer,
+    ) -> Result<Option<f32>> {
+        let r = self.step(table)?;
+        if r.is_some() {
+            server.push(self.params());
+        }
+        Ok(r)
+    }
+
+    /// Assemble the artifact's batch inputs from sampled items.
+    fn assemble(&mut self, items: &[Item]) -> Result<Vec<HostTensor>> {
+        let (b, n, o, a, s) = (
+            self.batch,
+            self.n_agents,
+            self.obs_dim,
+            self.act_dim,
+            self.state_dim,
+        );
+        anyhow::ensure!(items.len() == b, "short batch: {}", items.len());
+        match self.family {
+            Family::DqnFf => {
+                let mut obs = Vec::with_capacity(b * n * o);
+                let mut act = Vec::with_capacity(b * n);
+                let mut rew = Vec::with_capacity(b * n);
+                let mut disc = Vec::with_capacity(b);
+                let mut next_obs = Vec::with_capacity(b * n * o);
+                for it in items {
+                    let t = it.as_transition();
+                    obs.extend_from_slice(&t.obs);
+                    act.extend_from_slice(&t.actions_disc);
+                    rew.extend_from_slice(&t.rewards);
+                    disc.push(t.discount);
+                    next_obs.extend_from_slice(&t.next_obs);
+                }
+                Ok(vec![
+                    HostTensor::f32(vec![b, n, o], obs),
+                    HostTensor::i32(vec![b, n], act),
+                    HostTensor::f32(vec![b, n], rew),
+                    HostTensor::f32(vec![b], disc),
+                    HostTensor::f32(vec![b, n, o], next_obs),
+                ])
+            }
+            Family::ValueDecomp => {
+                let mut obs = Vec::with_capacity(b * n * o);
+                let mut state = Vec::with_capacity(b * s);
+                let mut act = Vec::with_capacity(b * n);
+                let mut rew = Vec::with_capacity(b);
+                let mut disc = Vec::with_capacity(b);
+                let mut next_obs = Vec::with_capacity(b * n * o);
+                let mut next_state = Vec::with_capacity(b * s);
+                for it in items {
+                    let t = it.as_transition();
+                    obs.extend_from_slice(&t.obs);
+                    state.extend_from_slice(&t.state);
+                    act.extend_from_slice(&t.actions_disc);
+                    // team reward: env replicates the shared reward
+                    rew.push(t.rewards[0]);
+                    disc.push(t.discount);
+                    next_obs.extend_from_slice(&t.next_obs);
+                    next_state.extend_from_slice(&t.next_state);
+                }
+                Ok(vec![
+                    HostTensor::f32(vec![b, n, o], obs),
+                    HostTensor::f32(vec![b, s], state),
+                    HostTensor::i32(vec![b, n], act),
+                    HostTensor::f32(vec![b], rew),
+                    HostTensor::f32(vec![b], disc),
+                    HostTensor::f32(vec![b, n, o], next_obs),
+                    HostTensor::f32(vec![b, s], next_state),
+                ])
+            }
+            Family::Ddpg => {
+                let mut obs = Vec::with_capacity(b * n * o);
+                let mut act = Vec::with_capacity(b * n * a);
+                let mut rew = Vec::with_capacity(b * n);
+                let mut disc = Vec::with_capacity(b);
+                let mut next_obs = Vec::with_capacity(b * n * o);
+                for it in items {
+                    let t = it.as_transition();
+                    obs.extend_from_slice(&t.obs);
+                    act.extend_from_slice(&t.actions_cont);
+                    rew.extend_from_slice(&t.rewards);
+                    disc.push(t.discount);
+                    next_obs.extend_from_slice(&t.next_obs);
+                }
+                Ok(vec![
+                    HostTensor::f32(vec![b, n, o], obs),
+                    HostTensor::f32(vec![b, n, a], act),
+                    HostTensor::f32(vec![b, n], rew),
+                    HostTensor::f32(vec![b], disc),
+                    HostTensor::f32(vec![b, n, o], next_obs),
+                ])
+            }
+            Family::DqnRec | Family::Dial => {
+                let t_len = self.seq_len;
+                let mut obs = Vec::with_capacity(b * (t_len + 1) * n * o);
+                let mut act = Vec::with_capacity(b * t_len * n);
+                let mut rew_agents = Vec::with_capacity(b * t_len * n);
+                let mut rew_team = Vec::with_capacity(b * t_len);
+                let mut disc = Vec::with_capacity(b * t_len);
+                let mut mask = Vec::with_capacity(b * t_len);
+                for it in items {
+                    let sq = it.as_sequence();
+                    anyhow::ensure!(sq.t == t_len, "sequence length mismatch");
+                    obs.extend_from_slice(&sq.obs);
+                    act.extend_from_slice(&sq.actions);
+                    rew_agents.extend_from_slice(&sq.rewards);
+                    for step in 0..t_len {
+                        rew_team.push(sq.rewards[step * n]);
+                    }
+                    disc.extend_from_slice(&sq.discounts);
+                    mask.extend_from_slice(&sq.mask);
+                }
+                let mut out = vec![
+                    HostTensor::f32(vec![b, t_len + 1, n, o], obs),
+                    HostTensor::i32(vec![b, t_len, n], act),
+                ];
+                if self.family == Family::Dial {
+                    out.push(HostTensor::f32(vec![b, t_len], rew_team));
+                } else {
+                    out.push(HostTensor::f32(vec![b, t_len, n], rew_agents));
+                }
+                out.push(HostTensor::f32(vec![b, t_len], disc));
+                out.push(HostTensor::f32(vec![b, t_len], mask));
+                if self.family == Family::Dial {
+                    let m = self.msg_dim;
+                    let len = b * (t_len + 1) * n * m;
+                    let noise: Vec<f32> =
+                        (0..len).map(|_| self.rng.normal_f32()).collect();
+                    out.push(HostTensor::f32(
+                        vec![b, t_len + 1, n, m],
+                        noise,
+                    ));
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+fn opt_target_init(p: usize) -> Vec<f32> {
+    vec![0.0; p]
+}

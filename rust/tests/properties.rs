@@ -1,0 +1,323 @@
+//! Property-style randomized invariant tests (no proptest offline; we
+//! drive invariants with seeded xoshiro randomness — failures print the
+//! seed, so every case is reproducible).
+
+use std::sync::Arc;
+
+use mava::core::{Actions, StepType, TimeStep};
+use mava::replay::{
+    Item, RateLimiter, Selector, SequenceAdder, SumTree, Table,
+    TransitionAdder,
+};
+use mava::rng::Rng;
+
+fn ts(obs: f32, rew: f32, last: bool, n: usize) -> TimeStep {
+    TimeStep {
+        step_type: if last { StepType::Last } else { StepType::Mid },
+        observations: vec![vec![obs; 3]; n],
+        rewards: vec![rew; n],
+        discount: if last { 0.0 } else { 1.0 },
+        state: vec![obs; 2],
+        legal_actions: None,
+    }
+}
+
+/// SumTree::sample must agree with a linear weighted scan distribution,
+/// and total() must track arbitrary set() sequences exactly.
+#[test]
+fn prop_sumtree_matches_linear_scan() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let cap = 1 + rng.below(60);
+        let mut tree = SumTree::new(cap);
+        let mut weights = vec![0.0f64; cap];
+        for _ in 0..200 {
+            let slot = rng.below(cap);
+            let w = (rng.f64() * 10.0).max(0.0);
+            tree.set(slot, w);
+            weights[slot] = w;
+        }
+        let total: f64 = weights.iter().sum();
+        assert!(
+            (tree.total() - total).abs() < 1e-9 * total.max(1.0),
+            "seed {seed}: total {} vs {}",
+            tree.total(),
+            total
+        );
+        if total > 0.0 {
+            // sampled slot must always carry positive weight
+            for _ in 0..200 {
+                let s = tree.sample(&mut rng);
+                assert!(weights[s] > 0.0, "seed {seed}: zero-weight slot");
+            }
+        }
+    }
+}
+
+/// Table invariant under random insert/sample interleavings:
+/// size <= capacity, inserts - evictions == size, samples only return
+/// live items.
+#[test]
+fn prop_table_size_and_eviction_invariants() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(100 + seed);
+        let cap = 4 + rng.below(32);
+        let table = Table::new(
+            cap,
+            if rng.chance(0.5) {
+                Selector::Uniform
+            } else {
+                Selector::Prioritized
+            },
+            RateLimiter::min_size(1),
+            seed,
+        );
+        let mut next_val = 0f32;
+        let mut oldest_alive = 0f32;
+        for _ in 0..300 {
+            if rng.chance(0.7) {
+                let tr = mava::replay::Transition {
+                    obs: vec![next_val],
+                    ..Default::default()
+                };
+                table.insert(Item::Transition(tr), rng.f64() * 5.0 + 0.1);
+                next_val += 1.0;
+                if next_val as usize > cap {
+                    oldest_alive = next_val - cap as f32;
+                }
+            } else if table.stats().size > 0 {
+                for item in table.sample(4).unwrap() {
+                    let v = item.as_transition().obs[0];
+                    assert!(
+                        v >= oldest_alive && v < next_val,
+                        "seed {seed}: sampled evicted item {v} \
+                         (alive range [{oldest_alive}, {next_val}))"
+                    );
+                }
+            }
+            let st = table.stats();
+            assert!(st.size <= cap);
+            assert_eq!(st.inserts - st.evictions, st.size as u64);
+        }
+    }
+}
+
+/// The n-step adder must reproduce the naive n-step return computed
+/// from the raw episode, for random episode lengths / n / gamma.
+#[test]
+fn prop_nstep_adder_matches_naive_returns() {
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(200 + seed);
+        let n_step = 1 + rng.below(4);
+        let gamma = 0.5 + 0.5 * rng.f32();
+        let len = 1 + rng.below(10);
+        let rewards: Vec<f32> =
+            (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        let table = Arc::new(Table::uniform(1024, 1, 0));
+        let mut adder = TransitionAdder::new(table.clone(), n_step, gamma);
+        adder.observe_first(&ts(0.0, 0.0, false, 2));
+        for (t, &r) in rewards.iter().enumerate() {
+            adder.observe(
+                &Actions::Discrete(vec![t as i32; 2]),
+                &ts((t + 1) as f32, r, t + 1 == len, 2),
+            );
+        }
+        let stats = table.stats();
+        assert_eq!(stats.inserts as usize, len, "one item per step");
+
+        // collect all items, keyed by their start obs
+        let items = table.sample(512).unwrap();
+        for item in items {
+            let tr = item.as_transition();
+            let t0 = tr.obs[0] as usize;
+            let horizon = (len - t0).min(n_step);
+            let mut want = 0.0f32;
+            for k in 0..horizon {
+                want += gamma.powi(k as i32) * rewards[t0 + k];
+            }
+            assert!(
+                (tr.rewards[0] - want).abs() < 1e-4,
+                "seed {seed}: t0={t0} n={n_step} got {} want {want}",
+                tr.rewards[0]
+            );
+            // discount: gamma^(h-1) * prod(step discounts)
+            let terminal = t0 + horizon == len;
+            let want_disc = if terminal {
+                0.0
+            } else {
+                gamma.powi(horizon as i32 - 1)
+            };
+            assert!(
+                (tr.discount - want_disc).abs() < 1e-4,
+                "seed {seed}: disc {} want {want_disc}",
+                tr.discount
+            );
+        }
+    }
+}
+
+/// Sequence adder: windows tile the episode, masks mark exactly the
+/// valid prefix, and obs length is always (T+1)*N*O.
+#[test]
+fn prop_sequence_adder_windows_cover_episode() {
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(300 + seed);
+        let t_len = 2 + rng.below(6);
+        let period = 1 + rng.below(t_len);
+        let len = 1 + rng.below(12);
+        let table = Arc::new(Table::uniform(1024, 1, 0));
+        let mut adder = SequenceAdder::new(table.clone(), t_len, period);
+        adder.observe_first(&ts(0.0, 0.0, false, 2));
+        for t in 0..len {
+            adder.observe(
+                &Actions::Discrete(vec![1; 2]),
+                &ts((t + 1) as f32, 0.5, t + 1 == len, 2),
+            );
+        }
+        let expected_windows = len.div_ceil(period);
+        assert_eq!(
+            table.stats().inserts as usize,
+            expected_windows,
+            "seed {seed}: len={len} T={t_len} period={period}"
+        );
+        let mut total_valid = 0.0;
+        for item in table.sample(256).unwrap() {
+            let s = item.as_sequence();
+            assert_eq!(s.obs.len(), (t_len + 1) * 6);
+            assert_eq!(s.mask.len(), t_len);
+            // mask is a 1-prefix followed by zeros
+            let ones = s.mask.iter().take_while(|&&m| m == 1.0).count();
+            assert!(s.mask[ones..].iter().all(|&m| m == 0.0));
+            assert!(ones >= 1);
+            total_valid += ones as f32;
+        }
+        let _ = total_valid;
+    }
+}
+
+/// ε-greedy respects legal-action masks for every ε.
+#[test]
+fn prop_epsilon_greedy_legality() {
+    let mut rng = Rng::new(42);
+    for _ in 0..200 {
+        let n = 2 + rng.below(8);
+        let q: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut legal: Vec<bool> = (0..n).map(|_| rng.chance(0.6)).collect();
+        if !legal.iter().any(|&l| l) {
+            legal[rng.below(n)] = true;
+        }
+        let eps = rng.f32();
+        let a = mava::exploration::epsilon_greedy(
+            &q,
+            n,
+            Some(&legal),
+            eps,
+            &mut rng,
+        );
+        assert!(legal[a as usize]);
+    }
+}
+
+/// Config parse/set round-trip: every settable key accepts its own
+/// formatted value back.
+#[test]
+fn prop_config_set_roundtrip() {
+    use mava::config::TrainConfig;
+    let mut c = TrainConfig::default();
+    let keys = [
+        ("system", "qmix"),
+        ("preset", "smac3m"),
+        ("arch", "networked"),
+        ("num_executors", "3"),
+        ("max_env_steps", "123"),
+        ("lr", "0.01"),
+        ("tau", "0.5"),
+        ("n_step", "5"),
+        ("eps_start", "0.9"),
+        ("eps_end", "0.1"),
+        ("eps_decay_steps", "10"),
+        ("noise_sigma", "0.7"),
+        ("replay_size", "77"),
+        ("min_replay", "7"),
+        ("samples_per_insert", "3.5"),
+        ("seed", "9"),
+        ("eval_every_steps", "11"),
+        ("eval_episodes", "13"),
+    ];
+    for (k, v) in keys {
+        c.set(k, v).unwrap_or_else(|e| panic!("{k}: {e}"));
+    }
+    assert_eq!(c.system, "qmix");
+    assert_eq!(c.num_executors, 3);
+    assert_eq!(c.n_step, 5);
+    assert_eq!(c.artifact_prefix(), "smac3m_qmix");
+}
+
+/// Environments never emit non-finite observations/rewards under long
+/// random play (regression guard for the MPE softplus overflow).
+#[test]
+fn prop_envs_stay_finite_under_random_play() {
+    use mava::env::make_env;
+    for (name, episodes) in [
+        ("matrix", 30),
+        ("switch", 30),
+        ("smac_lite", 8),
+        ("mpe_spread", 8),
+        ("mpe_speaker_listener", 8),
+        ("multiwalker", 8),
+    ] {
+        let mut rng = Rng::new(7);
+        let mut env = make_env(name, 99).unwrap();
+        let spec = env.spec().clone();
+        for _ in 0..episodes {
+            let mut step = env.reset();
+            let mut steps = 0;
+            while !step.is_last() {
+                let actions = if spec.discrete() {
+                    Actions::Discrete(
+                        (0..spec.n_agents)
+                            .map(|i| {
+                                if let Some(l) = &step.legal_actions {
+                                    let ids: Vec<usize> = (0..spec
+                                        .n_actions())
+                                        .filter(|&k| l[i][k])
+                                        .collect();
+                                    ids[rng.below(ids.len())] as i32
+                                } else {
+                                    rng.below(spec.n_actions()) as i32
+                                }
+                            })
+                            .collect(),
+                    )
+                } else {
+                    // adversarial: saturated actions stress the physics
+                    Actions::Continuous(
+                        (0..spec.n_agents)
+                            .map(|_| {
+                                (0..spec.n_actions())
+                                    .map(|_| {
+                                        if rng.chance(0.5) { 1.0 } else { -1.0 }
+                                    })
+                                    .collect()
+                            })
+                            .collect(),
+                    )
+                };
+                step = env.step(&actions);
+                steps += 1;
+                for o in &step.observations {
+                    assert!(
+                        o.iter().all(|x| x.is_finite()),
+                        "{name}: non-finite obs"
+                    );
+                }
+                assert!(
+                    step.rewards.iter().all(|r| r.is_finite()),
+                    "{name}: non-finite reward"
+                );
+                assert!(steps <= spec.episode_limit + 1);
+            }
+        }
+    }
+}
