@@ -1,0 +1,33 @@
+# mava-rs build entry points. `make artifacts` must run before any rust
+# target that touches the PJRT runtime (training, integration tests,
+# benches) — see README.md quickstart.
+
+PYTHON ?= python
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts build test bench-vector check fmt clippy doc
+
+# lower every AOT artifact (policy, batched policy variants, train steps)
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# the vectorized-executor scaling curve (ISSUE 1 acceptance bench)
+bench-vector:
+	cargo bench --bench vector_scaling
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy -- -D warnings
+
+doc:
+	cargo doc --no-deps
+
+check: fmt clippy test doc

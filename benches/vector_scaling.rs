@@ -1,0 +1,150 @@
+//! Vectorized-executor scaling: steps-per-second vs
+//! `(num_executors x num_envs_per_executor)` — the dispatch-amortisation
+//! curve behind the paper's Fig 6 (bottom-right) speed argument.
+//!
+//! Two measurements:
+//!
+//! 1. **Acting hot path** (no trainer): a `VecExecutor` + `VecEnv` pair
+//!    stepping smac3m with one batched policy call per vector step, for
+//!    `B ∈ {1, 4, 16}`. Per-executor env-steps/s should grow ~linearly
+//!    until the policy kernel saturates; the acceptance bar is B=16
+//!    achieving >= 3x the B=1 per-executor throughput.
+//! 2. **End-to-end training throughput**: `train()` on matrix2 madqn
+//!    over the `{1, 2} executors x {1, 4, 16} envs` grid with a fixed
+//!    wall budget, reporting total env-steps/s (replay sharding keeps
+//!    executors lock-free on the insert path).
+//!
+//! Requires `make artifacts` (including the `*_policy_b{4,16}` batched
+//! variants). Scale with MAVA_BENCH_SCALE.
+
+use mava::bench::{self, curve_row, report, section, time};
+use mava::config::TrainConfig;
+use mava::env::VecEnv;
+use mava::runtime::{Engine, Manifest};
+use mava::systems::{self, SystemKind, VecExecutor};
+
+const BATCHES: [usize; 3] = [1, 4, 16];
+
+fn policy_name(b: usize) -> String {
+    if b == 1 {
+        "smac3m_madqn_policy".into()
+    } else {
+        format!("smac3m_madqn_policy_b{b}")
+    }
+}
+
+fn bench_acting_hot_path() -> anyhow::Result<()> {
+    section("acting hot path: env steps/s per executor vs B");
+    let mut engine = Engine::load("artifacts")?;
+    let params = engine.read_init("smac3m_madqn_train", "params0")?;
+    let mut rates = Vec::new();
+    for b in BATCHES {
+        let artifact = engine.artifact(&policy_name(b))?;
+        let mut executor =
+            VecExecutor::new(SystemKind::Madqn, artifact, params.clone(), 7)?;
+        let mut instances = Vec::with_capacity(b);
+        for i in 0..b {
+            instances.push(systems::env_for_preset(
+                "smac3m",
+                100 + i as u64,
+                None,
+            )?);
+        }
+        let mut venv = VecEnv::new(instances)?;
+        let mut vs = venv.reset();
+        let iters = (2_000.0 * bench::scale()) as u64;
+        let s = time(50, iters, move || {
+            let actions = executor.select_actions_vec(&vs, 0.1, 0.0).unwrap();
+            vs = venv.step(&actions);
+        });
+        report(&format!("vec_step_smac3m_madqn_b{b}"), &s);
+        let env_steps_per_sec = s.per_sec() * b as f64;
+        curve_row(
+            "vector_scaling",
+            "acting_env_steps_per_sec",
+            b as f64,
+            env_steps_per_sec,
+        );
+        rates.push((b, env_steps_per_sec));
+    }
+    let base = rates[0].1;
+    println!("\nper-executor acting throughput (one PJRT call per vector step):");
+    for (b, r) in &rates {
+        println!("  B={b:<3} {r:>10.0} env steps/s   {:>5.2}x vs B=1", r / base);
+    }
+    let b16 = rates.last().unwrap().1;
+    println!(
+        "speedup check: B=16 is {:.2}x B=1 ({})",
+        b16 / base,
+        if b16 >= 3.0 * base { "PASS >= 3x" } else { "BELOW 3x" }
+    );
+    Ok(())
+}
+
+fn train_cfg(executors: usize, envs: usize) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.system = "madqn".into();
+    c.preset = "matrix2".into();
+    c.num_executors = executors;
+    c.num_envs_per_executor = envs;
+    c.max_env_steps = u64::MAX / 2; // wall clock is the budget
+    c.min_replay = 64;
+    // throughput bench: a loose sample:insert ratio so the acting path,
+    // not trainer flow control, is the binding constraint
+    c.samples_per_insert = 0.125;
+    c.replay_size = 200_000;
+    c.eval_every_steps = u64::MAX / 2; // evaluator mostly idle
+    c.eval_episodes = 1;
+    c.seed = 11;
+    c
+}
+
+fn bench_end_to_end() -> anyhow::Result<()> {
+    section("end-to-end: total env steps/s vs executors x envs");
+    let budget_s = (15.0 * bench::scale()) as u64;
+    let mut baseline = None;
+    for executors in [1usize, 2] {
+        for envs in BATCHES {
+            let r = systems::train(
+                &train_cfg(executors, envs),
+                Some(std::time::Duration::from_secs(budget_s)),
+            )?;
+            let rate = r.env_steps as f64 / r.wall_s.max(1e-9);
+            let x = (executors * envs) as f64;
+            curve_row(
+                "vector_scaling",
+                &format!("train_env_steps_per_sec_exec{executors}"),
+                x,
+                rate,
+            );
+            let base = *baseline.get_or_insert(rate);
+            println!(
+                "  {executors} executor(s) x B={envs:<3} {:>9} env steps in \
+                 {:>5.1}s = {:>9.0} steps/s ({:>5.2}x)  [{} train steps]",
+                r.env_steps,
+                r.wall_s,
+                rate,
+                rate / base,
+                r.train_steps,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+    if manifest.get(&policy_name(16)).is_err() {
+        println!(
+            "batched policy artifacts missing (stale artifacts dir); \
+             re-run `make artifacts` to lower the *_policy_b{{4,16}} \
+             variants"
+        );
+        return Ok(());
+    }
+    bench_acting_hot_path()?;
+    bench_end_to_end()
+}

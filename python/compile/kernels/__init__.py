@@ -8,7 +8,7 @@
 All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
 Mosaic custom-calls, so real-TPU lowering is treated as a compile-only
 target and numerics are validated through the interpret path (see
-DESIGN.md §Hardware-Adaptation).
+DESIGN.md §7 (Hardware adaptation)).
 """
 
 from .agent_net import agent_net, agent_net_from_params

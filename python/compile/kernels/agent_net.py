@@ -4,7 +4,7 @@ This is the acting hot-spot shared by every mava-rs system: all N agents'
 3-layer MLP towers evaluated in a single kernel launch instead of N
 separate network calls (or one call + N-way vmap dispatch).
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is
+TPU mapping (DESIGN.md §7 (Hardware adaptation)): the grid is
 (batch-tiles, agents); for each grid step one agent's full weight set is
 resident in VMEM (< 1 MiB for hidden <= 256, far under the ~16 MiB budget)
 while a 128-row activation tile streams HBM->VMEM. The three matmuls use

@@ -9,6 +9,11 @@ from __future__ import annotations
 
 from .presets import PRESETS
 from .systems import dial, madqn, maddpg, value_decomp
+from .systems.base import batched_policy_variants
+
+# policy batch sizes lowered for the vectorized executor hot path
+# (rust `num_envs_per_executor`; B=1 is the plain `*_policy` artifact)
+POLICY_BATCHES = (4, 16)
 
 
 def catalogue():
@@ -43,4 +48,7 @@ def catalogue():
                          distributional=True)
     arts += maddpg.build(PRESETS["spread3"], arch="networked",
                          distributional=True)
+    # batched policy clones for the vectorized executor (DESIGN.md §6):
+    # every `*_policy` also lowers at [B, N, O] for B in POLICY_BATCHES
+    arts += batched_policy_variants(arts, POLICY_BATCHES)
     return arts

@@ -38,6 +38,42 @@ class ArtifactDef:
         ]
 
 
+def batched_policy_variants(arts, batches=(4, 16)):
+    """Batched (vectorized-executor) clones of every policy artifact.
+
+    The acting networks are pure over the leading batch axis, so the same
+    jax function lowers at ``[B, N, O]`` for any ``B``; only the example
+    shapes change. For each ``*_policy`` artifact this returns
+    ``{name}_b{B}`` variants whose leading input/output dims of 1 become
+    ``B`` and whose meta gains ``env_batch`` — the artifacts
+    ``rust/src/systems/executor.rs``'s ``VecExecutor`` acts through
+    (DESIGN.md §6). Train artifacts are untouched.
+    """
+
+    def rebatch(specs, b):
+        out = []
+        for (name, dt, shape) in specs:
+            shape = tuple(shape)
+            if len(shape) >= 2 and shape[0] == 1:
+                shape = (b,) + shape[1:]
+            out.append((name, dt, shape))
+        return out
+
+    variants = []
+    for art in arts:
+        if not art.name.endswith("_policy"):
+            continue
+        for b in batches:
+            variants.append(ArtifactDef(
+                f"{art.name}_b{b}",
+                art.fn,
+                rebatch(art.inputs, b),
+                rebatch(art.outputs, b),
+                dict(art.meta, env_batch=b),
+            ))
+    return variants
+
+
 def huber(x, delta: float = 1.0):
     absx = jnp.abs(x)
     return jnp.where(absx <= delta, 0.5 * x * x, delta * (absx - 0.5 * delta))

@@ -24,6 +24,11 @@ pub struct TrainConfig {
     pub arch: Architecture,
     /// Number of executor processes (paper `num_executors`).
     pub num_executors: usize,
+    /// Environment instances each executor steps per batched policy
+    /// call (the vectorized hot path, DESIGN.md §6). Must match a
+    /// lowered policy-artifact batch (`POLICY_BATCHES` in
+    /// python/compile/model.py; 1, 4 and 16 by default).
+    pub num_envs_per_executor: usize,
     /// Stop after this many total environment steps.
     pub max_env_steps: u64,
     /// Stop after this many trainer steps (0 = unlimited).
@@ -61,6 +66,7 @@ impl Default for TrainConfig {
             preset: "matrix2".into(),
             arch: Architecture::Decentralised,
             num_executors: 1,
+            num_envs_per_executor: 1,
             max_env_steps: 10_000,
             max_train_steps: 0,
             lr: 1e-3,
@@ -115,6 +121,7 @@ impl TrainConfig {
             c.log_dir = v.to_string();
         }
         get!(num_executors, get_usize);
+        get!(num_envs_per_executor, get_usize);
         get!(max_env_steps, get_u64);
         get!(max_train_steps, get_u64);
         get!(n_step, get_usize);
@@ -171,6 +178,9 @@ impl TrainConfig {
                     .with_context(|| format!("bad arch {val:?}"))?
             }
             "num_executors" | "executors" => self.num_executors = val.parse()?,
+            "num_envs_per_executor" | "envs_per_executor" => {
+                self.num_envs_per_executor = val.parse()?
+            }
             "max_env_steps" | "steps" => self.max_env_steps = val.parse()?,
             "max_train_steps" => self.max_train_steps = val.parse()?,
             "lr" => self.lr = val.parse()?,
@@ -221,8 +231,15 @@ mod tests {
         assert_eq!(c.system, "vdn");
         assert_eq!(c.num_executors, 4);
         assert!((c.lr - 5e-4).abs() < 1e-9);
-        c.apply_cli(&["--num_executors".into(), "2".into()]).unwrap();
+        c.apply_cli(&[
+            "--num_executors".into(),
+            "2".into(),
+            "--num_envs_per_executor".into(),
+            "16".into(),
+        ])
+        .unwrap();
         assert_eq!(c.num_executors, 2);
+        assert_eq!(c.num_envs_per_executor, 16);
         assert_eq!(c.artifact_prefix(), "smac3m_vdn");
     }
 

@@ -20,12 +20,16 @@ use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
 
+/// The climbing-game payoff matrix (deceptive optimum at (0,0)).
 pub const CLIMBING: [[f32; 3]; 3] =
     [[11.0, -30.0, 0.0], [-30.0, 7.0, 6.0], [0.0, 0.0, 5.0]];
 
+/// The penalty-game payoff matrix (miscoordination penalised).
 pub const PENALTY: [[f32; 3]; 3] =
     [[10.0, 0.0, -10.0], [0.0, 2.0, 0.0], [-10.0, 0.0, 10.0]];
 
+/// A repeated 2-agent 3-action matrix game with history-encoding
+/// observations.
 pub struct ClimbingGame {
     spec: EnvSpec,
     payoff: [[f32; 3]; 3],
@@ -35,14 +39,17 @@ pub struct ClimbingGame {
 }
 
 impl ClimbingGame {
+    /// The climbing game (default test payoff).
     pub fn new(seed: u64) -> Self {
         Self::with_payoff(CLIMBING, seed)
     }
 
+    /// The penalty game variant.
     pub fn penalty(seed: u64) -> Self {
         Self::with_payoff(PENALTY, seed)
     }
 
+    /// A repeated game over an arbitrary 3x3 payoff matrix.
     pub fn with_payoff(payoff: [[f32; 3]; 3], seed: u64) -> Self {
         ClimbingGame {
             spec: EnvSpec {

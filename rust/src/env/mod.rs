@@ -4,14 +4,23 @@
 //! Multi-Walker. None of those substrates are available here (SC2 is a
 //! closed binary; PettingZoo is python), so each is reimplemented as a
 //! Rust simulator that preserves the structure the corresponding
-//! experiment exercises — see DESIGN.md §2 for the substitution table.
+//! experiment exercises — see DESIGN.md §3 for the substitution table.
+//!
+//! [`vec_env::VecEnv`] batches `num_envs_per_executor` instances of any
+//! of these environments behind stacked `[B, N, obs]` observations — the
+//! executor-side half of the vectorized hot path (DESIGN.md §6).
+
+#![warn(missing_docs)]
 
 pub mod matrix;
 pub mod mpe;
 pub mod multiwalker;
 pub mod smac_lite;
 pub mod switch;
+pub mod vec_env;
 pub mod wrappers;
+
+pub use vec_env::{VecEnv, VecStep};
 
 use crate::core::{Actions, EnvSpec, TimeStep};
 use anyhow::{bail, Result};

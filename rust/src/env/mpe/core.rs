@@ -9,16 +9,24 @@
 //! where k = 100, margin = 1e-3.
 
 #[derive(Clone, Debug)]
+/// A physical body in the MPE world (agent or landmark).
 pub struct Entity {
+    /// Position in the 2D plane.
     pub pos: [f32; 2],
+    /// Velocity.
     pub vel: [f32; 2],
+    /// Collision radius.
     pub size: f32,
+    /// Inertial mass.
     pub mass: f32,
+    /// Whether forces move this entity (landmarks are static).
     pub movable: bool,
+    /// Whether this entity takes part in contact forces.
     pub collide: bool,
 }
 
 impl Entity {
+    /// An entity at the origin with the given physical properties.
     pub fn new(size: f32, movable: bool, collide: bool) -> Self {
         Entity {
             pos: [0.0; 2],
@@ -30,26 +38,34 @@ impl Entity {
         }
     }
 
+    /// Euclidean centre distance to `other`.
     pub fn dist(&self, other: &Entity) -> f32 {
         let dx = self.pos[0] - other.pos[0];
         let dy = self.pos[1] - other.pos[1];
         (dx * dx + dy * dy).sqrt()
     }
 
+    /// Whether the two collision radii intersect.
     pub fn overlaps(&self, other: &Entity) -> bool {
         self.dist(other) < self.size + other.size
     }
 }
 
+/// Physics integration timestep.
 pub const DT: f32 = 0.1;
+/// Per-step velocity damping factor.
 pub const DAMPING: f32 = 0.25;
+/// Contact (collision) force magnitude.
 pub const CONTACT_FORCE: f32 = 100.0;
+/// Softplus margin of the contact penetration response.
 pub const CONTACT_MARGIN: f32 = 1e-3;
 
 /// The physical world: `agents` move, `landmarks` are static scenery.
 #[derive(Clone, Debug, Default)]
 pub struct World {
+    /// Controllable bodies (one per agent).
     pub agents: Vec<Entity>,
+    /// Static reference points.
     pub landmarks: Vec<Entity>,
 }
 

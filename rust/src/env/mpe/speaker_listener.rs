@@ -16,9 +16,13 @@ use crate::rng::Rng;
 
 const ACCEL: f32 = 5.0;
 const EPISODE: usize = 25;
+/// Agent index of the (immobile) speaker.
 pub const SPEAKER: usize = 0;
+/// Agent index of the (colour-blind) listener.
 pub const LISTENER: usize = 1;
 
+/// MPE simple_speaker_listener: the speaker sees the goal colour,
+/// the listener moves; heterogeneous specs padded to a shared dim.
 pub struct SpeakerListener {
     spec: EnvSpec,
     rng: Rng,
@@ -29,6 +33,7 @@ pub struct SpeakerListener {
 }
 
 impl SpeakerListener {
+    /// The standard 2-agent, 3-landmark instance.
     pub fn new(seed: u64) -> Self {
         SpeakerListener {
             spec: EnvSpec {

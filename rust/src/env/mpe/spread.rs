@@ -13,6 +13,8 @@ use crate::rng::Rng;
 const ACCEL: f32 = 5.0; // MPE u_multiplier for spread-like scenarios
 const EPISODE: usize = 25;
 
+/// MPE simple_spread: `n` agents cover `n` landmarks, penalised for
+/// collisions (continuous control, shared coverage reward).
 pub struct Spread {
     spec: EnvSpec,
     rng: Rng,
@@ -22,6 +24,7 @@ pub struct Spread {
 }
 
 impl Spread {
+    /// An `n`-agent, `n`-landmark instance (the paper uses 3).
     pub fn new(n: usize, seed: u64) -> Self {
         Spread {
             spec: EnvSpec {

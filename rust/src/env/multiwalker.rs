@@ -43,6 +43,8 @@ struct Walker {
     vh: f32,
 }
 
+/// Simplified multi-walker: `n` coupled walkers carrying a shared
+/// package; continuous control with shared package-progress reward.
 pub struct MultiWalker {
     spec: EnvSpec,
     rng: Rng,
@@ -55,6 +57,7 @@ pub struct MultiWalker {
 }
 
 impl MultiWalker {
+    /// An `n`-walker instance (the paper uses 3).
     pub fn new(n: usize, seed: u64) -> Self {
         MultiWalker {
             spec: EnvSpec {

@@ -25,9 +25,13 @@ const KILL_BONUS: f32 = 10.0;
 const WIN_BONUS: f32 = 200.0;
 const REWARD_CAP: f32 = 20.0;
 
+/// Action: no-op (only legal when dead).
 pub const ACT_NOOP: usize = 0;
+/// Action: hold position.
 pub const ACT_STOP: usize = 1;
+/// Action: move north (south/east/west follow consecutively).
 pub const ACT_MOVE_N: usize = 2; // then S, E, W
+/// First attack action; `ACT_ATTACK_0 + i` targets enemy `i`.
 pub const ACT_ATTACK_0: usize = 6;
 
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +51,8 @@ impl Unit {
     }
 }
 
+/// A SMAC-shaped micro battle: `n` marines vs `n` scripted marines
+/// with legal-action masks and a global mixer state.
 pub struct SmacLite {
     spec: EnvSpec,
     rng: Rng,
@@ -59,10 +65,12 @@ pub struct SmacLite {
 }
 
 impl SmacLite {
+    /// The 3-marine map the smac3m preset pins.
     pub fn new_3m(seed: u64) -> Self {
         Self::new(3, seed)
     }
 
+    /// An `n` vs `n` marine battle.
     pub fn new(n: usize, seed: u64) -> Self {
         let obs_dim = 4 + 5 * (n - 1) + 5 * n + 1;
         SmacLite {

@@ -16,9 +16,14 @@ use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
 
+/// Action: stay silent this turn.
 pub const ACT_NONE: i32 = 0;
+/// Action: announce that every agent has visited the room.
 pub const ACT_TELL: i32 = 1;
 
+/// The switch riddle (Foerster et al., 2016): one agent per day
+/// enters the interrogation room; the team wins only if an agent
+/// announces exactly when everyone has visited.
 pub struct SwitchGame {
     spec: EnvSpec,
     rng: Rng,
@@ -31,6 +36,7 @@ pub struct SwitchGame {
 }
 
 impl SwitchGame {
+    /// An `n_agents` riddle (the paper uses 3).
     pub fn new(n_agents: usize, seed: u64) -> Self {
         assert!(n_agents >= 2);
         let limit = 4 * n_agents - 6;

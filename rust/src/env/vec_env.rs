@@ -1,0 +1,293 @@
+//! Batched environment execution: the executor-side half of the
+//! vectorized hot path (DESIGN.md §6).
+//!
+//! A [`VecEnv`] owns `B = num_envs_per_executor` instances of any
+//! [`MultiAgentEnv`] and steps them together, exposing stacked
+//! `[B, N, obs]` observations so a single batched policy-artifact call
+//! can act for every instance at once. Instances auto-reset: when an
+//! episode returns its `Last` timestep, the *next* [`VecEnv::step`] call
+//! resets that instance (its action is ignored) and returns the fresh
+//! `First` timestep in that slot, so the batch never shrinks and the
+//! policy artifact always sees a full `[B, N, O]` input.
+//!
+//! This is the dispatch-amortisation trick behind the paper's speed
+//! claim (Mava §5, Fig 6): one PJRT call per *vector* step instead of
+//! one per environment step.
+
+use anyhow::{ensure, Result};
+
+use crate::core::{Actions, EnvSpec, HostTensor, StepType, TimeStep};
+use crate::env::MultiAgentEnv;
+
+/// One synchronized step of all environment instances.
+///
+/// `steps[i]` is instance `i`'s latest [`TimeStep`]; slots whose episode
+/// just auto-reset hold a `First` step. [`VecStep::stacked_obs`] packs the
+/// per-instance observations into the `[B, N, O]` tensor the batched
+/// policy artifact consumes.
+#[derive(Clone, Debug)]
+pub struct VecStep {
+    /// Per-instance timesteps, indexed by environment slot.
+    pub steps: Vec<TimeStep>,
+}
+
+impl VecStep {
+    /// Number of environment instances in the batch.
+    pub fn num_envs(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Stack every instance's observations into one `[B, N, O]` tensor.
+    pub fn stacked_obs(&self) -> HostTensor {
+        let b = self.steps.len();
+        let n = self.steps[0].observations.len();
+        let o = self.steps[0].observations[0].len();
+        let mut data = Vec::with_capacity(b * n * o);
+        for ts in &self.steps {
+            debug_assert_eq!(ts.observations.len(), n);
+            for obs in &ts.observations {
+                debug_assert_eq!(obs.len(), o);
+                data.extend_from_slice(obs);
+            }
+        }
+        HostTensor::f32(vec![b, n, o], data)
+    }
+
+    /// True when any instance's episode ended on this vector step.
+    pub fn any_last(&self) -> bool {
+        self.steps.iter().any(|ts| ts.is_last())
+    }
+}
+
+/// `B` instances of one environment stepped in lockstep with auto-reset.
+///
+/// All instances must share the same spec shape (`n_agents`, `obs_dim`);
+/// they may differ in seed. See the module docs for the auto-reset
+/// protocol.
+pub struct VecEnv {
+    envs: Vec<Box<dyn MultiAgentEnv>>,
+    spec: EnvSpec,
+    /// step type each instance last returned; `Last` marks slots that
+    /// auto-reset on the next `step` call.
+    last_types: Vec<StepType>,
+}
+
+impl VecEnv {
+    /// Build from pre-constructed instances (differently seeded copies of
+    /// the same environment). Fails on an empty batch or mismatched
+    /// specs.
+    pub fn new(envs: Vec<Box<dyn MultiAgentEnv>>) -> Result<VecEnv> {
+        ensure!(!envs.is_empty(), "VecEnv needs at least one instance");
+        let spec = envs[0].spec().clone();
+        for (i, e) in envs.iter().enumerate().skip(1) {
+            let s = e.spec();
+            ensure!(
+                s.n_agents == spec.n_agents && s.obs_dim == spec.obs_dim,
+                "instance {i} spec mismatch: {}x{} vs {}x{}",
+                s.n_agents,
+                s.obs_dim,
+                spec.n_agents,
+                spec.obs_dim
+            );
+        }
+        let b = envs.len();
+        Ok(VecEnv { envs, spec, last_types: vec![StepType::Last; b] })
+    }
+
+    /// Number of environment instances.
+    pub fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    /// Shared environment spec (all instances match).
+    pub fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    /// Reset every instance; returns a batch of `First` timesteps.
+    pub fn reset(&mut self) -> VecStep {
+        let steps: Vec<TimeStep> =
+            self.envs.iter_mut().map(|e| e.reset()).collect();
+        for t in &mut self.last_types {
+            *t = StepType::First;
+        }
+        VecStep { steps }
+    }
+
+    /// Step every instance with its joint action. Instances whose
+    /// previous timestep was `Last` are reset instead (their action is
+    /// ignored) and contribute a `First` timestep.
+    pub fn step(&mut self, actions: &[Actions]) -> VecStep {
+        assert_eq!(
+            actions.len(),
+            self.envs.len(),
+            "actions batch != num_envs"
+        );
+        let mut steps = Vec::with_capacity(self.envs.len());
+        for (i, env) in self.envs.iter_mut().enumerate() {
+            let ts = if self.last_types[i] == StepType::Last {
+                env.reset()
+            } else {
+                env.step(&actions[i])
+            };
+            self.last_types[i] = ts.step_type;
+            steps.push(ts);
+        }
+        VecStep { steps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ActionSpec;
+
+    /// Deterministic env with a per-instance episode length so tests can
+    /// desynchronise instances; observation = [instance id, t].
+    struct TestEnv {
+        spec: EnvSpec,
+        id: f32,
+        limit: usize,
+        t: usize,
+    }
+
+    impl TestEnv {
+        fn new(id: f32, limit: usize) -> Self {
+            TestEnv {
+                spec: EnvSpec {
+                    name: "test".into(),
+                    n_agents: 2,
+                    obs_dim: 2,
+                    action: ActionSpec::Discrete { n: 3 },
+                    state_dim: 0,
+                    episode_limit: limit,
+                },
+                id,
+                limit,
+                t: 0,
+            }
+        }
+
+        fn obs(&self) -> Vec<Vec<f32>> {
+            vec![vec![self.id, self.t as f32]; 2]
+        }
+    }
+
+    impl MultiAgentEnv for TestEnv {
+        fn spec(&self) -> &EnvSpec {
+            &self.spec
+        }
+
+        fn reset(&mut self) -> TimeStep {
+            self.t = 0;
+            TimeStep {
+                step_type: StepType::First,
+                observations: self.obs(),
+                rewards: vec![0.0; 2],
+                discount: 1.0,
+                state: vec![],
+                legal_actions: None,
+            }
+        }
+
+        fn step(&mut self, _actions: &Actions) -> TimeStep {
+            self.t += 1;
+            let last = self.t >= self.limit;
+            TimeStep {
+                step_type: if last { StepType::Last } else { StepType::Mid },
+                observations: self.obs(),
+                rewards: vec![1.0; 2],
+                discount: 1.0,
+                state: vec![],
+                legal_actions: None,
+            }
+        }
+    }
+
+    fn acts(b: usize) -> Vec<Actions> {
+        vec![Actions::Discrete(vec![0, 0]); b]
+    }
+
+    #[test]
+    fn stacked_obs_layout_is_instance_major() {
+        let envs: Vec<Box<dyn MultiAgentEnv>> = (0..3)
+            .map(|i| -> Box<dyn MultiAgentEnv> {
+                Box::new(TestEnv::new(i as f32, 4))
+            })
+            .collect();
+        let mut venv = VecEnv::new(envs).unwrap();
+        let vs = venv.reset();
+        let obs = vs.stacked_obs();
+        assert_eq!(obs.dims, vec![3, 2, 2]);
+        // row-major [B, N, O]: instance i, agent j at offset (i*2+j)*2
+        let d = obs.as_f32();
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(d[(i * 2 + j) * 2], i as f32, "instance id");
+                assert_eq!(d[(i * 2 + j) * 2 + 1], 0.0, "t after reset");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_reset_replaces_terminal_slots() {
+        // instance 0 ends after 2 steps, instance 1 after 4
+        let envs: Vec<Box<dyn MultiAgentEnv>> = vec![
+            Box::new(TestEnv::new(0.0, 2)),
+            Box::new(TestEnv::new(1.0, 4)),
+        ];
+        let mut venv = VecEnv::new(envs).unwrap();
+        let mut vs = venv.reset();
+        assert!(vs.steps.iter().all(|t| t.step_type == StepType::First));
+
+        vs = venv.step(&acts(2)); // t=1: both Mid
+        assert!(vs.steps.iter().all(|t| t.step_type == StepType::Mid));
+        vs = venv.step(&acts(2)); // t=2: 0 Last, 1 Mid
+        assert_eq!(vs.steps[0].step_type, StepType::Last);
+        assert_eq!(vs.steps[1].step_type, StepType::Mid);
+        assert!(vs.any_last());
+
+        // next step auto-resets slot 0 only
+        vs = venv.step(&acts(2));
+        assert_eq!(vs.steps[0].step_type, StepType::First);
+        assert_eq!(vs.steps[0].observations[0][1], 0.0, "t reset to 0");
+        assert_eq!(vs.steps[1].step_type, StepType::Mid);
+        assert_eq!(vs.steps[1].observations[0][1], 3.0);
+
+        // batch size never changes across the boundary
+        assert_eq!(vs.num_envs(), 2);
+        assert_eq!(vs.stacked_obs().dims, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn spec_mismatch_rejected() {
+        let a = Box::new(TestEnv::new(0.0, 2)) as Box<dyn MultiAgentEnv>;
+        let mut b = TestEnv::new(1.0, 2);
+        b.spec.obs_dim = 5;
+        assert!(VecEnv::new(vec![a, Box::new(b)]).is_err());
+        assert!(VecEnv::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn works_with_real_env() {
+        use crate::env::make_env;
+        let envs: Vec<Box<dyn MultiAgentEnv>> = (0..4)
+            .map(|i| make_env("matrix", i).unwrap())
+            .collect();
+        let mut venv = VecEnv::new(envs).unwrap();
+        let mut vs = venv.reset();
+        // matrix episodes are 5 steps; drive across two boundaries
+        let mut firsts = 0;
+        for _ in 0..12 {
+            vs = venv.step(&acts(4));
+            firsts += vs
+                .steps
+                .iter()
+                .filter(|t| t.step_type == StepType::First)
+                .count();
+            assert_eq!(vs.stacked_obs().dims, vec![4, 2, 4]);
+        }
+        // 12 vector steps = 2 auto-resets per instance (t=6 and t=12)
+        assert_eq!(firsts, 8);
+    }
+}

@@ -24,17 +24,20 @@ pub struct Fingerprint {
 }
 
 impl Fingerprint {
+    /// A fingerprint initialised to `(eps, progress)`.
     pub fn new(eps: f32, progress: f32) -> Self {
         let fp = Fingerprint::default();
         fp.set(eps, progress);
         fp
     }
 
+    /// Publish new fingerprint values (executor side, lock-free).
     pub fn set(&self, eps: f32, progress: f32) {
         self.eps.store(eps.to_bits(), Ordering::Relaxed);
         self.progress.store(progress.to_bits(), Ordering::Relaxed);
     }
 
+    /// Read the current `(eps, progress)` pair.
     pub fn get(&self) -> (f32, f32) {
         (
             f32::from_bits(self.eps.load(Ordering::Relaxed)),
@@ -43,13 +46,17 @@ impl Fingerprint {
     }
 }
 
+/// Appends the `[eps, progress]` fingerprint to every observation
+/// (and rebuilds the global state accordingly).
 pub struct FingerprintWrapper<E> {
     inner: E,
     spec: EnvSpec,
+    /// Shared handle the executor updates as training proceeds.
     pub fingerprint: Fingerprint,
 }
 
 impl<E: MultiAgentEnv> FingerprintWrapper<E> {
+    /// Wrap `inner`, extending its spec by the fingerprint dims.
     pub fn new(inner: E, fingerprint: Fingerprint) -> Self {
         let mut spec = inner.spec().clone();
         spec.obs_dim += 2;
@@ -97,6 +104,7 @@ pub struct AgentIdWrapper<E> {
 }
 
 impl<E: MultiAgentEnv> AgentIdWrapper<E> {
+    /// Wrap `inner`, extending its spec by the one-hot id dims.
     pub fn new(inner: E) -> Self {
         let mut spec = inner.spec().clone();
         let n = spec.n_agents;

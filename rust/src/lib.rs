@@ -12,8 +12,10 @@
 //! - [`core`] — multi-agent timesteps, specs, host tensors
 //! - [`rng`] — deterministic xoshiro256++ RNG (no external crates)
 //! - [`config`] — TOML-subset config system + CLI parsing
-//! - [`env`] — environment suite: switch riddle, smac_lite, MPE, multiwalker
-//! - [`replay`] — Reverb-style tables: selectors, rate limiters, adders
+//! - [`env`] — environment suite: switch riddle, smac_lite, MPE,
+//!   multiwalker; `VecEnv` batched stepping (DESIGN.md §6)
+//! - [`replay`] — Reverb-style tables: selectors, rate limiters, adders;
+//!   `ShardedTable` per-executor sharding (DESIGN.md §5)
 //! - [`params`] — versioned parameter server
 //! - [`launch`] — Launchpad-style program graph + local launcher
 //! - [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt`

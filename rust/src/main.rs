@@ -18,9 +18,10 @@ use mava::systems::{self, SystemKind};
 fn usage() -> ! {
     eprintln!(
         "usage: mava <train|eval|list|info> [--config FILE] [--key value ...]\n\
-         keys: system preset arch num_executors max_env_steps lr tau n_step\n\
-         \x20     eps_start eps_end eps_decay_steps noise_sigma replay_size\n\
-         \x20     min_replay samples_per_insert seed artifacts_dir log_dir\n\
+         keys: system preset arch num_executors num_envs_per_executor\n\
+         \x20     max_env_steps lr tau n_step eps_start eps_end\n\
+         \x20     eps_decay_steps noise_sigma replay_size min_replay\n\
+         \x20     samples_per_insert seed artifacts_dir log_dir\n\
          \x20     eval_every_steps eval_episodes"
     );
     std::process::exit(2);
@@ -49,8 +50,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = parse_cfg(args)?;
     systems::check_artifacts(&cfg)?;
     println!(
-        "training {} on {} ({}, {} executors, {} env steps)",
-        cfg.system, cfg.preset, cfg.arch, cfg.num_executors, cfg.max_env_steps
+        "training {} on {} ({}, {} executors x {} envs, {} env steps)",
+        cfg.system,
+        cfg.preset,
+        cfg.arch,
+        cfg.num_executors,
+        cfg.num_envs_per_executor,
+        cfg.max_env_steps
     );
     let result = systems::train(&cfg, Some(Duration::from_secs(3600)))?;
     println!(

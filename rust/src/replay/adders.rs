@@ -32,16 +32,20 @@ pub struct TransitionAdder {
 }
 
 impl TransitionAdder {
+    /// An adder emitting `n_step` transitions into `table`.
     pub fn new(table: Arc<Table>, n_step: usize, gamma: f32) -> Self {
         assert!(n_step >= 1);
         TransitionAdder { table, n_step, gamma, pending: None, buf: VecDeque::new() }
     }
 
+    /// Begin a new episode from its `First` timestep.
     pub fn observe_first(&mut self, ts: &TimeStep) {
         self.buf.clear();
         self.pending = Some((ts.observations.concat(), ts.state.clone()));
     }
 
+    /// Record one `(action, next timestep)` pair; emits items once
+    /// `n_step` steps accumulated (and flushes at episode end).
     pub fn observe(&mut self, actions: &Actions, next: &TimeStep) {
         let (obs, state) = self
             .pending
@@ -119,6 +123,7 @@ pub struct SequenceAdder {
 }
 
 impl SequenceAdder {
+    /// An adder emitting `seq_len` windows every `period` steps.
     pub fn new(table: Arc<Table>, seq_len: usize, period: usize) -> Self {
         assert!(seq_len >= 1 && period >= 1);
         SequenceAdder {
@@ -132,6 +137,7 @@ impl SequenceAdder {
         }
     }
 
+    /// Begin a new episode from its `First` timestep.
     pub fn observe_first(&mut self, ts: &TimeStep) {
         self.obs = vec![ts.observations.concat()];
         self.acts.clear();
@@ -139,6 +145,7 @@ impl SequenceAdder {
         self.discounts.clear();
     }
 
+    /// Record one step; windows flush when the episode ends.
     pub fn observe(&mut self, actions: &Actions, next: &TimeStep) {
         assert!(!self.obs.is_empty(), "observe() before observe_first()");
         self.acts.push(actions.as_discrete().to_vec());

@@ -21,10 +21,13 @@ pub enum RateLimiter {
 }
 
 impl RateLimiter {
+    /// Sampling gated only on a minimum table size.
     pub fn min_size(min_size: usize) -> Self {
         RateLimiter::MinSize { min_size }
     }
 
+    /// Pin samples/inserts to `ratio` with a Reverb-style slack
+    /// buffer derived from `min_size`.
     pub fn sample_to_insert(ratio: f64, min_size: usize) -> Self {
         RateLimiter::SampleToInsertRatio {
             ratio,

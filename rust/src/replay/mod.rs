@@ -14,14 +14,23 @@
 //! Being in-process removes only the RPC hop; insertion blocking,
 //! sampling blocking and eviction order match Reverb's behaviour, which
 //! is what the distribution experiment (Fig 6, bottom-right) exercises.
+//!
+//! For multi-executor runs the store is a [`ShardedTable`] — one
+//! independently locked [`Table`] shard per executor with round-robin
+//! trainer sampling (DESIGN.md §5) — so the insert hot path never
+//! serialises executors on one mutex.
+
+#![warn(missing_docs)]
 
 mod adders;
 mod checkpoint;
 mod limiter;
 mod selectors;
+mod sharded;
 mod table;
 
 pub use adders::{SequenceAdder, TransitionAdder};
 pub use limiter::RateLimiter;
 pub use selectors::{Selector, SumTree};
+pub use sharded::{ItemSource, ShardedTable};
 pub use table::{Item, Sequence, Table, TableStats, Transition};

@@ -25,12 +25,15 @@ pub struct SumTree {
 }
 
 impl SumTree {
+    /// A zeroed tree over `capacity` slots (rounded up to a power
+    /// of two).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         let cap = capacity.next_power_of_two();
         SumTree { capacity: cap, tree: vec![0.0; 2 * cap] }
     }
 
+    /// Sum of all slot priorities.
     pub fn total(&self) -> f64 {
         self.tree[1]
     }
@@ -47,6 +50,7 @@ impl SumTree {
         }
     }
 
+    /// Priority currently stored at `slot`.
     pub fn get(&self, slot: usize) -> f64 {
         self.tree[self.capacity + slot]
     }

@@ -1,0 +1,446 @@
+//! Sharded replay: one [`Table`] shard per executor so the insert hot
+//! path never contends on a shared lock (DESIGN.md §5).
+//!
+//! The seed design funnelled every executor through a single
+//! `Mutex<Inner>`; with `num_executors × num_envs_per_executor` inserts
+//! per vector step that mutex serialises the whole acting fleet. A
+//! [`ShardedTable`] gives each executor its own shard (its own mutex,
+//! condvar and rate limiter) and the trainer samples the shards
+//! round-robin — each [`ShardedTable::sample`] call draws a full batch
+//! from the next ready shard, so batches stay shard-coherent and the
+//! trainer still consumes every executor's data at the pinned
+//! samples-per-insert rate.
+//!
+//! Rate limiting aggregates across shards by construction: each shard
+//! runs the global limiter scaled by [`RateLimiter::per_shard`]
+//! (min-size and error-buffer divided by the shard count, ratio
+//! unchanged). Round-robin sampling sends each shard `1/K` of the sample
+//! calls while each shard receives `1/K` of the inserts, so every
+//! shard-local `samples/inserts` ratio — and therefore the aggregate
+//! ratio — stays pinned to the configured value. The min-size warm-up
+//! is additionally enforced on the *aggregate* insert count (per-shard
+//! scaling alone would let training start on `min_size/K` experiences
+//! when startup insert rates are skewed toward one executor).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::replay::{Item, RateLimiter, Selector, Table, TableStats};
+
+/// Anything a [`crate::systems::Trainer`] can draw sample batches from:
+/// a single [`Table`] or a [`ShardedTable`].
+pub trait ItemSource {
+    /// Draw `n` items, blocking until flow control admits the sample.
+    /// Returns `None` once the source is closed (shutdown).
+    fn sample_batch(&self, n: usize) -> Option<Vec<Item>>;
+}
+
+impl ItemSource for Table {
+    fn sample_batch(&self, n: usize) -> Option<Vec<Item>> {
+        self.sample(n)
+    }
+}
+
+impl<S: ItemSource + ?Sized> ItemSource for Arc<S> {
+    fn sample_batch(&self, n: usize) -> Option<Vec<Item>> {
+        (**self).sample_batch(n)
+    }
+}
+
+impl ItemSource for ShardedTable {
+    fn sample_batch(&self, n: usize) -> Option<Vec<Item>> {
+        self.sample(n)
+    }
+}
+
+impl RateLimiter {
+    /// Scale a table-global limiter down to one of `k` shards: min-size
+    /// is split (ceiling) across shards, the sample:insert ratio is
+    /// unchanged (it is a per-shard *and* aggregate invariant under
+    /// round-robin), and the error buffer is split with a floor of two
+    /// sample calls so shards never wedge on rounding.
+    pub fn per_shard(self, k: usize) -> RateLimiter {
+        let k = k.max(1);
+        match self {
+            RateLimiter::MinSize { min_size } => {
+                RateLimiter::MinSize { min_size: min_size.div_ceil(k) }
+            }
+            RateLimiter::SampleToInsertRatio {
+                ratio,
+                min_size,
+                error_buffer,
+            } => RateLimiter::SampleToInsertRatio {
+                ratio,
+                min_size: min_size.div_ceil(k),
+                error_buffer: (error_buffer / k as f64).max(2.0),
+            },
+        }
+    }
+}
+
+/// A replay table split into `K` independently locked shards.
+///
+/// Executor `k` inserts through its own shard handle ([`Self::shard`]),
+/// so the acting-path insert never blocks on other executors. The
+/// trainer samples the aggregate via [`Self::sample`]. All shards share
+/// the selector/limiter configuration (limiter scaled per shard) and
+/// split the total capacity evenly.
+pub struct ShardedTable {
+    shards: Vec<Arc<Table>>,
+    /// next shard the round-robin sampler prefers
+    cursor: AtomicUsize,
+    /// next shard a convenience [`Self::insert`] targets
+    insert_cursor: AtomicUsize,
+    /// aggregate warm-up gate: no sample is admitted before this many
+    /// total inserts across all shards (the *global* limiter min-size,
+    /// which per-shard scaling alone cannot guarantee under skewed
+    /// startup insert rates)
+    min_inserts: u64,
+    /// latched once the warm-up gate opens — inserts only grow, so
+    /// after opening, samplers skip the cross-shard stats() scan
+    warmed: AtomicBool,
+}
+
+impl ShardedTable {
+    /// Build `num_shards` shards splitting `total_capacity` evenly.
+    /// `limiter` is the *global* flow-control policy; it is scaled with
+    /// [`RateLimiter::per_shard`] internally.
+    pub fn new(
+        num_shards: usize,
+        total_capacity: usize,
+        selector: Selector,
+        limiter: RateLimiter,
+        seed: u64,
+    ) -> Self {
+        let k = num_shards.max(1);
+        let per_shard = (total_capacity / k).max(1);
+        let shard_limiter = limiter.per_shard(k);
+        let min_inserts = match limiter {
+            RateLimiter::MinSize { min_size } => min_size as u64,
+            RateLimiter::SampleToInsertRatio { min_size, .. } => {
+                min_size as u64
+            }
+        };
+        let shards = (0..k)
+            .map(|i| {
+                Arc::new(Table::new(
+                    per_shard,
+                    selector,
+                    shard_limiter,
+                    seed.wrapping_add(0x9e37_79b9 * i as u64),
+                ))
+            })
+            .collect();
+        ShardedTable {
+            shards,
+            cursor: AtomicUsize::new(0),
+            insert_cursor: AtomicUsize::new(0),
+            min_inserts,
+            warmed: AtomicBool::new(min_inserts == 0),
+        }
+    }
+
+    /// Wrap one existing table as a single-shard view (benches/tests).
+    /// The wrapped table's own limiter governs; no aggregate gate.
+    pub fn single(table: Arc<Table>) -> Self {
+        ShardedTable {
+            shards: vec![table],
+            cursor: AtomicUsize::new(0),
+            insert_cursor: AtomicUsize::new(0),
+            min_inserts: 0,
+            warmed: AtomicBool::new(true),
+        }
+    }
+
+    /// One-way warm-up gate: false until `min_inserts` total inserts
+    /// were observed, then latched true (so steady-state samplers
+    /// never pay the cross-shard stats() scan again).
+    fn warmed_up(&self) -> bool {
+        if self.warmed.load(Ordering::Relaxed) {
+            return true;
+        }
+        if self.stats().inserts >= self.min_inserts {
+            self.warmed.store(true, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `i`'s insert handle — hand one to each executor's adder.
+    pub fn shard(&self, i: usize) -> Arc<Table> {
+        self.shards[i % self.shards.len()].clone()
+    }
+
+    /// Aggregate statistics summed over every shard.
+    pub fn stats(&self) -> TableStats {
+        let mut agg = TableStats::default();
+        for s in &self.shards {
+            let st = s.stats();
+            agg.size += st.size;
+            agg.inserts += st.inserts;
+            agg.samples += st.samples;
+            agg.evictions += st.evictions;
+        }
+        agg
+    }
+
+    /// Close every shard, unblocking all waiters.
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.close();
+        }
+    }
+
+    /// True once every shard is closed.
+    pub fn is_closed(&self) -> bool {
+        self.shards.iter().all(|s| s.is_closed())
+    }
+
+    /// True when the aggregate warm-up gate is open and some shard
+    /// would currently admit a sample.
+    pub fn can_sample(&self) -> bool {
+        self.warmed_up() && self.shards.iter().any(|s| s.can_sample())
+    }
+
+    /// Round-robin convenience insert (tests, checkpoint restore);
+    /// executors should insert through their own [`Self::shard`] handle
+    /// instead.
+    pub fn insert(&self, item: Item, priority: f64) -> bool {
+        let i = self.insert_cursor.fetch_add(1, Ordering::Relaxed)
+            % self.shards.len();
+        self.shards[i].insert(item, priority)
+    }
+
+    /// Draw one batch of `n` items from the next ready shard
+    /// (round-robin with skip-ahead: a stalled shard never blocks the
+    /// trainer while another shard has admissible data). No sample is
+    /// admitted before `min_size` *total* inserts across shards, so the
+    /// configured warm-up holds even under skewed startup insert rates.
+    /// Blocks until some shard admits the sample; returns `None` after
+    /// [`Self::close`].
+    ///
+    /// Waiting is a 2 ms poll rather than a cross-shard condvar: each
+    /// probe takes K uncontended shard locks for ~ns each, and in the
+    /// steady state the ratio limiter paces the trainer anyway, so the
+    /// poll costs well under a percent of a core — the trade for
+    /// keeping shards fully independent on the insert hot path.
+    pub fn sample(&self, n: usize) -> Option<Vec<Item>> {
+        loop {
+            if self.warmed_up() {
+                let start = self.cursor.load(Ordering::Relaxed);
+                for k in 0..self.shards.len() {
+                    let idx = (start + k) % self.shards.len();
+                    if self.shards[idx].can_sample() {
+                        self.cursor.store(
+                            (idx + 1) % self.shards.len(),
+                            Ordering::Relaxed,
+                        );
+                        // the shard may still block briefly if a racing
+                        // sampler drained it; its own limiter arbitrates.
+                        return self.shards[idx].sample(n);
+                    }
+                }
+            }
+            if self.is_closed() {
+                return None;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::Transition;
+
+    fn item(v: f32) -> Item {
+        Item::Transition(Transition { obs: vec![v], ..Default::default() })
+    }
+
+    fn val(i: &Item) -> f32 {
+        i.as_transition().obs[0]
+    }
+
+    #[test]
+    fn per_shard_limiter_scaling() {
+        let l = RateLimiter::MinSize { min_size: 10 }.per_shard(4);
+        match l {
+            RateLimiter::MinSize { min_size } => assert_eq!(min_size, 3),
+            _ => panic!(),
+        }
+        let l = RateLimiter::SampleToInsertRatio {
+            ratio: 2.0,
+            min_size: 100,
+            error_buffer: 40.0,
+        }
+        .per_shard(4);
+        match l {
+            RateLimiter::SampleToInsertRatio { ratio, min_size, error_buffer } => {
+                assert_eq!(ratio, 2.0);
+                assert_eq!(min_size, 25);
+                assert_eq!(error_buffer, 10.0);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn round_robin_visits_every_ready_shard() {
+        let t = ShardedTable::new(
+            3,
+            30,
+            Selector::Uniform,
+            RateLimiter::min_size(3),
+            0,
+        );
+        // shard k holds values k*10..k*10+3 (inserted via shard handles,
+        // as executors do)
+        for k in 0..3 {
+            let shard = t.shard(k);
+            for j in 0..3 {
+                assert!(shard.insert(item((k * 10 + j) as f32), 1.0));
+            }
+        }
+        assert_eq!(t.stats().inserts, 9);
+        // each sample call draws a shard-coherent batch; three calls
+        // visit three distinct shards
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            let batch = t.sample(4).unwrap();
+            let shard_of = (val(&batch[0]) / 10.0) as i32;
+            for it in &batch {
+                assert_eq!((val(it) / 10.0) as i32, shard_of);
+            }
+            seen.insert(shard_of);
+        }
+        assert_eq!(seen.len(), 3, "round-robin skipped a shard: {seen:?}");
+    }
+
+    #[test]
+    fn skip_ahead_bypasses_starved_shard() {
+        // shard 0 stays empty; sampling must not deadlock on it
+        let t = ShardedTable::new(
+            2,
+            16,
+            Selector::Uniform,
+            RateLimiter::min_size(2),
+            1,
+        );
+        let shard1 = t.shard(1);
+        shard1.insert(item(1.0), 1.0);
+        shard1.insert(item(2.0), 1.0);
+        for _ in 0..4 {
+            let batch = t.sample(2).unwrap();
+            assert!(batch.iter().all(|i| val(i) >= 1.0));
+        }
+    }
+
+    #[test]
+    fn aggregate_min_size_gates_skewed_startup() {
+        // global min 8 over 4 shards (per-shard min 2): one shard
+        // racing ahead must NOT open sampling before 8 TOTAL inserts.
+        let t = ShardedTable::new(
+            4,
+            64,
+            Selector::Uniform,
+            RateLimiter::min_size(8),
+            5,
+        );
+        let fast = t.shard(0);
+        for j in 0..4 {
+            fast.insert(item(j as f32), 1.0);
+        }
+        assert!(
+            !t.can_sample(),
+            "sampling opened on 4/8 aggregate inserts"
+        );
+        // spread the remaining warm-up across other shards
+        for k in 1..=4 {
+            t.shard(k % 4).insert(item((10 + k) as f32), 1.0);
+        }
+        assert!(t.can_sample());
+        assert_eq!(t.sample(2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_sampler() {
+        let t = Arc::new(ShardedTable::new(
+            2,
+            16,
+            Selector::Uniform,
+            RateLimiter::min_size(100),
+            2,
+        ));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.sample(1));
+        std::thread::sleep(Duration::from_millis(20));
+        t.close();
+        assert!(h.join().unwrap().is_none());
+        assert!(t.is_closed());
+    }
+
+    #[test]
+    fn concurrent_shard_inserts_do_not_contend_on_sampling() {
+        // 4 inserter threads (one per shard) + 1 round-robin sampler;
+        // ratio limiter pins aggregate samples ~ inserts.
+        let t = Arc::new(ShardedTable::new(
+            4,
+            4096,
+            Selector::Uniform,
+            RateLimiter::SampleToInsertRatio {
+                ratio: 1.0,
+                min_size: 4,
+                error_buffer: 8.0,
+            },
+            3,
+        ));
+        let sampler = {
+            let t = t.clone();
+            std::thread::spawn(move || {
+                let mut n = 0u64;
+                while t.sample(1).is_some() {
+                    n += 1;
+                }
+                n
+            })
+        };
+        let writers: Vec<_> = (0..4)
+            .map(|k| {
+                let shard = t.shard(k);
+                std::thread::spawn(move || {
+                    for j in 0..100 {
+                        if !shard.insert(item((k * 1000 + j) as f32), 1.0) {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        // let the sampler catch up to the limiter bound, then shut down
+        std::thread::sleep(Duration::from_millis(100));
+        let st = t.stats();
+        t.close();
+        let sampled = sampler.join().unwrap();
+        assert_eq!(st.inserts, 400);
+        assert!(
+            sampled as f64 >= st.inserts as f64 - 8.0 * 4.0,
+            "sampler starved: {sampled} of {}",
+            st.inserts
+        );
+        assert!(
+            sampled as f64 <= st.inserts as f64 + 8.0 * 4.0,
+            "sampler overran: {sampled} of {}",
+            st.inserts
+        );
+    }
+}

@@ -14,13 +14,21 @@ use crate::rng::Rng;
 /// non-empty depending on the action space.
 #[derive(Clone, Debug, Default)]
 pub struct Transition {
+    /// Stacked per-agent observations `[N*O]`.
     pub obs: Vec<f32>,
+    /// Global state (empty when the preset has none).
     pub state: Vec<f32>,
+    /// Discrete joint action `[N]` (empty for continuous systems).
     pub actions_disc: Vec<i32>,
+    /// Continuous joint action `[N*A]` (empty for discrete systems).
     pub actions_cont: Vec<f32>,
+    /// Per-agent (n-step) rewards `[N]`.
     pub rewards: Vec<f32>,
+    /// Bootstrap discount (0.0 at terminal steps).
     pub discount: f32,
+    /// Stacked next observations `[N*O]`.
     pub next_obs: Vec<f32>,
+    /// Next global state.
     pub next_state: Vec<f32>,
 }
 
@@ -29,21 +37,31 @@ pub struct Transition {
 /// is 1.0 for valid steps.
 #[derive(Clone, Debug, Default)]
 pub struct Sequence {
+    /// Window length `T` (steps, excluding the trailing observation).
     pub t: usize,
+    /// Stacked observations `[(T+1)*N*O]`.
     pub obs: Vec<f32>,
+    /// Discrete joint actions `[T*N]`.
     pub actions: Vec<i32>,
-    pub rewards: Vec<f32>, // [T*N] per-agent (team rewards replicated)
+    /// Per-agent rewards `[T*N]` (team rewards replicated).
+    pub rewards: Vec<f32>,
+    /// Per-step discounts `[T]`.
     pub discounts: Vec<f32>,
+    /// 1.0 for valid steps, 0.0 for padding `[T]`.
     pub mask: Vec<f32>,
 }
 
+/// A stored replay item: one transition or one sequence window.
 #[derive(Clone, Debug)]
 pub enum Item {
+    /// A flattened (n-step) transition.
     Transition(Transition),
+    /// A fixed-length padded trajectory window.
     Sequence(Sequence),
 }
 
 impl Item {
+    /// Borrow as a transition; panics on sequence items.
     pub fn as_transition(&self) -> &Transition {
         match self {
             Item::Transition(t) => t,
@@ -51,6 +69,7 @@ impl Item {
         }
     }
 
+    /// Borrow as a sequence; panics on transition items.
     pub fn as_sequence(&self) -> &Sequence {
         match self {
             Item::Sequence(s) => s,
@@ -59,11 +78,16 @@ impl Item {
     }
 }
 
+/// Lifetime counters of one table (or the aggregate over shards).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TableStats {
+    /// Items currently stored.
     pub size: usize,
+    /// Lifetime inserts.
     pub inserts: u64,
+    /// Lifetime sample *calls* (a call may return many items).
     pub samples: u64,
+    /// Lifetime FIFO evictions.
     pub evictions: u64,
 }
 
@@ -88,6 +112,8 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table holding at most `max_size` items with the given
+    /// selector and rate limiter.
     pub fn new(
         max_size: usize,
         selector: Selector,
@@ -122,12 +148,14 @@ impl Table {
         )
     }
 
+    /// Current counters (size, inserts, samples, evictions).
     pub fn stats(&self) -> TableStats {
         let mut inner = self.inner.lock().unwrap();
         inner.stats.size = inner.items.len();
         inner.stats
     }
 
+    /// Whether [`Table::close`] was called.
     pub fn is_closed(&self) -> bool {
         self.closed.load(Ordering::Acquire)
     }

@@ -1,11 +1,12 @@
 //! PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes
 //! them from the rust hot path.
 //!
-//! One [`Engine`] per node/thread: the `xla` crate's `PjRtClient` is
-//! `Rc`-based (not `Send`), so every launch-graph node constructs its own
-//! engine on its own thread — which also mirrors a real deployment where
-//! each worker process owns a runtime instance. Artifacts are HLO *text*
-//! (see python/compile/aot.py for why not serialized protos).
+//! One [`Engine`] per node/thread (the engine-per-thread rule,
+//! DESIGN.md §2): the `xla` crate's `PjRtClient` is `Rc`-based (not
+//! `Send`), so every launch-graph node constructs its own engine on its
+//! own thread — which also mirrors a real deployment where each worker
+//! process owns a runtime instance. Artifacts are HLO *text* (see
+//! python/compile/aot.py for why not serialized protos).
 
 mod engine;
 mod manifest;

@@ -1,5 +1,11 @@
 //! System builder: wires executors, trainer, replay, parameter server and
 //! evaluator into a Launchpad-style program and runs it (paper Block 2).
+//!
+//! Executor nodes run the vectorized hot path (DESIGN.md §6): each node
+//! steps `num_envs_per_executor` environment instances through a
+//! [`crate::env::VecEnv`], acts with one batched policy-artifact call
+//! per vector step, and feeds its own [`crate::replay::ShardedTable`]
+//! shard so executors never contend on a replay lock.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -7,35 +13,67 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::core::StepType;
+use crate::core::{Actions, StepType, TimeStep};
 use crate::env::wrappers::{Fingerprint, FingerprintWrapper};
-use crate::env::{make_env, MultiAgentEnv};
+use crate::env::{make_env, MultiAgentEnv, VecEnv};
 use crate::exploration::EpsilonSchedule;
 use crate::launch::{LocalLauncher, NodeKind, Program, StopSignal};
 use crate::metrics::{Counters, MovingStats};
 use crate::params::ParameterServer;
 use crate::replay::{
-    RateLimiter, Selector, SequenceAdder, Table, TransitionAdder,
+    RateLimiter, Selector, SequenceAdder, ShardedTable, TransitionAdder,
 };
 use crate::runtime::{Engine, Manifest};
-use crate::systems::{Executor, SystemKind, Trainer};
+use crate::systems::{Executor, SystemKind, Trainer, VecExecutor};
+
+/// Per-instance adder slot for the vectorized executor loop: each
+/// environment instance accumulates its own episode independently.
+enum Adder {
+    Tr(TransitionAdder),
+    Sq(SequenceAdder),
+}
+
+impl Adder {
+    fn observe_first(&mut self, ts: &TimeStep) {
+        match self {
+            Adder::Tr(a) => a.observe_first(ts),
+            Adder::Sq(a) => a.observe_first(ts),
+        }
+    }
+
+    fn observe(&mut self, actions: &Actions, next: &TimeStep) {
+        match self {
+            Adder::Tr(a) => a.observe(actions, next),
+            Adder::Sq(a) => a.observe(actions, next),
+        }
+    }
+}
 
 /// One evaluator measurement (a point on the paper's learning curves).
 #[derive(Clone, Copy, Debug)]
 pub struct EvalPoint {
+    /// Wall-clock seconds since the run started.
     pub wall_s: f64,
+    /// Total environment steps across all executors at measurement time.
     pub env_steps: u64,
+    /// Total trainer steps at measurement time.
     pub train_steps: u64,
+    /// Mean greedy episode return over `eval_episodes`.
     pub mean_return: f32,
 }
 
 /// Outcome of a full distributed training run.
 #[derive(Clone, Debug, Default)]
 pub struct TrainResult {
+    /// Evaluator measurements in chronological order.
     pub evals: Vec<EvalPoint>,
+    /// Total environment steps executed.
     pub env_steps: u64,
+    /// Total trainer steps executed.
     pub train_steps: u64,
+    /// Total completed episodes across all executors.
     pub episodes: u64,
+    /// Total wall-clock seconds.
     pub wall_s: f64,
     /// moving-average training return at shutdown
     pub train_return: f32,
@@ -125,9 +163,38 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
     let prefix = cfg.artifact_prefix();
     let policy_name = format!("{prefix}_policy");
     let train_name = format!("{prefix}_train");
+    // executors act through a batched policy artifact when vectorized;
+    // the evaluator always uses the B=1 artifact
+    let num_envs = cfg.num_envs_per_executor.max(1);
+    let exec_policy_name = if num_envs == 1 {
+        policy_name.clone()
+    } else {
+        format!("{prefix}_policy_b{num_envs}")
+    };
 
     // --- initial parameters from the AOT init blobs ---
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    // fail fast on an un-lowered env batch: executor threads could only
+    // surface this after launch, leaving the trainer blocked on an
+    // empty replay table until the deadline
+    if manifest.get(&exec_policy_name).is_err() {
+        let mut batches: Vec<usize> = manifest
+            .artifacts
+            .keys()
+            .filter_map(|n| {
+                n.strip_prefix(&format!("{policy_name}_b"))
+                    .and_then(|b| b.parse().ok())
+            })
+            .collect();
+        batches.push(1);
+        batches.sort_unstable();
+        bail!(
+            "no policy artifact {exec_policy_name:?} for \
+             num_envs_per_executor={num_envs}; lowered batches for \
+             {policy_name:?}: {batches:?} (extend POLICY_BATCHES in \
+             python/compile/model.py and re-run `make artifacts`)"
+        );
+    }
     let train_spec = manifest.get(&train_name)?.clone();
     let params0 = manifest.read_init(&train_spec, "params0")?;
     let opt0 = manifest.read_init(&train_spec, "opt0")?;
@@ -136,7 +203,10 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
     let batch = train_spec.meta_usize("batch")?;
 
     // --- shared services (the "nodes" executors/trainer talk to) ---
-    let table = Arc::new(Table::new(
+    // one replay shard per executor: the insert hot path never crosses
+    // executor threads, the trainer round-robins the shards
+    let table = Arc::new(ShardedTable::new(
+        cfg.num_executors.max(1),
         cfg.replay_size,
         Selector::Uniform,
         RateLimiter::sample_to_insert(
@@ -198,14 +268,14 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
         });
     }
 
-    // --- executor nodes ---
+    // --- executor nodes (vectorized hot path, DESIGN.md §6) ---
     for worker in 0..cfg.num_executors {
         let cfg = cfg.clone();
-        let table = table.clone();
+        let shard = table.shard(worker);
         let server = server.clone();
         let counters = counters.clone();
         let stop = stop.clone();
-        let policy_name = policy_name.clone();
+        let exec_policy_name = exec_policy_name.clone();
         let params0 = params0.clone();
         let train_returns = train_returns.clone();
         let fingerprint = fingerprint.clone();
@@ -215,80 +285,107 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
             move || {
                 let run = || -> Result<()> {
                     let mut engine = Engine::load(&cfg.artifacts_dir)?;
-                    let artifact = engine.artifact(&policy_name)?;
-                    let mut executor = Executor::new(
+                    let artifact = engine
+                        .artifact(&exec_policy_name)
+                        .with_context(|| {
+                            format!(
+                                "policy artifact {exec_policy_name:?} \
+                                 unavailable — num_envs_per_executor \
+                                 must match a lowered policy batch; \
+                                 regenerate with `make artifacts`"
+                            )
+                        })?;
+                    let mut executor = VecExecutor::new(
                         kind,
                         artifact,
                         params0,
                         cfg.seed + 1000 + worker as u64,
                     )?;
-                    let mut env = env_for_preset(
-                        &cfg.preset,
-                        cfg.seed + worker as u64,
-                        Some(fingerprint.clone()),
-                    )?;
+                    let mut instances = Vec::with_capacity(num_envs);
+                    for i in 0..num_envs {
+                        instances.push(env_for_preset(
+                            &cfg.preset,
+                            cfg.seed + (worker * num_envs + i) as u64,
+                            Some(fingerprint.clone()),
+                        )?);
+                    }
+                    let mut venv = VecEnv::new(instances)?;
                     let schedule = EpsilonSchedule::new(
                         cfg.eps_start,
                         cfg.eps_end,
                         cfg.eps_decay_steps,
                     );
-                    let mut tr_adder =
-                        TransitionAdder::new(table.clone(), cfg.n_step, gamma);
-                    let mut sq_adder = SequenceAdder::new(
-                        table.clone(),
-                        seq_len.max(1),
-                        seq_len.max(1),
-                    );
+                    // one adder per instance: episodes accumulate
+                    // independently across the batch
                     let use_seq = kind.sequences();
-                    let mut episodes_since_sync = 0u64;
-                    'outer: while !stop.is_stopped()
+                    let mut adders: Vec<Adder> = (0..num_envs)
+                        .map(|_| {
+                            if use_seq {
+                                Adder::Sq(SequenceAdder::new(
+                                    shard.clone(),
+                                    seq_len.max(1),
+                                    seq_len.max(1),
+                                ))
+                            } else {
+                                Adder::Tr(TransitionAdder::new(
+                                    shard.clone(),
+                                    cfg.n_step,
+                                    gamma,
+                                ))
+                            }
+                        })
+                        .collect();
+                    let mut ep_returns = vec![0.0f32; num_envs];
+                    let mut vs = venv.reset();
+                    for (i, adder) in adders.iter_mut().enumerate() {
+                        adder.observe_first(&vs.steps[i]);
+                    }
+                    while !stop.is_stopped()
                         && counters.env_steps() < cfg.max_env_steps
                     {
-                        let mut ts = env.reset();
-                        executor.reset_state();
-                        if use_seq {
-                            sq_adder.observe_first(&ts);
-                        } else {
-                            tr_adder.observe_first(&ts);
-                        }
-                        let mut ep_return = 0.0f32;
-                        while ts.step_type != StepType::Last {
-                            if stop.is_stopped() {
-                                break 'outer;
+                        let eps = schedule.value(counters.env_steps());
+                        fingerprint.set(
+                            eps,
+                            (counters.env_steps() as f32
+                                / cfg.max_env_steps as f32)
+                                .min(1.0),
+                        );
+                        // ONE batched policy call for all B instances
+                        let actions = executor
+                            .select_actions_vec(&vs, eps, cfg.noise_sigma)?;
+                        let next = venv.step(&actions);
+                        let mut episode_ended = false;
+                        for (i, ts) in next.steps.iter().enumerate() {
+                            if ts.step_type == StepType::First {
+                                // this slot auto-reset: new episode
+                                adders[i].observe_first(ts);
+                                executor.reset_instance(i);
+                                ep_returns[i] = 0.0;
+                                continue;
                             }
-                            let eps = schedule.value(counters.env_steps());
-                            fingerprint.set(
-                                eps,
-                                (counters.env_steps() as f32
-                                    / cfg.max_env_steps as f32)
-                                    .min(1.0),
-                            );
-                            let actions = executor
-                                .select_actions(&ts, eps, cfg.noise_sigma)?;
-                            let next = env.step(&actions);
-                            if use_seq {
-                                sq_adder.observe(&actions, &next);
-                            } else {
-                                tr_adder.observe(&actions, &next);
-                            }
+                            adders[i].observe(&actions[i], ts);
                             counters.add_env_steps(1);
-                            ep_return += next.rewards.iter().sum::<f32>()
-                                / next.rewards.len() as f32;
-                            ts = next;
+                            ep_returns[i] += ts.rewards.iter().sum::<f32>()
+                                / ts.rewards.len() as f32;
+                            if ts.is_last() {
+                                counters.add_episode();
+                                train_returns
+                                    .lock()
+                                    .unwrap()
+                                    .push(ep_returns[i]);
+                                episode_ended = true;
+                            }
                         }
-                        counters.add_episode();
-                        train_returns.lock().unwrap().push(ep_return);
-                        episodes_since_sync += 1;
-                        if episodes_since_sync >= 1 {
-                            // cheap version check every episode
+                        if episode_ended {
+                            // cheap version check at episode boundaries
                             let mut buf = Vec::new();
                             if let Some(v) = server
                                 .sync(executor.params_version, &mut buf)
                             {
                                 executor.set_params(v, &buf);
                             }
-                            episodes_since_sync = 0;
                         }
+                        vs = next;
                     }
                     Ok(())
                 };

@@ -5,114 +5,63 @@
 //! state / DIAL inboxes between steps, and forwards transitions to an
 //! adder. Parameters are refreshed from the parameter server between
 //! episodes.
+//!
+//! Two actors share this module: [`Executor`] acts for a single
+//! environment (`[1, N, O]` policy artifacts — evaluation and B=1
+//! training), and [`VecExecutor`] acts for a whole [`crate::env::VecEnv`]
+//! batch with one `[B, N, O]` artifact call per vector step
+//! (DESIGN.md §6).
 
 use std::rc::Rc;
 
 use anyhow::Result;
 
 use crate::core::{Actions, HostTensor, TimeStep};
+use crate::env::VecStep;
 use crate::exploration::{epsilon_greedy, gaussian_noise};
 use crate::rng::Rng;
 use crate::runtime::{Arg, Artifact};
 use crate::systems::SystemKind;
 
-/// Recurrent carry between environment steps.
+/// Recurrent carry between environment steps (`B = 1` for [`Executor`],
+/// `B = num_envs_per_executor` for [`VecExecutor`]).
 #[derive(Clone, Debug)]
 pub enum ActorState {
+    /// Feedforward systems: nothing carried.
     None,
-    /// GRU hidden state [1, N, H]
+    /// GRU hidden state `[B, N, H]`.
     Hidden(HostTensor),
-    /// DIAL: hidden state + routed message inbox [1, N, M]
+    /// DIAL: hidden state `[B, N, H]` + routed message inbox `[B, N, M]`.
     HiddenInbox(HostTensor, HostTensor),
 }
 
-/// Multi-agent actor: one policy artifact acting for all agents.
-pub struct Executor {
-    kind: SystemKind,
-    artifact: Rc<Artifact>,
-    pub params: HostTensor,
-    pub params_version: u64,
-    /// device-resident copy of `params`, rebuilt lazily after set_params
-    params_buf: Option<xla::PjRtBuffer>,
-    state: ActorState,
-    rng: Rng,
-    n_agents: usize,
-    obs_dim: usize,
-    n_actions: usize, // discrete count or continuous dim
-    hidden: usize,
-    msg_dim: usize,
-}
+/// Multi-agent actor for a single environment: a thin B=1 wrapper over
+/// [`VecExecutor`] (evaluation and `num_envs_per_executor = 1` acting).
+///
+/// Derefs to its inner [`VecExecutor`], so parameter state
+/// (`params_version`, [`VecExecutor::set_params`]) and recurrent-state
+/// control ([`VecExecutor::reset_state`]) are shared with the batched
+/// path — one implementation of the artifact dispatch and exploration
+/// logic serves both.
+pub struct Executor(VecExecutor);
 
 impl Executor {
+    /// Build an actor over a `[1, N, O]` policy artifact, starting from
+    /// `initial_params` (the artifact's `params0` init blob).
     pub fn new(
         kind: SystemKind,
         artifact: Rc<Artifact>,
         initial_params: Vec<f32>,
         seed: u64,
     ) -> Result<Executor> {
-        let spec = &artifact.spec;
-        let n_agents = spec.meta_usize("n_agents")?;
-        let obs_dim = spec.meta_usize("obs_dim")?;
-        let n_actions = spec.meta_usize("act_dim")?;
-        let hidden = spec.meta_usize("hidden")?;
-        let msg_dim = spec.meta_usize("msg_dim")?;
-        let p = spec.meta_usize("params")?;
+        let inner = VecExecutor::new(kind, artifact, initial_params, seed)?;
         anyhow::ensure!(
-            initial_params.len() == p,
-            "params len {} != artifact {}",
-            initial_params.len(),
-            p
+            inner.num_envs() == 1,
+            "Executor needs a [1, N, O] policy artifact (got batch {}); \
+             use VecExecutor for batched acting",
+            inner.num_envs()
         );
-        let mut ex = Executor {
-            kind,
-            artifact,
-            params: HostTensor::f32(vec![p], initial_params),
-            params_version: 0,
-            params_buf: None,
-            state: ActorState::None,
-            rng: Rng::new(seed),
-            n_agents,
-            obs_dim,
-            n_actions,
-            hidden,
-            msg_dim,
-        };
-        ex.reset_state();
-        Ok(ex)
-    }
-
-    pub fn n_agents(&self) -> usize {
-        self.n_agents
-    }
-
-    /// Zero recurrent state; call at every episode start.
-    pub fn reset_state(&mut self) {
-        self.state = match self.kind {
-            SystemKind::MadqnRec => ActorState::Hidden(HostTensor::zeros_f32(
-                vec![1, self.n_agents, self.hidden],
-            )),
-            SystemKind::Dial => ActorState::HiddenInbox(
-                HostTensor::zeros_f32(vec![1, self.n_agents, self.hidden]),
-                HostTensor::zeros_f32(vec![1, self.n_agents, self.msg_dim]),
-            ),
-            _ => ActorState::None,
-        };
-    }
-
-    /// Update parameters from the server copy.
-    pub fn set_params(&mut self, version: u64, params: &[f32]) {
-        self.params.as_f32_mut().copy_from_slice(params);
-        self.params_version = version;
-        self.params_buf = None; // stale device copy
-    }
-
-    fn obs_tensor(&self, ts: &TimeStep) -> HostTensor {
-        let mut data = Vec::with_capacity(self.n_agents * self.obs_dim);
-        for o in &ts.observations {
-            debug_assert_eq!(o.len(), self.obs_dim);
-            data.extend_from_slice(o);
-        }
-        HostTensor::f32(vec![1, self.n_agents, self.obs_dim], data)
+        Ok(Executor(inner))
     }
 
     /// Select actions for every agent. `eps`/`sigma` control exploration
@@ -123,9 +72,205 @@ impl Executor {
         eps: f32,
         sigma: f32,
     ) -> Result<Actions> {
-        let obs = self.obs_tensor(ts);
-        // the parameter vector dominates upload bytes on the acting path;
-        // keep it device-resident and invalidate only on set_params.
+        let mut joint = self.0.select_actions_steps(&[ts], eps, sigma)?;
+        Ok(joint.pop().unwrap())
+    }
+}
+
+impl std::ops::Deref for Executor {
+    type Target = VecExecutor;
+
+    fn deref(&self) -> &VecExecutor {
+        &self.0
+    }
+}
+
+impl std::ops::DerefMut for Executor {
+    fn deref_mut(&mut self) -> &mut VecExecutor {
+        &mut self.0
+    }
+}
+
+/// Vectorized multi-agent actor: one `[B, N, O]` policy artifact acting
+/// for all agents of a whole [`crate::env::VecEnv`] batch per call.
+///
+/// This is the executor half of the vectorized hot path (DESIGN.md §6):
+/// instead of `B` separate PJRT dispatches per vector step, the stacked
+/// observations go through a single batched artifact call and the
+/// per-instance recurrent carries live as rows of one `[B, N, H]`
+/// tensor. [`VecExecutor::reset_instance`] zeroes exactly one row when
+/// that instance's episode auto-resets, so desynchronised episode
+/// boundaries never force a full-batch reset.
+pub struct VecExecutor {
+    kind: SystemKind,
+    artifact: Rc<Artifact>,
+    /// Current flat parameter vector (host copy).
+    pub params: HostTensor,
+    /// Parameter-server version `params` was last synced to.
+    pub params_version: u64,
+    /// device-resident copy of `params`, rebuilt lazily after set_params
+    params_buf: Option<xla::PjRtBuffer>,
+    state: ActorState, // tensors carry [B, N, H] / [B, N, M]
+    rng: Rng,
+    batch: usize,
+    n_agents: usize,
+    obs_dim: usize,
+    n_actions: usize,
+    hidden: usize,
+    msg_dim: usize,
+}
+
+impl VecExecutor {
+    /// Build a vectorized actor over a batched policy artifact
+    /// (`*_policy_b{B}`; the environment batch is read from the
+    /// artifact's `obs` input shape).
+    pub fn new(
+        kind: SystemKind,
+        artifact: Rc<Artifact>,
+        initial_params: Vec<f32>,
+        seed: u64,
+    ) -> Result<VecExecutor> {
+        let spec = &artifact.spec;
+        let n_agents = spec.meta_usize("n_agents")?;
+        let obs_dim = spec.meta_usize("obs_dim")?;
+        let n_actions = spec.meta_usize("act_dim")?;
+        let hidden = spec.meta_usize("hidden")?;
+        let msg_dim = spec.meta_usize("msg_dim")?;
+        let p = spec.meta_usize("params")?;
+        let batch = spec
+            .input("obs")
+            .map(|t| *t.dims.first().unwrap_or(&1))
+            .unwrap_or(1);
+        anyhow::ensure!(batch >= 1, "{}: bad env batch", spec.name);
+        anyhow::ensure!(
+            initial_params.len() == p,
+            "params len {} != artifact {}",
+            initial_params.len(),
+            p
+        );
+        let mut ex = VecExecutor {
+            kind,
+            artifact,
+            params: HostTensor::f32(vec![p], initial_params),
+            params_version: 0,
+            params_buf: None,
+            state: ActorState::None,
+            rng: Rng::new(seed),
+            batch,
+            n_agents,
+            obs_dim,
+            n_actions,
+            hidden,
+            msg_dim,
+        };
+        ex.reset_state();
+        Ok(ex)
+    }
+
+    /// Number of environment instances the artifact was lowered for.
+    pub fn num_envs(&self) -> usize {
+        self.batch
+    }
+
+    /// Number of agents per environment instance.
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    /// Zero the recurrent carry of every instance.
+    pub fn reset_state(&mut self) {
+        self.state = match self.kind {
+            SystemKind::MadqnRec => ActorState::Hidden(HostTensor::zeros_f32(
+                vec![self.batch, self.n_agents, self.hidden],
+            )),
+            SystemKind::Dial => ActorState::HiddenInbox(
+                HostTensor::zeros_f32(vec![
+                    self.batch,
+                    self.n_agents,
+                    self.hidden,
+                ]),
+                HostTensor::zeros_f32(vec![
+                    self.batch,
+                    self.n_agents,
+                    self.msg_dim,
+                ]),
+            ),
+            _ => ActorState::None,
+        };
+    }
+
+    /// Zero only instance `b`'s recurrent carry (call when that
+    /// instance's episode auto-resets).
+    pub fn reset_instance(&mut self, b: usize) {
+        debug_assert!(b < self.batch);
+        match &mut self.state {
+            ActorState::None => {}
+            ActorState::Hidden(h) => {
+                let row = self.n_agents * self.hidden;
+                h.as_f32_mut()[b * row..(b + 1) * row].fill(0.0);
+            }
+            ActorState::HiddenInbox(h, inbox) => {
+                let row = self.n_agents * self.hidden;
+                h.as_f32_mut()[b * row..(b + 1) * row].fill(0.0);
+                let row = self.n_agents * self.msg_dim;
+                inbox.as_f32_mut()[b * row..(b + 1) * row].fill(0.0);
+            }
+        }
+    }
+
+    /// Update parameters from the server copy.
+    pub fn set_params(&mut self, version: u64, params: &[f32]) {
+        self.params.as_f32_mut().copy_from_slice(params);
+        self.params_version = version;
+        self.params_buf = None; // stale device copy
+    }
+
+    /// Select a joint action for every environment instance with ONE
+    /// batched policy artifact call. `eps`/`sigma` control exploration
+    /// exactly as in [`Executor::select_actions`].
+    pub fn select_actions_vec(
+        &mut self,
+        vs: &VecStep,
+        eps: f32,
+        sigma: f32,
+    ) -> Result<Vec<Actions>> {
+        let steps: Vec<&TimeStep> = vs.steps.iter().collect();
+        self.select_actions_steps(&steps, eps, sigma)
+    }
+
+    /// [`Self::select_actions_vec`] over borrowed per-instance
+    /// timesteps — the obs tensor is packed straight from the borrows
+    /// (no `TimeStep` clone on the hot path).
+    pub fn select_actions_steps(
+        &mut self,
+        steps: &[&TimeStep],
+        eps: f32,
+        sigma: f32,
+    ) -> Result<Vec<Actions>> {
+        anyhow::ensure!(
+            steps.len() == self.batch,
+            "vec step batch {} != artifact batch {}",
+            steps.len(),
+            self.batch
+        );
+        let mut data =
+            Vec::with_capacity(self.batch * self.n_agents * self.obs_dim);
+        for ts in steps {
+            anyhow::ensure!(
+                ts.observations.len() == self.n_agents
+                    && ts.observations.iter().all(|o| o.len() == self.obs_dim),
+                "obs shape mismatch (want {}x{})",
+                self.n_agents,
+                self.obs_dim
+            );
+            for o in &ts.observations {
+                data.extend_from_slice(o);
+            }
+        }
+        let obs = HostTensor::f32(
+            vec![self.batch, self.n_agents, self.obs_dim],
+            data,
+        );
         if self.params_buf.is_none() {
             let dims = [self.params.len()];
             self.params_buf = Some(self.artifact.upload(&self.params, &dims)?);
@@ -147,7 +292,6 @@ impl Executor {
                 Arg::Host(inbox),
             ])?,
         };
-        // update carries
         match &mut self.state {
             ActorState::None => {}
             ActorState::Hidden(h) => *h = outputs[1].clone(),
@@ -157,33 +301,43 @@ impl Executor {
             }
         }
 
-        if self.kind.discrete() {
-            let q = outputs[0].as_f32(); // [1, N, A]
-            let a = (0..self.n_agents)
-                .map(|i| {
-                    let qi = &q[i * self.n_actions..(i + 1) * self.n_actions];
-                    let legal = ts
-                        .legal_actions
-                        .as_ref()
-                        .map(|l| l[i].as_slice());
-                    epsilon_greedy(qi, self.n_actions, legal, eps, &mut self.rng)
-                })
-                .collect();
-            Ok(Actions::Discrete(a))
-        } else {
-            let act = outputs[0].as_f32(); // [1, N, A]
-            let a = (0..self.n_agents)
-                .map(|i| {
-                    let mut ai = act
-                        [i * self.n_actions..(i + 1) * self.n_actions]
-                        .to_vec();
-                    if sigma > 0.0 {
-                        gaussian_noise(&mut ai, sigma, &mut self.rng);
-                    }
-                    ai
-                })
-                .collect();
-            Ok(Actions::Continuous(a))
+        let per_env = self.n_agents * self.n_actions;
+        let out = outputs[0].as_f32(); // [B, N, A]
+        let mut joint = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let block = &out[b * per_env..(b + 1) * per_env];
+            let legal_b = steps[b].legal_actions.as_ref();
+            if self.kind.discrete() {
+                let a = (0..self.n_agents)
+                    .map(|i| {
+                        let qi =
+                            &block[i * self.n_actions..(i + 1) * self.n_actions];
+                        let legal = legal_b.map(|l| l[i].as_slice());
+                        epsilon_greedy(
+                            qi,
+                            self.n_actions,
+                            legal,
+                            eps,
+                            &mut self.rng,
+                        )
+                    })
+                    .collect();
+                joint.push(Actions::Discrete(a));
+            } else {
+                let a = (0..self.n_agents)
+                    .map(|i| {
+                        let mut ai = block
+                            [i * self.n_actions..(i + 1) * self.n_actions]
+                            .to_vec();
+                        if sigma > 0.0 {
+                            gaussian_noise(&mut ai, sigma, &mut self.rng);
+                        }
+                        ai
+                    })
+                    .collect();
+                joint.push(Actions::Continuous(a));
+            }
         }
+        Ok(joint)
     }
 }

@@ -9,6 +9,13 @@
 //!
 //! Implemented baseline systems (paper §4 "System implementations"):
 //! MADQN (feedforward + recurrent), DIAL, VDN, QMIX, MADDPG, MAD4PG.
+//!
+//! Executors come in two shapes: the single-environment [`Executor`]
+//! (evaluation, B=1) and the batched [`VecExecutor`] driving a
+//! [`crate::env::VecEnv`] with one policy call per vector step
+//! (DESIGN.md §6).
+
+#![warn(missing_docs)]
 
 mod builder;
 mod executor;
@@ -18,7 +25,7 @@ pub use builder::{
     check_artifacts, env_for_preset, eval_episode, train, EvalPoint,
     TrainResult,
 };
-pub use executor::{ActorState, Executor};
+pub use executor::{ActorState, Executor, VecExecutor};
 pub use trainer::{Trainer, TrainerStats};
 
 use anyhow::{bail, Result};
@@ -26,12 +33,19 @@ use anyhow::{bail, Result};
 /// Which baseline system is running (selects artifacts + data plumbing).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SystemKind {
+    /// Independent feedforward multi-agent DQN.
     Madqn,
+    /// Recurrent (GRU) multi-agent DQN.
     MadqnRec,
+    /// Differentiable inter-agent learning (learned communication).
     Dial,
+    /// Value-decomposition networks (additive mixing).
     Vdn,
+    /// QMIX (monotonic hypernetwork mixing).
     Qmix,
+    /// Multi-agent DDPG (continuous control).
     Maddpg,
+    /// Distributional multi-agent D4PG.
     Mad4pg,
 }
 
@@ -52,6 +66,7 @@ pub enum Family {
 }
 
 impl SystemKind {
+    /// Parse a config `system` string (e.g. `"vdn"`).
     pub fn parse(s: &str) -> Result<SystemKind> {
         Ok(match s {
             "madqn" => SystemKind::Madqn,
@@ -65,6 +80,7 @@ impl SystemKind {
         })
     }
 
+    /// The data-plumbing family this system trains with.
     pub fn family(&self) -> Family {
         match self {
             SystemKind::Madqn => Family::DqnFf,
@@ -75,6 +91,7 @@ impl SystemKind {
         }
     }
 
+    /// Whether the action space is discrete.
     pub fn discrete(&self) -> bool {
         !matches!(self, SystemKind::Maddpg | SystemKind::Mad4pg)
     }

@@ -6,23 +6,27 @@
 //! parameters.
 
 use std::rc::Rc;
-use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::core::HostTensor;
 use crate::params::ParameterServer;
-use crate::replay::{Item, Table};
+use crate::replay::{Item, ItemSource};
 use crate::rng::Rng;
 use crate::runtime::Artifact;
 use crate::systems::Family;
 
+/// Progress counters the trainer exposes to supervisors and benches.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TrainerStats {
+    /// Completed train steps.
     pub steps: u64,
+    /// Loss of the most recent step.
     pub last_loss: f32,
 }
 
+/// The multi-agent learner: samples replay, runs the fused train-step
+/// artifact and publishes fresh parameters.
 pub struct Trainer {
     family: Family,
     artifact: Rc<Artifact>,
@@ -40,10 +44,13 @@ pub struct Trainer {
     state_dim: usize,
     seq_len: usize,
     msg_dim: usize,
+    /// Progress counters (steps, last loss).
     pub stats: TrainerStats,
 }
 
 impl Trainer {
+    /// Build a trainer over a train-step artifact, starting from the
+    /// artifact's `params0`/`opt0` init blobs.
     pub fn new(
         family: Family,
         artifact: Rc<Artifact>,
@@ -83,18 +90,22 @@ impl Trainer {
         self.target.as_f32_mut().copy_from_slice(&p);
     }
 
+    /// Current online parameters (flat host view).
     pub fn params(&self) -> &[f32] {
         self.params.as_f32()
     }
 
+    /// Batch size the train artifact was lowered at.
     pub fn batch_size(&self) -> usize {
         self.batch
     }
 
-    /// Run one training step on a batch sampled from `table`. Returns
-    /// None when the table was closed (shutdown).
-    pub fn step(&mut self, table: &Arc<Table>) -> Result<Option<f32>> {
-        let Some(items) = table.sample(self.batch) else {
+    /// Run one training step on a batch sampled from `source` — a single
+    /// [`crate::replay::Table`] or a [`crate::replay::ShardedTable`]
+    /// (round-robin over executor shards). Returns None when the source
+    /// was closed (shutdown).
+    pub fn step<S: ItemSource>(&mut self, source: &S) -> Result<Option<f32>> {
+        let Some(items) = source.sample_batch(self.batch) else {
             return Ok(None);
         };
         let inputs = self.assemble(&items)?;
@@ -204,12 +215,12 @@ impl Trainer {
     }
 
     /// Step and publish to the parameter server.
-    pub fn step_and_publish(
+    pub fn step_and_publish<S: ItemSource>(
         &mut self,
-        table: &Arc<Table>,
+        source: &S,
         server: &ParameterServer,
     ) -> Result<Option<f32>> {
-        let r = self.step(table)?;
+        let r = self.step(source)?;
         if r.is_some() {
             server.push(self.params());
         }

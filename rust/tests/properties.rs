@@ -230,6 +230,7 @@ fn prop_config_set_roundtrip() {
         ("preset", "smac3m"),
         ("arch", "networked"),
         ("num_executors", "3"),
+        ("num_envs_per_executor", "4"),
         ("max_env_steps", "123"),
         ("lr", "0.01"),
         ("tau", "0.5"),
@@ -250,8 +251,79 @@ fn prop_config_set_roundtrip() {
     }
     assert_eq!(c.system, "qmix");
     assert_eq!(c.num_executors, 3);
+    assert_eq!(c.num_envs_per_executor, 4);
     assert_eq!(c.n_step, 5);
     assert_eq!(c.artifact_prefix(), "smac3m_qmix");
+}
+
+/// Sharded replay under concurrent per-shard writers and one
+/// round-robin reader: aggregate stats stay consistent, every shard's
+/// data reaches the sampler, and the ratio limiter holds in aggregate.
+#[test]
+fn prop_sharded_table_round_robin_aggregates() {
+    use mava::replay::{ItemSource, ShardedTable};
+    for &shards in &[1usize, 2, 4] {
+        let table = Arc::new(ShardedTable::new(
+            shards,
+            4096,
+            Selector::Uniform,
+            RateLimiter::SampleToInsertRatio {
+                ratio: 1.0,
+                min_size: shards,
+                error_buffer: 4.0 * shards as f64,
+            },
+            7,
+        ));
+        let reader = {
+            let t = table.clone();
+            std::thread::spawn(move || {
+                let mut seen = vec![0u64; shards];
+                while let Some(batch) = t.sample_batch(2) {
+                    for item in batch {
+                        let v = item.as_transition().obs[0] as usize;
+                        seen[v / 1000] += 1;
+                    }
+                }
+                seen
+            })
+        };
+        let writers: Vec<_> = (0..shards)
+            .map(|k| {
+                let shard = table.shard(k);
+                std::thread::spawn(move || {
+                    for j in 0..200 {
+                        let tr = mava::replay::Transition {
+                            obs: vec![(k * 1000 + j) as f32],
+                            ..Default::default()
+                        };
+                        if !shard.insert(Item::Transition(tr), 1.0) {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let st = table.stats();
+        table.close();
+        let seen = reader.join().unwrap();
+        assert_eq!(st.inserts, 200 * shards as u64, "shards={shards}");
+        assert_eq!(st.size, 200 * shards, "no eviction expected");
+        for (k, &n) in seen.iter().enumerate() {
+            assert!(n > 0, "shard {k} never sampled (shards={shards})");
+        }
+        // aggregate flow control: sample calls stay within the summed
+        // error buffer of ratio * inserts
+        let calls = st.samples as f64;
+        assert!(
+            calls <= st.inserts as f64 + 4.0 * shards as f64 + 1.0,
+            "oversampled: {calls} calls vs {} inserts",
+            st.inserts
+        );
+    }
 }
 
 /// Environments never emit non-finite observations/rewards under long
