@@ -5,7 +5,7 @@
 PYTHON ?= python
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test bench-vector check fmt clippy doc
+.PHONY: artifacts build test bench-vector bench-trainer bench-build check fmt clippy doc
 
 # lower every AOT artifact (policy, batched policy variants, train steps)
 artifacts:
@@ -20,6 +20,15 @@ test:
 # the vectorized-executor scaling curve (ISSUE 1 acceptance bench)
 bench-vector:
 	cargo bench --bench vector_scaling
+
+# trainer hot path: host vs device-resident vs +prefetch steps/s
+# (ISSUE 2 acceptance bench)
+bench-trainer:
+	cargo bench --bench trainer_throughput
+
+# compile-gate every bench harness without running it (CI)
+bench-build:
+	cargo bench --no-run
 
 fmt:
 	cargo fmt --check

@@ -149,7 +149,7 @@ fn bench_runtime() {
             7,
         )
         .unwrap();
-        trainer.init_target_from_params();
+        trainer.init_target_from_params().unwrap();
         // feed a synthetic table
         let table = Arc::new(Table::uniform(4_096, 1, 0));
         fill_table(&table, kind, &art.spec, trainer.batch_size());

@@ -1,0 +1,159 @@
+//! Trainer hot-path throughput: train-steps/s for the host-resident
+//! baseline vs the device-resident state loop vs device-resident +
+//! prefetched batch assembly (DESIGN.md §8), per system family.
+//!
+//! The seed trainer re-uploaded `(params [P], target [P], opt [1+2P])`
+//! every step and assembled each batch into fresh `Vec`s while the
+//! PJRT executable sat idle. The three modes measured here isolate the
+//! two fixes: device residency removes the ~5P-float state round-trip,
+//! the prefetch thread overlaps sample+assemble with artifact
+//! execution. Requires `make artifacts`; scale with MAVA_BENCH_SCALE.
+
+use std::sync::Arc;
+
+use mava::bench::{curve_row, report, scale, section, time};
+use mava::replay::{Item, Table, Transition};
+use mava::rng::Rng;
+use mava::runtime::{ArtifactSpec, Engine, Manifest};
+use mava::systems::{Family, Trainer};
+
+/// (label, family, train artifact) — one transition-family case per
+/// value-based branch of the batch assembler.
+const CASES: [(&str, Family, &str); 2] = [
+    ("matrix2_madqn", Family::DqnFf, "matrix2_madqn_train"),
+    ("matrix2_vdn", Family::ValueDecomp, "matrix2_vdn_train"),
+];
+
+fn synthetic_item(family: Family, spec: &ArtifactSpec, rng: &mut Rng) -> Item {
+    let n = spec.meta_usize("n_agents").unwrap();
+    let o = spec.meta_usize("obs_dim").unwrap();
+    let a = spec.meta_usize("act_dim").unwrap();
+    let s = spec.meta_usize("state_dim").unwrap();
+    let mut t = Transition {
+        obs: (0..n * o).map(|_| rng.f32()).collect(),
+        actions_disc: (0..n).map(|_| rng.below(a) as i32).collect(),
+        rewards: (0..n).map(|_| rng.f32()).collect(),
+        discount: 1.0,
+        next_obs: (0..n * o).map(|_| rng.f32()).collect(),
+        ..Default::default()
+    };
+    if family == Family::ValueDecomp {
+        t.state = (0..s).map(|_| rng.f32()).collect();
+        t.next_state = (0..s).map(|_| rng.f32()).collect();
+        // team reward: the shared scalar replicated per agent
+        t.rewards = vec![rng.f32(); n];
+    }
+    Item::Transition(t)
+}
+
+fn filled_table(family: Family, spec: &ArtifactSpec, batch: usize) -> Arc<Table> {
+    let table = Arc::new(Table::uniform(4_096, 1, 17));
+    let mut rng = Rng::new(23);
+    for _ in 0..batch * 4 {
+        table.insert(synthetic_item(family, spec, &mut rng), 1.0);
+    }
+    table
+}
+
+fn bench_case(label: &str, family: Family, train_name: &str) -> anyhow::Result<()> {
+    section(&format!("trainer hot path: {label} ({family:?})"));
+    let mut engine = Engine::load("artifacts")?;
+    let artifact = engine.artifact(train_name)?;
+    let params0 = engine.read_init(train_name, "params0")?;
+    let opt0 = engine.read_init(train_name, "opt0")?;
+    let batch = artifact.spec.meta_usize("batch")?;
+    let table = filled_table(family, &artifact.spec, batch);
+    let warmup = 10;
+    let iters = (200.0 * scale()) as u64;
+    let mut rates = Vec::new();
+
+    // 1. host-resident baseline: full state upload+download per step
+    {
+        let mut trainer = Trainer::new_host_resident(
+            family,
+            artifact.clone(),
+            params0.clone(),
+            opt0.clone(),
+            1e-3,
+            0.01,
+            3,
+        )?;
+        trainer.init_target_from_params()?;
+        let t = table.clone();
+        let s = time(warmup, iters, move || {
+            trainer.step(&t).unwrap().unwrap();
+        });
+        report(&format!("train_host_{label}"), &s);
+        rates.push(("host", s.per_sec()));
+    }
+
+    // 2. device-resident: state stays in PjRtBuffers between steps
+    {
+        let mut trainer = Trainer::new(
+            family,
+            artifact.clone(),
+            params0.clone(),
+            opt0.clone(),
+            1e-3,
+            0.01,
+            3,
+        )?;
+        trainer.init_target_from_params()?;
+        let t = table.clone();
+        let s = time(warmup, iters, move || {
+            trainer.step(&t).unwrap().unwrap();
+        });
+        report(&format!("train_device_{label}"), &s);
+        rates.push(("device", s.per_sec()));
+    }
+
+    // 3. device-resident + prefetch: batch k+1 assembles while step k
+    //    executes
+    {
+        let mut trainer = Trainer::new(
+            family,
+            artifact.clone(),
+            params0,
+            opt0,
+            1e-3,
+            0.01,
+            3,
+        )?;
+        trainer.init_target_from_params()?;
+        let prefetch = trainer.spawn_prefetcher(table.clone(), 2);
+        let s = time(warmup, iters, move || {
+            let batch = prefetch
+                .next_batch()
+                .unwrap()
+                .expect("prefetcher starved");
+            trainer.step_batch(&batch).unwrap();
+            prefetch.recycle(batch);
+        });
+        report(&format!("train_device_prefetch_{label}"), &s);
+        rates.push(("device+prefetch", s.per_sec()));
+    }
+    table.close();
+
+    let base = rates[0].1;
+    println!("\ntrain-step throughput, {label}:");
+    for (i, (mode, r)) in rates.iter().enumerate() {
+        curve_row("trainer_throughput", label, i as f64, *r);
+        println!("  {mode:<16} {r:>9.0} steps/s   {:>5.2}x vs host", r / base);
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+    for (label, family, train_name) in CASES {
+        if manifest.get(train_name).is_err() {
+            println!("skipping {label}: {train_name} not lowered");
+            continue;
+        }
+        bench_case(label, family, train_name)?;
+    }
+    Ok(())
+}

@@ -45,7 +45,7 @@ fn main() -> Result<()> {
         0.01,
         2,
     )?;
-    trainer.init_target_from_params();
+    trainer.init_target_from_params()?;
     let server = ParameterServer::new(trainer.params().to_vec());
     let schedule = EpsilonSchedule::new(1.0, 0.05, 3000);
 

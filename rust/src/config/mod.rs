@@ -50,6 +50,11 @@ pub struct TrainConfig {
     pub min_replay: usize,
     pub samples_per_insert: f64,
 
+    /// Trainer publish cadence: push parameters to the server every K
+    /// train steps (K >= 1; the trainer's only steady-state host
+    /// download of its device-resident state, DESIGN.md §8).
+    pub publish_interval: u64,
+
     // bookkeeping
     pub seed: u64,
     pub artifacts_dir: String,
@@ -79,6 +84,7 @@ impl Default for TrainConfig {
             replay_size: 50_000,
             min_replay: 256,
             samples_per_insert: 4.0,
+            publish_interval: 1,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             log_dir: "logs".into(),
@@ -132,6 +138,7 @@ impl TrainConfig {
         get!(eps_decay_steps, get_u64);
         get!(eval_every_steps, get_u64);
         get!(params_sync_every, get_u64);
+        get!(publish_interval, get_u64);
         if let Some(v) = raw.get_f64(sec, "lr") {
             c.lr = v as f32;
         }
@@ -150,7 +157,18 @@ impl TrainConfig {
         if let Some(v) = raw.get_f64(sec, "samples_per_insert") {
             c.samples_per_insert = v;
         }
+        c.validate()?;
         Ok(c)
+    }
+
+    /// Cross-field / range checks shared by file and CLI loading.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.publish_interval >= 1,
+            "publish_interval must be >= 1 (got {})",
+            self.publish_interval
+        );
+        Ok(())
     }
 
     /// Apply `--key value` CLI overrides (after an optional config file).
@@ -166,7 +184,7 @@ impl TrainConfig {
             self.set(key, val)?;
             i += 2;
         }
-        Ok(())
+        self.validate()
     }
 
     pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
@@ -199,6 +217,10 @@ impl TrainConfig {
             "eval_every_steps" => self.eval_every_steps = val.parse()?,
             "eval_episodes" => self.eval_episodes = val.parse()?,
             "params_sync_every" => self.params_sync_every = val.parse()?,
+            "publish_interval" => {
+                self.publish_interval = val.parse()?;
+                self.validate()?;
+            }
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -256,5 +278,23 @@ mod tests {
     fn unknown_key_rejected() {
         let mut c = TrainConfig::default();
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn publish_interval_validated() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.publish_interval, 1);
+        c.set("publish_interval", "8").unwrap();
+        assert_eq!(c.publish_interval, 8);
+        assert!(c.set("publish_interval", "0").is_err());
+        let raw =
+            RawConfig::parse("[train]\npublish_interval = 0\n").unwrap();
+        assert!(TrainConfig::from_raw(&raw).is_err());
+        let raw =
+            RawConfig::parse("[train]\npublish_interval = 4\n").unwrap();
+        assert_eq!(
+            TrainConfig::from_raw(&raw).unwrap().publish_interval,
+            4
+        );
     }
 }

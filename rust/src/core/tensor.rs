@@ -47,6 +47,11 @@ impl HostTensor {
         HostTensor::f32(dims, vec![0.0; n])
     }
 
+    pub fn zeros_i32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        HostTensor::i32(dims, vec![0; n])
+    }
+
     pub fn len(&self) -> usize {
         match self.dtype {
             Dtype::F32 => self.data_f32.len(),
@@ -71,6 +76,11 @@ impl HostTensor {
     pub fn as_i32(&self) -> &[i32] {
         debug_assert_eq!(self.dtype, Dtype::I32);
         &self.data_i32
+    }
+
+    pub fn as_i32_mut(&mut self) -> &mut [i32] {
+        debug_assert_eq!(self.dtype, Dtype::I32);
+        &mut self.data_i32
     }
 
     pub fn into_f32(self) -> Vec<f32> {

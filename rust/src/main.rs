@@ -21,8 +21,8 @@ fn usage() -> ! {
          keys: system preset arch num_executors num_envs_per_executor\n\
          \x20     max_env_steps lr tau n_step eps_start eps_end\n\
          \x20     eps_decay_steps noise_sigma replay_size min_replay\n\
-         \x20     samples_per_insert seed artifacts_dir log_dir\n\
-         \x20     eval_every_steps eval_episodes"
+         \x20     samples_per_insert publish_interval seed artifacts_dir\n\
+         \x20     log_dir eval_every_steps eval_episodes params_sync_every"
     );
     std::process::exit(2);
 }

@@ -1,11 +1,16 @@
 //! The PJRT engine: compile HLO-text artifacts once, execute repeatedly.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::core::{Dtype, HostTensor};
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// One-shot latch for the [`Artifact::call_device`] tuple-output
+/// fallback warning, so a degraded runtime logs once, not per step.
+static UNTUPLE_FALLBACK_WARNED: AtomicBool = AtomicBool::new(false);
 
 /// A compiled artifact: PJRT executable + its manifest spec.
 pub struct Artifact {
@@ -13,8 +18,9 @@ pub struct Artifact {
     exe: xla::PjRtLoadedExecutable,
 }
 
-/// Argument to [`Artifact::call_mixed`]: host tensor (uploaded per call)
-/// or an already-resident device buffer (e.g. cached parameters).
+/// Argument to [`Artifact::call_mixed`] / [`Artifact::call_device`]:
+/// host tensor (uploaded per call) or an already-resident device buffer
+/// (e.g. cached executor parameters, the trainer's state buffers).
 pub enum Arg<'a> {
     Host(&'a HostTensor),
     Dev(&'a xla::PjRtBuffer),
@@ -23,7 +29,9 @@ pub enum Arg<'a> {
 impl Artifact {
     /// Upload a host tensor once and keep it on device — used by
     /// executors to cache the (rarely changing) parameter vector so the
-    /// acting hot path skips a ~P*4-byte upload per environment step.
+    /// acting hot path skips a ~P*4-byte upload per environment step,
+    /// and by the trainer to seed its device-resident
+    /// `(params, target, opt)` state (DESIGN.md §8).
     pub fn upload(&self, t: &HostTensor, dims: &[usize]) -> Result<xla::PjRtBuffer> {
         let client = self.exe.client();
         let buf = match t.dtype {
@@ -37,8 +45,9 @@ impl Artifact {
         buf.map_err(|e| anyhow::anyhow!("upload: {e:?}"))
     }
 
-    /// Execute with a mix of device-resident and host arguments.
-    pub fn call_mixed(&self, inputs: &[Arg]) -> Result<Vec<HostTensor>> {
+    /// Run the executable over mixed args; returns the raw per-device
+    /// output buffers (device 0) without fetching anything to the host.
+    fn execute_mixed(&self, inputs: &[Arg]) -> Result<Vec<xla::PjRtBuffer>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: got {} inputs, expected {}",
@@ -62,11 +71,30 @@ impl Artifact {
                 Arg::Dev(b) => refs.push(b),
             }
         }
-        let bufs = self
+        let mut bufs = self
             .exe
             .execute_b(&refs)
             .map_err(|e| anyhow::anyhow!("{}: execute_b: {e:?}", self.spec.name))?;
-        let result = bufs[0][0]
+        if bufs.is_empty() {
+            bail!("{}: execute_b returned no device results", self.spec.name);
+        }
+        Ok(bufs.swap_remove(0))
+    }
+
+    /// Execute with a mix of device-resident and host arguments,
+    /// fetching every output to the host.
+    pub fn call_mixed(&self, inputs: &[Arg]) -> Result<Vec<HostTensor>> {
+        let outs = self.execute_mixed(inputs)?;
+        // untupled layout: one buffer per declared output
+        if outs.len() == self.spec.outputs.len() && outs.len() != 1 {
+            return outs
+                .iter()
+                .enumerate()
+                .map(|(i, b)| self.to_host(b, i))
+                .collect();
+        }
+        // single root-tuple buffer
+        let result = outs[0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("{}: fetch: {e:?}", self.spec.name))?;
         let parts = result.to_tuple()?;
@@ -78,6 +106,82 @@ impl Artifact {
             .zip(&self.spec.outputs)
             .map(|(lit, spec)| from_literal(&lit, spec.dtype, spec.dims.clone()))
             .collect()
+    }
+
+    /// Execute with device outputs: returns one `PjRtBuffer` per
+    /// declared output, in spec order, WITHOUT a host round-trip — so a
+    /// caller can feed step `k`'s outputs straight back as `Arg::Dev`
+    /// inputs of step `k+1` (the trainer's device-resident state loop,
+    /// DESIGN.md §8). Fetch individual outputs with
+    /// [`Artifact::to_host`] when a host view is actually needed
+    /// (publish ticks, checkpoints, the loss scalar).
+    ///
+    /// PJRT untuples the root tuple into per-output buffers. If the
+    /// runtime instead hands back a single tuple buffer, this degrades
+    /// to a host untuple + re-upload (correct, but it pays the
+    /// round-trip this path exists to avoid) and warns once.
+    ///
+    /// Caveat: for an artifact declaring exactly ONE output the two
+    /// layouts are indistinguishable here (one buffer either way), so
+    /// a degraded runtime's 1-tuple buffer would be returned as-is.
+    /// Callers feeding buffers back (the trainer) require >= 4 outputs,
+    /// so this ambiguity is unreachable on the state loop.
+    pub fn call_device(&self, inputs: &[Arg]) -> Result<Vec<xla::PjRtBuffer>> {
+        let outs = self.execute_mixed(inputs)?;
+        if outs.len() == self.spec.outputs.len() {
+            return Ok(outs);
+        }
+        if outs.len() != 1 {
+            bail!(
+                "{}: got {} output buffers, expected {} (or 1 tuple)",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        if !UNTUPLE_FALLBACK_WARNED.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[runtime] WARNING: {}: PJRT returned a tuple buffer \
+                 instead of per-output buffers; device-resident callers \
+                 fall back to a host round-trip per step",
+                self.spec.name
+            );
+        }
+        let result = outs[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: fetch: {e:?}", self.spec.name))?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}: output arity mismatch", self.spec.name);
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| {
+                let t = from_literal(&lit, spec.dtype, spec.dims.clone())?;
+                self.upload(&t, &spec.dims)
+            })
+            .collect()
+    }
+
+    /// Fetch one [`Artifact::call_device`] output buffer to the host,
+    /// typed/shaped by declared output `out_index`.
+    pub fn to_host(
+        &self,
+        buf: &xla::PjRtBuffer,
+        out_index: usize,
+    ) -> Result<HostTensor> {
+        let spec = self.spec.outputs.get(out_index).with_context(|| {
+            format!(
+                "{}: no output {out_index} (have {})",
+                self.spec.name,
+                self.spec.outputs.len()
+            )
+        })?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: fetch: {e:?}", self.spec.name))?;
+        from_literal(&lit, spec.dtype, spec.dims.clone())
     }
     /// Execute with type/shape-checked host tensors.
     pub fn call(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {

@@ -1,0 +1,456 @@
+//! Batch assembly for the trainer hot path: sampled replay items →
+//! the fixed-shape input tensors the train artifact expects.
+//!
+//! The seed trainer rebuilt every batch tensor from freshly allocated
+//! `Vec`s each step. Here assembly writes into a reusable
+//! [`BatchArena`] of preallocated tensors instead (zero steady-state
+//! allocation), and the [`BatchAssembler`] owning the per-family
+//! layout logic is a standalone object so the same code runs inline in
+//! [`crate::systems::Trainer::step`] or on a
+//! [`crate::systems::BatchPrefetcher`] thread (DESIGN.md §8).
+
+use anyhow::{ensure, Result};
+
+use crate::core::{Dtype, HostTensor};
+use crate::replay::Item;
+use crate::rng::Rng;
+use crate::runtime::ArtifactSpec;
+use crate::systems::Family;
+
+/// Reusable storage for one assembled batch: the train artifact's
+/// input tensors (batch portion only — state, lr and tau are the
+/// trainer's own). Starts empty; [`BatchAssembler::assemble_into`]
+/// (re)allocates it lazily on first use or layout change, then reuses
+/// the buffers on every later call.
+#[derive(Default)]
+pub struct BatchArena {
+    tensors: Vec<HostTensor>,
+}
+
+impl BatchArena {
+    /// Rebuild an arena around tensors handed back by a consumer (the
+    /// prefetcher's recycle path); mismatched layouts are detected and
+    /// replaced at the next `assemble_into`.
+    pub fn from_tensors(tensors: Vec<HostTensor>) -> Self {
+        BatchArena { tensors }
+    }
+
+    /// The assembled batch, in artifact input order.
+    pub fn tensors(&self) -> &[HostTensor] {
+        &self.tensors
+    }
+
+    /// Take ownership of the assembled batch (to send across a
+    /// channel); pair with [`BatchArena::from_tensors`] to recycle.
+    pub fn into_tensors(self) -> Vec<HostTensor> {
+        self.tensors
+    }
+
+    /// Reallocate only when the held tensors don't match `layout`.
+    fn ensure_layout(&mut self, layout: &[(Dtype, Vec<usize>)]) {
+        let matches = self.tensors.len() == layout.len()
+            && self
+                .tensors
+                .iter()
+                .zip(layout)
+                .all(|(t, (d, dims))| t.dtype == *d && &t.dims == dims);
+        if matches {
+            return;
+        }
+        self.tensors = layout
+            .iter()
+            .map(|(d, dims)| match d {
+                Dtype::F32 => HostTensor::zeros_f32(dims.clone()),
+                Dtype::I32 => HostTensor::zeros_i32(dims.clone()),
+            })
+            .collect();
+    }
+}
+
+/// Copy one item's row into batch slot `b` of a `[B, ...]` tensor.
+fn fill_f32(t: &mut HostTensor, b: usize, row: &[f32]) -> Result<()> {
+    let r = t.len() / t.dims[0];
+    ensure!(
+        row.len() == r,
+        "batch item field len {} != expected {r}",
+        row.len()
+    );
+    t.as_f32_mut()[b * r..(b + 1) * r].copy_from_slice(row);
+    Ok(())
+}
+
+/// [`fill_f32`] for i32 tensors (discrete joint actions).
+fn fill_i32(t: &mut HostTensor, b: usize, row: &[i32]) -> Result<()> {
+    let r = t.len() / t.dims[0];
+    ensure!(
+        row.len() == r,
+        "batch item field len {} != expected {r}",
+        row.len()
+    );
+    t.as_i32_mut()[b * r..(b + 1) * r].copy_from_slice(row);
+    Ok(())
+}
+
+/// Turns sampled replay items into the train artifact's batch inputs.
+///
+/// Owns the per-family batch layout, the preset dims (read once from
+/// the artifact spec) and the DIAL channel-noise generator. Cheap to
+/// construct; hold one per consumer thread (the trainer's inline path
+/// and the prefetch thread each own one — cloned or seeded
+/// identically, so the two paths draw the same DIAL noise sequence).
+#[derive(Clone)]
+pub struct BatchAssembler {
+    family: Family,
+    batch: usize,
+    n_agents: usize,
+    seq_len: usize,
+    /// per-family tensor layout, computed once (checked per call
+    /// against the arena without allocating)
+    layout: Vec<(Dtype, Vec<usize>)>,
+    rng: Rng, // DIAL channel noise
+}
+
+impl BatchAssembler {
+    /// Build an assembler for `family` batches, reading the preset
+    /// dims from a train artifact's spec.
+    pub fn new(
+        family: Family,
+        spec: &ArtifactSpec,
+        seed: u64,
+    ) -> Result<BatchAssembler> {
+        let batch = spec.meta_usize("batch")?;
+        let n_agents = spec.meta_usize("n_agents")?;
+        let seq_len = spec.meta_usize("seq_len")?;
+        let layout = layout_for(
+            family,
+            batch,
+            n_agents,
+            spec.meta_usize("obs_dim")?,
+            spec.meta_usize("act_dim")?,
+            spec.meta_usize("state_dim")?,
+            seq_len,
+            spec.meta_usize("msg_dim")?,
+        );
+        Ok(BatchAssembler {
+            family,
+            batch,
+            n_agents,
+            seq_len,
+            layout,
+            rng: Rng::new(seed),
+        })
+    }
+
+    /// Batch size the artifact was lowered at (items per assembly).
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Assemble `items` into `arena` (reallocating it only on first
+    /// use or layout change). After `Ok(())`, `arena.tensors()` holds
+    /// the artifact's batch inputs in order.
+    pub fn assemble_into(
+        &mut self,
+        items: &[Item],
+        arena: &mut BatchArena,
+    ) -> Result<()> {
+        ensure!(items.len() == self.batch, "short batch: {}", items.len());
+        arena.ensure_layout(&self.layout);
+        let ts = &mut arena.tensors;
+        match self.family {
+            Family::DqnFf => {
+                for (b, it) in items.iter().enumerate() {
+                    let t = it.as_transition();
+                    fill_f32(&mut ts[0], b, &t.obs)?;
+                    fill_i32(&mut ts[1], b, &t.actions_disc)?;
+                    fill_f32(&mut ts[2], b, &t.rewards)?;
+                    ts[3].as_f32_mut()[b] = t.discount;
+                    fill_f32(&mut ts[4], b, &t.next_obs)?;
+                }
+            }
+            Family::ValueDecomp => {
+                for (b, it) in items.iter().enumerate() {
+                    let t = it.as_transition();
+                    fill_f32(&mut ts[0], b, &t.obs)?;
+                    fill_f32(&mut ts[1], b, &t.state)?;
+                    fill_i32(&mut ts[2], b, &t.actions_disc)?;
+                    // team reward: env replicates the shared reward
+                    ensure!(!t.rewards.is_empty(), "transition without rewards");
+                    ts[3].as_f32_mut()[b] = t.rewards[0];
+                    ts[4].as_f32_mut()[b] = t.discount;
+                    fill_f32(&mut ts[5], b, &t.next_obs)?;
+                    fill_f32(&mut ts[6], b, &t.next_state)?;
+                }
+            }
+            Family::Ddpg => {
+                for (b, it) in items.iter().enumerate() {
+                    let t = it.as_transition();
+                    fill_f32(&mut ts[0], b, &t.obs)?;
+                    fill_f32(&mut ts[1], b, &t.actions_cont)?;
+                    fill_f32(&mut ts[2], b, &t.rewards)?;
+                    ts[3].as_f32_mut()[b] = t.discount;
+                    fill_f32(&mut ts[4], b, &t.next_obs)?;
+                }
+            }
+            Family::DqnRec | Family::Dial => {
+                let (t_len, n) = (self.seq_len, self.n_agents);
+                for (b, it) in items.iter().enumerate() {
+                    let sq = it.as_sequence();
+                    ensure!(sq.t == t_len, "sequence length mismatch");
+                    fill_f32(&mut ts[0], b, &sq.obs)?;
+                    fill_i32(&mut ts[1], b, &sq.actions)?;
+                    if self.family == Family::Dial {
+                        // team reward: one shared scalar per step
+                        ensure!(
+                            sq.rewards.len() == t_len * n,
+                            "sequence rewards len mismatch"
+                        );
+                        let rew = ts[2].as_f32_mut();
+                        for step in 0..t_len {
+                            rew[b * t_len + step] = sq.rewards[step * n];
+                        }
+                    } else {
+                        fill_f32(&mut ts[2], b, &sq.rewards)?;
+                    }
+                    fill_f32(&mut ts[3], b, &sq.discounts)?;
+                    fill_f32(&mut ts[4], b, &sq.mask)?;
+                }
+                if self.family == Family::Dial {
+                    for x in ts[5].as_f32_mut() {
+                        *x = self.rng.normal_f32();
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The per-family batch tensor layout, in artifact input order
+/// (`b` batch, `n` agents, `o` obs dim, `a` act dim, `s` state dim,
+/// `t` sequence length, `m` message dim).
+#[allow(clippy::too_many_arguments)]
+fn layout_for(
+    family: Family,
+    b: usize,
+    n: usize,
+    o: usize,
+    a: usize,
+    s: usize,
+    t: usize,
+    m: usize,
+) -> Vec<(Dtype, Vec<usize>)> {
+    match family {
+        Family::DqnFf => vec![
+            (Dtype::F32, vec![b, n, o]),
+            (Dtype::I32, vec![b, n]),
+            (Dtype::F32, vec![b, n]),
+            (Dtype::F32, vec![b]),
+            (Dtype::F32, vec![b, n, o]),
+        ],
+        Family::ValueDecomp => vec![
+            (Dtype::F32, vec![b, n, o]),
+            (Dtype::F32, vec![b, s]),
+            (Dtype::I32, vec![b, n]),
+            (Dtype::F32, vec![b]),
+            (Dtype::F32, vec![b]),
+            (Dtype::F32, vec![b, n, o]),
+            (Dtype::F32, vec![b, s]),
+        ],
+        Family::Ddpg => vec![
+            (Dtype::F32, vec![b, n, o]),
+            (Dtype::F32, vec![b, n, a]),
+            (Dtype::F32, vec![b, n]),
+            (Dtype::F32, vec![b]),
+            (Dtype::F32, vec![b, n, o]),
+        ],
+        Family::DqnRec => vec![
+            (Dtype::F32, vec![b, t + 1, n, o]),
+            (Dtype::I32, vec![b, t, n]),
+            (Dtype::F32, vec![b, t, n]),
+            (Dtype::F32, vec![b, t]),
+            (Dtype::F32, vec![b, t]),
+        ],
+        Family::Dial => vec![
+            (Dtype::F32, vec![b, t + 1, n, o]),
+            (Dtype::I32, vec![b, t, n]),
+            (Dtype::F32, vec![b, t]),
+            (Dtype::F32, vec![b, t]),
+            (Dtype::F32, vec![b, t]),
+            (Dtype::F32, vec![b, t + 1, n, m]),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{Sequence, Transition};
+    use std::collections::HashMap;
+
+    /// A synthetic train-artifact spec carrying only the meta dims the
+    /// assembler reads — no PJRT involved.
+    fn spec(dims: &[(&str, usize)]) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "test_train".into(),
+            file: String::new(),
+            inputs: vec![],
+            outputs: vec![],
+            meta: dims
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect::<HashMap<_, _>>(),
+            inits: vec![],
+        }
+    }
+
+    fn ff_spec() -> ArtifactSpec {
+        spec(&[
+            ("batch", 2),
+            ("n_agents", 2),
+            ("obs_dim", 3),
+            ("act_dim", 4),
+            ("state_dim", 5),
+            ("seq_len", 0),
+            ("msg_dim", 0),
+        ])
+    }
+
+    fn transition(v: f32) -> Item {
+        Item::Transition(Transition {
+            obs: vec![v; 6],
+            state: vec![v + 0.5; 5],
+            actions_disc: vec![1, 2],
+            rewards: vec![v, -v],
+            discount: 0.9,
+            next_obs: vec![v + 1.0; 6],
+            next_state: vec![v + 1.5; 5],
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn dqnff_layout_and_values() {
+        let mut asm =
+            BatchAssembler::new(Family::DqnFf, &ff_spec(), 0).unwrap();
+        assert_eq!(asm.batch_size(), 2);
+        let mut arena = BatchArena::default();
+        let items = vec![transition(1.0), transition(2.0)];
+        asm.assemble_into(&items, &mut arena).unwrap();
+        let ts = arena.tensors();
+        assert_eq!(ts.len(), 5);
+        assert_eq!(ts[0].dims, vec![2, 2, 3]);
+        assert_eq!(ts[0].as_f32()[..6], [1.0; 6]);
+        assert_eq!(ts[0].as_f32()[6..], [2.0; 6]);
+        assert_eq!(ts[1].as_i32(), &[1, 2, 1, 2]);
+        assert_eq!(ts[2].as_f32(), &[1.0, -1.0, 2.0, -2.0]);
+        assert_eq!(ts[3].as_f32(), &[0.9, 0.9]);
+        assert_eq!(ts[4].as_f32()[..6], [2.0; 6]);
+    }
+
+    #[test]
+    fn arena_reuses_allocations() {
+        let mut asm =
+            BatchAssembler::new(Family::DqnFf, &ff_spec(), 0).unwrap();
+        let mut arena = BatchArena::default();
+        let items = vec![transition(1.0), transition(2.0)];
+        asm.assemble_into(&items, &mut arena).unwrap();
+        let ptr0 = arena.tensors()[0].as_f32().as_ptr();
+        asm.assemble_into(&items, &mut arena).unwrap();
+        assert_eq!(
+            ptr0,
+            arena.tensors()[0].as_f32().as_ptr(),
+            "second assembly reallocated the arena"
+        );
+    }
+
+    #[test]
+    fn value_decomp_team_reward_and_state() {
+        let mut asm =
+            BatchAssembler::new(Family::ValueDecomp, &ff_spec(), 0).unwrap();
+        let mut arena = BatchArena::default();
+        let items = vec![transition(1.0), transition(2.0)];
+        asm.assemble_into(&items, &mut arena).unwrap();
+        let ts = arena.tensors();
+        assert_eq!(ts.len(), 7);
+        assert_eq!(ts[1].dims, vec![2, 5]);
+        assert_eq!(ts[1].as_f32()[..5], [1.5; 5]);
+        // team reward = rewards[0]
+        assert_eq!(ts[3].as_f32(), &[1.0, 2.0]);
+        assert_eq!(ts[6].as_f32()[5..], [3.5; 5]);
+    }
+
+    fn seq_spec() -> ArtifactSpec {
+        spec(&[
+            ("batch", 1),
+            ("n_agents", 2),
+            ("obs_dim", 3),
+            ("act_dim", 4),
+            ("state_dim", 0),
+            ("seq_len", 2),
+            ("msg_dim", 2),
+        ])
+    }
+
+    fn sequence() -> Item {
+        Item::Sequence(Sequence {
+            t: 2,
+            obs: (0..18).map(|i| i as f32).collect(), // (T+1)*N*O
+            actions: vec![0, 1, 2, 3],                // T*N
+            rewards: vec![5.0, 6.0, 7.0, 8.0],        // T*N
+            discounts: vec![1.0, 0.0],
+            mask: vec![1.0, 1.0],
+        })
+    }
+
+    #[test]
+    fn dial_gathers_team_reward_and_draws_noise() {
+        let mut asm =
+            BatchAssembler::new(Family::Dial, &seq_spec(), 7).unwrap();
+        let mut arena = BatchArena::default();
+        asm.assemble_into(&[sequence()], &mut arena).unwrap();
+        let ts = arena.tensors();
+        assert_eq!(ts.len(), 6);
+        // team reward: rewards[step * n]
+        assert_eq!(ts[2].as_f32(), &[5.0, 7.0]);
+        assert_eq!(ts[5].dims, vec![1, 3, 2, 2]);
+        let noise0 = ts[5].as_f32().to_vec();
+        assert!(noise0.iter().any(|x| *x != 0.0), "noise not drawn");
+        asm.assemble_into(&[sequence()], &mut arena).unwrap();
+        assert_ne!(
+            arena.tensors()[5].as_f32(),
+            &noise0[..],
+            "noise must advance between batches"
+        );
+    }
+
+    #[test]
+    fn recurrent_keeps_per_agent_rewards() {
+        let mut asm =
+            BatchAssembler::new(Family::DqnRec, &seq_spec(), 0).unwrap();
+        let mut arena = BatchArena::default();
+        asm.assemble_into(&[sequence()], &mut arena).unwrap();
+        let ts = arena.tensors();
+        assert_eq!(ts.len(), 5);
+        assert_eq!(ts[2].as_f32(), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(ts[3].as_f32(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_short_batch_and_bad_rows() {
+        let mut asm =
+            BatchAssembler::new(Family::DqnFf, &ff_spec(), 0).unwrap();
+        let mut arena = BatchArena::default();
+        assert!(asm.assemble_into(&[transition(1.0)], &mut arena).is_err());
+        let bad = Item::Transition(Transition {
+            obs: vec![0.0; 2], // wrong [N*O]
+            actions_disc: vec![0, 0],
+            rewards: vec![0.0, 0.0],
+            next_obs: vec![0.0; 6],
+            ..Default::default()
+        });
+        assert!(asm
+            .assemble_into(&[bad, transition(1.0)], &mut arena)
+            .is_err());
+    }
+}

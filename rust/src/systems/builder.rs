@@ -225,7 +225,7 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
 
     let mut program = Program::new();
 
-    // --- trainer node ---
+    // --- trainer node (device-resident + prefetched, DESIGN.md §8) ---
     {
         let cfg = cfg.clone();
         let table = table.clone();
@@ -247,19 +247,32 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
                     cfg.tau,
                     cfg.seed ^ 0x77aa,
                 )?;
-                trainer.init_target_from_params();
+                trainer.set_publish_interval(cfg.publish_interval);
+                trainer.init_target_from_params()?;
                 server.push(trainer.params());
+                // sample+assemble runs on a prefetch thread; only plain
+                // HostTensors cross the channel (no PJRT handle leaves
+                // this thread — the §2 engine-per-thread rule holds)
+                let prefetch = trainer.spawn_prefetcher(table.clone(), 2);
                 while !stop.is_stopped() {
-                    match trainer.step_and_publish(&table, &server)? {
-                        None => break, // table closed
-                        Some(_) => counters.add_train_step(),
-                    }
+                    // Ok(None) once the table closed (shutdown);
+                    // Err if assembly failed on the prefetch thread
+                    let Some(batch) = prefetch.next_batch()? else {
+                        break;
+                    };
+                    trainer.step_batch(&batch)?;
+                    prefetch.recycle(batch);
+                    counters.add_train_step();
+                    trainer.maybe_publish(&server)?;
                     if cfg.max_train_steps > 0
                         && trainer.stats.steps >= cfg.max_train_steps
                     {
                         break;
                     }
                 }
+                // the publish cadence may be mid-window at shutdown:
+                // flush the final parameters unconditionally
+                trainer.publish(&server)?;
                 Ok(())
             };
             if let Err(e) = run() {

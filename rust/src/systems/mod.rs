@@ -14,18 +14,28 @@
 //! (evaluation, B=1) and the batched [`VecExecutor`] driving a
 //! [`crate::env::VecEnv`] with one policy call per vector step
 //! (DESIGN.md §6).
+//!
+//! The trainer hot path (DESIGN.md §8) is device-resident and
+//! pipelined: [`Trainer`] keeps `(params, target, opt)` in PJRT
+//! buffers across steps, a [`BatchAssembler`] writes sampled items
+//! into a reusable [`BatchArena`], and a [`BatchPrefetcher`] thread
+//! assembles batch `k+1` while step `k` executes.
 
 #![warn(missing_docs)]
 
+mod assemble;
 mod builder;
 mod executor;
+mod prefetch;
 mod trainer;
 
+pub use assemble::{BatchArena, BatchAssembler};
 pub use builder::{
     check_artifacts, env_for_preset, eval_episode, train, EvalPoint,
     TrainResult,
 };
 pub use executor::{ActorState, Executor, VecExecutor};
+pub use prefetch::BatchPrefetcher;
 pub use trainer::{Trainer, TrainerStats};
 
 use anyhow::{bail, Result};

@@ -1,0 +1,221 @@
+//! Batch prefetching: sample + assemble on a dedicated thread so batch
+//! `k+1` is built while the train artifact executes step `k`
+//! (DESIGN.md §8).
+//!
+//! Only plain [`HostTensor`]s cross the channel — the prefetch thread
+//! owns no PJRT engine, so the engine-per-thread rule (DESIGN.md §2)
+//! is preserved: uploads still happen on the trainer's thread, inside
+//! the artifact call. A recycle channel hands consumed batches back to
+//! the prefetcher, so the steady state allocates nothing.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::core::HostTensor;
+use crate::replay::ItemSource;
+use crate::systems::{BatchArena, BatchAssembler};
+
+/// Handle to a trainer-side prefetch thread.
+///
+/// The thread runs `sample → assemble → send` until its replay source
+/// closes (`sample_batch` returns `None`), assembly fails (the error
+/// is forwarded through the channel, not swallowed), or the consumer
+/// drops this handle. Bounded depth keeps at most `depth` assembled
+/// batches in flight, so prefetched data is never more than `depth`
+/// batches staler than the replay table.
+pub struct BatchPrefetcher {
+    full: mpsc::Receiver<Result<Vec<HostTensor>>>,
+    empty: mpsc::Sender<Vec<HostTensor>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl BatchPrefetcher {
+    /// Spawn the prefetch thread over `source`. `assembler` moves onto
+    /// the thread (seed it like the trainer's inline assembler — or use
+    /// [`crate::systems::Trainer::spawn_prefetcher`], which clones it —
+    /// for path-independent DIAL noise); `depth >= 1` bounds the
+    /// in-flight batch count.
+    pub fn spawn<S>(
+        source: Arc<S>,
+        mut assembler: BatchAssembler,
+        depth: usize,
+    ) -> BatchPrefetcher
+    where
+        S: ItemSource + Send + Sync + 'static,
+    {
+        let (full_tx, full_rx) = mpsc::sync_channel(depth.max(1));
+        let (empty_tx, empty_rx) = mpsc::channel::<Vec<HostTensor>>();
+        let handle = std::thread::Builder::new()
+            .name("trainer-prefetch".into())
+            .spawn(move || {
+                let batch = assembler.batch_size();
+                loop {
+                    // blocks on replay flow control; unblocked by close()
+                    let Some(items) = source.sample_batch(batch) else {
+                        break;
+                    };
+                    // reuse a recycled batch's allocations when available
+                    let mut arena = BatchArena::from_tensors(
+                        empty_rx.try_recv().unwrap_or_default(),
+                    );
+                    match assembler.assemble_into(&items, &mut arena) {
+                        Ok(()) => {
+                            // consumer gone -> stop prefetching
+                            if full_tx.send(Ok(arena.into_tensors())).is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            // surface the failure to the consumer — a
+                            // swallowed error would look like a clean
+                            // shutdown
+                            let _ = full_tx.send(Err(
+                                e.context("prefetch batch assembly")
+                            ));
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn trainer-prefetch thread");
+        BatchPrefetcher { full: full_rx, empty: empty_tx, handle: Some(handle) }
+    }
+
+    /// Next assembled batch, blocking until one is ready. `Ok(None)`
+    /// once the prefetch thread has exited cleanly (source closed) and
+    /// the channel drained; `Err` if assembly failed on the thread.
+    pub fn next_batch(&self) -> Result<Option<Vec<HostTensor>>> {
+        match self.full.recv() {
+            Ok(Ok(batch)) => Ok(Some(batch)),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Ok(None), // thread exited after a clean close
+        }
+    }
+
+    /// Hand a consumed batch back for allocation reuse.
+    pub fn recycle(&self, batch: Vec<HostTensor>) {
+        let _ = self.empty.send(batch);
+    }
+}
+
+impl Drop for BatchPrefetcher {
+    fn drop(&mut self) {
+        // Dropping `full` makes the thread's next send fail, so it
+        // exits after at most one more sample. Join only when already
+        // finished: a thread still blocked inside `sample_batch` on an
+        // open table is only unblocked by the table's `close()`, which
+        // the program supervisor owns — joining here could deadlock.
+        if let Some(h) = self.handle.take() {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::{Item, Table, Transition};
+    use crate::runtime::ArtifactSpec;
+    use crate::systems::Family;
+    use std::collections::HashMap;
+
+    fn ff_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "test_train".into(),
+            file: String::new(),
+            inputs: vec![],
+            outputs: vec![],
+            meta: [
+                ("batch", 2usize),
+                ("n_agents", 2),
+                ("obs_dim", 3),
+                ("act_dim", 4),
+                ("state_dim", 0),
+                ("seq_len", 0),
+                ("msg_dim", 0),
+            ]
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect::<HashMap<_, _>>(),
+            inits: vec![],
+        }
+    }
+
+    fn filled_table(n: usize) -> Arc<Table> {
+        let table = Arc::new(Table::uniform(64, 1, 0));
+        for i in 0..n {
+            table.insert(
+                Item::Transition(Transition {
+                    obs: vec![i as f32; 6],
+                    actions_disc: vec![0, 1],
+                    rewards: vec![1.0, 1.0],
+                    discount: 1.0,
+                    next_obs: vec![0.5; 6],
+                    ..Default::default()
+                }),
+                1.0,
+            );
+        }
+        table
+    }
+
+    #[test]
+    fn prefetches_batches_until_close() {
+        let table = filled_table(8);
+        let asm = BatchAssembler::new(Family::DqnFf, &ff_spec(), 0).unwrap();
+        let pf = BatchPrefetcher::spawn(table.clone(), asm, 2);
+        for _ in 0..5 {
+            let batch =
+                pf.next_batch().unwrap().expect("prefetcher starved");
+            assert_eq!(batch.len(), 5);
+            assert_eq!(batch[0].dims, vec![2, 2, 3]);
+            assert_eq!(batch[3].as_f32(), &[1.0, 1.0]);
+            pf.recycle(batch);
+        }
+        table.close();
+        // drain whatever was in flight; the stream must then end
+        while pf.next_batch().unwrap().is_some() {}
+    }
+
+    #[test]
+    fn closed_source_ends_stream() {
+        let table = filled_table(0);
+        table.close();
+        let asm = BatchAssembler::new(Family::DqnFf, &ff_spec(), 0).unwrap();
+        let pf = BatchPrefetcher::spawn(table, asm, 1);
+        assert!(pf.next_batch().unwrap().is_none());
+    }
+
+    #[test]
+    fn assembly_failure_surfaces_as_error() {
+        // items with a wrong obs length: assembly must fail on the
+        // thread and the error must reach the consumer (not look like
+        // a clean shutdown)
+        let table = Arc::new(Table::uniform(8, 1, 0));
+        for _ in 0..4 {
+            table.insert(
+                Item::Transition(Transition {
+                    obs: vec![0.0; 2], // != n_agents * obs_dim
+                    actions_disc: vec![0, 1],
+                    rewards: vec![1.0, 1.0],
+                    discount: 1.0,
+                    next_obs: vec![0.5; 6],
+                    ..Default::default()
+                }),
+                1.0,
+            );
+        }
+        let asm = BatchAssembler::new(Family::DqnFf, &ff_spec(), 0).unwrap();
+        let pf = BatchPrefetcher::spawn(table.clone(), asm, 1);
+        assert!(pf.next_batch().is_err());
+        // after the failure the stream ends
+        assert!(pf.next_batch().unwrap().is_none());
+        table.close();
+    }
+}

@@ -1,9 +1,19 @@
 //! The trainer: Mava's multi-agent learner collection.
 //!
 //! Samples the replay table, assembles the fixed-shape batch the train
-//! artifact expects, executes one fused train step (loss + clipped Adam +
-//! Polyak target update, a single HLO module) and publishes the updated
-//! parameters.
+//! artifact expects (through a reusable [`BatchArena`], or a
+//! [`crate::systems::BatchPrefetcher`] thread), executes one fused
+//! train step (loss + clipped Adam + Polyak target update, a single
+//! HLO module) and publishes the updated parameters every
+//! `publish_interval` steps.
+//!
+//! In the default *device-resident* mode the training state
+//! `(params [P], target [P], opt [1+2P])` lives in PJRT buffers across
+//! steps: each step feeds the previous step's output buffers straight
+//! back as [`Arg::Dev`] inputs, so the steady state uploads only the
+//! batch and downloads only the loss — the ~5P-float state round-trip
+//! the seed trainer paid per step is gone (DESIGN.md §8). Host copies
+//! are refreshed only on publish ticks and checkpoints.
 
 use std::rc::Rc;
 
@@ -11,10 +21,9 @@ use anyhow::{Context, Result};
 
 use crate::core::HostTensor;
 use crate::params::ParameterServer;
-use crate::replay::{Item, ItemSource};
-use crate::rng::Rng;
-use crate::runtime::Artifact;
-use crate::systems::Family;
+use crate::replay::ItemSource;
+use crate::runtime::{Arg, Artifact};
+use crate::systems::{BatchArena, BatchAssembler, BatchPrefetcher, Family};
 
 /// Progress counters the trainer exposes to supervisors and benches.
 #[derive(Clone, Copy, Debug, Default)]
@@ -25,32 +34,48 @@ pub struct TrainerStats {
     pub last_loss: f32,
 }
 
+/// Device-resident training state: the three buffers fed back into the
+/// train artifact every step without touching the host, plus the
+/// constant `lr`/`tau` scalars (uploaded once at construction).
+struct DeviceState {
+    params: xla::PjRtBuffer,
+    target: xla::PjRtBuffer,
+    opt: xla::PjRtBuffer,
+    lr: xla::PjRtBuffer,
+    tau: xla::PjRtBuffer,
+}
+
 /// The multi-agent learner: samples replay, runs the fused train-step
 /// artifact and publishes fresh parameters.
 pub struct Trainer {
-    family: Family,
     artifact: Rc<Artifact>,
+    // Host mirrors of the training state. Authoritative on the host
+    // path; on the device path they lag the device buffers and are
+    // refreshed on publish ticks, checkpoints and explicit syncs.
     params: HostTensor,
     target: HostTensor,
     opt: HostTensor,
+    /// `Some` = device-resident mode (the default).
+    dev: Option<DeviceState>,
+    params_mirror_fresh: bool,
+    /// covers the target + opt mirrors (downloaded only by checkpoints)
+    aux_mirror_fresh: bool,
     lr: HostTensor,
     tau: HostTensor,
-    rng: Rng, // DIAL channel noise
-    // batch dims from artifact meta
     batch: usize,
-    n_agents: usize,
-    obs_dim: usize,
-    act_dim: usize,
-    state_dim: usize,
-    seq_len: usize,
-    msg_dim: usize,
+    assembler: BatchAssembler,
+    arena: BatchArena,
+    /// `MAVA_TRACE_LOSS`, read once at construction (not per step).
+    trace: bool,
+    publish_every: u64,
+    last_published_step: u64,
     /// Progress counters (steps, last loss).
     pub stats: TrainerStats,
 }
 
 impl Trainer {
-    /// Build a trainer over a train-step artifact, starting from the
-    /// artifact's `params0`/`opt0` init blobs.
+    /// Build a device-resident trainer over a train-step artifact,
+    /// starting from the artifact's `params0`/`opt0` init blobs.
     pub fn new(
         family: Family,
         artifact: Rc<Artifact>,
@@ -60,44 +85,172 @@ impl Trainer {
         tau: f32,
         seed: u64,
     ) -> Result<Trainer> {
+        Self::build(family, artifact, params0, opt0, lr, tau, seed, true)
+    }
+
+    /// Build a trainer that keeps its state on the host and re-uploads
+    /// it every step (the seed behaviour) — the baseline
+    /// `benches/trainer_throughput.rs` measures the device path
+    /// against.
+    pub fn new_host_resident(
+        family: Family,
+        artifact: Rc<Artifact>,
+        params0: Vec<f32>,
+        opt0: Vec<f32>,
+        lr: f32,
+        tau: f32,
+        seed: u64,
+    ) -> Result<Trainer> {
+        Self::build(family, artifact, params0, opt0, lr, tau, seed, false)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        family: Family,
+        artifact: Rc<Artifact>,
+        params0: Vec<f32>,
+        opt0: Vec<f32>,
+        lr: f32,
+        tau: f32,
+        seed: u64,
+        device_resident: bool,
+    ) -> Result<Trainer> {
         let spec = &artifact.spec;
         let p = spec.meta_usize("params")?;
         anyhow::ensure!(params0.len() == p, "params0 len mismatch");
         anyhow::ensure!(opt0.len() == 1 + 2 * p, "opt0 len mismatch");
-        Ok(Trainer {
-            family,
+        anyhow::ensure!(
+            spec.inputs.len() >= 5 && spec.outputs.len() >= 4,
+            "{}: train artifact must take (params, target, opt, batch..., \
+             lr, tau) and return (params', target', opt', loss, ...)",
+            spec.name
+        );
+        let assembler = BatchAssembler::new(family, spec, seed)?;
+        let mut t = Trainer {
             batch: spec.meta_usize("batch")?,
-            n_agents: spec.meta_usize("n_agents")?,
-            obs_dim: spec.meta_usize("obs_dim")?,
-            act_dim: spec.meta_usize("act_dim")?,
-            state_dim: spec.meta_usize("state_dim")?,
-            seq_len: spec.meta_usize("seq_len")?,
-            msg_dim: spec.meta_usize("msg_dim")?,
             artifact,
             params: HostTensor::f32(vec![p], params0),
-            target: HostTensor::f32(vec![p], opt_target_init(p)),
+            target: HostTensor::f32(vec![p], vec![0.0; p]),
             opt: HostTensor::f32(vec![1 + 2 * p], opt0),
+            dev: None,
+            params_mirror_fresh: true,
+            aux_mirror_fresh: true,
             lr: HostTensor::scalar_f32(lr),
             tau: HostTensor::scalar_f32(tau),
-            rng: Rng::new(seed),
+            assembler,
+            arena: BatchArena::default(),
+            trace: std::env::var_os("MAVA_TRACE_LOSS").is_some(),
+            publish_every: 1,
+            last_published_step: 0,
             stats: TrainerStats::default(),
+        };
+        if device_resident {
+            t.dev = Some(t.upload_state()?);
+        }
+        Ok(t)
+    }
+
+    /// Upload the host mirrors as fresh device state (construction,
+    /// checkpoint restore). `lr`/`tau` are the train artifact's last
+    /// two inputs.
+    fn upload_state(&self) -> Result<DeviceState> {
+        let ins = &self.artifact.spec.inputs;
+        let k = ins.len();
+        Ok(DeviceState {
+            params: self.artifact.upload(&self.params, &ins[0].dims)?,
+            target: self.artifact.upload(&self.target, &ins[1].dims)?,
+            opt: self.artifact.upload(&self.opt, &ins[2].dims)?,
+            lr: self.artifact.upload(&self.lr, &ins[k - 2].dims)?,
+            tau: self.artifact.upload(&self.tau, &ins[k - 1].dims)?,
         })
     }
 
-    /// Target network starts as a copy of the online parameters.
-    pub fn init_target_from_params(&mut self) {
-        let p = self.params.as_f32().to_vec();
-        self.target.as_f32_mut().copy_from_slice(&p);
+    /// Whether the training state lives in device buffers.
+    pub fn device_resident(&self) -> bool {
+        self.dev.is_some()
     }
 
-    /// Current online parameters (flat host view).
+    /// Publish to the parameter server every `every` steps (default 1).
+    /// The host download of the parameter vector happens only on those
+    /// ticks; values < 1 are clamped to 1.
+    pub fn set_publish_interval(&mut self, every: u64) {
+        self.publish_every = every.max(1);
+    }
+
+    /// Target network starts as a copy of the online parameters.
+    pub fn init_target_from_params(&mut self) -> Result<()> {
+        self.sync_mirrors_full()?;
+        let p = self.params.as_f32().to_vec();
+        self.target.as_f32_mut().copy_from_slice(&p);
+        if self.dev.is_none() {
+            return Ok(());
+        }
+        let buf = self
+            .artifact
+            .upload(&self.target, &self.artifact.spec.inputs[1].dims)?;
+        if let Some(dev) = &mut self.dev {
+            dev.target = buf;
+        }
+        Ok(())
+    }
+
+    /// Current online parameters (flat host view). On the device path
+    /// this is the copy as of the last publish / checkpoint / sync —
+    /// use [`Trainer::params_synced`] to force a download first.
     pub fn params(&self) -> &[f32] {
         self.params.as_f32()
+    }
+
+    /// Download the online parameters from the device (if stale) and
+    /// return the fresh host view.
+    pub fn params_synced(&mut self) -> Result<&[f32]> {
+        self.sync_params_mirror()?;
+        Ok(self.params.as_f32())
     }
 
     /// Batch size the train artifact was lowered at.
     pub fn batch_size(&self) -> usize {
         self.batch
+    }
+
+    /// Spawn a [`BatchPrefetcher`] thread assembling this trainer's
+    /// batches from `source`, for the pipelined loop
+    /// (`next_batch` → [`Trainer::step_batch`] → `recycle`). The
+    /// thread gets a clone of the trainer's internal assembler, so the
+    /// prefetched path continues the exact DIAL-noise sequence the
+    /// inline [`Trainer::step`] path would have drawn.
+    pub fn spawn_prefetcher<S>(
+        &self,
+        source: std::sync::Arc<S>,
+        depth: usize,
+    ) -> BatchPrefetcher
+    where
+        S: ItemSource + Send + Sync + 'static,
+    {
+        BatchPrefetcher::spawn(source, self.assembler.clone(), depth)
+    }
+
+    fn sync_params_mirror(&mut self) -> Result<()> {
+        if self.params_mirror_fresh {
+            return Ok(());
+        }
+        // stale mirrors only exist on the device path
+        let dev = self.dev.as_ref().expect("host path mirrors never stale");
+        self.params = self.artifact.to_host(&dev.params, 0)?;
+        self.params_mirror_fresh = true;
+        Ok(())
+    }
+
+    fn sync_mirrors_full(&mut self) -> Result<()> {
+        self.sync_params_mirror()?;
+        if self.aux_mirror_fresh {
+            return Ok(());
+        }
+        let dev = self.dev.as_ref().expect("host path mirrors never stale");
+        self.target = self.artifact.to_host(&dev.target, 1)?;
+        self.opt = self.artifact.to_host(&dev.opt, 2)?;
+        self.aux_mirror_fresh = true;
+        Ok(())
     }
 
     /// Run one training step on a batch sampled from `source` — a single
@@ -108,66 +261,147 @@ impl Trainer {
         let Some(items) = source.sample_batch(self.batch) else {
             return Ok(None);
         };
-        let inputs = self.assemble(&items)?;
-        if std::env::var_os("MAVA_TRACE_LOSS").is_some() {
-            for (i, t) in inputs.iter().enumerate() {
-                if t.dtype == crate::core::Dtype::F32 {
-                    let bad =
-                        t.as_f32().iter().filter(|x| !x.is_finite()).count();
-                    let mx = t
-                        .as_f32()
-                        .iter()
-                        .fold(0.0f32, |a, &b| a.max(b.abs()));
-                    if bad > 0 || self.stats.steps == 0 {
-                        eprintln!(
-                            "[trainer] input {i} dims {:?} nonfinite {bad} \
-                             max|x| {mx}",
-                            t.dims
-                        );
-                    }
-                }
-            }
+        let mut arena = std::mem::take(&mut self.arena);
+        let assembled = self.assembler.assemble_into(&items, &mut arena);
+        let stepped =
+            assembled.and_then(|()| self.step_batch(arena.tensors()));
+        self.arena = arena;
+        Ok(Some(stepped?))
+    }
+
+    /// Run one training step on an already-assembled batch (the
+    /// prefetch path: `inputs` comes from a
+    /// [`crate::systems::BatchPrefetcher`]).
+    pub fn step_batch(&mut self, inputs: &[HostTensor]) -> Result<f32> {
+        if self.trace {
+            trace_inputs(inputs, self.stats.steps);
         }
-        let mut refs: Vec<&HostTensor> =
-            vec![&self.params, &self.target, &self.opt];
-        refs.extend(inputs.iter());
-        refs.push(&self.lr);
-        refs.push(&self.tau);
-        let out = self
-            .artifact
-            .call(&refs)
-            .context("train artifact execution")?;
-        // move (not clone) the big state tensors out of the result
-        let mut it = out.into_iter();
-        self.params = it.next().unwrap();
-        self.target = it.next().unwrap();
-        self.opt = it.next().unwrap();
-        let out: Vec<HostTensor> = it.collect();
-        let loss = out[0].as_f32()[0];
-        self.stats.steps += 1;
+        let loss_t: HostTensor;
+        if let Some(mut dev) = self.dev.take() {
+            let outs = {
+                let mut args: Vec<Arg> = Vec::with_capacity(inputs.len() + 5);
+                args.push(Arg::Dev(&dev.params));
+                args.push(Arg::Dev(&dev.target));
+                args.push(Arg::Dev(&dev.opt));
+                for t in inputs {
+                    args.push(Arg::Host(t));
+                }
+                args.push(Arg::Dev(&dev.lr));
+                args.push(Arg::Dev(&dev.tau));
+                self.artifact.call_device(&args)
+            };
+            let outs = match outs {
+                Ok(o) => o,
+                Err(e) => {
+                    // the (unchanged) state stays resident for the caller
+                    self.dev = Some(dev);
+                    return Err(e)
+                        .context("train artifact execution (device path)");
+                }
+            };
+            let mut it = outs.into_iter();
+            dev.params = it.next().unwrap();
+            dev.target = it.next().unwrap();
+            dev.opt = it.next().unwrap();
+            let loss_buf = it.next().unwrap();
+            let fetched = self.artifact.to_host(&loss_buf, 3);
+            self.dev = Some(dev);
+            // the device state advanced even if the loss fetch failed:
+            // mark mirrors stale and count the step NOW, so the publish
+            // dedup and checkpoint counter stay in sync with the
+            // actually-applied updates
+            self.params_mirror_fresh = false;
+            self.aux_mirror_fresh = false;
+            self.stats.steps += 1;
+            loss_t = fetched?;
+        } else {
+            let mut refs: Vec<&HostTensor> =
+                Vec::with_capacity(inputs.len() + 5);
+            refs.push(&self.params);
+            refs.push(&self.target);
+            refs.push(&self.opt);
+            refs.extend(inputs.iter());
+            refs.push(&self.lr);
+            refs.push(&self.tau);
+            let out = self
+                .artifact
+                .call(&refs)
+                .context("train artifact execution")?;
+            // move (not clone) the big state tensors out of the result
+            let mut it = out.into_iter();
+            self.params = it.next().unwrap();
+            self.target = it.next().unwrap();
+            self.opt = it.next().unwrap();
+            loss_t = it.next().unwrap();
+            self.stats.steps += 1;
+        }
+        let loss = loss_t.as_f32()[0];
         self.stats.last_loss = loss;
-        if std::env::var_os("MAVA_TRACE_LOSS").is_some() {
+        if self.trace {
             eprintln!(
                 "[trainer] step {} losses {:?}",
                 self.stats.steps,
-                out[0].as_f32()
+                loss_t.as_f32()
             );
         }
         if !loss.is_finite() {
             eprintln!(
                 "[trainer] WARNING: non-finite loss at step {}: {:?}",
                 self.stats.steps,
-                out[0].as_f32()
+                loss_t.as_f32()
             );
         }
-        Ok(Some(loss))
+        Ok(loss)
+    }
+
+    /// Push the current parameters to `server` unless this step's
+    /// parameters were already pushed. Downloads the flat param vector
+    /// from the device first (the only steady-state host copy of the
+    /// training state). Returns whether a push happened.
+    pub fn publish(&mut self, server: &ParameterServer) -> Result<bool> {
+        if self.last_published_step == self.stats.steps {
+            return Ok(false);
+        }
+        self.sync_params_mirror()?;
+        server.push(self.params.as_f32());
+        self.last_published_step = self.stats.steps;
+        Ok(true)
+    }
+
+    /// [`Trainer::publish`], gated on the publish cadence: pushes only
+    /// when the step counter hits a multiple of `publish_interval`.
+    pub fn maybe_publish(&mut self, server: &ParameterServer) -> Result<bool> {
+        if self.stats.steps % self.publish_every != 0 {
+            return Ok(false);
+        }
+        self.publish(server)
+    }
+
+    /// Step and (subject to the publish cadence) publish to the
+    /// parameter server.
+    pub fn step_and_publish<S: ItemSource>(
+        &mut self,
+        source: &S,
+        server: &ParameterServer,
+    ) -> Result<Option<f32>> {
+        let r = self.step(source)?;
+        if r.is_some() {
+            self.maybe_publish(server)?;
+        }
+        Ok(r)
     }
 
     /// Persist the full training state (online + target params, Adam
     /// state, step counter) as a little-endian f32/u64 blob so long runs
-    /// survive restarts.
-    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+    /// survive restarts. On the device path this forces a download of
+    /// all three state tensors (the blob format — `MAVATRN1` — is
+    /// unchanged from the host-resident trainer).
+    pub fn save_checkpoint(
+        &mut self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<()> {
         use std::io::Write;
+        self.sync_mirrors_full()?;
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -177,16 +411,19 @@ impl Trainer {
         w.write_all(&self.stats.steps.to_le_bytes())?;
         for t in [&self.params, &self.target, &self.opt] {
             w.write_all(&(t.len() as u64).to_le_bytes())?;
-            for x in t.as_f32() {
-                w.write_all(&x.to_le_bytes())?;
-            }
+            // one bulk write per tensor, not one per element
+            w.write_all(f32_bytes(t.as_f32()))?;
         }
         Ok(())
     }
 
     /// Restore state saved by [`Trainer::save_checkpoint`]. Shapes must
-    /// match the artifact this trainer was built for.
-    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+    /// match the artifact this trainer was built for. On the device
+    /// path the restored state is re-uploaded into fresh buffers.
+    pub fn load_checkpoint(
+        &mut self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<()> {
         use std::io::Read;
         let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
@@ -203,161 +440,52 @@ impl Trainer {
                 "checkpoint tensor len {n} != expected {}",
                 t.len()
             );
-            let mut bytes = vec![0u8; n * 4];
-            r.read_exact(&mut bytes)?;
-            for (dst, c) in
-                t.as_f32_mut().iter_mut().zip(bytes.chunks_exact(4))
-            {
-                *dst = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-            }
+            // one bulk read straight into the tensor, not one per element
+            r.read_exact(f32_bytes_mut(t.as_f32_mut()))?;
+        }
+        self.params_mirror_fresh = true;
+        self.aux_mirror_fresh = true;
+        // the restored parameters have not been pushed anywhere yet
+        self.last_published_step = u64::MAX;
+        if self.dev.is_some() {
+            self.dev = Some(self.upload_state()?);
         }
         Ok(())
     }
+}
 
-    /// Step and publish to the parameter server.
-    pub fn step_and_publish<S: ItemSource>(
-        &mut self,
-        source: &S,
-        server: &ParameterServer,
-    ) -> Result<Option<f32>> {
-        let r = self.step(source)?;
-        if r.is_some() {
-            server.push(self.params());
-        }
-        Ok(r)
-    }
-
-    /// Assemble the artifact's batch inputs from sampled items.
-    fn assemble(&mut self, items: &[Item]) -> Result<Vec<HostTensor>> {
-        let (b, n, o, a, s) = (
-            self.batch,
-            self.n_agents,
-            self.obs_dim,
-            self.act_dim,
-            self.state_dim,
-        );
-        anyhow::ensure!(items.len() == b, "short batch: {}", items.len());
-        match self.family {
-            Family::DqnFf => {
-                let mut obs = Vec::with_capacity(b * n * o);
-                let mut act = Vec::with_capacity(b * n);
-                let mut rew = Vec::with_capacity(b * n);
-                let mut disc = Vec::with_capacity(b);
-                let mut next_obs = Vec::with_capacity(b * n * o);
-                for it in items {
-                    let t = it.as_transition();
-                    obs.extend_from_slice(&t.obs);
-                    act.extend_from_slice(&t.actions_disc);
-                    rew.extend_from_slice(&t.rewards);
-                    disc.push(t.discount);
-                    next_obs.extend_from_slice(&t.next_obs);
-                }
-                Ok(vec![
-                    HostTensor::f32(vec![b, n, o], obs),
-                    HostTensor::i32(vec![b, n], act),
-                    HostTensor::f32(vec![b, n], rew),
-                    HostTensor::f32(vec![b], disc),
-                    HostTensor::f32(vec![b, n, o], next_obs),
-                ])
-            }
-            Family::ValueDecomp => {
-                let mut obs = Vec::with_capacity(b * n * o);
-                let mut state = Vec::with_capacity(b * s);
-                let mut act = Vec::with_capacity(b * n);
-                let mut rew = Vec::with_capacity(b);
-                let mut disc = Vec::with_capacity(b);
-                let mut next_obs = Vec::with_capacity(b * n * o);
-                let mut next_state = Vec::with_capacity(b * s);
-                for it in items {
-                    let t = it.as_transition();
-                    obs.extend_from_slice(&t.obs);
-                    state.extend_from_slice(&t.state);
-                    act.extend_from_slice(&t.actions_disc);
-                    // team reward: env replicates the shared reward
-                    rew.push(t.rewards[0]);
-                    disc.push(t.discount);
-                    next_obs.extend_from_slice(&t.next_obs);
-                    next_state.extend_from_slice(&t.next_state);
-                }
-                Ok(vec![
-                    HostTensor::f32(vec![b, n, o], obs),
-                    HostTensor::f32(vec![b, s], state),
-                    HostTensor::i32(vec![b, n], act),
-                    HostTensor::f32(vec![b], rew),
-                    HostTensor::f32(vec![b], disc),
-                    HostTensor::f32(vec![b, n, o], next_obs),
-                    HostTensor::f32(vec![b, s], next_state),
-                ])
-            }
-            Family::Ddpg => {
-                let mut obs = Vec::with_capacity(b * n * o);
-                let mut act = Vec::with_capacity(b * n * a);
-                let mut rew = Vec::with_capacity(b * n);
-                let mut disc = Vec::with_capacity(b);
-                let mut next_obs = Vec::with_capacity(b * n * o);
-                for it in items {
-                    let t = it.as_transition();
-                    obs.extend_from_slice(&t.obs);
-                    act.extend_from_slice(&t.actions_cont);
-                    rew.extend_from_slice(&t.rewards);
-                    disc.push(t.discount);
-                    next_obs.extend_from_slice(&t.next_obs);
-                }
-                Ok(vec![
-                    HostTensor::f32(vec![b, n, o], obs),
-                    HostTensor::f32(vec![b, n, a], act),
-                    HostTensor::f32(vec![b, n], rew),
-                    HostTensor::f32(vec![b], disc),
-                    HostTensor::f32(vec![b, n, o], next_obs),
-                ])
-            }
-            Family::DqnRec | Family::Dial => {
-                let t_len = self.seq_len;
-                let mut obs = Vec::with_capacity(b * (t_len + 1) * n * o);
-                let mut act = Vec::with_capacity(b * t_len * n);
-                let mut rew_agents = Vec::with_capacity(b * t_len * n);
-                let mut rew_team = Vec::with_capacity(b * t_len);
-                let mut disc = Vec::with_capacity(b * t_len);
-                let mut mask = Vec::with_capacity(b * t_len);
-                for it in items {
-                    let sq = it.as_sequence();
-                    anyhow::ensure!(sq.t == t_len, "sequence length mismatch");
-                    obs.extend_from_slice(&sq.obs);
-                    act.extend_from_slice(&sq.actions);
-                    rew_agents.extend_from_slice(&sq.rewards);
-                    for step in 0..t_len {
-                        rew_team.push(sq.rewards[step * n]);
-                    }
-                    disc.extend_from_slice(&sq.discounts);
-                    mask.extend_from_slice(&sq.mask);
-                }
-                let mut out = vec![
-                    HostTensor::f32(vec![b, t_len + 1, n, o], obs),
-                    HostTensor::i32(vec![b, t_len, n], act),
-                ];
-                if self.family == Family::Dial {
-                    out.push(HostTensor::f32(vec![b, t_len], rew_team));
-                } else {
-                    out.push(HostTensor::f32(vec![b, t_len, n], rew_agents));
-                }
-                out.push(HostTensor::f32(vec![b, t_len], disc));
-                out.push(HostTensor::f32(vec![b, t_len], mask));
-                if self.family == Family::Dial {
-                    let m = self.msg_dim;
-                    let len = b * (t_len + 1) * n * m;
-                    let noise: Vec<f32> =
-                        (0..len).map(|_| self.rng.normal_f32()).collect();
-                    out.push(HostTensor::f32(
-                        vec![b, t_len + 1, n, m],
-                        noise,
-                    ));
-                }
-                Ok(out)
+/// `MAVA_TRACE_LOSS` diagnostics over the assembled batch inputs.
+fn trace_inputs(inputs: &[HostTensor], steps: u64) {
+    for (i, t) in inputs.iter().enumerate() {
+        if t.dtype == crate::core::Dtype::F32 {
+            let bad = t.as_f32().iter().filter(|x| !x.is_finite()).count();
+            let mx = t.as_f32().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+            if bad > 0 || steps == 0 {
+                eprintln!(
+                    "[trainer] input {i} dims {:?} nonfinite {bad} \
+                     max|x| {mx}",
+                    t.dims
+                );
             }
         }
     }
 }
 
-fn opt_target_init(p: usize) -> Vec<f32> {
-    vec![0.0; p]
+// Checkpoint I/O moves each tensor as one little-endian byte slice.
+// mava targets little-endian hosts throughout (the init blobs and the
+// literal upload path in runtime::engine already assume LE); fail the
+// build rather than silently write native-endian blobs elsewhere.
+#[cfg(not(target_endian = "little"))]
+compile_error!("mava checkpoint I/O assumes a little-endian host");
+
+fn f32_bytes(xs: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+    }
+}
+
+fn f32_bytes_mut(xs: &mut [f32]) -> &mut [u8] {
+    unsafe {
+        std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, xs.len() * 4)
+    }
 }

@@ -233,7 +233,7 @@ fn trainer_checkpoint_roundtrip() {
         Family::DqnFf, art.clone(), p0.clone(), o0.clone(), 1e-3, 0.01, 1,
     )
     .unwrap();
-    t1.init_target_from_params();
+    t1.init_target_from_params().unwrap();
 
     let table = Arc::new(Table::uniform(256, 1, 0));
     for i in 0..64 {
@@ -268,6 +268,150 @@ fn trainer_checkpoint_roundtrip() {
     let restored = Table::uniform(256, 1, 9);
     assert_eq!(restored.restore(&rpath).unwrap(), 64);
     assert_eq!(restored.stats().size, 64);
+}
+
+/// Fills a table with a deterministic set of DqnFf transitions; two
+/// tables built with the same seed serve identical sample sequences.
+fn filled_madqn_table(seed: u64) -> std::sync::Arc<mava::replay::Table> {
+    use mava::replay::{Item, Table, Transition};
+    let table = std::sync::Arc::new(Table::uniform(256, 1, seed));
+    for i in 0..64 {
+        table.insert(
+            Item::Transition(Transition {
+                obs: vec![0.1 * i as f32; 8],
+                actions_disc: vec![i % 3, (i + 1) % 3],
+                rewards: vec![1.0, 0.5],
+                discount: 1.0,
+                next_obs: vec![0.1 * (i + 1) as f32; 8],
+                ..Default::default()
+            }),
+            1.0,
+        );
+    }
+    table
+}
+
+/// Device residency changes where the state lives, not the numbers:
+/// same seed, same data, N steps — the device-resident and
+/// host-resident trainers must publish bitwise-identical parameters.
+#[test]
+fn device_resident_matches_host_path() {
+    if !artifacts_ready() {
+        return;
+    }
+    use mava::systems::{Family, Trainer};
+    let mut engine = Engine::load("artifacts").unwrap();
+    let art = engine.artifact("matrix2_madqn_train").unwrap();
+    let p0 = engine.read_init("matrix2_madqn_train", "params0").unwrap();
+    let o0 = engine.read_init("matrix2_madqn_train", "opt0").unwrap();
+    let mut dev = Trainer::new(
+        Family::DqnFf, art.clone(), p0.clone(), o0.clone(), 1e-3, 0.01, 7,
+    )
+    .unwrap();
+    let mut host = Trainer::new_host_resident(
+        Family::DqnFf, art, p0, o0, 1e-3, 0.01, 7,
+    )
+    .unwrap();
+    assert!(dev.device_resident());
+    assert!(!host.device_resident());
+    dev.init_target_from_params().unwrap();
+    host.init_target_from_params().unwrap();
+    let ta = filled_madqn_table(5);
+    let tb = filled_madqn_table(5);
+    for i in 0..10 {
+        let la = dev.step(&ta).unwrap().unwrap();
+        let lb = host.step(&tb).unwrap().unwrap();
+        assert_eq!(
+            la.to_bits(),
+            lb.to_bits(),
+            "loss diverged at step {i}: {la} vs {lb}"
+        );
+    }
+    let pa = dev.params_synced().unwrap().to_vec();
+    let pb = host.params_synced().unwrap().to_vec();
+    assert_eq!(pa.len(), pb.len());
+    for (i, (a, b)) in pa.iter().zip(&pb).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i}: {a} vs {b}");
+    }
+}
+
+/// Checkpoints round-trip through the device-resident trainer: the
+/// same `MAVATRN1` blob, restored state re-uploaded, and training
+/// continues identically after restore.
+#[test]
+fn device_trainer_checkpoint_roundtrip() {
+    if !artifacts_ready() {
+        return;
+    }
+    use mava::systems::{Family, Trainer};
+    let mut engine = Engine::load("artifacts").unwrap();
+    let art = engine.artifact("matrix2_madqn_train").unwrap();
+    let p0 = engine.read_init("matrix2_madqn_train", "params0").unwrap();
+    let o0 = engine.read_init("matrix2_madqn_train", "opt0").unwrap();
+    let mut t1 = Trainer::new(
+        Family::DqnFf, art.clone(), p0.clone(), o0.clone(), 1e-3, 0.01, 2,
+    )
+    .unwrap();
+    t1.init_target_from_params().unwrap();
+    let ta = filled_madqn_table(9);
+    for _ in 0..4 {
+        t1.step(&ta).unwrap().unwrap();
+    }
+    let path =
+        std::env::temp_dir().join("mava_dev_trainer_ckpt").join("t.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+    let blob = std::fs::read(&path).unwrap();
+    assert_eq!(&blob[..8], b"MAVATRN1", "blob format changed");
+
+    let mut t2 = Trainer::new(Family::DqnFf, art, p0, o0, 1e-3, 0.01, 2)
+        .unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    assert_eq!(t2.stats.steps, 4);
+    assert_eq!(t1.params(), t2.params_synced().unwrap());
+    // restored device state must continue training identically
+    let tb = filled_madqn_table(11);
+    let tc = filled_madqn_table(11);
+    let l1 = t1.step(&tb).unwrap().unwrap();
+    let l2 = t2.step(&tc).unwrap().unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits(), "post-restore step diverged");
+}
+
+/// `publish_interval` gates the server push (and its P-float download)
+/// to every K steps; a shutdown flush still publishes the final params.
+#[test]
+fn publish_interval_gates_server_pushes() {
+    if !artifacts_ready() {
+        return;
+    }
+    use mava::params::ParameterServer;
+    use mava::systems::{Family, Trainer};
+    let mut engine = Engine::load("artifacts").unwrap();
+    let art = engine.artifact("matrix2_madqn_train").unwrap();
+    let p0 = engine.read_init("matrix2_madqn_train", "params0").unwrap();
+    let o0 = engine.read_init("matrix2_madqn_train", "opt0").unwrap();
+    let mut trainer =
+        Trainer::new(Family::DqnFf, art, p0.clone(), o0, 1e-3, 0.01, 4)
+            .unwrap();
+    trainer.init_target_from_params().unwrap();
+    trainer.set_publish_interval(3);
+    let server = ParameterServer::new(p0); // version 1
+    let table = filled_madqn_table(13);
+    for step in 1..=7u64 {
+        trainer.step_and_publish(&table, &server).unwrap().unwrap();
+        let expect = 1 + step / 3; // pushes at steps 3 and 6
+        assert_eq!(
+            server.version(),
+            expect,
+            "wrong version after step {step}"
+        );
+    }
+    // shutdown flush publishes the (unpublished) step-7 params ...
+    assert!(trainer.publish(&server).unwrap());
+    assert_eq!(server.version(), 4);
+    assert_eq!(server.get().1, trainer.params());
+    // ... exactly once
+    assert!(!trainer.publish(&server).unwrap());
+    assert_eq!(server.version(), 4);
 }
 
 /// Fingerprint preset wires the wrapped env and the fp artifacts.
