@@ -5,7 +5,7 @@
 PYTHON ?= python
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test bench-vector bench-trainer bench-build check fmt clippy doc
+.PHONY: artifacts build test experiment check-bench-schema bench-vector bench-trainer bench-build check fmt clippy doc
 
 # lower every AOT artifact (policy, batched policy variants, train steps)
 artifacts:
@@ -16,6 +16,17 @@ build:
 
 test:
 	cargo test -q
+
+# multi-seed experiment harness -> BENCH_<scenario>.json (EXPERIMENTS.md;
+# needs `make artifacts`). Override e.g. SEEDS=5.
+SEEDS ?= 3
+experiment:
+	cargo run --release -- experiment --seeds $(SEEDS)
+
+# validate every emitted BENCH_*.json against the versioned schema
+# (ISSUE 3 CI gate; passes trivially when no reports exist yet)
+check-bench-schema:
+	cargo run --release --quiet -- check-bench .
 
 # the vectorized-executor scaling curve (ISSUE 1 acceptance bench)
 bench-vector:

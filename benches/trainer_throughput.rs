@@ -8,9 +8,14 @@
 //! two fixes: device residency removes the ~5P-float state round-trip,
 //! the prefetch thread overlaps sample+assemble with artifact
 //! execution. Requires `make artifacts`; scale with MAVA_BENCH_SCALE.
+//!
+//! Besides the grep-able `curve` rows, the run serialises every
+//! measured rate as `BENCH_trainer_throughput.json` (the versioned
+//! schema of `bench/report.rs` — validate with `mava check-bench`).
 
 use std::sync::Arc;
 
+use mava::bench::report::{throughput_report, write_report};
 use mava::bench::{curve_row, report, scale, section, time};
 use mava::replay::{Item, Table, Transition};
 use mava::rng::Rng;
@@ -55,7 +60,12 @@ fn filled_table(family: Family, spec: &ArtifactSpec, batch: usize) -> Arc<Table>
     table
 }
 
-fn bench_case(label: &str, family: Family, train_name: &str) -> anyhow::Result<()> {
+fn bench_case(
+    label: &str,
+    family: Family,
+    train_name: &str,
+    series: &mut Vec<(String, f64, String)>,
+) -> anyhow::Result<()> {
     section(&format!("trainer hot path: {label} ({family:?})"));
     let mut engine = Engine::load("artifacts")?;
     let artifact = engine.artifact(train_name)?;
@@ -139,6 +149,11 @@ fn bench_case(label: &str, family: Family, train_name: &str) -> anyhow::Result<(
     for (i, (mode, r)) in rates.iter().enumerate() {
         curve_row("trainer_throughput", label, i as f64, *r);
         println!("  {mode:<16} {r:>9.0} steps/s   {:>5.2}x vs host", r / base);
+        series.push((
+            format!("{label}_{}", mode.replace('+', "_")),
+            *r,
+            "train_steps/s".into(),
+        ));
     }
     Ok(())
 }
@@ -148,12 +163,19 @@ fn main() -> anyhow::Result<()> {
         println!("artifacts missing; run `make artifacts` first");
         return Ok(());
     };
+    let mut series = Vec::new();
     for (label, family, train_name) in CASES {
         if manifest.get(train_name).is_err() {
             println!("skipping {label}: {train_name} not lowered");
             continue;
         }
-        bench_case(label, family, train_name)?;
+        bench_case(label, family, train_name, &mut series)?;
+    }
+    if !series.is_empty() {
+        let json = throughput_report("trainer_throughput", &series);
+        let path =
+            write_report(std::path::Path::new("."), "trainer_throughput", &json)?;
+        println!("\nwrote {}", path.display());
     }
     Ok(())
 }

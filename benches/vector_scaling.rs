@@ -15,8 +15,12 @@
 //!    executors lock-free on the insert path).
 //!
 //! Requires `make artifacts` (including the `*_policy_b{4,16}` batched
-//! variants). Scale with MAVA_BENCH_SCALE.
+//! variants). Scale with MAVA_BENCH_SCALE. Besides the grep-able
+//! `curve` rows, the run serialises every measured rate as
+//! `BENCH_vector_scaling.json` (the versioned schema of
+//! `bench/report.rs` — validate with `mava check-bench`).
 
+use mava::bench::report::{throughput_report, write_report};
 use mava::bench::{self, curve_row, report, section, time};
 use mava::config::TrainConfig;
 use mava::env::VecEnv;
@@ -33,7 +37,9 @@ fn policy_name(b: usize) -> String {
     }
 }
 
-fn bench_acting_hot_path() -> anyhow::Result<()> {
+fn bench_acting_hot_path(
+    series: &mut Vec<(String, f64, String)>,
+) -> anyhow::Result<()> {
     section("acting hot path: env steps/s per executor vs B");
     let mut engine = Engine::load("artifacts")?;
     let params = engine.read_init("smac3m_madqn_train", "params0")?;
@@ -66,6 +72,11 @@ fn bench_acting_hot_path() -> anyhow::Result<()> {
             env_steps_per_sec,
         );
         rates.push((b, env_steps_per_sec));
+        series.push((
+            format!("acting_b{b}"),
+            env_steps_per_sec,
+            "env_steps/s".into(),
+        ));
     }
     let base = rates[0].1;
     println!("\nper-executor acting throughput (one PJRT call per vector step):");
@@ -99,7 +110,9 @@ fn train_cfg(executors: usize, envs: usize) -> TrainConfig {
     c
 }
 
-fn bench_end_to_end() -> anyhow::Result<()> {
+fn bench_end_to_end(
+    series: &mut Vec<(String, f64, String)>,
+) -> anyhow::Result<()> {
     section("end-to-end: total env steps/s vs executors x envs");
     let budget_s = (15.0 * bench::scale()) as u64;
     let mut baseline = None;
@@ -118,6 +131,11 @@ fn bench_end_to_end() -> anyhow::Result<()> {
                 rate,
             );
             let base = *baseline.get_or_insert(rate);
+            series.push((
+                format!("train_exec{executors}_b{envs}"),
+                rate,
+                "env_steps/s".into(),
+            ));
             println!(
                 "  {executors} executor(s) x B={envs:<3} {:>9} env steps in \
                  {:>5.1}s = {:>9.0} steps/s ({:>5.2}x)  [{} train steps]",
@@ -145,6 +163,12 @@ fn main() -> anyhow::Result<()> {
         );
         return Ok(());
     }
-    bench_acting_hot_path()?;
-    bench_end_to_end()
+    let mut series = Vec::new();
+    bench_acting_hot_path(&mut series)?;
+    bench_end_to_end(&mut series)?;
+    let json = throughput_report("vector_scaling", &series);
+    let path =
+        write_report(std::path::Path::new("."), "vector_scaling", &json)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
 }

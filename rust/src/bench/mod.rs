@@ -1,21 +1,32 @@
 //! Mini benchmark harness (criterion is unavailable offline).
 //!
-//! Provides timed closures with warmup + simple statistics, and a table
+//! Provides timed closures with warmup + simple statistics, a table
 //! printer used by the figure-reproduction benches to emit the paper's
-//! rows/series in a uniform format that EXPERIMENTS.md records.
+//! rows/series in a uniform format, and — in [`mod@report`] — the
+//! versioned `BENCH_*.json` writer/validator that records the repo's
+//! perf/quality trajectory (EXPERIMENTS.md).
+
+#![warn(missing_docs)]
+
+pub mod report;
 
 use std::time::Instant;
 
 /// Timing statistics in nanoseconds per iteration.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchStats {
+    /// Timed iterations (warmup excluded).
     pub iters: u64,
+    /// Mean ns per iteration.
     pub mean_ns: f64,
+    /// Fastest iteration, ns.
     pub min_ns: f64,
+    /// Slowest iteration, ns.
     pub max_ns: f64,
 }
 
 impl BenchStats {
+    /// Mean iterations per second.
     pub fn per_sec(&self) -> f64 {
         1e9 / self.mean_ns
     }

@@ -1,0 +1,720 @@
+//! Machine-readable benchmark artifacts: the versioned `BENCH_*.json`
+//! schema, its writer and its validator (EXPERIMENTS.md §2).
+//!
+//! Every experiment-harness run and throughput bench can serialise its
+//! result as `BENCH_<scenario>.json` so the repo's perf/quality
+//! trajectory is recorded in a greppable, diffable form. The offline
+//! crate set has no serde, so this module carries a deliberately small
+//! JSON value type ([`Json`]), a renderer, a recursive-descent parser
+//! ([`parse`]) and a schema check ([`validate`]) — the same code path
+//! the `mava check-bench` CLI subcommand and CI's
+//! `make check-bench-schema` gate run.
+//!
+//! Schema v[`BENCH_SCHEMA_VERSION`], two report kinds sharing a header:
+//!
+//! ```text
+//! { "schema_version": 1, "kind": "experiment" | "throughput",
+//!   "scenario": "<file tag>", ... }
+//! ```
+//!
+//! `experiment` reports add per-seed episode returns and the robust
+//! aggregates of [`crate::eval::stats`]; `throughput` reports add a
+//! flat `series` of named rates. See EXPERIMENTS.md for the full field
+//! tables.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::eval::stats::Aggregates;
+
+/// Version stamped into (and required from) every `BENCH_*.json`.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// A JSON value (minimal, insertion-ordered objects).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any JSON number (rendered via f64; non-finite becomes `null`).
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object; key order is preserved as inserted.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Numeric view of this value.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String view of this value.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array view of this value.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Render as pretty-printed JSON text (2-space indent, stable field
+    /// order — the files are meant to be diffed).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                out.push_str(if *b { "true" } else { "false" })
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // `{}` on f64 prints integers without a fraction and
+                    // round-trips doubles — both valid JSON numbers
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    item.write_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn push_indent(out: &mut String, indent: usize) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse JSON text into a [`Json`] value (full value; trailing
+/// non-whitespace is an error).
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let value = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    ensure!(pos == bytes.len(), "trailing data at byte {pos}");
+    Ok(value)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                ensure!(*pos < b.len(), "unterminated array");
+                match b[*pos] {
+                    b',' => *pos += 1,
+                    b']' => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    c => bail!("expected ',' or ']', got {:?}", c as char),
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                ensure!(
+                    *pos < b.len() && b[*pos] == b':',
+                    "expected ':' after object key"
+                );
+                *pos += 1;
+                fields.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                ensure!(*pos < b.len(), "unterminated object");
+                match b[*pos] {
+                    b',' => *pos += 1,
+                    b'}' => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    c => bail!("expected ',' or '}}', got {:?}", c as char),
+                }
+            }
+        }
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    ensure!(
+        b[*pos..].starts_with(lit.as_bytes()),
+        "invalid literal at byte {pos}"
+    );
+    *pos += lit.len();
+    Ok(v)
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    ensure!(
+        *pos < b.len() && b[*pos] == b'"',
+        "expected string at byte {pos}"
+    );
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                ensure!(*pos < b.len(), "dangling escape");
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        ensure!(*pos + 4 < b.len(), "short \\u escape");
+                        let hex =
+                            std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .context("bad \\u escape")?;
+                        // surrogate pairs are not needed by our writer;
+                        // map unpaired surrogates to the replacement char
+                        out.push(
+                            char::from_u32(code).unwrap_or('\u{fffd}'),
+                        );
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape \\{}", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // consume one UTF-8 scalar
+                let rest = std::str::from_utf8(&b[*pos..])?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    let x: f64 = text
+        .parse()
+        .with_context(|| format!("bad number {text:?} at byte {start}"))?;
+    Ok(Json::Num(x))
+}
+
+/// One seed's contribution to an experiment report.
+#[derive(Clone, Debug)]
+pub struct SeedRecord {
+    /// RNG seed the run used.
+    pub seed: u64,
+    /// Greedy evaluation episode returns of the final policy.
+    pub returns: Vec<f32>,
+    /// Environment steps the run executed.
+    pub env_steps: u64,
+    /// Trainer steps the run executed.
+    pub train_steps: u64,
+    /// Wall-clock seconds of the run.
+    pub wall_s: f64,
+}
+
+impl SeedRecord {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("seed".into(), Json::Num(self.seed as f64)),
+            (
+                "mean_return".into(),
+                Json::Num(crate::eval::stats::mean(&self.returns)),
+            ),
+            (
+                "returns".into(),
+                Json::Arr(
+                    self.returns
+                        .iter()
+                        .map(|&r| Json::Num(r as f64))
+                        .collect(),
+                ),
+            ),
+            ("env_steps".into(), Json::Num(self.env_steps as f64)),
+            ("train_steps".into(), Json::Num(self.train_steps as f64)),
+            ("wall_s".into(), Json::Num(self.wall_s)),
+            (
+                "env_steps_per_s".into(),
+                Json::Num(self.env_steps as f64 / self.wall_s.max(1e-9)),
+            ),
+        ])
+    }
+}
+
+fn ci_json(lo: f64, hi: f64) -> Json {
+    Json::Arr(vec![Json::Num(lo), Json::Num(hi)])
+}
+
+fn header(kind: &str, scenario: &str) -> Vec<(String, Json)> {
+    vec![
+        (
+            "schema_version".into(),
+            Json::Num(BENCH_SCHEMA_VERSION as f64),
+        ),
+        ("kind".into(), Json::Str(kind.into())),
+        ("scenario".into(), Json::Str(scenario.into())),
+    ]
+}
+
+/// Build a schema-valid `experiment` report (the multi-seed harness
+/// output for one scenario).
+#[allow(clippy::too_many_arguments)] // mirrors the schema field list
+pub fn experiment_report(
+    scenario: &str,
+    system: &str,
+    preset: &str,
+    eval_episodes: usize,
+    max_env_steps: u64,
+    seeds: &[SeedRecord],
+    agg: &Aggregates,
+) -> Json {
+    let mut fields = header("experiment", scenario);
+    fields.push(("system".into(), Json::Str(system.into())));
+    fields.push(("preset".into(), Json::Str(preset.into())));
+    fields.push((
+        "eval_episodes".into(),
+        Json::Num(eval_episodes as f64),
+    ));
+    fields.push((
+        "max_env_steps".into(),
+        Json::Num(max_env_steps as f64),
+    ));
+    fields.push((
+        "seeds".into(),
+        Json::Arr(seeds.iter().map(SeedRecord::to_json).collect()),
+    ));
+    fields.push((
+        "aggregate".into(),
+        Json::Obj(vec![
+            (
+                "per_seed_means".into(),
+                Json::Arr(
+                    agg.per_seed_means
+                        .iter()
+                        .map(|&m| Json::Num(m))
+                        .collect(),
+                ),
+            ),
+            ("mean".into(), Json::Num(agg.mean)),
+            ("iqm".into(), Json::Num(agg.iqm)),
+            ("mean_ci".into(), ci_json(agg.mean_ci.lo, agg.mean_ci.hi)),
+            ("iqm_ci".into(), ci_json(agg.iqm_ci.lo, agg.iqm_ci.hi)),
+            ("confidence".into(), Json::Num(agg.mean_ci.confidence)),
+            (
+                "bootstrap_resamples".into(),
+                Json::Num(agg.mean_ci.resamples as f64),
+            ),
+        ]),
+    ));
+    Json::Obj(fields)
+}
+
+/// Build a schema-valid `throughput` report from named `(name, value,
+/// unit)` series rows — the writer the steps/s benches share with the
+/// experiment harness.
+pub fn throughput_report(
+    scenario: &str,
+    series: &[(String, f64, String)],
+) -> Json {
+    let mut fields = header("throughput", scenario);
+    fields.push((
+        "series".into(),
+        Json::Arr(
+            series
+                .iter()
+                .map(|(name, value, unit)| {
+                    Json::Obj(vec![
+                        ("name".into(), Json::Str(name.clone())),
+                        ("value".into(), Json::Num(*value)),
+                        ("unit".into(), Json::Str(unit.clone())),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    Json::Obj(fields)
+}
+
+/// Write a validated report as `<dir>/BENCH_<scenario>.json`; returns
+/// the path. Refuses to write a report that fails [`validate`] — the
+/// schema gate runs at write time, not just in CI.
+pub fn write_report(dir: &Path, scenario: &str, report: &Json) -> Result<PathBuf> {
+    validate(report).with_context(|| {
+        format!("refusing to write schema-invalid report for {scenario:?}")
+    })?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create {}", dir.display()))?;
+    let path = dir.join(format!("BENCH_{scenario}.json"));
+    std::fs::write(&path, report.render())
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+fn require<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).with_context(|| format!("missing field {key:?}"))
+}
+
+fn require_num(v: &Json, key: &str) -> Result<f64> {
+    require(v, key)?
+        .as_num()
+        .with_context(|| format!("field {key:?} must be a number"))
+}
+
+fn require_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    require(v, key)?
+        .as_str()
+        .with_context(|| format!("field {key:?} must be a string"))
+}
+
+fn require_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json]> {
+    require(v, key)?
+        .as_arr()
+        .with_context(|| format!("field {key:?} must be an array"))
+}
+
+fn check_ci_pair(agg: &Json, key: &str) -> Result<()> {
+    let ci = require_arr(agg, key)?;
+    ensure!(ci.len() == 2, "{key} must be [lo, hi]");
+    let (lo, hi) = (
+        ci[0].as_num().with_context(|| format!("{key}[0] not a number"))?,
+        ci[1].as_num().with_context(|| format!("{key}[1] not a number"))?,
+    );
+    ensure!(lo <= hi, "{key}: lo {lo} > hi {hi}");
+    Ok(())
+}
+
+/// Validate a parsed `BENCH_*.json` value against the schema.
+pub fn validate(report: &Json) -> Result<()> {
+    let version = require_num(report, "schema_version")?;
+    ensure!(
+        version == BENCH_SCHEMA_VERSION as f64,
+        "schema_version {version} != supported {BENCH_SCHEMA_VERSION}"
+    );
+    require_str(report, "scenario")?;
+    match require_str(report, "kind")? {
+        "experiment" => {
+            require_str(report, "system")?;
+            require_str(report, "preset")?;
+            require_num(report, "eval_episodes")?;
+            require_num(report, "max_env_steps")?;
+            let seeds = require_arr(report, "seeds")?;
+            ensure!(!seeds.is_empty(), "seeds must be non-empty");
+            for (i, s) in seeds.iter().enumerate() {
+                let ctx = || format!("seeds[{i}]");
+                require_num(s, "seed").with_context(ctx)?;
+                require_num(s, "mean_return").with_context(ctx)?;
+                let returns = require_arr(s, "returns").with_context(ctx)?;
+                ensure!(
+                    !returns.is_empty()
+                        && returns.iter().all(|r| r.as_num().is_some()),
+                    "seeds[{i}].returns must be non-empty numbers"
+                );
+                require_num(s, "env_steps").with_context(ctx)?;
+                require_num(s, "train_steps").with_context(ctx)?;
+                require_num(s, "wall_s").with_context(ctx)?;
+                require_num(s, "env_steps_per_s").with_context(ctx)?;
+            }
+            let agg = require(report, "aggregate")?;
+            let per_seed = require_arr(agg, "per_seed_means")?;
+            ensure!(
+                per_seed.len() == seeds.len(),
+                "per_seed_means length {} != seeds length {}",
+                per_seed.len(),
+                seeds.len()
+            );
+            require_num(agg, "mean")?;
+            require_num(agg, "iqm")?;
+            check_ci_pair(agg, "mean_ci")?;
+            check_ci_pair(agg, "iqm_ci")?;
+            let conf = require_num(agg, "confidence")?;
+            ensure!(
+                (0.0..1.0).contains(&conf),
+                "confidence {conf} outside (0, 1)"
+            );
+            require_num(agg, "bootstrap_resamples")?;
+        }
+        "throughput" => {
+            let series = require_arr(report, "series")?;
+            ensure!(!series.is_empty(), "series must be non-empty");
+            for (i, row) in series.iter().enumerate() {
+                let ctx = || format!("series[{i}]");
+                require_str(row, "name").with_context(ctx)?;
+                require_num(row, "value").with_context(ctx)?;
+                require_str(row, "unit").with_context(ctx)?;
+            }
+        }
+        other => bail!("unknown report kind {other:?}"),
+    }
+    Ok(())
+}
+
+/// Parse and validate a `BENCH_*.json` file on disk.
+pub fn validate_file(path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let json =
+        parse(&text).with_context(|| format!("parse {}", path.display()))?;
+    validate(&json).with_context(|| format!("validate {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::stats;
+
+    fn sample_seeds() -> Vec<SeedRecord> {
+        vec![
+            SeedRecord {
+                seed: 42,
+                returns: vec![1.0, 2.0, 3.0],
+                env_steps: 1000,
+                train_steps: 200,
+                wall_s: 2.0,
+            },
+            SeedRecord {
+                seed: 1042,
+                returns: vec![2.0, 2.5, 3.5],
+                env_steps: 1000,
+                train_steps: 190,
+                wall_s: 2.1,
+            },
+        ]
+    }
+
+    fn sample_report() -> Json {
+        let seeds = sample_seeds();
+        let per_seed: Vec<Vec<f32>> =
+            seeds.iter().map(|s| s.returns.clone()).collect();
+        let agg = stats::aggregate(&per_seed, 0.95, 200, 9);
+        experiment_report(
+            "matrix2_madqn",
+            "madqn",
+            "matrix2",
+            3,
+            1000,
+            &seeds,
+            &agg,
+        )
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let report = sample_report();
+        let text = report.render();
+        let back = parse(&text).unwrap();
+        assert_eq!(report, back);
+        // escaping round-trips too
+        let tricky = Json::Obj(vec![(
+            "k\"ey\n".into(),
+            Json::Str("a\\b\t\u{1}ü".into()),
+        )]);
+        assert_eq!(parse(&tricky.render()).unwrap(), tricky);
+    }
+
+    #[test]
+    fn writer_output_is_schema_valid() {
+        validate(&sample_report()).unwrap();
+        let tp = throughput_report(
+            "trainer_throughput",
+            &[("host".into(), 120.0, "steps/s".into())],
+        );
+        validate(&tp).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_malformed_reports() {
+        // wrong version
+        let mut bad = sample_report();
+        if let Json::Obj(fields) = &mut bad {
+            fields[0].1 = Json::Num(999.0);
+        }
+        assert!(validate(&bad).is_err());
+        // missing aggregate
+        let mut bad = sample_report();
+        if let Json::Obj(fields) = &mut bad {
+            fields.retain(|(k, _)| k != "aggregate");
+        }
+        assert!(validate(&bad).is_err());
+        // unknown kind
+        let mut bad = sample_report();
+        if let Json::Obj(fields) = &mut bad {
+            fields[1].1 = Json::Str("bogus".into());
+        }
+        assert!(validate(&bad).is_err());
+        // inverted CI
+        let bad = parse(
+            &sample_report()
+                .render()
+                .replace("\"mean_ci\": [", "\"mean_ci\": [9999999,"),
+        );
+        // the replace yields a 3-element array -> must fail validation
+        assert!(validate(&bad.unwrap()).is_err());
+        // not an object at all
+        assert!(validate(&Json::Num(1.0)).is_err());
+    }
+
+    #[test]
+    fn write_report_emits_and_gates() {
+        let dir = std::env::temp_dir().join("mava_test_bench_report");
+        let path = write_report(&dir, "unit_test", &sample_report()).unwrap();
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        validate_file(&path).unwrap();
+        // schema-invalid reports never reach disk
+        let err = write_report(&dir, "bad", &Json::Obj(vec![]));
+        assert!(err.is_err());
+        assert!(!dir.join("BENCH_bad.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("nule").is_err());
+    }
+
+    #[test]
+    fn numbers_render_as_valid_json() {
+        assert_eq!(Json::Num(3.0).render().trim(), "3");
+        assert_eq!(Json::Num(f64::NAN).render().trim(), "null");
+        assert_eq!(parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+    }
+}

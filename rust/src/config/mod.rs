@@ -57,8 +57,16 @@ pub struct TrainConfig {
 
     // bookkeeping
     pub seed: u64,
+    /// Independent training seeds per scenario in the experiment
+    /// harness (`mava experiment`; ignored by `train`/`eval`). The
+    /// strata of the stratified bootstrap — see EXPERIMENTS.md.
+    pub seeds: usize,
     pub artifacts_dir: String,
     pub log_dir: String,
+    /// Evaluator measurement period in env steps (CLI also accepts the
+    /// alias `--eval-interval`). Evaluation snapshots *published*
+    /// params, so measurements lag training by at most
+    /// `publish_interval` trainer steps.
     pub eval_every_steps: u64,
     pub eval_episodes: usize,
     pub params_sync_every: u64,
@@ -86,6 +94,7 @@ impl Default for TrainConfig {
             samples_per_insert: 4.0,
             publish_interval: 1,
             seed: 42,
+            seeds: 5,
             artifacts_dir: "artifacts".into(),
             log_dir: "logs".into(),
             eval_every_steps: 1_000,
@@ -135,6 +144,7 @@ impl TrainConfig {
         get!(min_replay, get_usize);
         get!(eval_episodes, get_usize);
         get!(seed, get_u64);
+        get!(seeds, get_usize);
         get!(eps_decay_steps, get_u64);
         get!(eval_every_steps, get_u64);
         get!(params_sync_every, get_u64);
@@ -168,6 +178,11 @@ impl TrainConfig {
             "publish_interval must be >= 1 (got {})",
             self.publish_interval
         );
+        anyhow::ensure!(
+            self.seeds >= 1,
+            "seeds must be >= 1 (got {})",
+            self.seeds
+        );
         Ok(())
     }
 
@@ -187,8 +202,12 @@ impl TrainConfig {
         self.validate()
     }
 
+    /// Set one config key from its string value. Dashes in `key` are
+    /// treated as underscores, so `--eval-interval` and
+    /// `--eval_interval` are the same flag.
     pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
-        match key {
+        let key = key.replace('-', "_");
+        match key.as_str() {
             "system" => self.system = val.into(),
             "preset" => self.preset = val.into(),
             "arch" => {
@@ -212,9 +231,15 @@ impl TrainConfig {
             "min_replay" => self.min_replay = val.parse()?,
             "samples_per_insert" => self.samples_per_insert = val.parse()?,
             "seed" => self.seed = val.parse()?,
+            "seeds" => {
+                self.seeds = val.parse()?;
+                self.validate()?;
+            }
             "artifacts_dir" => self.artifacts_dir = val.into(),
             "log_dir" => self.log_dir = val.into(),
-            "eval_every_steps" => self.eval_every_steps = val.parse()?,
+            "eval_every_steps" | "eval_interval" => {
+                self.eval_every_steps = val.parse()?
+            }
             "eval_episodes" => self.eval_episodes = val.parse()?,
             "params_sync_every" => self.params_sync_every = val.parse()?,
             "publish_interval" => {
@@ -278,6 +303,31 @@ mod tests {
     fn unknown_key_rejected() {
         let mut c = TrainConfig::default();
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn seeds_key_and_eval_interval_alias() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.seeds, 5);
+        c.set("seeds", "3").unwrap();
+        assert_eq!(c.seeds, 3);
+        // dash/underscore spellings are interchangeable on the CLI
+        c.apply_cli(&[
+            "--eval-interval".into(),
+            "2500".into(),
+            "--eval-episodes".into(),
+            "64".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.eval_every_steps, 2500);
+        assert_eq!(c.eval_episodes, 64);
+        c.set("eval_interval", "100").unwrap();
+        assert_eq!(c.eval_every_steps, 100);
+        let raw = RawConfig::parse("[train]\nseeds = 7\n").unwrap();
+        assert_eq!(TrainConfig::from_raw(&raw).unwrap().seeds, 7);
+        let raw = RawConfig::parse("[train]\nseeds = 0\n").unwrap();
+        assert!(TrainConfig::from_raw(&raw).is_err());
+        assert!(c.set("seeds", "0").is_err());
     }
 
     #[test]

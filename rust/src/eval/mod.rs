@@ -1,4 +1,21 @@
-//! Evaluation utilities: greedy rollouts, summaries and solve detection.
+//! Evaluation: greedy rollouts (serial and vectorized), robust
+//! statistics, summaries and solve detection.
+//!
+//! - [`evaluate`] / [`eval_episode`](crate::systems::eval_episode) —
+//!   the serial `[1, N, O]` path (episodic, latency-insensitive);
+//! - [`VecEvaluator`] — B greedy episodes per batched policy call on
+//!   top of [`crate::env::VecEnv`] (DESIGN.md §6 applied to
+//!   evaluation);
+//! - [`stats`] — per-seed means, stratified bootstrap confidence
+//!   intervals and the inter-quartile mean the experiment harness
+//!   serialises (EXPERIMENTS.md).
+
+#![warn(missing_docs)]
+
+pub mod stats;
+mod vec_eval;
+
+pub use vec_eval::{EpisodeAccountant, VecEvaluator};
 
 use anyhow::Result;
 
@@ -8,13 +25,39 @@ use crate::systems::{eval_episode, EvalPoint, Executor};
 /// Summary of a batch of evaluation episodes.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalSummary {
+    /// Number of episodes summarised.
     pub episodes: usize,
+    /// Mean episode return (0.0 when `episodes == 0`).
     pub mean_return: f32,
+    /// Smallest episode return (0.0 when `episodes == 0`).
     pub min_return: f32,
+    /// Largest episode return (0.0 when `episodes == 0`).
     pub max_return: f32,
 }
 
-/// Run `n` greedy episodes and summarise.
+impl EvalSummary {
+    /// Summarise a slice of episode returns. An empty slice yields the
+    /// all-zero summary — never ±∞ sentinels, which used to leak out of
+    /// the degenerate `n = 0` evaluation and poison downstream
+    /// aggregation.
+    pub fn from_returns(returns: &[f32]) -> EvalSummary {
+        if returns.is_empty() {
+            return EvalSummary::default();
+        }
+        EvalSummary {
+            episodes: returns.len(),
+            mean_return: returns.iter().sum::<f32>() / returns.len() as f32,
+            min_return: returns.iter().copied().fold(f32::INFINITY, f32::min),
+            max_return: returns
+                .iter()
+                .copied()
+                .fold(f32::NEG_INFINITY, f32::max),
+        }
+    }
+}
+
+/// Run `n` greedy episodes and summarise (`n = 0` yields the all-zero
+/// summary).
 pub fn evaluate(
     executor: &mut Executor,
     env: &mut dyn MultiAgentEnv,
@@ -24,12 +67,7 @@ pub fn evaluate(
     for _ in 0..n {
         returns.push(eval_episode(executor, env)?);
     }
-    Ok(EvalSummary {
-        episodes: n,
-        mean_return: returns.iter().sum::<f32>() / n.max(1) as f32,
-        min_return: returns.iter().copied().fold(f32::INFINITY, f32::min),
-        max_return: returns.iter().copied().fold(f32::NEG_INFINITY, f32::max),
-    })
+    Ok(EvalSummary::from_returns(&returns))
 }
 
 /// Whether a learning curve crossed and held a threshold: the last
@@ -77,5 +115,25 @@ mod tests {
     fn auc_trapezoid() {
         let evals = vec![pt(0, 0.0), pt(10, 1.0), pt(20, 1.0)];
         assert!((auc(&evals) - (5.0 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_from_returns() {
+        let s = EvalSummary::from_returns(&[1.0, 3.0, -2.0]);
+        assert_eq!(s.episodes, 3);
+        assert!((s.mean_return - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(s.min_return, -2.0);
+        assert_eq!(s.max_return, 3.0);
+    }
+
+    /// The degenerate n = 0 case: zeros, not min=+INF / max=-INF.
+    #[test]
+    fn summary_of_zero_episodes_is_all_zero() {
+        let s = EvalSummary::from_returns(&[]);
+        assert_eq!(s.episodes, 0);
+        assert_eq!(s.mean_return, 0.0);
+        assert_eq!(s.min_return, 0.0);
+        assert_eq!(s.max_return, 0.0);
+        assert!(s.min_return.is_finite() && s.max_return.is_finite());
     }
 }

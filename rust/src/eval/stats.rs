@@ -1,0 +1,301 @@
+//! Robust aggregates over episode returns (EXPERIMENTS.md §3).
+//!
+//! A point estimate from a handful of MARL runs is statistically
+//! fragile; the experiment harness therefore reports, per scenario:
+//!
+//! * **per-seed means** — one number per independent training seed;
+//! * the **inter-quartile mean** ([`iqm`]) of the pooled episode
+//!   returns — the rliable-style robust point estimate (mean of the
+//!   middle 50% of sorted samples, cutting `floor(n/4)` from each end);
+//! * **stratified bootstrap confidence intervals**
+//!   ([`stratified_bootstrap_ci`]) — each bootstrap replicate resamples
+//!   *within* each seed (stratum) with replacement, so the interval
+//!   reflects both per-seed episode noise and seed-to-seed variation
+//!   without letting one seed's episodes stand in for another's.
+//!
+//! All randomness comes from the crate's deterministic
+//! [`crate::rng::Rng`]; the same `(data, seed, resamples)` triple always
+//! produces the same interval, which keeps `BENCH_*.json` artifacts
+//! reproducible bit-for-bit.
+
+use crate::rng::Rng;
+
+/// Arithmetic mean of `xs` (0.0 for an empty slice).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Inter-quartile mean: the mean of the middle 50% of sorted samples
+/// (`floor(n/4)` samples cut from each end; the whole sample when
+/// `n < 4`). 0.0 for an empty slice.
+pub fn iqm(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    v.sort_by(f64::total_cmp);
+    let cut = v.len() / 4;
+    let mid = &v[cut..v.len() - cut];
+    mid.iter().sum::<f64>() / mid.len() as f64
+}
+
+/// Linear-interpolated quantile `q ∈ [0, 1]` of an already-sorted
+/// slice (0.0 for an empty slice).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < sorted.len() {
+        sorted[i] * (1.0 - frac) + sorted[i + 1] * frac
+    } else {
+        sorted[i]
+    }
+}
+
+/// A bootstrap confidence interval for one statistic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BootstrapCi {
+    /// Lower interval bound.
+    pub lo: f64,
+    /// Upper interval bound.
+    pub hi: f64,
+    /// Confidence level the interval was computed at (e.g. 0.95).
+    pub confidence: f64,
+    /// Number of bootstrap replicates drawn.
+    pub resamples: usize,
+}
+
+/// Stratified percentile-bootstrap confidence interval for `stat` over
+/// `strata` (one stratum per seed).
+///
+/// Each of `resamples` replicates resamples every stratum with
+/// replacement at its own size, pools the resamples, and evaluates
+/// `stat`; the interval is the `[α/2, 1-α/2]` percentile range of the
+/// replicate distribution (α = 1 - `confidence`), widened if necessary
+/// to include the point estimate `stat(pooled data)` — so the reported
+/// interval always brackets the reported point estimate. With a fixed
+/// `seed`, raising `confidence` only widens the interval (the same
+/// replicate set is re-quantiled), so intervals are monotone in the
+/// confidence level.
+pub fn stratified_bootstrap_ci(
+    strata: &[Vec<f32>],
+    stat: impl Fn(&[f32]) -> f64,
+    confidence: f64,
+    resamples: usize,
+    seed: u64,
+) -> BootstrapCi {
+    let total: usize = strata.iter().map(|s| s.len()).sum();
+    if total == 0 || resamples == 0 {
+        return BootstrapCi { lo: 0.0, hi: 0.0, confidence, resamples };
+    }
+    let pooled: Vec<f32> = strata.iter().flatten().copied().collect();
+    let point = stat(&pooled);
+    let mut rng = Rng::new(seed);
+    let mut sample = Vec::with_capacity(total);
+    let mut reps = Vec::with_capacity(resamples);
+    for _ in 0..resamples {
+        sample.clear();
+        for s in strata {
+            for _ in 0..s.len() {
+                sample.push(s[rng.below(s.len())]);
+            }
+        }
+        reps.push(stat(&sample));
+    }
+    reps.sort_by(f64::total_cmp);
+    let alpha = (1.0 - confidence.clamp(0.0, 1.0)).max(0.0);
+    BootstrapCi {
+        lo: percentile(&reps, alpha / 2.0).min(point),
+        hi: percentile(&reps, 1.0 - alpha / 2.0).max(point),
+        confidence,
+        resamples,
+    }
+}
+
+/// The full aggregate block the experiment harness serialises per
+/// scenario (see EXPERIMENTS.md for the JSON mapping).
+#[derive(Clone, Debug, Default)]
+pub struct Aggregates {
+    /// Mean episode return of each seed, in seed order.
+    pub per_seed_means: Vec<f64>,
+    /// Mean over all pooled episode returns.
+    pub mean: f64,
+    /// Inter-quartile mean over all pooled episode returns.
+    pub iqm: f64,
+    /// Stratified bootstrap CI for the pooled mean.
+    pub mean_ci: BootstrapCi,
+    /// Stratified bootstrap CI for the pooled IQM.
+    pub iqm_ci: BootstrapCi,
+}
+
+/// Compute every aggregate over per-seed episode returns.
+///
+/// `per_seed[s]` holds seed `s`'s evaluation episode returns; the two
+/// intervals share the replicate RNG seed, so repeated calls are
+/// bit-identical.
+pub fn aggregate(
+    per_seed: &[Vec<f32>],
+    confidence: f64,
+    resamples: usize,
+    seed: u64,
+) -> Aggregates {
+    let pooled: Vec<f32> = per_seed.iter().flatten().copied().collect();
+    Aggregates {
+        per_seed_means: per_seed.iter().map(|s| mean(s)).collect(),
+        mean: mean(&pooled),
+        iqm: iqm(&pooled),
+        mean_ci: stratified_bootstrap_ci(
+            per_seed,
+            mean,
+            confidence,
+            resamples,
+            seed,
+        ),
+        iqm_ci: stratified_bootstrap_ci(
+            per_seed,
+            iqm,
+            confidence,
+            resamples,
+            seed ^ 0x19_b007,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_iqm_fixtures() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(iqm(&[]), 0.0);
+        let xs = [2.0f32, 4.0, 6.0];
+        assert!((mean(&xs) - 4.0).abs() < 1e-12);
+        // n < 4: IQM degenerates to the mean
+        assert!((iqm(&xs) - 4.0).abs() < 1e-12);
+        // n = 8: cut 2 from each end -> mean(3,4,5,6) = 4.5
+        let xs: Vec<f32> = (1..=8).map(|x| x as f32).collect();
+        assert!((iqm(&xs) - 4.5).abs() < 1e-12);
+        // IQM shrugs off outliers the mean cannot: cut 1 from each end
+        let xs = [0.0f32, 1.0, 2.0, 3.0, 1000.0];
+        assert!((iqm(&xs) - 2.0).abs() < 1e-12, "iqm {}", iqm(&xs));
+        assert!(mean(&xs) > 200.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert!((percentile(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn bootstrap_ci_on_constant_data_collapses() {
+        let strata = vec![vec![3.0f32; 10], vec![3.0f32; 10]];
+        let ci =
+            stratified_bootstrap_ci(&strata, |xs| mean(xs), 0.95, 200, 1);
+        assert!((ci.lo - 3.0).abs() < 1e-9);
+        assert!((ci.hi - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bootstrap_ci_deterministic_and_empty_safe() {
+        let strata = vec![vec![1.0f32, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let a = stratified_bootstrap_ci(&strata, |xs| mean(xs), 0.9, 300, 7);
+        let b = stratified_bootstrap_ci(&strata, |xs| mean(xs), 0.9, 300, 7);
+        assert_eq!(a.lo, b.lo);
+        assert_eq!(a.hi, b.hi);
+        let empty =
+            stratified_bootstrap_ci(&[], |xs| mean(xs), 0.9, 300, 7);
+        assert_eq!((empty.lo, empty.hi), (0.0, 0.0));
+    }
+
+    /// Property: the CI always contains the sample statistic, for both
+    /// mean and IQM, over randomized strata shapes and data.
+    #[test]
+    fn prop_ci_contains_sample_statistic() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed);
+            let n_strata = 2 + rng.below(4);
+            let strata: Vec<Vec<f32>> = (0..n_strata)
+                .map(|_| {
+                    let n = 3 + rng.below(28);
+                    (0..n)
+                        .map(|_| rng.range_f32(-10.0, 10.0))
+                        .collect()
+                })
+                .collect();
+            let pooled: Vec<f32> =
+                strata.iter().flatten().copied().collect();
+            for (name, stat) in [
+                ("mean", mean as fn(&[f32]) -> f64),
+                ("iqm", iqm as fn(&[f32]) -> f64),
+            ] {
+                let point = stat(&pooled);
+                let ci = stratified_bootstrap_ci(
+                    &strata, stat, 0.95, 400, seed,
+                );
+                assert!(
+                    ci.lo <= point && point <= ci.hi,
+                    "seed {seed} {name}: {point} outside [{}, {}]",
+                    ci.lo,
+                    ci.hi
+                );
+            }
+        }
+    }
+
+    /// Property: with the RNG seed fixed, a higher confidence level
+    /// never narrows the interval (lo non-increasing, hi
+    /// non-decreasing).
+    #[test]
+    fn prop_ci_monotone_in_confidence() {
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(seed ^ 0xc0ff);
+            let strata: Vec<Vec<f32>> = (0..3)
+                .map(|_| {
+                    (0..12).map(|_| rng.range_f32(0.0, 5.0)).collect()
+                })
+                .collect();
+            let mut prev: Option<BootstrapCi> = None;
+            for conf in [0.5, 0.8, 0.9, 0.95, 0.99] {
+                let ci = stratified_bootstrap_ci(
+                    &strata,
+                    |xs| mean(xs),
+                    conf,
+                    300,
+                    seed,
+                );
+                if let Some(p) = prev {
+                    assert!(
+                        ci.lo <= p.lo + 1e-12 && ci.hi >= p.hi - 1e-12,
+                        "seed {seed}: CI narrowed going {} -> {}",
+                        p.confidence,
+                        conf
+                    );
+                }
+                prev = Some(ci);
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_per_seed_means() {
+        let per_seed =
+            vec![vec![1.0f32, 3.0], vec![5.0, 7.0], vec![9.0, 11.0]];
+        let a = aggregate(&per_seed, 0.95, 200, 3);
+        assert_eq!(a.per_seed_means, vec![2.0, 6.0, 10.0]);
+        assert!((a.mean - 6.0).abs() < 1e-12);
+        assert!(a.mean_ci.lo <= a.mean && a.mean <= a.mean_ci.hi);
+        assert!(a.iqm_ci.lo <= a.iqm && a.iqm <= a.iqm_ci.hi);
+    }
+}

@@ -1,0 +1,317 @@
+//! Vectorized greedy evaluation: B episodes advance per batched
+//! policy-artifact call.
+//!
+//! The serial evaluator stepped ONE episode at a time through the
+//! `[1, N, O]` policy artifact — fine for a latency-insensitive node,
+//! but it made large evaluation budgets (the statistically meaningful
+//! ones, see EXPERIMENTS.md) pay the full per-call dispatch cost per
+//! episode step. [`VecEvaluator`] reuses the vectorized acting path
+//! (DESIGN.md §6): a [`VecEnv`] steps B differently-seeded instances
+//! with per-row auto-reset, a [`VecExecutor`] acts greedily for all of
+//! them in one `[B, N, O]` artifact call, and an [`EpisodeAccountant`]
+//! tracks per-row running returns across the desynchronised episode
+//! boundaries.
+//!
+//! The accountant is deliberately independent of the executor so its
+//! row-reset bookkeeping is testable without compiled artifacts; the
+//! evaluator is the thin artifact-bound shell around it.
+
+use anyhow::{ensure, Result};
+
+use crate::core::StepType;
+use crate::env::{VecEnv, VecStep};
+use crate::systems::VecExecutor;
+
+/// Per-row episode-return bookkeeping over a stream of [`VecStep`]s.
+///
+/// Feed every post-`reset` vector step to [`EpisodeAccountant::observe`].
+/// For each row it accumulates the mean-over-agents reward on `Mid` and
+/// `Last` steps, records the finished return when a row's episode ends,
+/// and — when a row comes back as `First` after an auto-reset — zeroes
+/// that row's running return and reports the row index so the caller
+/// can zero the matching recurrent-state row
+/// ([`VecExecutor::reset_instance`]).
+#[derive(Clone, Debug)]
+pub struct EpisodeAccountant {
+    running: Vec<f32>,
+    completed: Vec<f32>,
+}
+
+impl EpisodeAccountant {
+    /// Track `batch` environment rows, all starting at return 0.
+    pub fn new(batch: usize) -> EpisodeAccountant {
+        EpisodeAccountant {
+            running: vec![0.0; batch],
+            completed: Vec::new(),
+        }
+    }
+
+    /// Fold one vector step into the per-row accounts; returns the rows
+    /// that auto-reset on this step (their recurrent state must be
+    /// zeroed before the next policy call).
+    pub fn observe(&mut self, vs: &VecStep) -> Vec<usize> {
+        debug_assert_eq!(vs.steps.len(), self.running.len());
+        let mut reset_rows = Vec::new();
+        for (i, ts) in vs.steps.iter().enumerate() {
+            if ts.step_type == StepType::First {
+                self.running[i] = 0.0;
+                reset_rows.push(i);
+                continue;
+            }
+            self.running[i] += ts.rewards.iter().sum::<f32>()
+                / ts.rewards.len().max(1) as f32;
+            if ts.is_last() {
+                self.completed.push(self.running[i]);
+            }
+        }
+        reset_rows
+    }
+
+    /// Episode returns completed so far, in completion order.
+    pub fn completed(&self) -> &[f32] {
+        &self.completed
+    }
+
+    /// Consume the accountant, yielding the completed episode returns.
+    pub fn into_completed(self) -> Vec<f32> {
+        self.completed
+    }
+}
+
+/// Batched greedy evaluator: one policy-artifact call advances B
+/// evaluation episodes.
+///
+/// Construction pairs a [`VecExecutor`] (lowered at batch B) with a
+/// [`VecEnv`] of B instances; [`VecEvaluator::evaluate`] then runs
+/// greedy (ε = 0, σ = 0) episodes until `n` returns have completed.
+/// Rows auto-reset independently, so episodes of different lengths
+/// never stall the batch.
+pub struct VecEvaluator {
+    executor: VecExecutor,
+    venv: VecEnv,
+}
+
+impl VecEvaluator {
+    /// Pair an executor and environment batch of matching width.
+    pub fn new(executor: VecExecutor, venv: VecEnv) -> Result<VecEvaluator> {
+        ensure!(
+            executor.num_envs() == venv.num_envs(),
+            "policy artifact batch {} != VecEnv batch {}",
+            executor.num_envs(),
+            venv.num_envs()
+        );
+        Ok(VecEvaluator { executor, venv })
+    }
+
+    /// Number of episodes advanced per policy call.
+    pub fn num_envs(&self) -> usize {
+        self.venv.num_envs()
+    }
+
+    /// Parameter-server version the evaluator last synced to.
+    pub fn params_version(&self) -> u64 {
+        self.executor.params_version
+    }
+
+    /// Snapshot fresh parameters (from the parameter server) before the
+    /// next [`VecEvaluator::evaluate`] call.
+    pub fn set_params(&mut self, version: u64, params: &[f32]) {
+        self.executor.set_params(version, params);
+    }
+
+    /// Run greedy episodes until `n` returns complete; returns exactly
+    /// the first `n` in completion order. See
+    /// [`VecEvaluator::evaluate_until`] for cancellation.
+    pub fn evaluate(&mut self, n: usize) -> Result<Vec<f32>> {
+        self.evaluate_until(n, || false)
+    }
+
+    /// [`VecEvaluator::evaluate`] with a cancellation probe checked once
+    /// per vector step: when `cancelled` returns true the call stops
+    /// early and yields however many episodes completed (possibly fewer
+    /// than `n`).
+    ///
+    /// With B > 1 the final wave may finish more than `n` episodes;
+    /// the surplus (in completion order) is discarded so summaries are
+    /// comparable across batch widths.
+    pub fn evaluate_until(
+        &mut self,
+        n: usize,
+        mut cancelled: impl FnMut() -> bool,
+    ) -> Result<Vec<f32>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let mut vs = self.venv.reset();
+        self.executor.reset_state();
+        let mut acct = EpisodeAccountant::new(self.venv.num_envs());
+        while acct.completed().len() < n && !cancelled() {
+            let actions = self.executor.select_actions_vec(&vs, 0.0, 0.0)?;
+            vs = self.venv.step(&actions);
+            for row in acct.observe(&vs) {
+                self.executor.reset_instance(row);
+            }
+        }
+        let mut returns = acct.into_completed();
+        returns.truncate(n);
+        Ok(returns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ActionSpec, Actions, EnvSpec, TimeStep};
+    use crate::env::MultiAgentEnv;
+
+    /// Deterministic env: episode of `limit` steps, reward `gain` per
+    /// agent per step, so an episode's mean-over-agents return is
+    /// exactly `limit * gain`.
+    struct RewardEnv {
+        spec: EnvSpec,
+        gain: f32,
+        limit: usize,
+        t: usize,
+    }
+
+    impl RewardEnv {
+        fn new(gain: f32, limit: usize) -> Self {
+            RewardEnv {
+                spec: EnvSpec {
+                    name: "reward".into(),
+                    n_agents: 2,
+                    obs_dim: 1,
+                    action: ActionSpec::Discrete { n: 2 },
+                    state_dim: 0,
+                    episode_limit: limit,
+                },
+                gain,
+                limit,
+                t: 0,
+            }
+        }
+    }
+
+    impl MultiAgentEnv for RewardEnv {
+        fn spec(&self) -> &EnvSpec {
+            &self.spec
+        }
+
+        fn reset(&mut self) -> TimeStep {
+            self.t = 0;
+            TimeStep {
+                step_type: StepType::First,
+                observations: vec![vec![0.0]; 2],
+                rewards: vec![0.0; 2],
+                discount: 1.0,
+                state: vec![],
+                legal_actions: None,
+            }
+        }
+
+        fn step(&mut self, _a: &Actions) -> TimeStep {
+            self.t += 1;
+            let last = self.t >= self.limit;
+            TimeStep {
+                step_type: if last { StepType::Last } else { StepType::Mid },
+                observations: vec![vec![self.t as f32]; 2],
+                rewards: vec![self.gain; 2],
+                discount: 1.0,
+                state: vec![],
+                legal_actions: None,
+            }
+        }
+    }
+
+    fn venv(specs: &[(f32, usize)]) -> VecEnv {
+        VecEnv::new(
+            specs
+                .iter()
+                .map(|&(gain, limit)| {
+                    Box::new(RewardEnv::new(gain, limit))
+                        as Box<dyn MultiAgentEnv>
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    fn acts(b: usize) -> Vec<Actions> {
+        vec![Actions::Discrete(vec![0, 0]); b]
+    }
+
+    /// Desynchronised rows: the accountant must credit each return to
+    /// its own row, record completions at each row's own boundary, and
+    /// report exactly the auto-reset rows.
+    #[test]
+    fn accountant_tracks_desynchronised_rows() {
+        // row 0: 2-step episodes of reward 1; row 1: 3-step of reward 10
+        let mut venv = venv(&[(1.0, 2), (10.0, 3)]);
+        let mut acct = EpisodeAccountant::new(2);
+        let mut vs = venv.reset();
+        let mut resets = Vec::new();
+        for _ in 0..6 {
+            vs = venv.step(&acts(2));
+            resets.push(acct.observe(&vs));
+        }
+        // row 0 completes at vector steps 2 and 5 (reset consumed step 3);
+        // row 1 completes at vector step 3 (reset consumed step 4)
+        assert_eq!(acct.completed(), &[2.0, 30.0, 2.0]);
+        // auto-resets surface exactly once per boundary, one step later
+        assert_eq!(resets[0], Vec::<usize>::new());
+        assert_eq!(resets[2], vec![0usize]);
+        assert_eq!(resets[3], vec![1usize]);
+        assert_eq!(resets[4], Vec::<usize>::new());
+        assert_eq!(resets[5], vec![0usize]); // row 0's second boundary
+    }
+
+    /// A fresh First row must not inherit the previous episode's
+    /// partial return.
+    #[test]
+    fn accountant_zeroes_running_return_on_reset() {
+        let mut venv = venv(&[(5.0, 2)]);
+        let mut acct = EpisodeAccountant::new(1);
+        venv.reset();
+        for _ in 0..3 {
+            acct.observe(&venv.step(&acts(1)));
+        }
+        // steps: Mid(+5), Last(+5 -> complete 10), First(reset)
+        assert_eq!(acct.completed(), &[10.0]);
+        // next full episode must again be exactly 10
+        for _ in 0..2 {
+            acct.observe(&venv.step(&acts(1)));
+        }
+        assert_eq!(acct.completed(), &[10.0, 10.0]);
+    }
+
+    /// Rewards carried by a `Last` step count; rewards on a `First`
+    /// (auto-reset) step are ignored by construction.
+    #[test]
+    fn accountant_counts_terminal_reward_once() {
+        let mut venv = venv(&[(2.0, 1)]); // every step is Last
+        let mut acct = EpisodeAccountant::new(1);
+        venv.reset();
+        acct.observe(&venv.step(&acts(1))); // Last: +2, complete
+        acct.observe(&venv.step(&acts(1))); // First: ignored
+        acct.observe(&venv.step(&acts(1))); // Last: +2, complete
+        assert_eq!(acct.completed(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn accountant_works_with_real_env() {
+        use crate::env::make_env;
+        let mut venv = VecEnv::new(
+            (0..4).map(|i| make_env("matrix", i).unwrap()).collect(),
+        )
+        .unwrap();
+        let mut acct = EpisodeAccountant::new(4);
+        venv.reset();
+        // matrix episodes are 5 steps; 11 vector steps crosses one
+        // boundary per row (reset at step 6)
+        for _ in 0..11 {
+            acct.observe(&venv.step(&acts(4)));
+        }
+        assert_eq!(acct.completed().len(), 8);
+        assert!(acct.completed().iter().all(|r| r.is_finite()));
+    }
+}

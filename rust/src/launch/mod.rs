@@ -7,6 +7,8 @@
 //! Fig 6 bottom-right measures is preserved, see DESIGN.md §2). Nodes
 //! coordinate shutdown through a shared [`StopSignal`].
 
+#![warn(missing_docs)]
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -18,14 +20,17 @@ pub struct StopSignal {
 }
 
 impl StopSignal {
+    /// Fresh signal in the running (not stopped) state.
     pub fn new() -> Self {
         StopSignal::default()
     }
 
+    /// Request shutdown; every clone observes it.
     pub fn stop(&self) {
         self.flag.store(true, Ordering::Release);
     }
 
+    /// Whether shutdown has been requested.
     pub fn is_stopped(&self) -> bool {
         self.flag.load(Ordering::Acquire)
     }
@@ -35,10 +40,15 @@ impl StopSignal {
 /// replay table node, trainer courier node, executor courier nodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NodeKind {
+    /// Replay table node.
     Replay,
+    /// Versioned parameter server node.
     ParameterServer,
+    /// Trainer (learner) courier node.
     Trainer,
+    /// Executor (actor) courier node.
     Executor,
+    /// Evaluator node.
     Evaluator,
 }
 
@@ -55,6 +65,7 @@ pub struct Program {
 }
 
 impl Program {
+    /// An empty program graph.
     pub fn new() -> Self {
         Program::default()
     }
@@ -70,10 +81,12 @@ impl Program {
         self
     }
 
+    /// Names of every node, in insertion order.
     pub fn node_names(&self) -> Vec<&str> {
         self.nodes.iter().map(|n| n.name.as_str()).collect()
     }
 
+    /// Number of nodes of the given kind.
     pub fn count(&self, kind: NodeKind) -> usize {
         self.nodes.iter().filter(|n| n.kind == kind).count()
     }
@@ -82,6 +95,7 @@ impl Program {
 /// A launched program: join to wait for completion.
 pub struct LaunchHandle {
     threads: Vec<(String, JoinHandle<()>)>,
+    /// The program's shared shutdown signal.
     pub stop: StopSignal,
 }
 

@@ -23,9 +23,12 @@
 //! - [`systems`] — MADQN, DIAL, VDN, QMIX, MADDPG, MAD4PG
 //! - [`exploration`] — ε-greedy schedules, Gaussian/OU noise
 //! - [`metrics`] — loggers, moving statistics, timers
-//! - [`eval`] — evaluation loops and solve detection
+//! - [`eval`] — serial + vectorized evaluation loops, robust statistics
+//!   (bootstrap CIs, IQM), solve detection
+//! - [`experiment`] — multi-seed experiment harness over the env suite
+//!   (EXPERIMENTS.md)
 //! - [`bench`] — shared mini-benchmark harness (criterion is unavailable
-//!   offline)
+//!   offline) + the versioned `BENCH_*.json` report writer
 
 pub mod arch;
 pub mod bench;
@@ -33,6 +36,7 @@ pub mod config;
 pub mod core;
 pub mod env;
 pub mod eval;
+pub mod experiment;
 pub mod exploration;
 pub mod launch;
 pub mod metrics;

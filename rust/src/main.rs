@@ -1,30 +1,63 @@
 //! `mava` CLI — the leader entrypoint.
 //!
 //! ```text
-//! mava train  [--config FILE] [--key value ...]   run a distributed system
-//! mava eval   [--config FILE] [--key value ...]   greedy evaluation only
-//! mava list                                       list artifacts
-//! mava info                                       runtime/platform info
+//! mava train       [--config FILE] [--key value ...]  run a distributed system
+//! mava eval        [--config FILE] [--key value ...]  greedy evaluation only
+//! mava experiment  [--config FILE] [--key value ...]  multi-seed suite ->
+//!                                                     BENCH_<scenario>.json
+//! mava check-bench [DIR ...]                          validate BENCH_*.json
+//! mava list                                           list artifacts
+//! mava info                                           runtime/platform info
 //! ```
 
+use std::path::PathBuf;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use mava::config::{RawConfig, TrainConfig};
+use mava::experiment::{self, ExperimentOpts};
 use mava::runtime::{Engine, Manifest};
 use mava::systems::{self, SystemKind};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mava <train|eval|list|info> [--config FILE] [--key value ...]\n\
+        "usage: mava <train|eval|experiment|check-bench|list|info>\n\
+         \x20           [--config FILE] [--key value ...]\n\
          keys: system preset arch num_executors num_envs_per_executor\n\
          \x20     max_env_steps lr tau n_step eps_start eps_end\n\
          \x20     eps_decay_steps noise_sigma replay_size min_replay\n\
-         \x20     samples_per_insert publish_interval seed artifacts_dir\n\
-         \x20     log_dir eval_every_steps eval_episodes params_sync_every"
+         \x20     samples_per_insert publish_interval seed seeds\n\
+         \x20     artifacts_dir log_dir eval_every_steps (alias\n\
+         \x20     eval_interval) eval_episodes params_sync_every\n\
+         see `mava experiment --help` for the experiment harness"
     );
     std::process::exit(2);
+}
+
+fn experiment_usage() {
+    println!(
+        "usage: mava experiment [--config FILE] [--key value ...]\n\
+         \n\
+         Runs S independent seeds of every suite scenario (matrix,\n\
+         switch, smac_lite, MPE spread/speaker-listener, multiwalker),\n\
+         evaluates each trained policy greedily, and writes one\n\
+         schema-versioned BENCH_<scenario>.json per scenario with\n\
+         per-seed returns, stratified bootstrap CIs and the IQM.\n\
+         Scenarios whose artifacts are not lowered are skipped.\n\
+         See EXPERIMENTS.md for the schema and workflow.\n\
+         \n\
+         harness flags:\n\
+         \x20 --seeds S            seeds per scenario (default 5)\n\
+         \x20 --scenario SUBSTR    only scenarios whose tag contains SUBSTR\n\
+         \x20 --out-dir DIR        BENCH_*.json destination (default .)\n\
+         \x20 --seed-deadline-s N  wall-clock budget per seed (default 600)\n\
+         \n\
+         plus every train config key, most relevantly:\n\
+         \x20 --eval-episodes N    greedy episodes per seed (default 10)\n\
+         \x20 --eval-interval K    evaluator period in env steps\n\
+         \x20 --max_env_steps N    training budget per seed"
+    );
 }
 
 fn parse_cfg(args: &[String]) -> Result<TrainConfig> {
@@ -97,6 +130,155 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let mut opts = ExperimentOpts::default();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "-h" | "--help" | "help" => {
+                experiment_usage();
+                return Ok(());
+            }
+            "--scenario" => {
+                opts.scenario = Some(
+                    args.get(i + 1)
+                        .context("--scenario requires a substring")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--out-dir" | "--out_dir" => {
+                opts.out_dir = PathBuf::from(
+                    args.get(i + 1).context("--out-dir requires a path")?,
+                );
+                i += 2;
+            }
+            "--seed-deadline-s" | "--seed_deadline_s" => {
+                opts.seed_deadline_s = args
+                    .get(i + 1)
+                    .context("--seed-deadline-s requires seconds")?
+                    .parse()?;
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let cfg = parse_cfg(&rest)?;
+    opts.seeds = cfg.seeds;
+    systems::check_artifacts(&cfg)?;
+    println!(
+        "experiment: {} seed(s) per scenario, eval_episodes={}, \
+         max_env_steps={} -> {}",
+        opts.seeds,
+        cfg.eval_episodes,
+        cfg.max_env_steps,
+        opts.out_dir.display()
+    );
+    let outcomes = experiment::run(&cfg, &opts)?;
+    ensure!(
+        !outcomes.is_empty(),
+        "no scenario matched --scenario {:?}",
+        opts.scenario
+    );
+    let written = outcomes.iter().filter(|o| o.report_path.is_some()).count();
+    println!("\nexperiment summary ({written}/{} scenarios ran):", outcomes.len());
+    for o in &outcomes {
+        match (&o.aggregates, &o.skipped) {
+            (Some(agg), _) => println!(
+                "  {:<24} mean {:>8.3} [{:>8.3}, {:>8.3}]  IQM {:>8.3} \
+                 [{:>8.3}, {:>8.3}]",
+                o.scenario,
+                agg.mean,
+                agg.mean_ci.lo,
+                agg.mean_ci.hi,
+                agg.iqm,
+                agg.iqm_ci.lo,
+                agg.iqm_ci.hi
+            ),
+            (None, Some(reason)) => {
+                println!("  {:<24} skipped: {reason}", o.scenario)
+            }
+            _ => {}
+        }
+    }
+    ensure!(
+        written > 0,
+        "every scenario was skipped — lower artifacts with `make artifacts`"
+    );
+    Ok(())
+}
+
+/// Collect every `BENCH_*.json` under `dir`, recursing into
+/// subdirectories but skipping hidden ones and build/dependency trees
+/// (`target`, `node_modules`, `__pycache__`).
+fn collect_bench_files(dir: &std::path::Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("read directory {}", dir.display()))?;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if path.is_dir() {
+            if name.starts_with('.')
+                || matches!(name, "target" | "node_modules" | "__pycache__")
+            {
+                continue;
+            }
+            collect_bench_files(&path, out)?;
+        } else if name.starts_with("BENCH_") && name.ends_with(".json") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_check_bench(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "-h" || a == "--help" || a == "help") {
+        println!(
+            "usage: mava check-bench [DIR ...]\n\
+             Recursively validates every BENCH_*.json under each DIR\n\
+             (default: .) against the versioned schema in\n\
+             rust/src/bench/report.rs (see EXPERIMENTS.md §2).\n\
+             Hidden directories, target/, node_modules/ and\n\
+             __pycache__/ are skipped. Exits non-zero on any invalid\n\
+             report; an empty tree passes."
+        );
+        return Ok(());
+    }
+    let dirs: Vec<String> = if args.is_empty() {
+        vec![".".into()]
+    } else {
+        args.to_vec()
+    };
+    let mut paths = Vec::new();
+    for dir in &dirs {
+        collect_bench_files(std::path::Path::new(dir), &mut paths)?;
+    }
+    paths.sort();
+    let mut failures = 0usize;
+    for path in &paths {
+        match mava::bench::report::validate_file(path) {
+            Ok(()) => println!("ok   {}", path.display()),
+            Err(e) => {
+                eprintln!("FAIL {}: {e:#}", path.display());
+                failures += 1;
+            }
+        }
+    }
+    ensure!(failures == 0, "{failures} schema-invalid bench report(s)");
+    if paths.is_empty() {
+        println!("no BENCH_*.json files under {dirs:?} (nothing to check)");
+    } else {
+        println!("{} bench report(s) schema-valid", paths.len());
+    }
+    Ok(())
+}
+
 fn cmd_list(args: &[String]) -> Result<()> {
     let cfg = parse_cfg(args)?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -129,6 +311,8 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&args[1..]),
         "eval" => cmd_eval(&args[1..]),
+        "experiment" => cmd_experiment(&args[1..]),
+        "check-bench" | "check_bench" => cmd_check_bench(&args[1..]),
         "list" => cmd_list(&args[1..]),
         "info" => cmd_info(&args[1..]),
         "-h" | "--help" | "help" => usage(),

@@ -1,5 +1,7 @@
 //! Metrics: episode statistics, moving averages, CSV loggers and timers.
 
+#![warn(missing_docs)]
+
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
@@ -16,11 +18,13 @@ pub struct MovingStats {
 }
 
 impl MovingStats {
+    /// Statistics over a sliding window of the last `window` values.
     pub fn new(window: usize) -> Self {
         assert!(window > 0);
         MovingStats { window, buf: Vec::with_capacity(window), next: 0, count: 0 }
     }
 
+    /// Record one value (evicting the oldest once the window is full).
     pub fn push(&mut self, x: f32) {
         if self.buf.len() < self.window {
             self.buf.push(x);
@@ -31,10 +35,12 @@ impl MovingStats {
         self.count += 1;
     }
 
+    /// Total values ever pushed (not capped by the window).
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean of the windowed values (0.0 while empty).
     pub fn mean(&self) -> f32 {
         if self.buf.is_empty() {
             return 0.0;
@@ -42,10 +48,12 @@ impl MovingStats {
         self.buf.iter().sum::<f32>() / self.buf.len() as f32
     }
 
+    /// Smallest windowed value (+∞ while empty).
     pub fn min(&self) -> f32 {
         self.buf.iter().copied().fold(f32::INFINITY, f32::min)
     }
 
+    /// Largest windowed value (-∞ while empty).
     pub fn max(&self) -> f32 {
         self.buf.iter().copied().fold(f32::NEG_INFINITY, f32::max)
     }
@@ -57,6 +65,7 @@ pub struct CsvLogger {
 }
 
 impl CsvLogger {
+    /// Create (truncate) the CSV at `path` and write its header row.
     pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
@@ -66,6 +75,7 @@ impl CsvLogger {
         Ok(CsvLogger { inner: Mutex::new(w) })
     }
 
+    /// Append one row (flushed immediately; errors are ignored).
     pub fn log(&self, row: &[f64]) {
         let mut w = self.inner.lock().unwrap();
         let s: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
@@ -80,14 +90,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer { start: Instant::now() }
     }
 
+    /// Seconds since [`Timer::start`].
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since [`Timer::start`].
     pub fn elapsed_ms(&self) -> f64 {
         self.start.elapsed().as_secs_f64() * 1e3
     }
@@ -96,27 +109,36 @@ impl Timer {
 /// Lightweight counter bundle shared across executor/trainer threads.
 #[derive(Default)]
 pub struct Counters {
+    /// Total environment steps across all executors.
     pub env_steps: std::sync::atomic::AtomicU64,
+    /// Total completed episodes across all executors.
     pub episodes: std::sync::atomic::AtomicU64,
+    /// Total trainer steps.
     pub train_steps: std::sync::atomic::AtomicU64,
 }
 
 impl Counters {
+    /// Add `n` environment steps.
     pub fn add_env_steps(&self, n: u64) {
         self.env_steps.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
     }
+    /// Record one completed episode.
     pub fn add_episode(&self) {
         self.episodes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
+    /// Record one trainer step.
     pub fn add_train_step(&self) {
         self.train_steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
+    /// Current environment-step total.
     pub fn env_steps(&self) -> u64 {
         self.env_steps.load(std::sync::atomic::Ordering::Relaxed)
     }
+    /// Current episode total.
     pub fn episodes(&self) -> u64 {
         self.episodes.load(std::sync::atomic::Ordering::Relaxed)
     }
+    /// Current trainer-step total.
     pub fn train_steps(&self) -> u64 {
         self.train_steps.load(std::sync::atomic::Ordering::Relaxed)
     }

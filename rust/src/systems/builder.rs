@@ -16,6 +16,7 @@ use crate::config::TrainConfig;
 use crate::core::{Actions, StepType, TimeStep};
 use crate::env::wrappers::{Fingerprint, FingerprintWrapper};
 use crate::env::{make_env, MultiAgentEnv, VecEnv};
+use crate::eval::VecEvaluator;
 use crate::exploration::EpsilonSchedule;
 use crate::launch::{LocalLauncher, NodeKind, Program, StopSignal};
 use crate::metrics::{Counters, MovingStats};
@@ -77,6 +78,10 @@ pub struct TrainResult {
     pub wall_s: f64,
     /// moving-average training return at shutdown
     pub train_return: f32,
+    /// Final published parameters (the trainer flushes at shutdown), so
+    /// callers — the experiment harness in particular — can evaluate the
+    /// trained policy without re-running the program graph.
+    pub final_params: Vec<f32>,
 }
 
 impl TrainResult {
@@ -138,6 +143,62 @@ pub fn env_for_preset(
     }
 }
 
+/// Largest lowered batch for `policy_name` that is still at most
+/// `cap`: scans the manifest for `{policy_name}_b{B}` variants and
+/// falls back to 1 (the base `[1, N, O]` artifact) when none fit.
+///
+/// The evaluator node and the experiment harness use this to vectorize
+/// evaluation opportunistically — a stale artifact directory without
+/// batched variants degrades to the serial path instead of failing.
+pub fn eval_policy_batch(
+    manifest: &Manifest,
+    policy_name: &str,
+    cap: usize,
+) -> usize {
+    let prefix = format!("{policy_name}_b");
+    manifest
+        .artifacts
+        .keys()
+        .filter_map(|n| n.strip_prefix(&prefix).and_then(|b| b.parse().ok()))
+        .filter(|&b: &usize| b >= 1 && b <= cap.max(1))
+        .max()
+        .unwrap_or(1)
+}
+
+/// Build the vectorized greedy evaluator shared by the evaluator node
+/// and the experiment harness: parses `cfg.system`, picks the largest
+/// lowered policy batch that fits `cap` ([`eval_policy_batch`]),
+/// builds that many fingerprinted instances of `cfg.preset` (env `i`
+/// seeded `seed + 1 + i`) and pairs them with a
+/// [`VecExecutor`] holding `params`.
+pub fn make_vec_evaluator(
+    engine: &mut Engine,
+    cfg: &TrainConfig,
+    params: Vec<f32>,
+    cap: usize,
+    seed: u64,
+) -> Result<VecEvaluator> {
+    let kind = SystemKind::parse(&cfg.system)?;
+    let policy_name = format!("{}_policy", cfg.artifact_prefix());
+    let batch = eval_policy_batch(&engine.manifest, &policy_name, cap.max(1));
+    let artifact_name = if batch == 1 {
+        policy_name
+    } else {
+        format!("{policy_name}_b{batch}")
+    };
+    let artifact = engine.artifact(&artifact_name)?;
+    let executor = VecExecutor::new(kind, artifact, params, seed)?;
+    let mut instances = Vec::with_capacity(batch);
+    for i in 0..batch {
+        instances.push(env_for_preset(
+            &cfg.preset,
+            seed.wrapping_add(1 + i as u64),
+            Some(Fingerprint::new(0.0, 1.0)),
+        )?);
+    }
+    VecEvaluator::new(executor, VecEnv::new(instances)?)
+}
+
 /// Run one greedy evaluation episode; returns the mean-over-agents
 /// episode return.
 pub fn eval_episode(
@@ -164,7 +225,8 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
     let policy_name = format!("{prefix}_policy");
     let train_name = format!("{prefix}_train");
     // executors act through a batched policy artifact when vectorized;
-    // the evaluator always uses the B=1 artifact
+    // the evaluator picks its own batch (largest lowered batch that
+    // fits eval_episodes, see the evaluator node below)
     let num_envs = cfg.num_envs_per_executor.max(1);
     let exec_policy_name = if num_envs == 1 {
         policy_name.clone()
@@ -409,29 +471,28 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
         );
     }
 
-    // --- evaluator node ---
+    // --- evaluator node (vectorized, eval/vec_eval.rs) ---
+    // Snapshots published params every `eval_every_steps` env steps and
+    // runs greedy episodes through the largest lowered policy batch that
+    // fits the episode budget — one artifact call advances B episodes,
+    // and the node never takes a lock the executors or trainer hold, so
+    // evaluation cannot stall acting or training.
     {
         let cfg = cfg.clone();
         let server = server.clone();
         let counters = counters.clone();
         let stop = stop.clone();
-        let policy_name = policy_name.clone();
         let params0 = params0.clone();
         let evals = evals.clone();
         program.add_node("evaluator", NodeKind::Evaluator, move || {
             let run = || -> Result<()> {
                 let mut engine = Engine::load(&cfg.artifacts_dir)?;
-                let artifact = engine.artifact(&policy_name)?;
-                let mut executor = Executor::new(
-                    kind,
-                    artifact,
+                let mut evaluator = make_vec_evaluator(
+                    &mut engine,
+                    &cfg,
                     params0,
+                    cfg.eval_episodes,
                     cfg.seed ^ 0xe7a1,
-                )?;
-                let mut env = env_for_preset(
-                    &cfg.preset,
-                    cfg.seed ^ 0xeefa,
-                    Some(Fingerprint::new(0.0, 1.0)),
                 )?;
                 let mut next_eval_at = 0u64;
                 while !stop.is_stopped() {
@@ -443,22 +504,23 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
                     next_eval_at = steps + cfg.eval_every_steps;
                     let mut buf = Vec::new();
                     if let Some(v) =
-                        server.sync(executor.params_version, &mut buf)
+                        server.sync(evaluator.params_version(), &mut buf)
                     {
-                        executor.set_params(v, &buf);
+                        evaluator.set_params(v, &buf);
                     }
-                    let mut total = 0.0;
-                    for _ in 0..cfg.eval_episodes {
-                        if stop.is_stopped() {
-                            return Ok(());
-                        }
-                        total += eval_episode(&mut executor, env.as_mut())?;
+                    let returns = evaluator.evaluate_until(
+                        cfg.eval_episodes,
+                        || stop.is_stopped(),
+                    )?;
+                    if returns.is_empty() {
+                        continue; // stopped mid-wave or eval_episodes == 0
                     }
                     let point = EvalPoint {
                         wall_s: started.elapsed().as_secs_f64(),
                         env_steps: counters.env_steps(),
                         train_steps: counters.train_steps(),
-                        mean_return: total / cfg.eval_episodes as f32,
+                        mean_return: crate::eval::stats::mean(&returns)
+                            as f32,
                     };
                     evals.lock().unwrap().push(point);
                 }
@@ -494,6 +556,9 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
         .map_err(|_| anyhow::anyhow!("eval history still shared"))?
         .into_inner()
         .unwrap();
+    // the trainer flushed its final publish before joining, so this is
+    // the trained policy (params0 if the trainer never stepped)
+    let (_, final_params) = server.get();
     let result = TrainResult {
         evals,
         env_steps: counters.env_steps(),
@@ -501,6 +566,7 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
         episodes: counters.episodes(),
         wall_s: started.elapsed().as_secs_f64(),
         train_return: train_returns.lock().unwrap().mean(),
+        final_params,
     };
     Ok(result)
 }

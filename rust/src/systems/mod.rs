@@ -31,8 +31,8 @@ mod trainer;
 
 pub use assemble::{BatchArena, BatchAssembler};
 pub use builder::{
-    check_artifacts, env_for_preset, eval_episode, train, EvalPoint,
-    TrainResult,
+    check_artifacts, env_for_preset, eval_episode, eval_policy_batch,
+    make_vec_evaluator, train, EvalPoint, TrainResult,
 };
 pub use executor::{ActorState, Executor, VecExecutor};
 pub use prefetch::BatchPrefetcher;

@@ -428,3 +428,72 @@ fn fingerprint_preset_runs() {
     assert!(result.env_steps >= 600);
     assert!(result.train_steps > 0);
 }
+
+/// Vectorized evaluation agrees with the serial path in shape and
+/// sanity: B greedy episodes per batched call, exactly n returns.
+#[test]
+fn vec_evaluator_runs_batched_greedy_episodes() {
+    if !batched_artifacts_ready("smac3m_madqn_policy_b4") {
+        return;
+    }
+    let mut engine = Engine::load("artifacts").unwrap();
+    let artifact = engine.artifact("smac3m_madqn_policy_b4").unwrap();
+    let params = engine.read_init("smac3m_madqn_train", "params0").unwrap();
+    let executor =
+        systems::VecExecutor::new(SystemKind::Madqn, artifact, params, 0)
+            .unwrap();
+    let instances: Vec<_> = (0..4)
+        .map(|i| systems::env_for_preset("smac3m", i, None).unwrap())
+        .collect();
+    let venv = mava::env::VecEnv::new(instances).unwrap();
+    let mut evaluator =
+        mava::eval::VecEvaluator::new(executor, venv).unwrap();
+    let returns = evaluator.evaluate(7).unwrap();
+    assert_eq!(returns.len(), 7, "exactly n episodes, surplus discarded");
+    assert!(returns.iter().all(|r| r.is_finite() && *r >= 0.0));
+    // a second call starts fresh (episodes re-reset, still n returns)
+    assert_eq!(evaluator.evaluate(3).unwrap().len(), 3);
+}
+
+/// End-to-end experiment harness: one scenario, two seeds, writes a
+/// schema-valid BENCH_<scenario>.json with per-seed returns and CIs.
+#[test]
+fn experiment_harness_writes_schema_valid_report() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut cfg = tiny_cfg("madqn");
+    cfg.max_env_steps = 1_500;
+    cfg.eval_episodes = 8;
+    let opts = mava::experiment::ExperimentOpts {
+        seeds: 2,
+        scenario: Some("matrix2_madqn".into()),
+        out_dir: std::env::temp_dir().join("mava_test_experiment"),
+        resamples: 200,
+        seed_deadline_s: 120,
+        ..Default::default()
+    };
+    let outcomes = mava::experiment::run(&cfg, &opts).unwrap();
+    assert_eq!(outcomes.len(), 1);
+    let outcome = &outcomes[0];
+    assert!(outcome.skipped.is_none());
+    let path = outcome.report_path.as_ref().unwrap();
+    mava::bench::report::validate_file(path).unwrap();
+    let json = mava::bench::report::parse(
+        &std::fs::read_to_string(path).unwrap(),
+    )
+    .unwrap();
+    let seeds = json.get("seeds").unwrap().as_arr().unwrap();
+    assert_eq!(seeds.len(), 2);
+    for s in seeds {
+        assert_eq!(
+            s.get("returns").unwrap().as_arr().unwrap().len(),
+            8,
+            "eval_episodes returns recorded per seed"
+        );
+    }
+    let agg = outcome.aggregates.as_ref().unwrap();
+    assert!(agg.mean_ci.lo <= agg.mean && agg.mean <= agg.mean_ci.hi);
+    assert!(agg.iqm_ci.lo <= agg.iqm && agg.iqm <= agg.iqm_ci.hi);
+    let _ = std::fs::remove_dir_all(&opts.out_dir);
+}
