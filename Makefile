@@ -28,7 +28,10 @@ experiment:
 check-bench-schema:
 	cargo run --release --quiet -- check-bench .
 
-# the vectorized-executor scaling curve (ISSUE 1 acceptance bench)
+# the vectorized-executor scaling curve (ISSUE 1 acceptance bench);
+# also writes BENCH_executor_hotpath.json — legacy vs SoA acting
+# throughput at B ∈ {4,16} (ISSUE 4) — validated by `make
+# check-bench-schema` like every BENCH_*.json
 bench-vector:
 	cargo bench --bench vector_scaling
 

@@ -6,9 +6,11 @@
 //!
 //! 1. **Acting hot path** (no trainer): a `VecExecutor` + `VecEnv` pair
 //!    stepping smac3m with one batched policy call per vector step, for
-//!    `B ∈ {1, 4, 16}`. Per-executor env-steps/s should grow ~linearly
-//!    until the policy kernel saturates; the acceptance bar is B=16
-//!    achieving >= 3x the B=1 per-executor throughput.
+//!    `B ∈ {1, 4, 16}` — measured BOTH through the legacy per-TimeStep
+//!    path and the SoA `VecStepBuf` path (zero steady-state allocation,
+//!    device-resident carry). Per-executor env-steps/s should grow
+//!    ~linearly until the policy kernel saturates; the acceptance bar
+//!    is SoA B=16 achieving >= 3x the SoA B=1 per-executor throughput.
 //! 2. **End-to-end training throughput**: `train()` on matrix2 madqn
 //!    over the `{1, 2} executors x {1, 4, 16} envs` grid with a fixed
 //!    wall budget, reporting total env-steps/s (replay sharding keeps
@@ -17,7 +19,8 @@
 //! Requires `make artifacts` (including the `*_policy_b{4,16}` batched
 //! variants). Scale with MAVA_BENCH_SCALE. Besides the grep-able
 //! `curve` rows, the run serialises every measured rate as
-//! `BENCH_vector_scaling.json` (the versioned schema of
+//! `BENCH_vector_scaling.json` AND the legacy-vs-SoA comparison as
+//! `BENCH_executor_hotpath.json` (both in the versioned schema of
 //! `bench/report.rs` — validate with `mava check-bench`).
 
 use mava::bench::report::{throughput_report, write_report};
@@ -37,55 +40,110 @@ fn policy_name(b: usize) -> String {
     }
 }
 
+fn make_pair(
+    engine: &mut Engine,
+    params: &[f32],
+    b: usize,
+) -> anyhow::Result<(VecExecutor, VecEnv)> {
+    let artifact = engine.artifact(&policy_name(b))?;
+    let executor =
+        VecExecutor::new(SystemKind::Madqn, artifact, params.to_vec(), 7)?;
+    let mut instances = Vec::with_capacity(b);
+    for i in 0..b {
+        instances.push(systems::env_for_preset(
+            "smac3m",
+            100 + i as u64,
+            None,
+        )?);
+    }
+    Ok((executor, VecEnv::new(instances)?))
+}
+
+/// Measure one configuration of the acting loop; `soa` picks the
+/// struct-of-arrays zero-allocation path vs the legacy per-TimeStep
+/// path. Returns env steps/s.
+fn measure_acting(
+    engine: &mut Engine,
+    params: &[f32],
+    b: usize,
+    soa: bool,
+) -> anyhow::Result<f64> {
+    let (mut executor, mut venv) = make_pair(engine, params, b)?;
+    let iters = (2_000.0 * bench::scale()) as u64;
+    let s = if soa {
+        let mut cur = venv.make_buf();
+        let mut next = venv.make_buf();
+        let mut abuf = venv.make_action_buf();
+        venv.reset_into(&mut cur);
+        time(50, iters, move || {
+            executor
+                .select_actions_into(&cur, 0.1, 0.0, &mut abuf)
+                .unwrap();
+            venv.step_into(&abuf, &mut next);
+            for row in 0..next.num_envs() {
+                if next.step_type(row) == mava::StepType::First {
+                    executor.reset_instance(row);
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        })
+    } else {
+        let mut vs = venv.reset();
+        time(50, iters, move || {
+            let actions =
+                executor.select_actions_vec(&vs, 0.1, 0.0).unwrap();
+            vs = venv.step(&actions);
+        })
+    };
+    let tag = if soa { "soa" } else { "legacy" };
+    report(&format!("vec_step_smac3m_madqn_{tag}_b{b}"), &s);
+    Ok(s.per_sec() * b as f64)
+}
+
 fn bench_acting_hot_path(
     series: &mut Vec<(String, f64, String)>,
+    hotpath: &mut Vec<(String, f64, String)>,
 ) -> anyhow::Result<()> {
-    section("acting hot path: env steps/s per executor vs B");
+    section("acting hot path: env steps/s per executor vs B (legacy vs SoA)");
     let mut engine = Engine::load("artifacts")?;
     let params = engine.read_init("smac3m_madqn_train", "params0")?;
     let mut rates = Vec::new();
     for b in BATCHES {
-        let artifact = engine.artifact(&policy_name(b))?;
-        let mut executor =
-            VecExecutor::new(SystemKind::Madqn, artifact, params.clone(), 7)?;
-        let mut instances = Vec::with_capacity(b);
-        for i in 0..b {
-            instances.push(systems::env_for_preset(
-                "smac3m",
-                100 + i as u64,
-                None,
-            )?);
-        }
-        let mut venv = VecEnv::new(instances)?;
-        let mut vs = venv.reset();
-        let iters = (2_000.0 * bench::scale()) as u64;
-        let s = time(50, iters, move || {
-            let actions = executor.select_actions_vec(&vs, 0.1, 0.0).unwrap();
-            vs = venv.step(&actions);
-        });
-        report(&format!("vec_step_smac3m_madqn_b{b}"), &s);
-        let env_steps_per_sec = s.per_sec() * b as f64;
+        let legacy = measure_acting(&mut engine, &params, b, false)?;
+        let soa = measure_acting(&mut engine, &params, b, true)?;
         curve_row(
             "vector_scaling",
             "acting_env_steps_per_sec",
             b as f64,
-            env_steps_per_sec,
+            soa,
         );
-        rates.push((b, env_steps_per_sec));
-        series.push((
-            format!("acting_b{b}"),
-            env_steps_per_sec,
-            "env_steps/s".into(),
-        ));
+        rates.push((b, legacy, soa));
+        series.push((format!("acting_b{b}"), soa, "env_steps/s".into()));
+        // the ISSUE-4 acceptance pair: legacy vs SoA at B ∈ {4, 16}
+        if b > 1 {
+            hotpath.push((
+                format!("legacy_b{b}"),
+                legacy,
+                "env_steps/s".into(),
+            ));
+            hotpath.push((format!("soa_b{b}"), soa, "env_steps/s".into()));
+        }
     }
-    let base = rates[0].1;
-    println!("\nper-executor acting throughput (one PJRT call per vector step):");
-    for (b, r) in &rates {
-        println!("  B={b:<3} {r:>10.0} env steps/s   {:>5.2}x vs B=1", r / base);
-    }
-    let b16 = rates.last().unwrap().1;
+    let base = rates[0].2;
     println!(
-        "speedup check: B=16 is {:.2}x B=1 ({})",
+        "\nper-executor acting throughput (one PJRT call per vector step):"
+    );
+    for (b, legacy, soa) in &rates {
+        println!(
+            "  B={b:<3} legacy {legacy:>10.0}  soa {soa:>10.0} env steps/s \
+             ({:>5.2}x legacy, {:>5.2}x vs soa B=1)",
+            soa / legacy,
+            soa / base
+        );
+    }
+    let b16 = rates.last().unwrap().2;
+    println!(
+        "speedup check: SoA B=16 is {:.2}x SoA B=1 ({})",
         b16 / base,
         if b16 >= 3.0 * base { "PASS >= 3x" } else { "BELOW 3x" }
     );
@@ -164,11 +222,18 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let mut series = Vec::new();
-    bench_acting_hot_path(&mut series)?;
+    let mut hotpath = Vec::new();
+    bench_acting_hot_path(&mut series, &mut hotpath)?;
     bench_end_to_end(&mut series)?;
     let json = throughput_report("vector_scaling", &series);
     let path =
         write_report(std::path::Path::new("."), "vector_scaling", &json)?;
     println!("\nwrote {}", path.display());
+    // the ISSUE-4 perf artifact: legacy vs SoA at B ∈ {4, 16}, gated by
+    // `mava check-bench` in CI like every other BENCH_*.json
+    let json = throughput_report("executor_hotpath", &hotpath);
+    let path =
+        write_report(std::path::Path::new("."), "executor_hotpath", &json)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -11,6 +11,17 @@ mod tensor;
 
 pub use tensor::{Dtype, HostTensor};
 
+/// Per-step scalar results of the SoA environment-stepping hooks
+/// (everything a vector step produces that is not a tensor plane of the
+/// batch buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct StepMeta {
+    /// dm_env step type of the produced step.
+    pub step_type: StepType,
+    /// Bootstrap discount (0.0 on terminal `Last` steps).
+    pub discount: f32,
+}
+
 /// Index of an agent within a system (Mava: `"agent_0"` etc.).
 pub type AgentId = usize;
 
@@ -90,6 +101,86 @@ impl Actions {
     }
 }
 
+/// A borrowed view of one environment's joint action — the hot-path
+/// counterpart of [`Actions`].
+///
+/// The vectorized executor writes joint actions into a flat
+/// struct-of-arrays buffer ([`crate::env::ActionBuf`]); an `ActionsRef`
+/// lends one row of that buffer to an environment without materialising
+/// the per-agent `Vec`s an owned [`Actions`] carries. The
+/// `ContinuousRows` variant adapts the legacy per-agent layout so the
+/// same environment stepping code serves both paths.
+#[derive(Clone, Copy, Debug)]
+pub enum ActionsRef<'a> {
+    /// Discrete joint action `[N]`.
+    Discrete(&'a [i32]),
+    /// Continuous joint action, flat `[N*dim]` row-major by agent.
+    Continuous {
+        /// Flat action data, agent `i` at `data[i*dim..(i+1)*dim]`.
+        data: &'a [f32],
+        /// Per-agent action dimension.
+        dim: usize,
+    },
+    /// Continuous joint action in the legacy per-agent-`Vec` layout.
+    ContinuousRows(&'a [Vec<f32>]),
+}
+
+impl<'a> ActionsRef<'a> {
+    /// Borrow an owned [`Actions`] (legacy-path bridge).
+    pub fn from_actions(a: &'a Actions) -> ActionsRef<'a> {
+        match a {
+            Actions::Discrete(v) => ActionsRef::Discrete(v),
+            Actions::Continuous(v) => ActionsRef::ContinuousRows(v),
+        }
+    }
+
+    /// Number of agents in the joint action.
+    pub fn n_agents(&self) -> usize {
+        match self {
+            ActionsRef::Discrete(v) => v.len(),
+            ActionsRef::Continuous { data, dim } => {
+                if *dim == 0 {
+                    0
+                } else {
+                    data.len() / dim
+                }
+            }
+            ActionsRef::ContinuousRows(v) => v.len(),
+        }
+    }
+
+    /// Discrete joint action slice; panics on continuous actions.
+    pub fn as_discrete(&self) -> &'a [i32] {
+        match *self {
+            ActionsRef::Discrete(v) => v,
+            _ => panic!("expected discrete actions"),
+        }
+    }
+
+    /// Agent `i`'s continuous action; panics on discrete actions.
+    pub fn cont(&self, i: usize) -> &'a [f32] {
+        match *self {
+            ActionsRef::Continuous { data, dim } => {
+                &data[i * dim..(i + 1) * dim]
+            }
+            ActionsRef::ContinuousRows(v) => &v[i],
+            ActionsRef::Discrete(_) => panic!("expected continuous actions"),
+        }
+    }
+
+    /// Materialise an owned [`Actions`] (allocates — bridge for
+    /// environments that only implement the legacy `step`).
+    pub fn to_actions(&self) -> Actions {
+        match self {
+            ActionsRef::Discrete(v) => Actions::Discrete(v.to_vec()),
+            ActionsRef::Continuous { data, dim } => Actions::Continuous(
+                data.chunks_exact((*dim).max(1)).map(|c| c.to_vec()).collect(),
+            ),
+            ActionsRef::ContinuousRows(v) => Actions::Continuous(v.to_vec()),
+        }
+    }
+}
+
 /// Action space of one agent.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ActionSpec {
@@ -150,6 +241,27 @@ mod tests {
         assert_eq!(a.as_discrete(), &[0, 2, 1]);
         let c = Actions::Continuous(vec![vec![0.1, 0.2], vec![0.3, 0.4]]);
         assert_eq!(c.flat_continuous(), vec![0.1, 0.2, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn actions_ref_views() {
+        let d = Actions::Discrete(vec![1, 2]);
+        let r = ActionsRef::from_actions(&d);
+        assert_eq!(r.n_agents(), 2);
+        assert_eq!(r.as_discrete(), &[1, 2]);
+        assert_eq!(r.to_actions().as_discrete(), &[1, 2]);
+
+        let flat = [0.1f32, 0.2, 0.3, 0.4];
+        let f = ActionsRef::Continuous { data: &flat, dim: 2 };
+        assert_eq!(f.n_agents(), 2);
+        assert_eq!(f.cont(1), &[0.3, 0.4]);
+        assert_eq!(f.to_actions().flat_continuous(), flat.to_vec());
+
+        let rows = vec![vec![1.0f32], vec![2.0]];
+        let c = Actions::Continuous(rows);
+        let rr = ActionsRef::from_actions(&c);
+        assert_eq!(rr.cont(0), &[1.0]);
+        assert_eq!(rr.n_agents(), 2);
     }
 
     #[test]

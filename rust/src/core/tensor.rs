@@ -87,6 +87,18 @@ impl HostTensor {
         debug_assert_eq!(self.dtype, Dtype::F32);
         self.data_f32
     }
+
+    /// Borrow chunk `i` of `len` contiguous f32 elements — row `i` of a
+    /// tensor whose leading axis strides by `len` (the SoA batch-buffer
+    /// row accessor).
+    pub fn f32_chunk(&self, i: usize, len: usize) -> &[f32] {
+        &self.as_f32()[i * len..(i + 1) * len]
+    }
+
+    /// Mutable [`HostTensor::f32_chunk`].
+    pub fn f32_chunk_mut(&mut self, i: usize, len: usize) -> &mut [f32] {
+        &mut self.as_f32_mut()[i * len..(i + 1) * len]
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +119,14 @@ mod tests {
         let s = HostTensor::scalar_f32(3.5);
         assert!(s.dims.is_empty());
         assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn chunk_views_rows() {
+        let mut t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.f32_chunk(1, 3), &[4., 5., 6.]);
+        t.f32_chunk_mut(0, 3).fill(0.0);
+        assert_eq!(t.as_f32(), &[0., 0., 0., 4., 5., 6.]);
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //! encode the previous joint action so that recurrent-free Q-learners can
 //! still condition on history.
 
-use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::core::{
+    ActionSpec, Actions, ActionsRef, EnvSpec, StepMeta, StepType, TimeStep,
+};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
 
@@ -35,6 +37,7 @@ pub struct ClimbingGame {
     payoff: [[f32; 3]; 3],
     t: usize,
     last: [i32; 2],
+    last_reward: f32,
     _rng: Rng,
 }
 
@@ -63,24 +66,9 @@ impl ClimbingGame {
             payoff,
             t: 0,
             last: [-1, -1],
+            last_reward: 0.0,
             _rng: Rng::new(seed),
         }
-    }
-
-    fn observe(&self) -> (Vec<Vec<f32>>, Vec<f32>) {
-        let tfrac = self.t as f32 / self.spec.episode_limit as f32;
-        let obs: Vec<Vec<f32>> = (0..2)
-            .map(|i| {
-                vec![
-                    1.0,
-                    tfrac,
-                    (self.last[i] as f32 + 1.0) / 3.0,
-                    (self.last[1 - i] as f32 + 1.0) / 3.0,
-                ]
-            })
-            .collect();
-        let state = obs.concat();
-        (obs, state)
     }
 }
 
@@ -90,34 +78,57 @@ impl MultiAgentEnv for ClimbingGame {
     }
 
     fn reset(&mut self) -> TimeStep {
-        self.t = 0;
-        self.last = [-1, -1];
-        let (observations, state) = self.observe();
-        TimeStep {
-            step_type: StepType::First,
-            observations,
-            rewards: vec![0.0; 2],
-            discount: 1.0,
-            state,
-            legal_actions: None,
-        }
+        let meta = self.reset_soa();
+        self.materialize(meta)
     }
 
     fn step(&mut self, actions: &Actions) -> TimeStep {
+        let meta = self.step_soa(&ActionsRef::from_actions(actions));
+        self.materialize(meta)
+    }
+
+    fn writes_soa(&self) -> bool {
+        true
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
+        self.t = 0;
+        self.last = [-1, -1];
+        self.last_reward = 0.0;
+        StepMeta { step_type: StepType::First, discount: 1.0 }
+    }
+
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
         let a = actions.as_discrete();
-        let r = self.payoff[a[0] as usize][a[1] as usize];
+        self.last_reward = self.payoff[a[0] as usize][a[1] as usize];
         self.last = [a[0], a[1]];
         self.t += 1;
         let last = self.t >= self.spec.episode_limit;
-        let (observations, state) = self.observe();
-        TimeStep {
+        StepMeta {
             step_type: if last { StepType::Last } else { StepType::Mid },
-            observations,
-            rewards: vec![r; 2],
-            discount: 1.0, // repeats truncate, never terminate
-            state,
-            legal_actions: None,
+            // repeats truncate, never terminate
+            discount: 1.0,
         }
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let tfrac = self.t as f32 / self.spec.episode_limit as f32;
+        for i in 0..2 {
+            let o = &mut out[i * 4..(i + 1) * 4];
+            o[0] = 1.0;
+            o[1] = tfrac;
+            o[2] = (self.last[i] as f32 + 1.0) / 3.0;
+            o[3] = (self.last[1 - i] as f32 + 1.0) / 3.0;
+        }
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        out.fill(self.last_reward);
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        // state = stacked observations (state_dim == n_agents * obs_dim)
+        self.write_obs(out);
     }
 }
 

@@ -20,18 +20,186 @@ pub mod switch;
 pub mod vec_env;
 pub mod wrappers;
 
-pub use vec_env::{VecEnv, VecStep};
+pub use vec_env::{ActionBuf, VecEnv, VecStep, VecStepBuf};
 
-use crate::core::{Actions, EnvSpec, TimeStep};
+use crate::core::{Actions, ActionsRef, EnvSpec, StepMeta, TimeStep};
 use anyhow::{bail, Result};
 
 /// The Mava / dm_env multi-agent environment interface (paper Block 1).
+///
+/// Besides the classic allocating `reset`/`step` → [`TimeStep`] API,
+/// the trait carries the struct-of-arrays hot-path hooks of
+/// DESIGN.md §6: an environment that opts in (`writes_soa() == true`)
+/// advances with [`MultiAgentEnv::step_soa`] and then *writes* its
+/// observations / rewards / state / legal mask directly into caller-
+/// provided slices — rows of a [`VecStepBuf`] — so a vector step
+/// performs zero heap allocations. Environments that do not opt in
+/// keep working everywhere: [`VecEnv`] bridges them through the
+/// timestep API (allocating) automatically.
 pub trait MultiAgentEnv: Send {
     fn spec(&self) -> &EnvSpec;
     /// Start a new episode; returns the `First` timestep.
     fn reset(&mut self) -> TimeStep;
     /// Apply the joint action; returns the next timestep.
     fn step(&mut self, actions: &Actions) -> TimeStep;
+
+    /// True when this environment implements the allocation-free SoA
+    /// write hooks below. The defaults of those hooks panic, so only
+    /// override them together with this flag.
+    fn writes_soa(&self) -> bool {
+        false
+    }
+
+    /// Start a new episode WITHOUT materialising a [`TimeStep`]; the
+    /// produced tensors are read back through the `write_*` hooks.
+    fn reset_soa(&mut self) -> StepMeta {
+        unimplemented!("reset_soa: writes_soa() is false for this env")
+    }
+
+    /// Advance one step WITHOUT materialising a [`TimeStep`]; scalar
+    /// results return by value, tensors via the `write_*` hooks.
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
+        let _ = actions;
+        unimplemented!("step_soa: writes_soa() is false for this env")
+    }
+
+    /// Write the current stacked per-agent observations into a
+    /// `[N*obs_dim]` slice (agent `i` at `out[i*obs_dim..]`).
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let _ = out;
+        unimplemented!("write_obs: writes_soa() is false for this env")
+    }
+
+    /// Write the current per-agent rewards into a `[N]` slice
+    /// (all-zero right after a reset).
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        let _ = out;
+        unimplemented!("write_rewards: writes_soa() is false for this env")
+    }
+
+    /// Write the current global state into a `[state_dim]` slice.
+    /// Never called when `state_dim == 0`.
+    fn write_state(&mut self, out: &mut [f32]) {
+        let _ = out;
+        unimplemented!("write_state: writes_soa() is false for this env")
+    }
+
+    /// True when this environment produces per-agent legal-action
+    /// masks. Environments that do must override this alongside
+    /// [`MultiAgentEnv::write_legal`] so the SoA pipeline allocates a
+    /// mask plane for them.
+    fn has_legal(&self) -> bool {
+        false
+    }
+
+    /// Write the current legal-action mask into a `[N*n_actions]`
+    /// slice (1.0 legal, 0.0 illegal; agent `i` at
+    /// `out[i*n_actions..]`). Only called when `has_legal()`.
+    fn write_legal(&mut self, out: &mut [f32]) {
+        let _ = out;
+        unimplemented!("write_legal: has_legal() is false for this env")
+    }
+
+    /// Build a [`TimeStep`] from the current post-step state via the
+    /// SoA write hooks (provided; allocates). SoA environments
+    /// implement `reset`/`step` as `*_soa` + this, so both APIs share
+    /// one stepping path.
+    fn materialize(&mut self, meta: StepMeta) -> TimeStep {
+        debug_assert!(self.writes_soa());
+        let (n, o, s, a, legal) = {
+            let spec = self.spec();
+            (
+                spec.n_agents,
+                spec.obs_dim,
+                spec.state_dim,
+                spec.n_actions(),
+                self.has_legal(),
+            )
+        };
+        let mut flat = vec![0.0f32; n * o];
+        self.write_obs(&mut flat);
+        let observations: Vec<Vec<f32>> =
+            flat.chunks_exact(o.max(1)).map(|c| c.to_vec()).collect();
+        let mut rewards = vec![0.0f32; n];
+        self.write_rewards(&mut rewards);
+        let mut state = vec![0.0f32; s];
+        if s > 0 {
+            self.write_state(&mut state);
+        }
+        let legal_actions = if legal {
+            let mut mask = vec![0.0f32; n * a];
+            self.write_legal(&mut mask);
+            Some(
+                mask.chunks_exact(a.max(1))
+                    .map(|c| c.iter().map(|&x| x > 0.5).collect())
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        TimeStep {
+            step_type: meta.step_type,
+            observations,
+            rewards,
+            discount: meta.discount,
+            state,
+            legal_actions,
+        }
+    }
+}
+
+// A boxed environment is an environment: every method — the SoA hooks
+// in particular — must forward through the vtable, otherwise a default
+// impl would shadow the inner override and silently disable the
+// allocation-free path for wrapped envs.
+impl MultiAgentEnv for Box<dyn MultiAgentEnv> {
+    fn spec(&self) -> &EnvSpec {
+        (**self).spec()
+    }
+
+    fn reset(&mut self) -> TimeStep {
+        (**self).reset()
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        (**self).step(actions)
+    }
+
+    fn writes_soa(&self) -> bool {
+        (**self).writes_soa()
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
+        (**self).reset_soa()
+    }
+
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
+        (**self).step_soa(actions)
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        (**self).write_obs(out)
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        (**self).write_rewards(out)
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        (**self).write_state(out)
+    }
+
+    fn has_legal(&self) -> bool {
+        (**self).has_legal()
+    }
+
+    fn write_legal(&mut self, out: &mut [f32]) {
+        (**self).write_legal(out)
+    }
+
+    fn materialize(&mut self, meta: StepMeta) -> TimeStep {
+        (**self).materialize(meta)
+    }
 }
 
 /// Construct an environment by preset env-name (manifest `env` field).

@@ -67,14 +67,26 @@ pub struct World {
     pub agents: Vec<Entity>,
     /// Static reference points.
     pub landmarks: Vec<Entity>,
+    /// Reused per-step force accumulator, so stepping is
+    /// allocation-free after the first call (SoA hot path).
+    force_scratch: Vec<[f32; 2]>,
 }
 
 impl World {
+    /// Drop all entities, keeping buffer capacity (episode resets on
+    /// the allocation-free hot path).
+    pub fn clear(&mut self) {
+        self.agents.clear();
+        self.landmarks.clear();
+    }
+
     /// Integrate one physics step given per-agent control forces.
     pub fn step(&mut self, forces: &[[f32; 2]]) {
         assert_eq!(forces.len(), self.agents.len());
         let n = self.agents.len();
-        let mut total: Vec<[f32; 2]> = forces.to_vec();
+        let total = &mut self.force_scratch;
+        total.clear();
+        total.extend_from_slice(forces);
 
         // pairwise contact forces between colliding agents
         for i in 0..n {
@@ -103,7 +115,7 @@ impl World {
             }
         }
 
-        for (agent, f) in self.agents.iter_mut().zip(&total) {
+        for (agent, f) in self.agents.iter_mut().zip(total.iter()) {
             if !agent.movable {
                 continue;
             }

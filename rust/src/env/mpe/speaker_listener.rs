@@ -9,7 +9,9 @@
 //! the speaker's observation is its 3-dim goal one-hot + zeros; the
 //! listener's action uses only the first two dims (acceleration).
 
-use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::core::{
+    ActionSpec, Actions, ActionsRef, EnvSpec, StepMeta, StepType, TimeStep,
+};
 use crate::env::mpe::core::{Entity, World};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
@@ -30,6 +32,7 @@ pub struct SpeakerListener {
     goal: usize,
     comm: [f32; 3], // last utterance (heard with one-step delay)
     t: usize,
+    last_reward: f32,
 }
 
 impl SpeakerListener {
@@ -49,41 +52,13 @@ impl SpeakerListener {
             goal: 0,
             comm: [0.0; 3],
             t: 0,
+            last_reward: 0.0,
         }
-    }
-
-    fn observe(&self) -> Vec<Vec<f32>> {
-        // speaker: goal one-hot, padded to 11
-        let mut sp = vec![0.0f32; self.spec.obs_dim];
-        sp[self.goal] = 1.0;
-        // listener: vel(2) + rel landmarks(6) + comm(3)
-        let li_body = &self.world.agents[0];
-        let mut li = Vec::with_capacity(self.spec.obs_dim);
-        li.extend_from_slice(&li_body.vel);
-        for lm in &self.world.landmarks {
-            li.push(lm.pos[0] - li_body.pos[0]);
-            li.push(lm.pos[1] - li_body.pos[1]);
-        }
-        li.extend_from_slice(&self.comm);
-        vec![sp, li]
     }
 
     fn reward(&self) -> f32 {
         let d = self.world.agents[0].dist(&self.world.landmarks[self.goal]);
         -(d * d)
-    }
-
-    fn timestep(&self, st: StepType, reward: f32) -> TimeStep {
-        let observations = self.observe();
-        let state = observations.concat();
-        TimeStep {
-            step_type: st,
-            observations,
-            rewards: vec![reward; 2],
-            discount: 1.0,
-            state,
-            legal_actions: None,
-        }
     }
 }
 
@@ -93,39 +68,97 @@ impl MultiAgentEnv for SpeakerListener {
     }
 
     fn reset(&mut self) -> TimeStep {
-        self.t = 0;
-        self.comm = [0.0; 3];
-        self.goal = self.rng.below(3);
-        self.world = World::default();
-        let mut body = Entity::new(0.075, true, false);
-        body.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
-        self.world.agents.push(body);
-        for _ in 0..3 {
-            let mut l = Entity::new(0.04, false, false);
-            l.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
-            self.world.landmarks.push(l);
-        }
-        self.timestep(StepType::First, 0.0)
+        let meta = self.reset_soa();
+        self.materialize(meta)
     }
 
     fn step(&mut self, actions: &Actions) -> TimeStep {
-        let acts = actions.as_continuous();
+        let meta = self.step_soa(&ActionsRef::from_actions(actions));
+        self.materialize(meta)
+    }
+
+    fn writes_soa(&self) -> bool {
+        true
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
+        self.t = 0;
+        self.comm = [0.0; 3];
+        self.last_reward = 0.0;
+        self.goal = self.rng.below(3);
+        self.world.clear();
+        let mut body = Entity::new(0.075, true, false);
+        body.pos = [
+            self.rng.range_f32(-1.0, 1.0),
+            self.rng.range_f32(-1.0, 1.0),
+        ];
+        self.world.agents.push(body);
+        for _ in 0..3 {
+            let mut l = Entity::new(0.04, false, false);
+            l.pos = [
+                self.rng.range_f32(-1.0, 1.0),
+                self.rng.range_f32(-1.0, 1.0),
+            ];
+            self.world.landmarks.push(l);
+        }
+        StepMeta { step_type: StepType::First, discount: 1.0 }
+    }
+
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
         self.t += 1;
+        let sp = actions.cont(SPEAKER);
+        let li = actions.cont(LISTENER);
         // speaker utterance: heard on the NEXT step (MPE comm delay)
         self.comm = [
-            acts[SPEAKER][0].clamp(-1.0, 1.0),
-            acts[SPEAKER][1].clamp(-1.0, 1.0),
-            acts[SPEAKER][2].clamp(-1.0, 1.0),
+            sp[0].clamp(-1.0, 1.0),
+            sp[1].clamp(-1.0, 1.0),
+            sp[2].clamp(-1.0, 1.0),
         ];
         // listener motion: first two action dims
         let f = [
-            acts[LISTENER][0].clamp(-1.0, 1.0) * ACCEL,
-            acts[LISTENER][1].clamp(-1.0, 1.0) * ACCEL,
+            li[0].clamp(-1.0, 1.0) * ACCEL,
+            li[1].clamp(-1.0, 1.0) * ACCEL,
         ];
         self.world.step(&[f]);
-        let r = self.reward();
-        let st = if self.t >= EPISODE { StepType::Last } else { StepType::Mid };
-        self.timestep(st, r)
+        self.last_reward = self.reward();
+        StepMeta {
+            step_type: if self.t >= EPISODE {
+                StepType::Last
+            } else {
+                StepType::Mid
+            },
+            discount: 1.0,
+        }
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let od = self.spec.obs_dim;
+        // speaker: goal one-hot, padded to obs_dim
+        let sp = &mut out[0..od];
+        sp.fill(0.0);
+        sp[self.goal] = 1.0;
+        // listener: vel(2) + rel landmarks(6) + comm(3)
+        let li_body = &self.world.agents[0];
+        let li = &mut out[od..2 * od];
+        li[0] = li_body.vel[0];
+        li[1] = li_body.vel[1];
+        let mut k = 2;
+        for lm in &self.world.landmarks {
+            li[k] = lm.pos[0] - li_body.pos[0];
+            li[k + 1] = lm.pos[1] - li_body.pos[1];
+            k += 2;
+        }
+        li[k..k + 3].copy_from_slice(&self.comm);
+        debug_assert_eq!(k + 3, od);
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        out.fill(self.last_reward);
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        // state = stacked observations (state_dim == n * obs_dim)
+        self.write_obs(out);
     }
 }
 

@@ -5,7 +5,9 @@
 //! Continuous actions: 2-D acceleration in [-1, 1], scaled by the MPE
 //! sensitivity factor.
 
-use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::core::{
+    ActionSpec, Actions, ActionsRef, EnvSpec, StepMeta, StepType, TimeStep,
+};
 use crate::env::mpe::core::{Entity, World};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
@@ -21,6 +23,8 @@ pub struct Spread {
     world: World,
     n: usize,
     t: usize,
+    last_reward: f32,
+    forces: Vec<[f32; 2]>, // reused per step (allocation-free hot path)
 }
 
 impl Spread {
@@ -39,29 +43,9 @@ impl Spread {
             world: World::default(),
             n,
             t: 0,
+            last_reward: 0.0,
+            forces: Vec::new(),
         }
-    }
-
-    fn observe(&self) -> Vec<Vec<f32>> {
-        (0..self.n)
-            .map(|i| {
-                let me = &self.world.agents[i];
-                let mut o = Vec::with_capacity(self.spec.obs_dim);
-                o.extend_from_slice(&me.vel);
-                o.extend_from_slice(&me.pos);
-                for lm in &self.world.landmarks {
-                    o.push(lm.pos[0] - me.pos[0]);
-                    o.push(lm.pos[1] - me.pos[1]);
-                }
-                for (j, other) in self.world.agents.iter().enumerate() {
-                    if j != i {
-                        o.push(other.pos[0] - me.pos[0]);
-                        o.push(other.pos[1] - me.pos[1]);
-                    }
-                }
-                o
-            })
-            .collect()
     }
 
     fn reward(&self) -> f32 {
@@ -85,18 +69,6 @@ impl Spread {
         r
     }
 
-    fn timestep(&self, st: StepType, reward: f32) -> TimeStep {
-        let observations = self.observe();
-        let state = observations.concat();
-        TimeStep {
-            step_type: st,
-            observations,
-            rewards: vec![reward; self.n],
-            discount: 1.0, // spread truncates (time limit), never terminates
-            state,
-            legal_actions: None,
-        }
-    }
 }
 
 impl MultiAgentEnv for Spread {
@@ -105,32 +77,100 @@ impl MultiAgentEnv for Spread {
     }
 
     fn reset(&mut self) -> TimeStep {
+        let meta = self.reset_soa();
+        self.materialize(meta)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        let meta = self.step_soa(&ActionsRef::from_actions(actions));
+        self.materialize(meta)
+    }
+
+    fn writes_soa(&self) -> bool {
+        true
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
         self.t = 0;
-        self.world = World::default();
+        self.last_reward = 0.0;
+        self.world.clear();
         for _ in 0..self.n {
             let mut a = Entity::new(0.15, true, true);
-            a.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
+            a.pos = [
+                self.rng.range_f32(-1.0, 1.0),
+                self.rng.range_f32(-1.0, 1.0),
+            ];
             self.world.agents.push(a);
         }
         for _ in 0..self.n {
             let mut l = Entity::new(0.05, false, false);
-            l.pos = [self.rng.range_f32(-1.0, 1.0), self.rng.range_f32(-1.0, 1.0)];
+            l.pos = [
+                self.rng.range_f32(-1.0, 1.0),
+                self.rng.range_f32(-1.0, 1.0),
+            ];
             self.world.landmarks.push(l);
         }
-        self.timestep(StepType::First, 0.0)
+        StepMeta { step_type: StepType::First, discount: 1.0 }
     }
 
-    fn step(&mut self, actions: &Actions) -> TimeStep {
-        let acts = actions.as_continuous();
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
         self.t += 1;
-        let forces: Vec<[f32; 2]> = acts
-            .iter()
-            .map(|a| [a[0].clamp(-1.0, 1.0) * ACCEL, a[1].clamp(-1.0, 1.0) * ACCEL])
-            .collect();
+        self.forces.clear();
+        for i in 0..self.n {
+            let a = actions.cont(i);
+            self.forces.push([
+                a[0].clamp(-1.0, 1.0) * ACCEL,
+                a[1].clamp(-1.0, 1.0) * ACCEL,
+            ]);
+        }
+        let forces = std::mem::take(&mut self.forces);
         self.world.step(&forces);
-        let r = self.reward();
-        let st = if self.t >= EPISODE { StepType::Last } else { StepType::Mid };
-        self.timestep(st, r)
+        self.forces = forces;
+        self.last_reward = self.reward();
+        StepMeta {
+            step_type: if self.t >= EPISODE {
+                StepType::Last
+            } else {
+                StepType::Mid
+            },
+            // spread truncates (time limit), never terminates
+            discount: 1.0,
+        }
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let od = self.spec.obs_dim;
+        for i in 0..self.n {
+            let me = &self.world.agents[i];
+            let o = &mut out[i * od..(i + 1) * od];
+            o[0] = me.vel[0];
+            o[1] = me.vel[1];
+            o[2] = me.pos[0];
+            o[3] = me.pos[1];
+            let mut k = 4;
+            for lm in &self.world.landmarks {
+                o[k] = lm.pos[0] - me.pos[0];
+                o[k + 1] = lm.pos[1] - me.pos[1];
+                k += 2;
+            }
+            for (j, other) in self.world.agents.iter().enumerate() {
+                if j != i {
+                    o[k] = other.pos[0] - me.pos[0];
+                    o[k + 1] = other.pos[1] - me.pos[1];
+                    k += 2;
+                }
+            }
+            debug_assert_eq!(k, od);
+        }
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        out.fill(self.last_reward);
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        // state = stacked observations (state_dim == n * obs_dim)
+        self.write_obs(out);
     }
 }
 

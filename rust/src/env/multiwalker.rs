@@ -15,7 +15,9 @@
 //! (front+back hip) and leg extension force (front+back knee), mirroring
 //! the original's 4-dim joint-torque interface.
 
-use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::core::{
+    ActionSpec, Actions, ActionsRef, EnvSpec, StepMeta, StepType, TimeStep,
+};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
 
@@ -54,6 +56,7 @@ pub struct MultiWalker {
     prev_tilt: f32,
     t: usize,
     done: bool,
+    last_reward: f32,
 }
 
 impl MultiWalker {
@@ -75,6 +78,7 @@ impl MultiWalker {
             prev_tilt: 0.0,
             t: 0,
             done: true,
+            last_reward: 0.0,
         }
     }
 
@@ -90,64 +94,6 @@ impl MultiWalker {
         })
     }
 
-    fn observe(&self) -> Vec<Vec<f32>> {
-        let tilt = self.tilt();
-        let vtilt = tilt - self.prev_tilt;
-        let pkg_vx =
-            self.walkers.iter().map(|w| w.vx).sum::<f32>() / self.n as f32;
-        (0..self.n)
-            .map(|i| {
-                let w = &self.walkers[i];
-                let nominal = self.package_x + (i as f32 - (self.n - 1) as f32 / 2.0) * SPACING;
-                let left = if i > 0 {
-                    let l = &self.walkers[i - 1];
-                    [(w.x - l.x) - SPACING, l.h - w.h, l.vx - w.vx]
-                } else {
-                    [0.0; 3]
-                };
-                let right = if i + 1 < self.n {
-                    let r = &self.walkers[i + 1];
-                    [(r.x - w.x) - SPACING, r.h - w.h, r.vx - w.vx]
-                } else {
-                    [0.0; 3]
-                };
-                let mut o = vec![
-                    w.h - 1.0,
-                    w.vh,
-                    w.vx,
-                    w.x - nominal,
-                    tilt,
-                    vtilt,
-                    pkg_vx,
-                    left[0],
-                    left[1],
-                    left[2],
-                    right[0],
-                    right[1],
-                    right[2],
-                    (i > 0) as u8 as f32,
-                    (i + 1 < self.n) as u8 as f32,
-                    self.t as f32 / EPISODE as f32,
-                    1.0,
-                ];
-                o.resize(self.spec.obs_dim, 0.0);
-                o
-            })
-            .collect()
-    }
-
-    fn timestep(&self, st: StepType, reward: f32, discount: f32) -> TimeStep {
-        let observations = self.observe();
-        let state = observations.concat();
-        TimeStep {
-            step_type: st,
-            observations,
-            rewards: vec![reward; self.n],
-            discount,
-            state,
-            legal_actions: None,
-        }
-    }
 }
 
 impl MultiAgentEnv for MultiWalker {
@@ -156,31 +102,53 @@ impl MultiAgentEnv for MultiWalker {
     }
 
     fn reset(&mut self) -> TimeStep {
+        let meta = self.reset_soa();
+        self.materialize(meta)
+    }
+
+    fn step(&mut self, actions: &Actions) -> TimeStep {
+        let meta = self.step_soa(&ActionsRef::from_actions(actions));
+        self.materialize(meta)
+    }
+
+    fn writes_soa(&self) -> bool {
+        true
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
         self.t = 0;
         self.done = false;
         self.prev_tilt = 0.0;
         self.package_x = 0.0;
-        self.walkers = (0..self.n)
-            .map(|i| Walker {
-                x: (i as f32 - (self.n - 1) as f32 / 2.0) * SPACING
-                    + self.rng.range_f32(-0.05, 0.05),
-                vx: 0.0,
-                h: 1.0 + self.rng.range_f32(-0.05, 0.05),
-                vh: 0.0,
-            })
-            .collect();
-        self.timestep(StepType::First, 0.0, 1.0)
+        self.last_reward = 0.0;
+        // clear+extend keeps the Vec capacity across auto-resets
+        self.walkers.clear();
+        let n = self.n;
+        let rng = &mut self.rng;
+        self.walkers.extend((0..n).map(|i| Walker {
+            x: (i as f32 - (n - 1) as f32 / 2.0) * SPACING
+                + rng.range_f32(-0.05, 0.05),
+            vx: 0.0,
+            h: 1.0 + rng.range_f32(-0.05, 0.05),
+            vh: 0.0,
+        }));
+        StepMeta { step_type: StepType::First, discount: 1.0 }
     }
 
-    fn step(&mut self, actions: &Actions) -> TimeStep {
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
         assert!(!self.done, "step() after episode end");
-        let acts = actions.as_continuous();
         self.t += 1;
         self.prev_tilt = self.tilt();
 
         let mut ctrl = 0.0;
-        for (w, a) in self.walkers.iter_mut().zip(acts) {
-            let a: Vec<f32> = a.iter().map(|x| x.clamp(-1.0, 1.0)).collect();
+        for (i, w) in self.walkers.iter_mut().enumerate() {
+            let raw = actions.cont(i);
+            let a = [
+                raw[0].clamp(-1.0, 1.0),
+                raw[1].clamp(-1.0, 1.0),
+                raw[2].clamp(-1.0, 1.0),
+                raw[3].clamp(-1.0, 1.0),
+            ];
             ctrl += a.iter().map(|x| x * x).sum::<f32>();
             let fx = FX_SCALE * 0.5 * (a[0] + a[2]);
             let fh = FH_SCALE * 0.5 * (a[1] + a[3]);
@@ -207,13 +175,64 @@ impl MultiAgentEnv for MultiWalker {
         let truncated = !fell && self.t >= EPISODE;
         self.done = fell || truncated;
 
-        let reward = if fell {
+        self.last_reward = if fell {
             FALL_PENALTY
         } else {
             PROGRESS_SCALE * progress - CTRL_COST * ctrl / self.n as f32
         };
-        let st = if self.done { StepType::Last } else { StepType::Mid };
-        self.timestep(st, reward, if fell { 0.0 } else { 1.0 })
+        StepMeta {
+            step_type: if self.done { StepType::Last } else { StepType::Mid },
+            discount: if fell { 0.0 } else { 1.0 },
+        }
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let od = self.spec.obs_dim;
+        let tilt = self.tilt();
+        let vtilt = tilt - self.prev_tilt;
+        let pkg_vx =
+            self.walkers.iter().map(|w| w.vx).sum::<f32>() / self.n as f32;
+        for i in 0..self.n {
+            let w = &self.walkers[i];
+            let nominal = self.package_x
+                + (i as f32 - (self.n - 1) as f32 / 2.0) * SPACING;
+            let left = if i > 0 {
+                let l = &self.walkers[i - 1];
+                [(w.x - l.x) - SPACING, l.h - w.h, l.vx - w.vx]
+            } else {
+                [0.0; 3]
+            };
+            let right = if i + 1 < self.n {
+                let r = &self.walkers[i + 1];
+                [(r.x - w.x) - SPACING, r.h - w.h, r.vx - w.vx]
+            } else {
+                [0.0; 3]
+            };
+            let o = &mut out[i * od..(i + 1) * od];
+            o.fill(0.0); // zero-pad the tail up to obs_dim
+            o[0] = w.h - 1.0;
+            o[1] = w.vh;
+            o[2] = w.vx;
+            o[3] = w.x - nominal;
+            o[4] = tilt;
+            o[5] = vtilt;
+            o[6] = pkg_vx;
+            o[7..10].copy_from_slice(&left);
+            o[10..13].copy_from_slice(&right);
+            o[13] = (i > 0) as u8 as f32;
+            o[14] = (i + 1 < self.n) as u8 as f32;
+            o[15] = self.t as f32 / EPISODE as f32;
+            o[16] = 1.0;
+        }
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        out.fill(self.last_reward);
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        // state = stacked observations (state_dim == n * obs_dim)
+        self.write_obs(out);
     }
 }
 

@@ -10,7 +10,9 @@
 //! return is ~20). This keeps the cooperative focus-fire credit-assignment
 //! structure that VDN/QMIX exploit — the property Fig 4 (bottom) tests.
 
-use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::core::{
+    ActionSpec, Actions, ActionsRef, EnvSpec, StepMeta, StepType, TimeStep,
+};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
 
@@ -62,6 +64,7 @@ pub struct SmacLite {
     t: usize,
     done: bool,
     max_reward: f32,
+    last_reward: f32,
 }
 
 impl SmacLite {
@@ -89,26 +92,29 @@ impl SmacLite {
             t: 0,
             done: true,
             max_reward: n as f32 * (MAX_HEALTH + KILL_BONUS) + WIN_BONUS,
+            last_reward: 0.0,
         }
     }
 
     fn spawn(&mut self) {
-        self.allies = (0..self.n)
-            .map(|i| Unit {
-                x: 4.0 + self.rng.range_f32(-0.5, 0.5),
-                y: 5.0 + 3.0 * i as f32 + self.rng.range_f32(-0.5, 0.5),
-                health: MAX_HEALTH,
-                cooldown: 0,
-            })
-            .collect();
-        self.enemies = (0..self.n)
-            .map(|i| Unit {
-                x: 12.0 + self.rng.range_f32(-0.5, 0.5),
-                y: 5.0 + 3.0 * i as f32 + self.rng.range_f32(-0.5, 0.5),
-                health: MAX_HEALTH,
-                cooldown: 0,
-            })
-            .collect();
+        // clear+extend keeps the Vec capacity across episodes, so
+        // auto-resets on the SoA hot path stay allocation-free
+        self.allies.clear();
+        let n = self.n;
+        let rng = &mut self.rng;
+        self.allies.extend((0..n).map(|i| Unit {
+            x: 4.0 + rng.range_f32(-0.5, 0.5),
+            y: 5.0 + 3.0 * i as f32 + rng.range_f32(-0.5, 0.5),
+            health: MAX_HEALTH,
+            cooldown: 0,
+        }));
+        self.enemies.clear();
+        self.enemies.extend((0..n).map(|i| Unit {
+            x: 12.0 + rng.range_f32(-0.5, 0.5),
+            y: 5.0 + 3.0 * i as f32 + rng.range_f32(-0.5, 0.5),
+            health: MAX_HEALTH,
+            cooldown: 0,
+        }));
     }
 
     fn unit_feats(me: &Unit, other: &Unit, range: f32) -> [f32; 5] {
@@ -126,74 +132,6 @@ impl SmacLite {
             (other.y - me.y) / range,
             other.health / MAX_HEALTH,
         ]
-    }
-
-    fn observe(&self) -> Vec<Vec<f32>> {
-        (0..self.n)
-            .map(|i| {
-                let me = &self.allies[i];
-                let mut o = Vec::with_capacity(self.spec.obs_dim);
-                if !me.alive() {
-                    o.resize(self.spec.obs_dim, 0.0);
-                    return o;
-                }
-                o.extend_from_slice(&[
-                    me.health / MAX_HEALTH,
-                    me.x / (MAP / 2.0) - 1.0,
-                    me.y / (MAP / 2.0) - 1.0,
-                    me.cooldown as f32 / COOLDOWN.max(1) as f32,
-                ]);
-                for (j, ally) in self.allies.iter().enumerate() {
-                    if j != i {
-                        o.extend_from_slice(&Self::unit_feats(
-                            me, ally, SIGHT_RANGE,
-                        ));
-                    }
-                }
-                for enemy in &self.enemies {
-                    o.extend_from_slice(&Self::unit_feats(
-                        me, enemy, SIGHT_RANGE,
-                    ));
-                }
-                o.push(1.0);
-                o
-            })
-            .collect()
-    }
-
-    fn legal(&self) -> Vec<Vec<bool>> {
-        (0..self.n)
-            .map(|i| {
-                let me = &self.allies[i];
-                let mut l = vec![false; 6 + self.n];
-                if !me.alive() {
-                    l[ACT_NOOP] = true;
-                    return l;
-                }
-                l[ACT_STOP] = true;
-                for k in 0..4 {
-                    l[ACT_MOVE_N + k] = true;
-                }
-                for (e, enemy) in self.enemies.iter().enumerate() {
-                    l[ACT_ATTACK_0 + e] =
-                        enemy.alive() && me.dist(enemy) <= SHOOT_RANGE;
-                }
-                l
-            })
-            .collect()
-    }
-
-    fn timestep(&self, step_type: StepType, reward: f32, discount: f32) -> TimeStep {
-        let observations = self.observe();
-        let state = observations.concat();
-        TimeStep {
-            step_type,
-            observations,
-            rewards: vec![reward; self.n],
-            discount,
-            state,
-            legal_actions: Some(self.legal()),
-        }
     }
 
     fn enemy_turn(&mut self) -> f32 {
@@ -254,13 +192,32 @@ impl MultiAgentEnv for SmacLite {
     }
 
     fn reset(&mut self) -> TimeStep {
-        self.t = 0;
-        self.done = false;
-        self.spawn();
-        self.timestep(StepType::First, 0.0, 1.0)
+        let meta = self.reset_soa();
+        self.materialize(meta)
     }
 
     fn step(&mut self, actions: &Actions) -> TimeStep {
+        let meta = self.step_soa(&ActionsRef::from_actions(actions));
+        self.materialize(meta)
+    }
+
+    fn writes_soa(&self) -> bool {
+        true
+    }
+
+    fn has_legal(&self) -> bool {
+        true
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
+        self.t = 0;
+        self.done = false;
+        self.last_reward = 0.0;
+        self.spawn();
+        StepMeta { step_type: StepType::First, discount: 1.0 }
+    }
+
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
         assert!(!self.done, "step() after episode end");
         let acts = actions.as_discrete();
         self.t += 1;
@@ -319,10 +276,78 @@ impl MultiAgentEnv for SmacLite {
         let truncated = !terminal && self.t >= self.spec.episode_limit;
         self.done = terminal || truncated;
 
-        let reward = reward_raw / self.max_reward * REWARD_CAP;
+        self.last_reward = reward_raw / self.max_reward * REWARD_CAP;
         let step_type = if self.done { StepType::Last } else { StepType::Mid };
         let discount = if terminal { 0.0 } else { 1.0 };
-        self.timestep(step_type, reward, discount)
+        StepMeta { step_type, discount }
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let od = self.spec.obs_dim;
+        for i in 0..self.n {
+            let me = &self.allies[i];
+            let o = &mut out[i * od..(i + 1) * od];
+            if !me.alive() {
+                o.fill(0.0);
+                continue;
+            }
+            o[0] = me.health / MAX_HEALTH;
+            o[1] = me.x / (MAP / 2.0) - 1.0;
+            o[2] = me.y / (MAP / 2.0) - 1.0;
+            o[3] = me.cooldown as f32 / COOLDOWN.max(1) as f32;
+            let mut k = 4;
+            for (j, ally) in self.allies.iter().enumerate() {
+                if j != i {
+                    o[k..k + 5].copy_from_slice(&Self::unit_feats(
+                        me,
+                        ally,
+                        SIGHT_RANGE,
+                    ));
+                    k += 5;
+                }
+            }
+            for enemy in &self.enemies {
+                o[k..k + 5].copy_from_slice(&Self::unit_feats(
+                    me,
+                    enemy,
+                    SIGHT_RANGE,
+                ));
+                k += 5;
+            }
+            o[k] = 1.0;
+            debug_assert_eq!(k + 1, od);
+        }
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        out.fill(self.last_reward);
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        // mixer state = stacked observations (state_dim == n * obs_dim)
+        self.write_obs(out);
+    }
+
+    fn write_legal(&mut self, out: &mut [f32]) {
+        let na = 6 + self.n;
+        for i in 0..self.n {
+            let me = &self.allies[i];
+            let l = &mut out[i * na..(i + 1) * na];
+            l.fill(0.0);
+            if !me.alive() {
+                l[ACT_NOOP] = 1.0;
+                continue;
+            }
+            l[ACT_STOP] = 1.0;
+            for k in 0..4 {
+                l[ACT_MOVE_N + k] = 1.0;
+            }
+            for (e, enemy) in self.enemies.iter().enumerate() {
+                l[ACT_ATTACK_0 + e] = (enemy.alive()
+                    && me.dist(enemy) <= SHOOT_RANGE)
+                    as u8 as f32;
+            }
+        }
     }
 }
 
@@ -405,11 +430,15 @@ mod tests {
         let mut env = SmacLite::new_3m(3);
         env.reset();
         env.allies[1].health = 0.0;
-        let legal = env.legal();
-        assert!(legal[1][ACT_NOOP]);
-        assert!(!legal[1][ACT_STOP]);
-        let obs = env.observe();
-        assert!(obs[1].iter().all(|&x| x == 0.0));
+        let na = env.spec().n_actions();
+        let mut legal = vec![0.0f32; 3 * na];
+        env.write_legal(&mut legal);
+        assert_eq!(legal[na + ACT_NOOP], 1.0);
+        assert_eq!(legal[na + ACT_STOP], 0.0);
+        let od = env.spec().obs_dim;
+        let mut obs = vec![1.0f32; 3 * od];
+        env.write_obs(&mut obs);
+        assert!(obs[od..2 * od].iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!
 //! Episode limit 4N-6 as in the original paper.
 
-use crate::core::{ActionSpec, Actions, EnvSpec, StepType, TimeStep};
+use crate::core::{
+    ActionSpec, Actions, ActionsRef, EnvSpec, StepMeta, StepType, TimeStep,
+};
 use crate::env::MultiAgentEnv;
 use crate::rng::Rng;
 
@@ -33,6 +35,7 @@ pub struct SwitchGame {
     in_room: usize,
     has_been: Vec<bool>,
     done: bool,
+    last_reward: f32,
 }
 
 impl SwitchGame {
@@ -56,21 +59,8 @@ impl SwitchGame {
             in_room: 0,
             has_been: vec![false; n_agents],
             done: true,
+            last_reward: 0.0,
         }
-    }
-
-    fn observe(&self) -> Vec<Vec<f32>> {
-        (0..self.n)
-            .map(|i| {
-                vec![
-                    (self.in_room == i) as u8 as f32,
-                    self.has_been[i] as u8 as f32,
-                    self.t as f32 / self.limit as f32,
-                    self.n as f32 / 10.0,
-                    1.0,
-                ]
-            })
-            .collect()
     }
 
     fn all_visited(&self) -> bool {
@@ -84,22 +74,30 @@ impl MultiAgentEnv for SwitchGame {
     }
 
     fn reset(&mut self) -> TimeStep {
-        self.t = 0;
-        self.done = false;
-        self.has_been = vec![false; self.n];
-        self.in_room = self.rng.below(self.n);
-        self.has_been[self.in_room] = true;
-        TimeStep {
-            step_type: StepType::First,
-            observations: self.observe(),
-            rewards: vec![0.0; self.n],
-            discount: 1.0,
-            state: vec![],
-            legal_actions: None,
-        }
+        let meta = self.reset_soa();
+        self.materialize(meta)
     }
 
     fn step(&mut self, actions: &Actions) -> TimeStep {
+        let meta = self.step_soa(&ActionsRef::from_actions(actions));
+        self.materialize(meta)
+    }
+
+    fn writes_soa(&self) -> bool {
+        true
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
+        self.t = 0;
+        self.done = false;
+        self.last_reward = 0.0;
+        self.has_been.iter_mut().for_each(|b| *b = false);
+        self.in_room = self.rng.below(self.n);
+        self.has_been[self.in_room] = true;
+        StepMeta { step_type: StepType::First, discount: 1.0 }
+    }
+
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
         assert!(!self.done, "step() after episode end");
         let acts = actions.as_discrete();
         self.t += 1;
@@ -120,17 +118,33 @@ impl MultiAgentEnv for SwitchGame {
         } else {
             self.done = true;
         }
+        self.last_reward = reward;
 
-        TimeStep {
+        StepMeta {
             step_type: if terminal { StepType::Last } else { StepType::Mid },
-            observations: self.observe(),
-            rewards: vec![reward; self.n],
             // announcement ends the game for real (discount 0); the time
             // limit is a truncation (discount 1).
             discount: if announced { 0.0 } else { 1.0 },
-            state: vec![],
-            legal_actions: None,
         }
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        for i in 0..self.n {
+            let o = &mut out[i * 5..(i + 1) * 5];
+            o[0] = (self.in_room == i) as u8 as f32;
+            o[1] = self.has_been[i] as u8 as f32;
+            o[2] = self.t as f32 / self.limit as f32;
+            o[3] = self.n as f32 / 10.0;
+            o[4] = 1.0;
+        }
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        out.fill(self.last_reward);
+    }
+
+    fn write_state(&mut self, _out: &mut [f32]) {
+        // state_dim == 0: never called
     }
 }
 

@@ -12,7 +12,7 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use crate::core::{Actions, EnvSpec, TimeStep};
+use crate::core::{Actions, ActionsRef, EnvSpec, StepMeta, TimeStep};
 use crate::env::MultiAgentEnv;
 
 /// Shared, mutable fingerprint the executor updates as training proceeds.
@@ -53,6 +53,9 @@ pub struct FingerprintWrapper<E> {
     spec: EnvSpec,
     /// Shared handle the executor updates as training proceeds.
     pub fingerprint: Fingerprint,
+    /// Reused `[N * inner_obs_dim]` staging buffer for the SoA strided
+    /// scatter (allocated lazily on the first write).
+    scratch: Vec<f32>,
 }
 
 impl<E: MultiAgentEnv> FingerprintWrapper<E> {
@@ -65,7 +68,7 @@ impl<E: MultiAgentEnv> FingerprintWrapper<E> {
         } else {
             0
         };
-        FingerprintWrapper { inner, spec, fingerprint }
+        FingerprintWrapper { inner, spec, fingerprint, scratch: Vec::new() }
     }
 
     fn augment(&self, mut ts: TimeStep) -> TimeStep {
@@ -95,12 +98,61 @@ impl<E: MultiAgentEnv> MultiAgentEnv for FingerprintWrapper<E> {
         let ts = self.inner.step(actions);
         self.augment(ts)
     }
+
+    fn writes_soa(&self) -> bool {
+        self.inner.writes_soa()
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
+        self.inner.reset_soa()
+    }
+
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
+        self.inner.step_soa(actions)
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let n = self.spec.n_agents;
+        let o = self.spec.obs_dim;
+        let oi = o - 2;
+        self.scratch.resize(n * oi, 0.0);
+        self.inner.write_obs(&mut self.scratch);
+        let (eps, prog) = self.fingerprint.get();
+        for i in 0..n {
+            let dst = &mut out[i * o..(i + 1) * o];
+            dst[..oi].copy_from_slice(&self.scratch[i * oi..(i + 1) * oi]);
+            dst[oi] = eps;
+            dst[oi + 1] = prog;
+        }
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        self.inner.write_rewards(out);
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        // like `augment`: the fingerprinted state is the stacked
+        // augmented observations
+        debug_assert_eq!(out.len(), self.spec.n_agents * self.spec.obs_dim);
+        self.write_obs(out);
+    }
+
+    fn has_legal(&self) -> bool {
+        self.inner.has_legal()
+    }
+
+    fn write_legal(&mut self, out: &mut [f32]) {
+        self.inner.write_legal(out);
+    }
 }
 
 /// Appends a one-hot agent id to each observation.
 pub struct AgentIdWrapper<E> {
     inner: E,
     spec: EnvSpec,
+    /// Reused `[N * inner_obs_dim]` staging buffer (see
+    /// [`FingerprintWrapper`]).
+    scratch: Vec<f32>,
 }
 
 impl<E: MultiAgentEnv> AgentIdWrapper<E> {
@@ -114,7 +166,7 @@ impl<E: MultiAgentEnv> AgentIdWrapper<E> {
         } else {
             0
         };
-        AgentIdWrapper { inner, spec }
+        AgentIdWrapper { inner, spec, scratch: Vec::new() }
     }
 
     fn augment(&self, mut ts: TimeStep) -> TimeStep {
@@ -145,6 +197,50 @@ impl<E: MultiAgentEnv> MultiAgentEnv for AgentIdWrapper<E> {
         let ts = self.inner.step(actions);
         self.augment(ts)
     }
+
+    fn writes_soa(&self) -> bool {
+        self.inner.writes_soa()
+    }
+
+    fn reset_soa(&mut self) -> StepMeta {
+        self.inner.reset_soa()
+    }
+
+    fn step_soa(&mut self, actions: &ActionsRef) -> StepMeta {
+        self.inner.step_soa(actions)
+    }
+
+    fn write_obs(&mut self, out: &mut [f32]) {
+        let n = self.spec.n_agents;
+        let o = self.spec.obs_dim;
+        let oi = o - n;
+        self.scratch.resize(n * oi, 0.0);
+        self.inner.write_obs(&mut self.scratch);
+        for i in 0..n {
+            let dst = &mut out[i * o..(i + 1) * o];
+            dst[..oi].copy_from_slice(&self.scratch[i * oi..(i + 1) * oi]);
+            for j in 0..n {
+                dst[oi + j] = (i == j) as u8 as f32;
+            }
+        }
+    }
+
+    fn write_rewards(&mut self, out: &mut [f32]) {
+        self.inner.write_rewards(out);
+    }
+
+    fn write_state(&mut self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.spec.n_agents * self.spec.obs_dim);
+        self.write_obs(out);
+    }
+
+    fn has_legal(&self) -> bool {
+        self.inner.has_legal()
+    }
+
+    fn write_legal(&mut self, out: &mut [f32]) {
+        self.inner.write_legal(out);
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +266,48 @@ mod tests {
         let ts = env.step(&Actions::Discrete(vec![1, 1, 1]));
         assert_eq!(ts.observations[0][30], 0.1);
         assert_eq!(ts.observations[0][31], 0.9);
+    }
+
+    /// The wrapper's SoA write hooks must produce exactly what the
+    /// timestep path produces (the `_fp` preset rides the hot path).
+    #[test]
+    fn fingerprint_soa_matches_timestep_path() {
+        let mut legacy = FingerprintWrapper::new(
+            SmacLite::new_3m(7),
+            Fingerprint::new(0.3, 0.5),
+        );
+        let mut soa = FingerprintWrapper::new(
+            SmacLite::new_3m(7),
+            Fingerprint::new(0.3, 0.5),
+        );
+        assert!(soa.writes_soa());
+        assert!(soa.has_legal());
+        let (n, o, s, na) = {
+            let sp = soa.spec();
+            (sp.n_agents, sp.obs_dim, sp.state_dim, sp.n_actions())
+        };
+        let ts = legacy.reset();
+        soa.reset_soa();
+        let mut obs = vec![0.0f32; n * o];
+        soa.write_obs(&mut obs);
+        assert_eq!(ts.observations.concat(), obs);
+        let mut state = vec![0.0f32; s];
+        soa.write_state(&mut state);
+        assert_eq!(ts.state, state);
+        let mut rewards = vec![1.0f32; n];
+        soa.write_rewards(&mut rewards);
+        assert_eq!(ts.rewards, rewards);
+        let mut legal = vec![0.0f32; n * na];
+        soa.write_legal(&mut legal);
+        let want: Vec<f32> = ts
+            .legal_actions
+            .as_ref()
+            .unwrap()
+            .iter()
+            .flatten()
+            .map(|&b| b as u8 as f32)
+            .collect();
+        assert_eq!(want, legal);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 use anyhow::{ensure, Result};
 
 use crate::core::StepType;
-use crate::env::{VecEnv, VecStep};
+use crate::env::{ActionBuf, VecEnv, VecStep, VecStepBuf};
 use crate::systems::VecExecutor;
 
 /// Per-row episode-return bookkeeping over a stream of [`VecStep`]s.
@@ -35,6 +35,7 @@ use crate::systems::VecExecutor;
 pub struct EpisodeAccountant {
     running: Vec<f32>,
     completed: Vec<f32>,
+    reset_scratch: Vec<usize>,
 }
 
 impl EpisodeAccountant {
@@ -43,6 +44,7 @@ impl EpisodeAccountant {
         EpisodeAccountant {
             running: vec![0.0; batch],
             completed: Vec::new(),
+            reset_scratch: Vec::new(),
         }
     }
 
@@ -67,6 +69,26 @@ impl EpisodeAccountant {
         reset_rows
     }
 
+    /// [`EpisodeAccountant::observe`] over a struct-of-arrays
+    /// [`VecStepBuf`]; the returned reset-row slice is backed by a
+    /// reused scratch buffer (valid until the next call).
+    pub fn observe_buf(&mut self, buf: &VecStepBuf) -> &[usize] {
+        debug_assert_eq!(buf.num_envs(), self.running.len());
+        self.reset_scratch.clear();
+        for i in 0..buf.num_envs() {
+            if buf.step_type(i) == StepType::First {
+                self.running[i] = 0.0;
+                self.reset_scratch.push(i);
+                continue;
+            }
+            self.running[i] += buf.mean_reward(i);
+            if buf.is_last(i) {
+                self.completed.push(self.running[i]);
+            }
+        }
+        &self.reset_scratch
+    }
+
     /// Episode returns completed so far, in completion order.
     pub fn completed(&self) -> &[f32] {
         &self.completed
@@ -89,6 +111,10 @@ impl EpisodeAccountant {
 pub struct VecEvaluator {
     executor: VecExecutor,
     venv: VecEnv,
+    // SoA double buffer + action batch, reused across evaluate calls
+    cur: VecStepBuf,
+    next: VecStepBuf,
+    abuf: ActionBuf,
 }
 
 impl VecEvaluator {
@@ -100,7 +126,10 @@ impl VecEvaluator {
             executor.num_envs(),
             venv.num_envs()
         );
-        Ok(VecEvaluator { executor, venv })
+        let cur = venv.make_buf();
+        let next = venv.make_buf();
+        let abuf = venv.make_action_buf();
+        Ok(VecEvaluator { executor, venv, cur, next, abuf })
     }
 
     /// Number of episodes advanced per policy call.
@@ -142,15 +171,24 @@ impl VecEvaluator {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let mut vs = self.venv.reset();
+        self.venv.reset_into(&mut self.cur);
         self.executor.reset_state();
         let mut acct = EpisodeAccountant::new(self.venv.num_envs());
         while acct.completed().len() < n && !cancelled() {
-            let actions = self.executor.select_actions_vec(&vs, 0.0, 0.0)?;
-            vs = self.venv.step(&actions);
-            for row in acct.observe(&vs) {
+            // greedy batched policy call through the SoA hot path:
+            // device-resident carry, one obs upload + one action
+            // download per vector step (DESIGN.md §6)
+            self.executor.select_actions_into(
+                &self.cur,
+                0.0,
+                0.0,
+                &mut self.abuf,
+            )?;
+            self.venv.step_into(&self.abuf, &mut self.next);
+            for &row in acct.observe_buf(&self.next) {
                 self.executor.reset_instance(row);
             }
+            std::mem::swap(&mut self.cur, &mut self.next);
         }
         let mut returns = acct.into_completed();
         returns.truncate(n);
@@ -166,7 +204,9 @@ mod tests {
 
     /// Deterministic env: episode of `limit` steps, reward `gain` per
     /// agent per step, so an episode's mean-over-agents return is
-    /// exactly `limit * gain`.
+    /// exactly `limit * gain`. The spec's episode_limit is a fixed cap
+    /// (instances may end earlier, like smac_lite), so differently-
+    /// paced instances still batch into one VecEnv.
     struct RewardEnv {
         spec: EnvSpec,
         gain: f32,
@@ -183,7 +223,7 @@ mod tests {
                     obs_dim: 1,
                     action: ActionSpec::Discrete { n: 2 },
                     state_dim: 0,
-                    episode_limit: limit,
+                    episode_limit: 16,
                 },
                 gain,
                 limit,
@@ -295,6 +335,30 @@ mod tests {
         acct.observe(&venv.step(&acts(1))); // First: ignored
         acct.observe(&venv.step(&acts(1))); // Last: +2, complete
         assert_eq!(acct.completed(), &[2.0, 2.0]);
+    }
+
+    /// The SoA accountant path must mirror the legacy VecStep path
+    /// row for row (RewardEnv is bridged, exercising the non-SoA
+    /// scatter too).
+    #[test]
+    fn accountant_buf_matches_legacy() {
+        let specs = [(1.0, 2), (10.0, 3)];
+        let mut legacy_env = venv(&specs);
+        let mut soa_env = venv(&specs);
+        let mut legacy = EpisodeAccountant::new(2);
+        let mut soa = EpisodeAccountant::new(2);
+        let mut buf = soa_env.make_buf();
+        let abuf = soa_env.make_action_buf();
+        legacy_env.reset();
+        soa_env.reset_into(&mut buf);
+        for _ in 0..7 {
+            let vs = legacy_env.step(&acts(2));
+            soa_env.step_into(&abuf, &mut buf);
+            let want = legacy.observe(&vs);
+            let got = soa.observe_buf(&buf);
+            assert_eq!(want, got);
+        }
+        assert_eq!(legacy.completed(), soa.completed());
     }
 
     #[test]

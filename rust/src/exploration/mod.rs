@@ -29,6 +29,12 @@ impl EpsilonSchedule {
 }
 
 /// ε-greedy over per-agent Q-values with optional legal-action masks.
+///
+/// Allocation-free: the legal set is scanned in place rather than
+/// collected, so this can run per agent per row on the vectorized hot
+/// path without touching the heap. The RNG call sequence (one `chance`,
+/// then at most one `below`) is unchanged from the collecting
+/// implementation, so seeded rollouts stay bit-identical.
 pub fn epsilon_greedy(
     q: &[f32],
     n_actions: usize,
@@ -36,22 +42,56 @@ pub fn epsilon_greedy(
     eps: f32,
     rng: &mut Rng,
 ) -> i32 {
+    eps_greedy_by(q, n_actions, |a| legal.map_or(true, |m| m[a]), eps, rng)
+}
+
+/// [`epsilon_greedy`] over an f32 mask row (1.0 legal, 0.0 illegal) —
+/// the layout of the SoA batch buffer's legal plane
+/// ([`crate::env::VecStepBuf`]).
+pub fn epsilon_greedy_masked(
+    q: &[f32],
+    n_actions: usize,
+    legal: Option<&[f32]>,
+    eps: f32,
+    rng: &mut Rng,
+) -> i32 {
+    eps_greedy_by(q, n_actions, |a| legal.map_or(true, |m| m[a] > 0.5), eps, rng)
+}
+
+fn eps_greedy_by(
+    q: &[f32],
+    n_actions: usize,
+    legal: impl Fn(usize) -> bool,
+    eps: f32,
+    rng: &mut Rng,
+) -> i32 {
     debug_assert_eq!(q.len(), n_actions);
-    let legal_ids: Vec<usize> = match legal {
-        Some(mask) => (0..n_actions).filter(|&a| mask[a]).collect(),
-        None => (0..n_actions).collect(),
-    };
-    debug_assert!(!legal_ids.is_empty(), "no legal actions");
     if rng.chance(eps) {
-        return legal_ids[rng.below(legal_ids.len())] as i32;
-    }
-    let mut best = legal_ids[0];
-    for &a in &legal_ids[1..] {
-        if q[a] > q[best] {
-            best = a;
+        let count = (0..n_actions).filter(|&a| legal(a)).count();
+        debug_assert!(count > 0, "no legal actions");
+        let pick = rng.below(count);
+        let mut seen = 0;
+        for a in 0..n_actions {
+            if legal(a) {
+                if seen == pick {
+                    return a as i32;
+                }
+                seen += 1;
+            }
         }
+        unreachable!("pick within legal count");
     }
-    best as i32
+    let mut best: Option<usize> = None;
+    for a in 0..n_actions {
+        if !legal(a) {
+            continue;
+        }
+        best = match best {
+            Some(b) if q[b] >= q[a] => Some(b),
+            _ => Some(a),
+        };
+    }
+    best.expect("no legal actions") as i32
 }
 
 /// Additive Gaussian action noise, clipped to [-1, 1] (DDPG-style).
@@ -116,6 +156,25 @@ mod tests {
         for _ in 0..100 {
             let a = epsilon_greedy(&q, 3, Some(&legal), 1.0, &mut rng);
             assert_ne!(a, 1);
+        }
+    }
+
+    /// The f32-mask variant must agree with the bool-mask path call for
+    /// call on a shared RNG stream.
+    #[test]
+    fn masked_f32_matches_bool() {
+        let q = [0.4f32, 0.9, 0.1, 0.7];
+        let legal_b = [true, false, true, true];
+        let legal_f = [1.0f32, 0.0, 1.0, 1.0];
+        let mut ra = Rng::new(5);
+        let mut rb = Rng::new(5);
+        for i in 0..200 {
+            let eps = (i % 10) as f32 / 10.0;
+            let a = epsilon_greedy(&q, 4, Some(&legal_b), eps, &mut ra);
+            let b =
+                epsilon_greedy_masked(&q, 4, Some(&legal_f), eps, &mut rb);
+            assert_eq!(a, b);
+            assert_ne!(a, 1, "illegal action selected");
         }
     }
 

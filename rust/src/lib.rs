@@ -13,7 +13,8 @@
 //! - [`rng`] — deterministic xoshiro256++ RNG (no external crates)
 //! - [`config`] — TOML-subset config system + CLI parsing
 //! - [`env`] — environment suite: switch riddle, smac_lite, MPE,
-//!   multiwalker; `VecEnv` batched stepping (DESIGN.md §6)
+//!   multiwalker; `VecEnv` batched stepping into reusable
+//!   struct-of-arrays buffers (DESIGN.md §6)
 //! - [`replay`] — Reverb-style tables: selectors, rate limiters, adders;
 //!   `ShardedTable` per-executor sharding (DESIGN.md §5)
 //! - [`params`] — versioned parameter server

@@ -1,14 +1,30 @@
 //! Adders: the client-side classes that turn executor timesteps into
 //! replay items (Acme/Mava's `adders` package; paper: "an internal adder
 //! class interfaces with a reverb replay table").
+//!
+//! Two APIs feed the same accumulation logic:
+//!
+//! * the legacy `observe_first`/`observe` pair over owned
+//!   [`TimeStep`]s (serial executors, tests);
+//! * the hot-path `observe_first_row`/`observe_row` pair over one row
+//!   of a struct-of-arrays [`VecStepBuf`]/[`ActionBuf`]
+//!   (DESIGN.md §6).
+//!
+//! The row path is **allocation-free at steady state**: step records
+//! and emitted items are recycled through internal free lists, refilled
+//! by [`Table::insert_reuse`] handing evicted items' buffers back, so
+//! after the table reaches capacity (and one episode has warmed the
+//! accumulation buffers) inserting a transition or sequence touches
+//! the heap zero times.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::core::{Actions, TimeStep};
+use crate::core::{Actions, ActionsRef, TimeStep};
+use crate::env::{ActionBuf, VecStepBuf};
 use crate::replay::{Item, Sequence, Table, Transition};
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 struct StepRecord {
     obs: Vec<f32>,
     state: Vec<f32>,
@@ -16,6 +32,34 @@ struct StepRecord {
     a_cont: Vec<f32>,
     rewards: Vec<f32>,
     discount: f32,
+}
+
+impl StepRecord {
+    fn clear(&mut self) {
+        self.obs.clear();
+        self.state.clear();
+        self.a_disc.clear();
+        self.a_cont.clear();
+        self.rewards.clear();
+    }
+}
+
+fn clear_transition(t: &mut Transition) {
+    t.obs.clear();
+    t.state.clear();
+    t.actions_disc.clear();
+    t.actions_cont.clear();
+    t.rewards.clear();
+    t.next_obs.clear();
+    t.next_state.clear();
+}
+
+fn clear_sequence(s: &mut Sequence) {
+    s.obs.clear();
+    s.actions.clear();
+    s.rewards.clear();
+    s.discounts.clear();
+    s.mask.clear();
 }
 
 /// Builds (n-step) transitions — feedforward systems (MADQN, VDN, QMIX,
@@ -27,64 +71,166 @@ pub struct TransitionAdder {
     table: Arc<Table>,
     n_step: usize,
     gamma: f32,
-    pending: Option<(Vec<f32>, Vec<f32>)>, // (obs, state) awaiting action
+    has_pending: bool,
+    /// flat `[N*O]` observation awaiting its action
+    pending_obs: Vec<f32>,
+    pending_state: Vec<f32>,
     buf: VecDeque<StepRecord>,
+    free_records: Vec<StepRecord>,
+    free_items: Vec<Transition>,
+    // legacy-API staging for the flattened next obs/state
+    scratch_obs: Vec<f32>,
+    scratch_state: Vec<f32>,
 }
 
 impl TransitionAdder {
     /// An adder emitting `n_step` transitions into `table`.
     pub fn new(table: Arc<Table>, n_step: usize, gamma: f32) -> Self {
         assert!(n_step >= 1);
-        TransitionAdder { table, n_step, gamma, pending: None, buf: VecDeque::new() }
+        TransitionAdder {
+            table,
+            n_step,
+            gamma,
+            has_pending: false,
+            pending_obs: Vec::new(),
+            pending_state: Vec::new(),
+            buf: VecDeque::new(),
+            free_records: Vec::new(),
+            free_items: Vec::new(),
+            scratch_obs: Vec::new(),
+            scratch_state: Vec::new(),
+        }
     }
 
     /// Begin a new episode from its `First` timestep.
     pub fn observe_first(&mut self, ts: &TimeStep) {
-        self.buf.clear();
-        self.pending = Some((ts.observations.concat(), ts.state.clone()));
+        self.scratch_obs.clear();
+        for o in &ts.observations {
+            self.scratch_obs.extend_from_slice(o);
+        }
+        let obs = std::mem::take(&mut self.scratch_obs);
+        self.begin(&obs, &ts.state);
+        self.scratch_obs = obs;
+    }
+
+    /// Begin a new episode from row `row` of a `First` vector step.
+    pub fn observe_first_row(&mut self, next: &VecStepBuf, row: usize) {
+        debug_assert!(next.step_type(row) == crate::core::StepType::First);
+        // the SoA row is already flat: no staging needed
+        let (obs, state) = (next.obs_row(row), next.state_row(row));
+        self.begin(obs, state);
+    }
+
+    fn begin(&mut self, obs: &[f32], state: &[f32]) {
+        while let Some(mut rec) = self.buf.pop_front() {
+            rec.clear();
+            self.free_records.push(rec);
+        }
+        self.pending_obs.clear();
+        self.pending_obs.extend_from_slice(obs);
+        self.pending_state.clear();
+        self.pending_state.extend_from_slice(state);
+        self.has_pending = true;
     }
 
     /// Record one `(action, next timestep)` pair; emits items once
     /// `n_step` steps accumulated (and flushes at episode end).
     pub fn observe(&mut self, actions: &Actions, next: &TimeStep) {
-        let (obs, state) = self
-            .pending
-            .take()
-            .expect("observe() before observe_first()");
-        let (a_disc, a_cont) = match actions {
-            Actions::Discrete(a) => (a.clone(), vec![]),
-            Actions::Continuous(a) => (vec![], a.concat()),
-        };
-        self.buf.push_back(StepRecord {
-            obs,
-            state,
-            a_disc,
-            a_cont,
-            rewards: next.rewards.clone(),
-            discount: next.discount,
-        });
-        let next_obs = next.observations.concat();
-        let next_state = next.state.clone();
-        if self.buf.len() == self.n_step {
-            self.emit_front(&next_obs, &next_state);
+        self.scratch_obs.clear();
+        for o in &next.observations {
+            self.scratch_obs.extend_from_slice(o);
         }
-        if next.is_last() {
-            while !self.buf.is_empty() {
-                self.emit_front(&next_obs, &next_state);
+        self.scratch_state.clear();
+        self.scratch_state.extend_from_slice(&next.state);
+        let obs = std::mem::take(&mut self.scratch_obs);
+        let state = std::mem::take(&mut self.scratch_state);
+        self.step_flat(
+            &ActionsRef::from_actions(actions),
+            &next.rewards,
+            next.discount,
+            &obs,
+            &state,
+            next.is_last(),
+        );
+        self.scratch_obs = obs;
+        self.scratch_state = state;
+    }
+
+    /// Record one `(action row, next vector-step row)` pair from the
+    /// SoA buffers (allocation-free at steady state).
+    pub fn observe_row(
+        &mut self,
+        actions: &ActionBuf,
+        row: usize,
+        next: &VecStepBuf,
+    ) {
+        self.step_flat(
+            &actions.row(row),
+            next.rewards_row(row),
+            next.discount(row),
+            next.obs_row(row),
+            next.state_row(row),
+            next.is_last(row),
+        );
+    }
+
+    fn step_flat(
+        &mut self,
+        actions: &ActionsRef,
+        rewards: &[f32],
+        discount: f32,
+        next_obs: &[f32],
+        next_state: &[f32],
+        is_last: bool,
+    ) {
+        assert!(self.has_pending, "observe() before observe_first()");
+        let mut rec = self.free_records.pop().unwrap_or_default();
+        rec.clear();
+        // the pending obs/state become this record's; swap keeps both
+        // buffers' capacity alive
+        std::mem::swap(&mut rec.obs, &mut self.pending_obs);
+        std::mem::swap(&mut rec.state, &mut self.pending_state);
+        match actions {
+            ActionsRef::Discrete(a) => rec.a_disc.extend_from_slice(a),
+            ActionsRef::Continuous { data, .. } => {
+                rec.a_cont.extend_from_slice(data)
             }
-            self.pending = None;
+            ActionsRef::ContinuousRows(rows) => {
+                for r in rows.iter() {
+                    rec.a_cont.extend_from_slice(r);
+                }
+            }
+        }
+        rec.rewards.extend_from_slice(rewards);
+        rec.discount = discount;
+        self.buf.push_back(rec);
+        if self.buf.len() == self.n_step {
+            self.emit_front(next_obs, next_state);
+        }
+        if is_last {
+            while !self.buf.is_empty() {
+                self.emit_front(next_obs, next_state);
+            }
+            self.has_pending = false;
+            self.pending_obs.clear();
+            self.pending_state.clear();
         } else {
-            self.pending = Some((next_obs, next_state));
+            self.pending_obs.clear();
+            self.pending_obs.extend_from_slice(next_obs);
+            self.pending_state.clear();
+            self.pending_state.extend_from_slice(next_state);
         }
     }
 
     fn emit_front(&mut self, next_obs: &[f32], next_state: &[f32]) {
         let n_agents = self.buf[0].rewards.len();
-        let mut rewards = vec![0.0f32; n_agents];
+        let mut t = self.free_items.pop().unwrap_or_default();
+        clear_transition(&mut t);
+        t.rewards.resize(n_agents, 0.0);
         let mut disc = 1.0f32;
         let mut g = 1.0f32;
         for (k, rec) in self.buf.iter().enumerate() {
-            for (r, &x) in rewards.iter_mut().zip(&rec.rewards) {
+            for (r, &x) in t.rewards.iter_mut().zip(&rec.rewards) {
                 *r += g * x;
             }
             disc *= rec.discount;
@@ -94,18 +240,22 @@ impl TransitionAdder {
         }
         // gamma^(n-1): `g` already equals that after the loop
         disc *= g;
-        let front = self.buf.pop_front().unwrap();
-        let t = Transition {
-            obs: front.obs,
-            state: front.state,
-            actions_disc: front.a_disc,
-            actions_cont: front.a_cont,
-            rewards,
-            discount: disc,
-            next_obs: next_obs.to_vec(),
-            next_state: next_state.to_vec(),
-        };
-        self.table.insert(Item::Transition(t), 1.0);
+        let mut front = self.buf.pop_front().unwrap();
+        t.obs.extend_from_slice(&front.obs);
+        t.state.extend_from_slice(&front.state);
+        t.actions_disc.extend_from_slice(&front.a_disc);
+        t.actions_cont.extend_from_slice(&front.a_cont);
+        t.discount = disc;
+        t.next_obs.extend_from_slice(next_obs);
+        t.next_state.extend_from_slice(next_state);
+        front.clear();
+        self.free_records.push(front);
+        let (_, evicted) =
+            self.table.insert_reuse(Item::Transition(t), 1.0);
+        if let Some(Item::Transition(mut old)) = evicted {
+            clear_transition(&mut old);
+            self.free_items.push(old);
+        }
     }
 }
 
@@ -115,11 +265,18 @@ pub struct SequenceAdder {
     table: Arc<Table>,
     seq_len: usize,
     period: usize,
-    // episode accumulation
-    obs: Vec<Vec<f32>>, // length L+1 once episode ends
-    acts: Vec<Vec<i32>>,
-    rewards: Vec<Vec<f32>>,
+    /// per-step layout, learned from the first observation of an episode
+    n_agents: usize,
+    obs_row: usize,
+    /// flat episode accumulation: `obs` holds `steps+1` rows of
+    /// `obs_row` floats, the rest `steps` entries
+    steps: usize,
+    active: bool,
+    obs: Vec<f32>,
+    acts: Vec<i32>,
+    rewards: Vec<f32>,
     discounts: Vec<f32>,
+    free_items: Vec<Sequence>,
 }
 
 impl SequenceAdder {
@@ -130,81 +287,134 @@ impl SequenceAdder {
             table,
             seq_len,
             period,
-            obs: vec![],
-            acts: vec![],
-            rewards: vec![],
-            discounts: vec![],
+            n_agents: 0,
+            obs_row: 0,
+            steps: 0,
+            active: false,
+            obs: Vec::new(),
+            acts: Vec::new(),
+            rewards: Vec::new(),
+            discounts: Vec::new(),
+            free_items: Vec::new(),
         }
     }
 
     /// Begin a new episode from its `First` timestep.
     pub fn observe_first(&mut self, ts: &TimeStep) {
-        self.obs = vec![ts.observations.concat()];
+        self.begin();
+        self.n_agents = ts.observations.len();
+        for o in &ts.observations {
+            self.obs.extend_from_slice(o);
+        }
+        self.obs_row = self.obs.len();
+    }
+
+    /// Begin a new episode from row `row` of a `First` vector step.
+    pub fn observe_first_row(&mut self, next: &VecStepBuf, row: usize) {
+        self.begin();
+        self.n_agents = next.n_agents();
+        let obs = next.obs_row(row);
+        self.obs.extend_from_slice(obs);
+        self.obs_row = obs.len();
+    }
+
+    fn begin(&mut self) {
+        self.obs.clear();
         self.acts.clear();
         self.rewards.clear();
         self.discounts.clear();
+        self.steps = 0;
+        self.active = true;
     }
 
     /// Record one step; windows flush when the episode ends.
     pub fn observe(&mut self, actions: &Actions, next: &TimeStep) {
-        assert!(!self.obs.is_empty(), "observe() before observe_first()");
-        self.acts.push(actions.as_discrete().to_vec());
-        self.rewards.push(next.rewards.clone());
+        assert!(self.active, "observe() before observe_first()");
+        self.acts.extend_from_slice(actions.as_discrete());
+        self.rewards.extend_from_slice(&next.rewards);
         self.discounts.push(next.discount);
-        self.obs.push(next.observations.concat());
+        for o in &next.observations {
+            self.obs.extend_from_slice(o);
+        }
+        self.steps += 1;
         if next.is_last() {
             self.flush();
         }
     }
 
+    /// Record one `(action row, next vector-step row)` pair from the
+    /// SoA buffers (allocation-free at steady state).
+    pub fn observe_row(
+        &mut self,
+        actions: &ActionBuf,
+        row: usize,
+        next: &VecStepBuf,
+    ) {
+        assert!(self.active, "observe_row() before observe_first_row()");
+        self.acts.extend_from_slice(actions.row(row).as_discrete());
+        self.rewards.extend_from_slice(next.rewards_row(row));
+        self.discounts.push(next.discount(row));
+        self.obs.extend_from_slice(next.obs_row(row));
+        self.steps += 1;
+        if next.is_last(row) {
+            self.flush();
+        }
+    }
+
     fn flush(&mut self) {
-        let steps = self.acts.len();
+        let steps = self.steps;
         if steps == 0 {
+            self.active = false;
             return;
         }
         let t_len = self.seq_len;
-        let obs_dim = self.obs[0].len();
-        let n_agents = self.acts[0].len();
+        let obs_row = self.obs_row;
+        let n_agents = self.n_agents;
         let mut start = 0;
         loop {
             let valid = (steps - start).min(t_len);
-            let mut seq = Sequence {
-                t: t_len,
-                obs: Vec::with_capacity((t_len + 1) * obs_dim),
-                actions: Vec::with_capacity(t_len * n_agents),
-                rewards: Vec::with_capacity(t_len * n_agents),
-                discounts: Vec::with_capacity(t_len),
-                mask: Vec::with_capacity(t_len),
-            };
+            let mut seq = self.free_items.pop().unwrap_or_default();
+            clear_sequence(&mut seq);
+            seq.t = t_len;
             for t in 0..=t_len {
                 let idx = (start + t).min(steps); // repeat last obs as pad
-                seq.obs.extend_from_slice(&self.obs[idx]);
+                seq.obs.extend_from_slice(
+                    &self.obs[idx * obs_row..(idx + 1) * obs_row],
+                );
             }
             for t in 0..t_len {
                 if t < valid {
                     let idx = start + t;
-                    seq.actions.extend_from_slice(&self.acts[idx]);
-                    seq.rewards.extend_from_slice(&self.rewards[idx]);
+                    seq.actions.extend_from_slice(
+                        &self.acts[idx * n_agents..(idx + 1) * n_agents],
+                    );
+                    seq.rewards.extend_from_slice(
+                        &self.rewards[idx * n_agents..(idx + 1) * n_agents],
+                    );
                     seq.discounts.push(self.discounts[idx]);
                     seq.mask.push(1.0);
                 } else {
-                    seq.actions.extend(std::iter::repeat(0).take(n_agents));
+                    seq.actions
+                        .extend(std::iter::repeat(0).take(n_agents));
                     seq.rewards
                         .extend(std::iter::repeat(0.0).take(n_agents));
                     seq.discounts.push(0.0);
                     seq.mask.push(0.0);
                 }
             }
-            self.table.insert(Item::Sequence(seq), 1.0);
+            let (_, evicted) =
+                self.table.insert_reuse(Item::Sequence(seq), 1.0);
+            if let Some(Item::Sequence(mut old)) = evicted {
+                clear_sequence(&mut old);
+                self.free_items.push(old);
+            }
             start += self.period;
             if start >= steps {
                 break;
             }
         }
-        self.obs.clear();
-        self.acts.clear();
-        self.rewards.clear();
-        self.discounts.clear();
+        self.begin();
+        self.active = false;
     }
 }
 
@@ -331,5 +541,118 @@ mod tests {
         let items = table.sample(1).unwrap();
         let s = items[0].as_sequence();
         assert_eq!(&s.obs[0..4], &[5.0; 4], "stale episode leaked");
+    }
+
+    /// The SoA row API must produce bit-identical table contents to the
+    /// legacy timestep API for the same trajectory.
+    #[test]
+    fn row_api_matches_legacy_api() {
+        use crate::core::{ActionSpec, EnvSpec};
+
+        let spec = EnvSpec {
+            name: "fixture".into(),
+            n_agents: 2,
+            obs_dim: 2,
+            action: ActionSpec::Discrete { n: 4 },
+            state_dim: 3,
+            episode_limit: 8,
+        };
+        // a 2-row buffer: the adder under test reads row 1
+        let mut buf = VecStepBuf::new(&spec, 2, false);
+        let mut abuf = ActionBuf::new(&spec, 2);
+
+        for (n_step, gamma) in [(1usize, 0.9f32), (3, 0.5)] {
+            let t_legacy = Arc::new(Table::uniform(64, 1, 0));
+            let t_row = Arc::new(Table::uniform(64, 1, 0));
+            let mut legacy =
+                TransitionAdder::new(t_legacy.clone(), n_step, gamma);
+            let mut row = TransitionAdder::new(t_row.clone(), n_step, gamma);
+
+            for episode in 0..3 {
+                let first = ts(StepType::First, episode as f32, 0.0, 1.0);
+                legacy.observe_first(&first);
+                buf.scatter(1, &first);
+                row.observe_first_row(&buf, 1);
+                for t in 0..5 {
+                    let last = t == 4;
+                    let step = ts(
+                        if last { StepType::Last } else { StepType::Mid },
+                        t as f32,
+                        t as f32 * 0.5,
+                        if last { 0.0 } else { 1.0 },
+                    );
+                    let a = acts(t);
+                    legacy.observe(&a, &step);
+                    buf.scatter(1, &step);
+                    abuf.set_row(1, &a);
+                    row.observe_row(&abuf, 1, &buf);
+                }
+            }
+            let a = t_legacy.snapshot();
+            let b = t_row.snapshot();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                let (x, y) = (x.as_transition(), y.as_transition());
+                assert_eq!(x.obs, y.obs);
+                assert_eq!(x.state, y.state);
+                assert_eq!(x.actions_disc, y.actions_disc);
+                assert_eq!(x.rewards, y.rewards);
+                assert_eq!(x.discount, y.discount);
+                assert_eq!(x.next_obs, y.next_obs);
+                assert_eq!(x.next_state, y.next_state);
+            }
+        }
+
+        // sequence adders over the same trajectory
+        let t_legacy = Arc::new(Table::uniform(64, 1, 0));
+        let t_row = Arc::new(Table::uniform(64, 1, 0));
+        let mut legacy = SequenceAdder::new(t_legacy.clone(), 4, 2);
+        let mut row = SequenceAdder::new(t_row.clone(), 4, 2);
+        for episode in 0..2 {
+            let first = ts(StepType::First, episode as f32, 0.0, 1.0);
+            legacy.observe_first(&first);
+            buf.scatter(0, &first);
+            row.observe_first_row(&buf, 0);
+            for t in 0..6 {
+                let last = t == 5;
+                let step = ts(
+                    if last { StepType::Last } else { StepType::Mid },
+                    t as f32 + 10.0 * episode as f32,
+                    0.25,
+                    if last { 0.0 } else { 1.0 },
+                );
+                let a = acts(t);
+                legacy.observe(&a, &step);
+                buf.scatter(0, &step);
+                abuf.set_row(0, &a);
+                row.observe_row(&abuf, 0, &buf);
+            }
+        }
+        let a = t_legacy.snapshot();
+        let b = t_row.snapshot();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            let (x, y) = (x.as_sequence(), y.as_sequence());
+            assert_eq!(x.t, y.t);
+            assert_eq!(x.obs, y.obs);
+            assert_eq!(x.actions, y.actions);
+            assert_eq!(x.rewards, y.rewards);
+            assert_eq!(x.discounts, y.discounts);
+            assert_eq!(x.mask, y.mask);
+        }
+    }
+
+    /// Continuous joint actions flatten identically through both APIs.
+    #[test]
+    fn continuous_actions_flatten() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut adder = TransitionAdder::new(table.clone(), 1, 0.99);
+        adder.observe_first(&ts(StepType::First, 0.0, 0.0, 1.0));
+        let a = Actions::Continuous(vec![vec![0.1, 0.2], vec![0.3, 0.4]]);
+        adder.observe(&a, &ts(StepType::Mid, 1.0, 0.0, 1.0));
+        let items = table.sample(1).unwrap();
+        let tr = items[0].as_transition();
+        assert_eq!(tr.actions_cont, vec![0.1, 0.2, 0.3, 0.4]);
+        assert!(tr.actions_disc.is_empty());
     }
 }

@@ -173,10 +173,25 @@ impl Table {
     /// Insert with priority, blocking while the rate limiter forbids it.
     /// Returns false if the table was closed while waiting.
     pub fn insert(&self, item: Item, priority: f64) -> bool {
+        self.insert_reuse(item, priority).0
+    }
+
+    /// [`Table::insert`] that additionally hands the FIFO-evicted item
+    /// (if the table was at capacity) back to the caller, so adders can
+    /// recycle its buffers instead of allocating fresh ones — the
+    /// steady-state insert path of the allocation-free vector step
+    /// (DESIGN.md §6). Returns `(accepted, evicted)`; `accepted` is
+    /// false (and the evicted slot `None`) when the table closed while
+    /// waiting.
+    pub fn insert_reuse(
+        &self,
+        item: Item,
+        priority: f64,
+    ) -> (bool, Option<Item>) {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if self.is_closed() {
-                return false;
+                return (false, None);
             }
             let st = inner.stats;
             if self.limiter.can_insert(st.inserts, st.samples) {
@@ -189,8 +204,9 @@ impl Table {
             inner = guard;
             let _ = timeout;
         }
+        let mut evicted = None;
         if inner.items.len() == self.max_size {
-            inner.items.pop_front();
+            evicted = inner.items.pop_front();
             let slot = inner.head_slot;
             inner.tree.set(slot, 0.0);
             inner.head_slot = (inner.head_slot + 1) % self.max_size;
@@ -204,7 +220,7 @@ impl Table {
         inner.stats.inserts += 1;
         drop(inner);
         self.cv.notify_all();
-        true
+        (true, evicted)
     }
 
     /// Copy of every stored item, oldest first (checkpointing).
@@ -299,6 +315,17 @@ mod tests {
             assert!((0.0..5.0).contains(&val(it)));
         }
         assert_eq!(t.stats().inserts, 5);
+    }
+
+    #[test]
+    fn insert_reuse_returns_evicted_item() {
+        let t = Table::uniform(2, 1, 0);
+        assert_eq!(t.insert_reuse(item(0.0), 1.0), (true, None));
+        assert_eq!(t.insert_reuse(item(1.0), 1.0).1.map(|i| val(&i)), None);
+        let (ok, ev) = t.insert_reuse(item(2.0), 1.0);
+        assert!(ok);
+        assert_eq!(ev.map(|i| val(&i)), Some(0.0), "oldest item recycled");
+        assert_eq!(t.stats().evictions, 1);
     }
 
     #[test]

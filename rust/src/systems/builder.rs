@@ -13,9 +13,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::core::{Actions, StepType, TimeStep};
+use crate::core::StepType;
 use crate::env::wrappers::{Fingerprint, FingerprintWrapper};
-use crate::env::{make_env, MultiAgentEnv, VecEnv};
+use crate::env::{make_env, ActionBuf, MultiAgentEnv, VecEnv, VecStepBuf};
 use crate::eval::VecEvaluator;
 use crate::exploration::EpsilonSchedule;
 use crate::launch::{LocalLauncher, NodeKind, Program, StopSignal};
@@ -35,17 +35,22 @@ enum Adder {
 }
 
 impl Adder {
-    fn observe_first(&mut self, ts: &TimeStep) {
+    fn observe_first_row(&mut self, next: &VecStepBuf, row: usize) {
         match self {
-            Adder::Tr(a) => a.observe_first(ts),
-            Adder::Sq(a) => a.observe_first(ts),
+            Adder::Tr(a) => a.observe_first_row(next, row),
+            Adder::Sq(a) => a.observe_first_row(next, row),
         }
     }
 
-    fn observe(&mut self, actions: &Actions, next: &TimeStep) {
+    fn observe_row(
+        &mut self,
+        actions: &ActionBuf,
+        row: usize,
+        next: &VecStepBuf,
+    ) {
         match self {
-            Adder::Tr(a) => a.observe(actions, next),
-            Adder::Sq(a) => a.observe(actions, next),
+            Adder::Tr(a) => a.observe_row(actions, row, next),
+            Adder::Sq(a) => a.observe_row(actions, row, next),
         }
     }
 }
@@ -121,23 +126,10 @@ pub fn env_for_preset(
     let env = make_env(base, seed)?;
     if preset.ends_with("_fp") {
         let fp = fingerprint.unwrap_or_default();
-        // wrap via a boxed adaptor
-        struct Boxed(Box<dyn MultiAgentEnv>);
-        impl MultiAgentEnv for Boxed {
-            fn spec(&self) -> &crate::core::EnvSpec {
-                self.0.spec()
-            }
-            fn reset(&mut self) -> crate::core::TimeStep {
-                self.0.reset()
-            }
-            fn step(
-                &mut self,
-                a: &crate::core::Actions,
-            ) -> crate::core::TimeStep {
-                self.0.step(a)
-            }
-        }
-        Ok(Box::new(FingerprintWrapper::new(Boxed(env), fp)))
+        // Box<dyn MultiAgentEnv> implements the trait (all SoA hooks
+        // forwarded), so the wrapper composes over it directly and the
+        // _fp preset stays on the allocation-free path
+        Ok(Box::new(FingerprintWrapper::new(env, fp)))
     } else {
         Ok(env)
     }
@@ -411,9 +403,17 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
                         })
                         .collect();
                     let mut ep_returns = vec![0.0f32; num_envs];
-                    let mut vs = venv.reset();
+                    // SoA double buffer: `cur` feeds the policy call,
+                    // the envs write the next vector step into `next`,
+                    // then the buffers swap — allocated once here,
+                    // refilled in place forever after (DESIGN.md §6)
+                    let mut cur = venv.make_buf();
+                    let mut next = venv.make_buf();
+                    let mut abuf = venv.make_action_buf();
+                    let mut params_scratch = Vec::new();
+                    venv.reset_into(&mut cur);
                     for (i, adder) in adders.iter_mut().enumerate() {
-                        adder.observe_first(&vs.steps[i]);
+                        adder.observe_first_row(&cur, i);
                     }
                     while !stop.is_stopped()
                         && counters.env_steps() < cfg.max_env_steps
@@ -425,24 +425,28 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
                                 / cfg.max_env_steps as f32)
                                 .min(1.0),
                         );
-                        // ONE batched policy call for all B instances
-                        let actions = executor
-                            .select_actions_vec(&vs, eps, cfg.noise_sigma)?;
-                        let next = venv.step(&actions);
+                        // ONE batched policy call for all B instances;
+                        // params + recurrent carry stay device-resident
+                        executor.select_actions_into(
+                            &cur,
+                            eps,
+                            cfg.noise_sigma,
+                            &mut abuf,
+                        )?;
+                        venv.step_into(&abuf, &mut next);
                         let mut episode_ended = false;
-                        for (i, ts) in next.steps.iter().enumerate() {
-                            if ts.step_type == StepType::First {
+                        for (i, adder) in adders.iter_mut().enumerate() {
+                            if next.step_type(i) == StepType::First {
                                 // this slot auto-reset: new episode
-                                adders[i].observe_first(ts);
+                                adder.observe_first_row(&next, i);
                                 executor.reset_instance(i);
                                 ep_returns[i] = 0.0;
                                 continue;
                             }
-                            adders[i].observe(&actions[i], ts);
+                            adder.observe_row(&abuf, i, &next);
                             counters.add_env_steps(1);
-                            ep_returns[i] += ts.rewards.iter().sum::<f32>()
-                                / ts.rewards.len() as f32;
-                            if ts.is_last() {
+                            ep_returns[i] += next.mean_reward(i);
+                            if next.is_last(i) {
                                 counters.add_episode();
                                 train_returns
                                     .lock()
@@ -453,14 +457,14 @@ pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResul
                         }
                         if episode_ended {
                             // cheap version check at episode boundaries
-                            let mut buf = Vec::new();
-                            if let Some(v) = server
-                                .sync(executor.params_version, &mut buf)
-                            {
-                                executor.set_params(v, &buf);
+                            if let Some(v) = server.sync(
+                                executor.params_version,
+                                &mut params_scratch,
+                            ) {
+                                executor.set_params(v, &params_scratch);
                             }
                         }
-                        vs = next;
+                        std::mem::swap(&mut cur, &mut next);
                     }
                     Ok(())
                 };

@@ -11,14 +11,25 @@
 //! training), and [`VecExecutor`] acts for a whole [`crate::env::VecEnv`]
 //! batch with one `[B, N, O]` artifact call per vector step
 //! (DESIGN.md §6).
+//!
+//! On the vectorized hot path ([`VecExecutor::select_actions_into`])
+//! the recurrent carry is **device-resident**: each call feeds the
+//! previous call's hidden/inbox output buffers straight back as
+//! device arguments ([`crate::runtime::Artifact::call_device`]) and
+//! downloads only the `[B, N, A]` action head — per steady-state step
+//! the only transfers are one obs upload and one action download, the
+//! same trick the trainer plays with its `(params, target, opt)` state
+//! (DESIGN.md §8). Per-row auto-resets re-zero just that row: the
+//! carry is pulled to a host mirror once per reset event (not per
+//! step), masked, and re-fed as a host argument on the next call.
 
 use std::rc::Rc;
 
 use anyhow::Result;
 
 use crate::core::{Actions, HostTensor, TimeStep};
-use crate::env::VecStep;
-use crate::exploration::{epsilon_greedy, gaussian_noise};
+use crate::env::{ActionBuf, VecStep, VecStepBuf};
+use crate::exploration::{epsilon_greedy, epsilon_greedy_masked, gaussian_noise};
 use crate::rng::Rng;
 use crate::runtime::{Arg, Artifact};
 use crate::systems::SystemKind;
@@ -33,6 +44,38 @@ pub enum ActorState {
     Hidden(HostTensor),
     /// DIAL: hidden state `[B, N, H]` + routed message inbox `[B, N, M]`.
     HiddenInbox(HostTensor, HostTensor),
+}
+
+/// The device-resident half of the recurrent carry: output buffers of
+/// the previous policy call, fed back as `Arg::Dev` inputs of the next
+/// one. When present, the device buffers are authoritative and the
+/// host-side [`ActorState`] is a stale mirror.
+struct DevCarry {
+    hidden: xla::PjRtBuffer,
+    inbox: Option<xla::PjRtBuffer>,
+}
+
+/// Pick per-agent discrete actions for one row of a `[B, N, A]`
+/// Q-value batch, honouring an optional f32 legal mask row `[N*A]`
+/// (1.0 legal). Shared by the executor hot path and the hermetic
+/// legal-masking tests; allocation-free.
+pub fn select_discrete_row(
+    q_row: &[f32],
+    n_agents: usize,
+    n_actions: usize,
+    legal_row: Option<&[f32]>,
+    eps: f32,
+    rng: &mut Rng,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(q_row.len(), n_agents * n_actions);
+    debug_assert_eq!(out.len(), n_agents);
+    for i in 0..n_agents {
+        let qi = &q_row[i * n_actions..(i + 1) * n_actions];
+        let legal =
+            legal_row.map(|l| &l[i * n_actions..(i + 1) * n_actions]);
+        out[i] = epsilon_greedy_masked(qi, n_actions, legal, eps, rng);
+    }
 }
 
 /// Multi-agent actor for a single environment: a thin B=1 wrapper over
@@ -98,9 +141,10 @@ impl std::ops::DerefMut for Executor {
 /// instead of `B` separate PJRT dispatches per vector step, the stacked
 /// observations go through a single batched artifact call and the
 /// per-instance recurrent carries live as rows of one `[B, N, H]`
-/// tensor. [`VecExecutor::reset_instance`] zeroes exactly one row when
-/// that instance's episode auto-resets, so desynchronised episode
-/// boundaries never force a full-batch reset.
+/// tensor — device-resident on the SoA path
+/// ([`VecExecutor::select_actions_into`]). [`VecExecutor::reset_instance`]
+/// zeroes exactly one row when that instance's episode auto-resets, so
+/// desynchronised episode boundaries never force a full-batch reset.
 pub struct VecExecutor {
     kind: SystemKind,
     artifact: Rc<Artifact>,
@@ -110,7 +154,13 @@ pub struct VecExecutor {
     pub params_version: u64,
     /// device-resident copy of `params`, rebuilt lazily after set_params
     params_buf: Option<xla::PjRtBuffer>,
-    state: ActorState, // tensors carry [B, N, H] / [B, N, M]
+    /// host mirror of the recurrent carry ([B, N, H] / [B, N, M]);
+    /// stale while `dev_state` is Some
+    state: ActorState,
+    /// device-resident carry (SoA path); authoritative when Some
+    dev_state: Option<DevCarry>,
+    /// rows whose carry must be zeroed before the next device call
+    pending_resets: Vec<usize>,
     rng: Rng,
     batch: usize,
     n_agents: usize,
@@ -155,6 +205,8 @@ impl VecExecutor {
             params_version: 0,
             params_buf: None,
             state: ActorState::None,
+            dev_state: None,
+            pending_resets: Vec::new(),
             rng: Rng::new(seed),
             batch,
             n_agents,
@@ -177,8 +229,12 @@ impl VecExecutor {
         self.n_agents
     }
 
-    /// Zero the recurrent carry of every instance.
+    /// Zero the recurrent carry of every instance (drops any
+    /// device-resident carry; the zeroed host mirror feeds the next
+    /// call).
     pub fn reset_state(&mut self) {
+        self.dev_state = None;
+        self.pending_resets.clear();
         self.state = match self.kind {
             SystemKind::MadqnRec => ActorState::Hidden(HostTensor::zeros_f32(
                 vec![self.batch, self.n_agents, self.hidden],
@@ -200,22 +256,79 @@ impl VecExecutor {
     }
 
     /// Zero only instance `b`'s recurrent carry (call when that
-    /// instance's episode auto-resets).
+    /// instance's episode auto-resets). With a device-resident carry
+    /// the zeroing is deferred and batched: the rows are masked in one
+    /// host round-trip right before the next policy call.
     pub fn reset_instance(&mut self, b: usize) {
         debug_assert!(b < self.batch);
+        if matches!(self.state, ActorState::None) {
+            return;
+        }
+        if self.dev_state.is_some() {
+            if !self.pending_resets.contains(&b) {
+                self.pending_resets.push(b);
+            }
+            return;
+        }
+        self.zero_host_rows(&[b]);
+    }
+
+    fn zero_host_rows(&mut self, rows: &[usize]) {
         match &mut self.state {
             ActorState::None => {}
             ActorState::Hidden(h) => {
-                let row = self.n_agents * self.hidden;
-                h.as_f32_mut()[b * row..(b + 1) * row].fill(0.0);
+                let w = self.n_agents * self.hidden;
+                for &b in rows {
+                    h.as_f32_mut()[b * w..(b + 1) * w].fill(0.0);
+                }
             }
             ActorState::HiddenInbox(h, inbox) => {
-                let row = self.n_agents * self.hidden;
-                h.as_f32_mut()[b * row..(b + 1) * row].fill(0.0);
-                let row = self.n_agents * self.msg_dim;
-                inbox.as_f32_mut()[b * row..(b + 1) * row].fill(0.0);
+                let w = self.n_agents * self.hidden;
+                for &b in rows {
+                    h.as_f32_mut()[b * w..(b + 1) * w].fill(0.0);
+                }
+                let w = self.n_agents * self.msg_dim;
+                for &b in rows {
+                    inbox.as_f32_mut()[b * w..(b + 1) * w].fill(0.0);
+                }
             }
         }
+    }
+
+    /// Pull a device-resident carry back into the host mirror (one
+    /// fetch per tensor) and drop the device buffers. No-op when the
+    /// carry already lives on the host.
+    fn drain_device_state(&mut self) -> Result<()> {
+        let Some(carry) = self.dev_state.take() else {
+            return Ok(());
+        };
+        match &mut self.state {
+            ActorState::None => {}
+            ActorState::Hidden(h) => {
+                *h = self.artifact.to_host(&carry.hidden, 1)?;
+            }
+            ActorState::HiddenInbox(h, inbox) => {
+                *h = self.artifact.to_host(&carry.hidden, 1)?;
+                let ib = carry.inbox.as_ref().expect("DIAL carry has inbox");
+                *inbox = self.artifact.to_host(ib, 2)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply deferred per-row resets. Drains the device carry (if any)
+    /// first, so one reset event costs one host round-trip however many
+    /// rows it covers — the next call re-uploads the masked mirror.
+    fn apply_pending_resets(&mut self) -> Result<()> {
+        if self.pending_resets.is_empty() {
+            return Ok(());
+        }
+        self.drain_device_state()?;
+        let rows = std::mem::take(&mut self.pending_resets);
+        self.zero_host_rows(&rows);
+        self.pending_resets = rows;
+        self.pending_resets.clear();
+        Ok(())
     }
 
     /// Update parameters from the server copy.
@@ -225,9 +338,126 @@ impl VecExecutor {
         self.params_buf = None; // stale device copy
     }
 
+    fn ensure_params_buf(&mut self) -> Result<()> {
+        if self.params_buf.is_none() {
+            let dims = [self.params.len()];
+            self.params_buf =
+                Some(self.artifact.upload(&self.params, &dims)?);
+        }
+        Ok(())
+    }
+
+    /// Select a joint action for every row of the SoA batch with ONE
+    /// batched policy-artifact call, writing the result into `out`.
+    ///
+    /// This is the steady-state hot path: parameters and the recurrent
+    /// carry stay on device (`Arg::Dev`), only the `[B, N, O]`
+    /// observations are uploaded and only the `[B, N, A]` action head
+    /// is downloaded. `eps`/`sigma` control exploration exactly as in
+    /// [`Executor::select_actions`].
+    pub fn select_actions_into(
+        &mut self,
+        buf: &VecStepBuf,
+        eps: f32,
+        sigma: f32,
+        out: &mut ActionBuf,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            buf.num_envs() == self.batch
+                && buf.n_agents() == self.n_agents
+                && buf.obs_dim() == self.obs_dim,
+            "vec step buf [{}x{}x{}] != artifact [{}x{}x{}]",
+            buf.num_envs(),
+            buf.n_agents(),
+            buf.obs_dim(),
+            self.batch,
+            self.n_agents,
+            self.obs_dim
+        );
+        anyhow::ensure!(
+            out.num_envs() == self.batch,
+            "action buf batch {} != artifact batch {}",
+            out.num_envs(),
+            self.batch
+        );
+        self.apply_pending_resets()?;
+        self.ensure_params_buf()?;
+        let artifact = self.artifact.clone();
+        let pbuf = self.params_buf.as_ref().unwrap();
+        let q = if matches!(self.state, ActorState::None) {
+            // feedforward: one declared output, no carry to keep on
+            // device — the host-output path is exact here
+            let mut outs = artifact
+                .call_mixed(&[Arg::Dev(pbuf), Arg::Host(&buf.obs)])?;
+            outs.swap_remove(0)
+        } else {
+            // take the device carry out so the post-call reassignment
+            // does not alias the argument borrows
+            let dev = self.dev_state.take();
+            let mut args: Vec<Arg> = Vec::with_capacity(4);
+            args.push(Arg::Dev(pbuf));
+            args.push(Arg::Host(&buf.obs));
+            match (&self.state, &dev) {
+                (_, Some(carry)) => {
+                    args.push(Arg::Dev(&carry.hidden));
+                    if let Some(ib) = &carry.inbox {
+                        args.push(Arg::Dev(ib));
+                    }
+                }
+                (ActorState::Hidden(h), None) => {
+                    args.push(Arg::Host(h));
+                }
+                (ActorState::HiddenInbox(h, inbox), None) => {
+                    args.push(Arg::Host(h));
+                    args.push(Arg::Host(inbox));
+                }
+                (ActorState::None, None) => unreachable!(),
+            }
+            let outs = artifact.call_device(&args)?;
+            drop(args);
+            let q = artifact.to_host(&outs[0], 0)?;
+            let mut it = outs.into_iter();
+            let _q_dev = it.next();
+            let hidden = it.next().expect("recurrent policy outputs");
+            let inbox = it.next();
+            self.dev_state = Some(DevCarry { hidden, inbox });
+            q
+        };
+
+        let per_env = self.n_agents * self.n_actions;
+        let qs = q.as_f32(); // [B, N, A]
+        for b in 0..self.batch {
+            let q_row = &qs[b * per_env..(b + 1) * per_env];
+            if self.kind.discrete() {
+                select_discrete_row(
+                    q_row,
+                    self.n_agents,
+                    self.n_actions,
+                    buf.legal_row(b),
+                    eps,
+                    &mut self.rng,
+                    out.disc_row_mut(b),
+                );
+            } else {
+                let row = out.cont_row_mut(b);
+                row.copy_from_slice(q_row);
+                if sigma > 0.0 {
+                    for i in 0..self.n_agents {
+                        gaussian_noise(
+                            &mut row[i * self.n_actions
+                                ..(i + 1) * self.n_actions],
+                            sigma,
+                            &mut self.rng,
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Select a joint action for every environment instance with ONE
-    /// batched policy artifact call. `eps`/`sigma` control exploration
-    /// exactly as in [`Executor::select_actions`].
+    /// batched policy artifact call (legacy array-of-structs path).
     pub fn select_actions_vec(
         &mut self,
         vs: &VecStep,
@@ -240,7 +470,9 @@ impl VecExecutor {
 
     /// [`Self::select_actions_vec`] over borrowed per-instance
     /// timesteps — the obs tensor is packed straight from the borrows
-    /// (no `TimeStep` clone on the hot path).
+    /// (no `TimeStep` clone on the hot path). Carries recurrent state
+    /// on the host; if a device-resident carry is live (mixed use with
+    /// [`VecExecutor::select_actions_into`]) it is drained first.
     pub fn select_actions_steps(
         &mut self,
         steps: &[&TimeStep],
@@ -253,6 +485,8 @@ impl VecExecutor {
             steps.len(),
             self.batch
         );
+        self.apply_pending_resets()?;
+        self.drain_device_state()?;
         let mut data =
             Vec::with_capacity(self.batch * self.n_agents * self.obs_dim);
         for ts in steps {
@@ -271,12 +505,9 @@ impl VecExecutor {
             vec![self.batch, self.n_agents, self.obs_dim],
             data,
         );
-        if self.params_buf.is_none() {
-            let dims = [self.params.len()];
-            self.params_buf = Some(self.artifact.upload(&self.params, &dims)?);
-        }
+        self.ensure_params_buf()?;
         let pbuf = self.params_buf.as_ref().unwrap();
-        let outputs = match &self.state {
+        let mut outputs = match &self.state {
             ActorState::None => self
                 .artifact
                 .call_mixed(&[Arg::Dev(pbuf), Arg::Host(&obs)])?,
@@ -292,12 +523,14 @@ impl VecExecutor {
                 Arg::Host(inbox),
             ])?,
         };
+        // move the fresh carry out of the outputs instead of cloning it
+        // (outputs[0] stays in place: indices removed back to front)
         match &mut self.state {
             ActorState::None => {}
-            ActorState::Hidden(h) => *h = outputs[1].clone(),
+            ActorState::Hidden(h) => *h = outputs.swap_remove(1),
             ActorState::HiddenInbox(h, inbox) => {
-                *h = outputs[1].clone();
-                *inbox = outputs[2].clone();
+                *inbox = outputs.swap_remove(2);
+                *h = outputs.swap_remove(1);
             }
         }
 
@@ -339,5 +572,159 @@ impl VecExecutor {
             }
         }
         Ok(joint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ActionSpec, Actions as CoreActions, EnvSpec, StepType};
+    use crate::env::{MultiAgentEnv, VecEnv};
+
+    /// smac_lite-shaped fixture: discrete actions with a legal mask
+    /// that only ever allows action `t % n + (row legal offset)`, plus
+    /// short episodes so a B>1 batch crosses auto-reset boundaries.
+    struct MaskedEnv {
+        spec: EnvSpec,
+        t: usize,
+        id: usize,
+        limit: usize,
+    }
+
+    impl MaskedEnv {
+        fn new(id: usize) -> Self {
+            MaskedEnv {
+                spec: EnvSpec {
+                    name: "masked".into(),
+                    n_agents: 3,
+                    obs_dim: 2,
+                    action: ActionSpec::Discrete { n: 5 },
+                    state_dim: 0,
+                    episode_limit: 4,
+                },
+                t: 0,
+                id,
+                limit: 4,
+            }
+        }
+
+        fn meta(&self) -> crate::core::StepMeta {
+            crate::core::StepMeta {
+                step_type: if self.t == 0 {
+                    StepType::First
+                } else if self.t >= self.limit {
+                    StepType::Last
+                } else {
+                    StepType::Mid
+                },
+                discount: 1.0,
+            }
+        }
+    }
+
+    impl MultiAgentEnv for MaskedEnv {
+        fn spec(&self) -> &EnvSpec {
+            &self.spec
+        }
+
+        fn reset(&mut self) -> crate::core::TimeStep {
+            let m = self.reset_soa();
+            self.materialize(m)
+        }
+
+        fn step(&mut self, _a: &CoreActions) -> crate::core::TimeStep {
+            let m = self.step_soa(&crate::core::ActionsRef::Discrete(&[
+                0, 0, 0,
+            ]));
+            self.materialize(m)
+        }
+
+        fn writes_soa(&self) -> bool {
+            true
+        }
+
+        fn has_legal(&self) -> bool {
+            true
+        }
+
+        fn reset_soa(&mut self) -> crate::core::StepMeta {
+            self.t = 0;
+            self.meta()
+        }
+
+        fn step_soa(
+            &mut self,
+            _a: &crate::core::ActionsRef,
+        ) -> crate::core::StepMeta {
+            self.t += 1;
+            self.meta()
+        }
+
+        fn write_obs(&mut self, out: &mut [f32]) {
+            out.fill(self.t as f32);
+        }
+
+        fn write_rewards(&mut self, out: &mut [f32]) {
+            out.fill(if self.t == 0 { 0.0 } else { 1.0 });
+        }
+
+        fn write_legal(&mut self, out: &mut [f32]) {
+            out.fill(0.0);
+            // agent i's single legal action rotates with t, offset by
+            // the instance id so rows differ
+            for i in 0..3 {
+                out[i * 5 + (self.t + self.id + i) % 5] = 1.0;
+            }
+        }
+    }
+
+    /// Satellite: ε-greedy through the vectorized SoA path must never
+    /// pick an illegal action for any row of a B>1 batch — including
+    /// the row right after an auto-reset — at any ε.
+    #[test]
+    fn vectorized_masking_never_selects_illegal() {
+        let envs: Vec<Box<dyn MultiAgentEnv>> =
+            (0..4).map(|i| -> Box<dyn MultiAgentEnv> {
+                Box::new(MaskedEnv::new(i))
+            }).collect();
+        let mut venv = VecEnv::new(envs).unwrap();
+        let mut buf = venv.make_buf();
+        let mut abuf = venv.make_action_buf();
+        venv.reset_into(&mut buf);
+        let mut rng = Rng::new(3);
+        // Q prefers an often-illegal action everywhere: the mask must
+        // override the argmax on greedy steps and bound random steps
+        let q: Vec<f32> = (0..4 * 3 * 5)
+            .map(|k| if k % 5 == 0 { 10.0 } else { (k % 7) as f32 })
+            .collect();
+        let mut saw_reset_row = false;
+        for step in 0..40 {
+            let eps = [0.0, 0.3, 1.0][step % 3];
+            for b in 0..4 {
+                select_discrete_row(
+                    &q[b * 15..(b + 1) * 15],
+                    3,
+                    5,
+                    buf.legal_row(b),
+                    eps,
+                    &mut rng,
+                    abuf.disc_row_mut(b),
+                );
+                let legal = buf.legal_row(b).unwrap();
+                for (i, &a) in abuf.row(b).as_discrete().iter().enumerate()
+                {
+                    assert_eq!(
+                        legal[i * 5 + a as usize],
+                        1.0,
+                        "illegal action {a} for agent {i} row {b} \
+                         (step {step}, eps {eps})"
+                    );
+                }
+                saw_reset_row |= buf.step_type(b) == StepType::First
+                    && step > 0;
+            }
+            venv.step_into(&abuf, &mut buf);
+        }
+        assert!(saw_reset_row, "test never crossed an auto-reset");
     }
 }

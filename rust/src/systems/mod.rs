@@ -34,7 +34,9 @@ pub use builder::{
     check_artifacts, env_for_preset, eval_episode, eval_policy_batch,
     make_vec_evaluator, train, EvalPoint, TrainResult,
 };
-pub use executor::{ActorState, Executor, VecExecutor};
+pub use executor::{
+    select_discrete_row, ActorState, Executor, VecExecutor,
+};
 pub use prefetch::BatchPrefetcher;
 pub use trainer::{Trainer, TrainerStats};
 
