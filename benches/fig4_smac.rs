@@ -37,9 +37,9 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nshape check: VDN best {:.2} vs MADQN best {:.2} (paper: VDN wins); \
          QMIX {:.2} (paper: QMIX underperformed)",
-        vdn.best_return(),
-        madqn.best_return(),
-        qmix.best_return()
+        vdn.best_return().unwrap_or(f32::NAN),
+        madqn.best_return().unwrap_or(f32::NAN),
+        qmix.best_return().unwrap_or(f32::NAN)
     );
     Ok(())
 }

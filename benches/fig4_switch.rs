@@ -35,8 +35,8 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nshape check: DIAL best {:+.3} vs plain MADQN best {:+.3} \
          (paper: comm wins)",
-        dial.best_return(),
-        plain.best_return()
+        dial.best_return().unwrap_or(f32::NAN),
+        plain.best_return().unwrap_or(f32::NAN)
     );
     Ok(())
 }

@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
              best return {:.2}, time-to(5.0) {:?}",
             r.env_steps,
             r.train_steps,
-            r.best_return(),
+            r.best_return().unwrap_or(f32::NAN),
             r.time_to(5.0)
         );
     }

@@ -62,10 +62,10 @@ fn main() -> anyhow::Result<()> {
         "\nshape check (both systems solve both envs, similar returns):\n\
          spread:  mad4pg {:.1} vs maddpg {:.1}\n\
          speaker: mad4pg {:.1} vs maddpg {:.1}",
-        d4.best_return(),
-        dd.best_return(),
-        d4s.best_return(),
-        dds.best_return()
+        d4.best_return().unwrap_or(f32::NAN),
+        dd.best_return().unwrap_or(f32::NAN),
+        d4s.best_return().unwrap_or(f32::NAN),
+        dds.best_return().unwrap_or(f32::NAN)
     );
     Ok(())
 }

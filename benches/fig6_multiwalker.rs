@@ -47,8 +47,8 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nshape check: decentralised best {:.2}, centralised best {:.2} \
          (paper: centralised does not help)",
-        dec.best_return(),
-        cen.best_return()
+        dec.best_return().unwrap_or(f32::NAN),
+        cen.best_return().unwrap_or(f32::NAN)
     );
     Ok(())
 }

@@ -1,8 +1,9 @@
 //! Distributed MADQN — the paper's Block 2 in mava-rs.
 //!
-//! Builds the multi-node program graph (replay node, trainer node,
-//! `num_executors` executor nodes, an evaluator) and launches it with the
-//! local multi-threaded launcher. Compare with the paper:
+//! Builds the multi-node program graph (trainer node, `num_executors`
+//! executor nodes, an evaluator, a sharded replay table) through the
+//! composable System API and launches it with the local multi-threaded
+//! launcher. Compare with the paper:
 //!
 //! ```python
 //! program = madqn.MADQN(
@@ -20,7 +21,7 @@
 
 use anyhow::Result;
 use mava::config::TrainConfig;
-use mava::systems;
+use mava::systems::{self, SystemBuilder, SystemSpec};
 
 fn main() -> Result<()> {
     let num_executors: usize = std::env::args()
@@ -30,9 +31,7 @@ fn main() -> Result<()> {
         .unwrap_or(2);
 
     let mut cfg = TrainConfig::default();
-    cfg.system = "madqn".into();
     cfg.preset = "matrix2".into();
-    cfg.num_executors = num_executors;
     cfg.max_env_steps = 8_000;
     cfg.min_replay = 64;
     cfg.eps_decay_steps = 3_000;
@@ -40,11 +39,18 @@ fn main() -> Result<()> {
     cfg.eval_episodes = 20;
     systems::check_artifacts(&cfg)?;
 
+    // spec + builder: the mava-rs analogue of the paper's system
+    // constructor — the node graph is explicit and inspectable
+    let spec = SystemSpec::parse("madqn")?;
+    let system = SystemBuilder::new(spec, &cfg)
+        .executors(num_executors)
+        .build()?;
     println!(
-        "launching program graph: 1 replay + 1 trainer + {} executors + 1 evaluator",
-        cfg.num_executors
+        "launching program graph ({} replay shard(s)): {}",
+        system.num_replay_shards(),
+        system.node_names().join(" + ")
     );
-    let result = systems::train(&cfg, None)?;
+    let result = system.run(None)?;
     println!(
         "finished: {} env steps / {} train steps / {} episodes in {:.1}s",
         result.env_steps, result.train_steps, result.episodes, result.wall_s
@@ -55,6 +61,9 @@ fn main() -> Result<()> {
             e.wall_s, e.env_steps, e.mean_return
         );
     }
-    println!("best eval return: {:+.2}", result.best_return());
+    match result.best_return() {
+        Some(best) => println!("best eval return: {best:+.2}"),
+        None => println!("no evaluation completed (run too short)"),
+    }
     Ok(())
 }

@@ -9,13 +9,12 @@
 //! cargo run --release --example switch_dial -- [env_steps]
 //! ```
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use mava::config::TrainConfig;
-use mava::systems;
+use mava::systems::{self, SystemBuilder, SystemSpec};
 
 fn run(system: &str, max_env_steps: u64) -> Result<f32> {
     let mut cfg = TrainConfig::default();
-    cfg.system = system.into();
     cfg.preset = "switch3".into();
     cfg.num_executors = 2;
     cfg.max_env_steps = max_env_steps;
@@ -29,7 +28,10 @@ fn run(system: &str, max_env_steps: u64) -> Result<f32> {
     cfg.eval_every_steps = max_env_steps / 10;
     cfg.eval_episodes = 50;
     systems::check_artifacts(&cfg)?;
-    let result = systems::train(&cfg, None)?;
+    // the paper's "communication is one line of config": the two
+    // systems differ only in which spec the builder is handed
+    let spec = SystemSpec::parse(system)?;
+    let result = SystemBuilder::new(spec, &cfg).build()?.run(None)?;
     println!("-- {system} --");
     for e in &result.evals {
         println!(
@@ -37,7 +39,9 @@ fn run(system: &str, max_env_steps: u64) -> Result<f32> {
             e.wall_s, e.env_steps, e.mean_return
         );
     }
-    Ok(result.best_return())
+    result
+        .best_return()
+        .with_context(|| format!("{system}: no evaluation completed"))
 }
 
 fn main() -> Result<()> {

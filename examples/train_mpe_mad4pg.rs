@@ -9,7 +9,7 @@
 use anyhow::Result;
 use mava::arch::Architecture;
 use mava::config::TrainConfig;
-use mava::systems;
+use mava::systems::{self, SystemBuilder, SystemSpec};
 
 fn main() -> Result<()> {
     let max_env_steps: u64 = std::env::args()
@@ -23,7 +23,6 @@ fn main() -> Result<()> {
         .unwrap_or(Architecture::Decentralised);
 
     let mut cfg = TrainConfig::default();
-    cfg.system = "mad4pg".into();
     cfg.preset = "spread3".into();
     cfg.arch = arch;
     cfg.num_executors = 2;
@@ -38,7 +37,9 @@ fn main() -> Result<()> {
     systems::check_artifacts(&cfg)?;
 
     println!("MAD4PG ({arch}) on simple_spread: {max_env_steps} env steps");
-    let result = systems::train(&cfg, None)?;
+    let result = SystemBuilder::new(SystemSpec::parse("mad4pg")?, &cfg)
+        .build()?
+        .run(None)?;
     for e in &result.evals {
         println!(
             "  t={:>7.1}s env={:>7} return={:>8.2}",
@@ -47,7 +48,7 @@ fn main() -> Result<()> {
     }
     println!(
         "best eval return {:.2} (higher = landmarks covered; random ~ -60)",
-        result.best_return()
+        result.best_return().unwrap_or(f32::NAN)
     );
     Ok(())
 }

@@ -13,7 +13,7 @@
 use anyhow::Result;
 use mava::config::TrainConfig;
 use mava::metrics::CsvLogger;
-use mava::systems;
+use mava::systems::{self, SystemBuilder, SystemSpec};
 
 fn main() -> Result<()> {
     let max_env_steps: u64 = std::env::args()
@@ -28,7 +28,6 @@ fn main() -> Result<()> {
         .unwrap_or(2);
 
     let mut cfg = TrainConfig::default();
-    cfg.system = "vdn".into();
     cfg.preset = "smac3m".into();
     cfg.num_executors = executors;
     cfg.max_env_steps = max_env_steps;
@@ -47,7 +46,9 @@ fn main() -> Result<()> {
         "VDN on smac_lite 3m: {} env steps, {} executors",
         cfg.max_env_steps, cfg.num_executors
     );
-    let result = systems::train(&cfg, None)?;
+    let result = SystemBuilder::new(SystemSpec::parse("vdn")?, &cfg)
+        .build()?
+        .run(None)?;
     let log = CsvLogger::create(
         "logs/smac_vdn.csv",
         &["wall_s", "env_steps", "train_steps", "mean_return"],
@@ -67,7 +68,7 @@ fn main() -> Result<()> {
     println!(
         "done in {:.1}s: best eval return {:.2} (max shaped return = 20)",
         result.wall_s,
-        result.best_return()
+        result.best_return().unwrap_or(f32::NAN)
     );
     Ok(())
 }

@@ -108,7 +108,8 @@ pub fn figure_run(
     println!(
         "summary {fig} {series} best={:.3} final_train={:.3} steps={} \
          train_steps={} wall_s={:.1}",
-        result.best_return(),
+        // NaN marks "never evaluated" in the grep-able summary row
+        result.best_return().unwrap_or(f32::NAN),
         result.train_return,
         result.env_steps,
         result.train_steps,

@@ -252,13 +252,14 @@ impl TrainConfig {
     }
 
     /// Name tag used by artifact lookup, e.g. `smac3m_vdn` or
-    /// `spread3_mad4pg_dec`.
+    /// `spread3_mad4pg_dec`. Delegates to the system's
+    /// [`crate::systems::SystemSpec`] (which owns the naming scheme);
+    /// unknown system strings keep the plain `{preset}_{system}` tag
+    /// so error paths can still print a stable name.
     pub fn artifact_prefix(&self) -> String {
-        match self.system.as_str() {
-            "maddpg" | "mad4pg" => {
-                format!("{}_{}_{}", self.preset, self.system, self.arch.tag())
-            }
-            _ => format!("{}_{}", self.preset, self.system),
+        match crate::systems::SystemSpec::parse(&self.system) {
+            Ok(spec) => spec.artifact_prefix(&self.preset, self.arch),
+            Err(_) => format!("{}_{}", self.preset, self.system),
         }
     }
 }

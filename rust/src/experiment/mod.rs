@@ -1,5 +1,5 @@
 //! Multi-seed experiment harness: the statistically-robust layer over
-//! `systems::train` (EXPERIMENTS.md).
+//! the System API ([`crate::systems::SystemBuilder`]; EXPERIMENTS.md).
 //!
 //! The paper's promise is not raw steps/s but *experiment throughput* —
 //! enough independent samples per claim to make it sound. This module
@@ -13,10 +13,10 @@
 //! scenario as a schema-versioned `BENCH_<scenario>.json`
 //! ([`mod@crate::bench::report`]).
 //!
-//! Seeds run sequentially on purpose: each `systems::train` call
-//! already saturates the machine with its own executor/trainer program
-//! graph, and sequential runs keep per-seed wall-clock (and therefore
-//! the steps/s recorded per seed) comparable.
+//! Seeds run sequentially on purpose: each built system already
+//! saturates the machine with its own executor/trainer program graph,
+//! and sequential runs keep per-seed wall-clock (and therefore the
+//! steps/s recorded per seed) comparable.
 //!
 //! Driven by `mava experiment --seeds S [--scenario SUBSTR]
 //! [--eval-episodes N] [--eval-interval K]`; scenarios whose artifacts
@@ -35,7 +35,7 @@ use crate::bench::report::{self, SeedRecord};
 use crate::config::TrainConfig;
 use crate::eval::stats::{self, Aggregates};
 use crate::runtime::{Engine, Manifest};
-use crate::systems;
+use crate::systems::{self, SystemBuilder, SystemSpec};
 
 /// One (environment, system) cell of the experiment grid.
 #[derive(Clone, Copy, Debug)]
@@ -199,17 +199,19 @@ fn run_scenario(
     tag: &str,
     opts: &ExperimentOpts,
 ) -> Result<ScenarioOutcome> {
+    let spec = SystemSpec::parse(&cfg.system)?;
     let mut records = Vec::with_capacity(opts.seeds);
     for s in 0..opts.seeds {
         let mut seed_cfg = cfg.clone();
         // well-separated seed streams: executors/trainer already derive
         // their own sub-seeds from cfg.seed, so stride generously
         seed_cfg.seed = cfg.seed + 1_000 * s as u64;
-        let result = systems::train(
-            &seed_cfg,
-            Some(Duration::from_secs(opts.seed_deadline_s)),
-        )
-        .with_context(|| format!("seed {} (index {s})", seed_cfg.seed))?;
+        // each seed is one built system; a node failure (trainer,
+        // executor or evaluator) aborts the scenario naming the node
+        let result = SystemBuilder::new(spec, &seed_cfg)
+            .build()?
+            .run(Some(Duration::from_secs(opts.seed_deadline_s)))
+            .with_context(|| format!("seed {} (index {s})", seed_cfg.seed))?;
         let returns = final_policy_returns(
             &seed_cfg,
             &result.final_params,

@@ -1,17 +1,27 @@
 //! Launchpad-style program graphs (paper Block 2).
 //!
-//! A [`Program`] is a named multi-node graph; each node is a closure run
-//! on its own OS thread by the [`LocalLauncher`] (the analogue of
-//! `launchpad.launch(program, LaunchType.LOCAL_MULTI_PROCESSING)` — we use
-//! threads instead of processes; the executor-parallelism the paper's
-//! Fig 6 bottom-right measures is preserved, see DESIGN.md §2). Nodes
-//! coordinate shutdown through a shared [`StopSignal`].
+//! A [`Program`] is a named multi-node graph; each node is a fallible
+//! closure run on its own OS thread by the [`LocalLauncher`] (the
+//! analogue of `launchpad.launch(program, LaunchType.LOCAL_MULTI_PROCESSING)`
+//! — we use threads instead of processes; the executor-parallelism the
+//! paper's Fig 6 bottom-right measures is preserved, see DESIGN.md §2).
+//! Nodes coordinate shutdown through a shared [`StopSignal`].
+//!
+//! Node failures are a *typed channel*, not stderr noise: a node body
+//! returns `Result<()>` (panics are caught and converted), a failing
+//! node immediately trips the program's [`StopSignal`] so its siblings
+//! wind down instead of training against a dead peer, and
+//! [`LaunchHandle::join`] returns one [`NodeOutcome`] per node so the
+//! supervisor can name exactly which node failed and why.
 
 #![warn(missing_docs)]
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
 
 /// Cooperative shutdown flag shared by every node of a program.
 #[derive(Clone, Default)]
@@ -55,7 +65,7 @@ pub enum NodeKind {
 struct NodeSpec {
     name: String,
     kind: NodeKind,
-    body: Box<dyn FnOnce() + Send + 'static>,
+    body: Box<dyn FnOnce() -> Result<()> + Send + 'static>,
 }
 
 /// A multi-node program under construction (Launchpad's program graph).
@@ -70,12 +80,14 @@ impl Program {
         Program::default()
     }
 
-    /// Add a node; `body` runs on its own thread at launch.
+    /// Add a node; `body` runs on its own thread at launch. An `Err`
+    /// (or a panic) from `body` trips the program's [`StopSignal`] and
+    /// is reported in the node's [`NodeOutcome`] at join.
     pub fn add_node(
         &mut self,
         name: impl Into<String>,
         kind: NodeKind,
-        body: impl FnOnce() + Send + 'static,
+        body: impl FnOnce() -> Result<()> + Send + 'static,
     ) -> &mut Self {
         self.nodes.push(NodeSpec { name: name.into(), kind, body: Box::new(body) });
         self
@@ -92,47 +104,145 @@ impl Program {
     }
 }
 
-/// A launched program: join to wait for completion.
+/// What one node of a launched program did: ran to completion
+/// (`result` Ok) or failed with the propagated error (a body `Err` or
+/// a caught panic).
+pub struct NodeOutcome {
+    /// Node name, as given to [`Program::add_node`].
+    pub name: String,
+    /// Node category.
+    pub kind: NodeKind,
+    /// The node body's result; panics are converted to errors.
+    pub result: Result<()>,
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A launched program: join to collect per-node outcomes.
 pub struct LaunchHandle {
-    threads: Vec<(String, JoinHandle<()>)>,
+    threads: Vec<(String, NodeKind, JoinHandle<Result<()>>)>,
     /// The program's shared shutdown signal.
     pub stop: StopSignal,
 }
 
 impl LaunchHandle {
-    /// Wait for every node to finish.
-    pub fn join(self) {
-        for (name, h) in self.threads {
-            if h.join().is_err() {
-                eprintln!("[launch] node {name} panicked");
-            }
-        }
+    /// Wait for every node to finish and return one [`NodeOutcome`]
+    /// per node, in launch order.
+    pub fn join(self) -> Vec<NodeOutcome> {
+        self.threads
+            .into_iter()
+            .map(|(name, kind, h)| {
+                let result = match h.join() {
+                    Ok(r) => r,
+                    // the body wrapper catches panics, so this only
+                    // fires if the thread died outside it
+                    Err(p) => {
+                        Err(anyhow!("node panicked: {}", panic_message(&*p)))
+                    }
+                };
+                NodeOutcome { name, kind, result }
+            })
+            .collect()
+    }
+
+    /// Join and collapse the outcomes into one result: `Ok` if every
+    /// node succeeded, otherwise an error naming the failed node(s)
+    /// with the first failure's message.
+    pub fn join_all(self) -> Result<()> {
+        outcomes_to_result(&self.join())
     }
 
     /// Signal shutdown and wait.
-    pub fn stop_and_join(self) {
+    pub fn stop_and_join(self) -> Vec<NodeOutcome> {
         self.stop.stop();
-        self.join();
+        self.join()
     }
+}
+
+/// The canonical error for failed program nodes, built from
+/// `(node name, rendered error)` pairs: names the node — or lists all
+/// of them — and carries the first failure's message. Every layer
+/// that reports node failures ([`outcomes_to_result`], the system
+/// supervisor) formats through this one function.
+///
+/// `failed` must be non-empty.
+pub fn node_failure_error(failed: &[(&str, &str)]) -> anyhow::Error {
+    let (node, err) = failed[0];
+    if failed.len() == 1 {
+        return anyhow!("node {node} failed: {err}");
+    }
+    let names: Vec<&str> = failed.iter().map(|(n, _)| *n).collect();
+    anyhow!(
+        "{} nodes failed ({}); first: node {node} failed: {err}",
+        failed.len(),
+        names.join(", ")
+    )
+}
+
+/// Collapse per-node outcomes into one result: `Ok` when every node
+/// succeeded, otherwise [`node_failure_error`] over the failures.
+pub fn outcomes_to_result(outcomes: &[NodeOutcome]) -> Result<()> {
+    let rendered: Vec<(String, String)> = outcomes
+        .iter()
+        .filter_map(|o| {
+            o.result
+                .as_ref()
+                .err()
+                .map(|e| (o.name.clone(), format!("{e:#}")))
+        })
+        .collect();
+    if rendered.is_empty() {
+        return Ok(());
+    }
+    let pairs: Vec<(&str, &str)> =
+        rendered.iter().map(|(n, e)| (n.as_str(), e.as_str())).collect();
+    Err(node_failure_error(&pairs))
 }
 
 /// Local multi-threaded launcher.
 pub struct LocalLauncher;
 
 impl LocalLauncher {
-    /// Launch every node of `program` on its own thread.
+    /// Launch every node of `program` on its own thread. A node that
+    /// returns `Err` or panics trips `stop`, so sibling nodes shut
+    /// down instead of running against a dead peer; the failure is
+    /// reported through [`LaunchHandle::join`].
     pub fn launch(program: Program, stop: StopSignal) -> LaunchHandle {
         let threads = program
             .nodes
             .into_iter()
             .map(|spec| {
                 let name = spec.name.clone();
+                let kind = spec.kind;
                 let body = spec.body;
+                let node_stop = stop.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("mava-{}", spec.name))
-                    .spawn(body)
+                    .spawn(move || -> Result<()> {
+                        let result = match catch_unwind(AssertUnwindSafe(body))
+                        {
+                            Ok(r) => r,
+                            Err(p) => Err(anyhow!(
+                                "node panicked: {}",
+                                panic_message(&*p)
+                            )),
+                        };
+                        if result.is_err() {
+                            node_stop.stop();
+                        }
+                        result
+                    })
                     .expect("spawn node thread");
-                (name, handle)
+                (name, kind, handle)
             })
             .collect();
         LaunchHandle { threads, stop }
@@ -152,12 +262,16 @@ mod tests {
             let c = counter.clone();
             p.add_node(format!("exec_{i}"), NodeKind::Executor, move || {
                 c.fetch_add(1, Ordering::SeqCst);
+                Ok(())
             });
         }
         assert_eq!(p.count(NodeKind::Executor), 4);
         let h = LocalLauncher::launch(p, StopSignal::new());
-        h.join();
+        let outcomes = h.join();
         assert_eq!(counter.load(Ordering::SeqCst), 4);
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|o| o.result.is_ok()));
+        assert!(outcomes_to_result(&outcomes).is_ok());
     }
 
     #[test]
@@ -172,19 +286,74 @@ mod tests {
                 spins2.fetch_add(1, Ordering::Relaxed);
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
+            Ok(())
         });
         let h = LocalLauncher::launch(p, stop.clone());
         std::thread::sleep(std::time::Duration::from_millis(20));
-        h.stop_and_join();
+        let outcomes = h.stop_and_join();
         assert!(spins.load(Ordering::Relaxed) > 0);
         assert!(stop.is_stopped());
+        assert!(outcomes[0].result.is_ok());
     }
 
     #[test]
     fn graph_introspection() {
         let mut p = Program::new();
-        p.add_node("replay", NodeKind::Replay, || {});
-        p.add_node("trainer", NodeKind::Trainer, || {});
+        p.add_node("replay", NodeKind::Replay, || Ok(()));
+        p.add_node("trainer", NodeKind::Trainer, || Ok(()));
         assert_eq!(p.node_names(), vec!["replay", "trainer"]);
+    }
+
+    /// Satellite: node errors are a typed channel. An erroring node's
+    /// failure (a) trips the StopSignal so siblings wind down and
+    /// (b) surfaces through join with the node's name — no stderr
+    /// scraping.
+    #[test]
+    fn node_error_trips_stop_and_names_the_node() {
+        let stop = StopSignal::new();
+        let mut p = Program::new();
+        let s = stop.clone();
+        p.add_node("worker", NodeKind::Executor, move || {
+            // a well-behaved sibling: spins until stopped
+            while !s.is_stopped() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            Ok(())
+        });
+        p.add_node("trainer", NodeKind::Trainer, || {
+            anyhow::bail!("replay table corrupt")
+        });
+        let h = LocalLauncher::launch(p, stop.clone());
+        let outcomes = h.join(); // terminates: the error stops the sibling
+        assert!(stop.is_stopped(), "error must trip the stop signal");
+        assert!(outcomes[0].result.is_ok());
+        let err = outcomes[1].result.as_ref().unwrap_err();
+        assert!(err.to_string().contains("replay table corrupt"));
+        let collapsed = outcomes_to_result(&outcomes).unwrap_err();
+        assert!(
+            collapsed.to_string().contains("node trainer failed"),
+            "must name the failed node: {collapsed}"
+        );
+        assert!(collapsed.to_string().contains("replay table corrupt"));
+    }
+
+    /// Panics flow through the same channel as errors.
+    #[test]
+    fn node_panic_is_caught_and_propagated() {
+        let stop = StopSignal::new();
+        let mut p = Program::new();
+        p.add_node("evaluator", NodeKind::Evaluator, || {
+            panic!("index out of bounds (simulated)")
+        });
+        let h = LocalLauncher::launch(p, stop.clone());
+        let outcomes = h.join();
+        assert!(stop.is_stopped(), "panic must trip the stop signal");
+        let err = outcomes[0].result.as_ref().unwrap_err();
+        assert!(
+            err.to_string().contains("index out of bounds"),
+            "panic message preserved: {err}"
+        );
+        let collapsed = outcomes_to_result(&outcomes).unwrap_err();
+        assert!(collapsed.to_string().contains("node evaluator failed"));
     }
 }

@@ -18,7 +18,7 @@ use anyhow::{bail, ensure, Context, Result};
 use mava::config::{RawConfig, TrainConfig};
 use mava::experiment::{self, ExperimentOpts};
 use mava::runtime::{Engine, Manifest};
-use mava::systems::{self, SystemKind};
+use mava::systems::{self, SystemBuilder, SystemKind, SystemSpec};
 
 fn usage() -> ! {
     eprintln!(
@@ -91,7 +91,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.num_envs_per_executor,
         cfg.max_env_steps
     );
-    let result = systems::train(&cfg, Some(Duration::from_secs(3600)))?;
+    let spec = SystemSpec::parse(&cfg.system)?;
+    let system = SystemBuilder::new(spec, &cfg).build()?;
+    println!("program graph: {}", system.node_names().join(" | "));
+    let result = system.run(Some(Duration::from_secs(3600)))?;
     println!(
         "done: {} env steps, {} train steps, {} episodes in {:.1}s",
         result.env_steps, result.train_steps, result.episodes, result.wall_s

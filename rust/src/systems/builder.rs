@@ -1,71 +1,53 @@
-//! System builder: wires executors, trainer, replay, parameter server and
-//! evaluator into a Launchpad-style program and runs it (paper Block 2).
+//! System construction: the fluent [`SystemBuilder`] that wires
+//! executors, trainer, replay, parameter server and evaluator into a
+//! Launchpad-style program and runs it (paper Block 2).
 //!
-//! Executor nodes run the vectorized hot path (DESIGN.md §6): each node
-//! steps `num_envs_per_executor` environment instances through a
-//! [`crate::env::VecEnv`], acts with one batched policy-artifact call
-//! per vector step, and feeds its own [`crate::replay::ShardedTable`]
-//! shard so executors never contend on a replay lock.
+//! Three layers (DESIGN.md §9):
+//! 1. [`SystemSpec`](crate::systems::SystemSpec) — *what* a system is
+//!    (artifact names, batch family, adder kind, exploration mode);
+//! 2. [`crate::systems::nodes`] — *how* each node runs (executor /
+//!    trainer / evaluator loops over an explicit
+//!    [`SystemHandles`] context, each a fallible `run()`);
+//! 3. [`SystemBuilder`] → [`System`] — *wiring*: which nodes exist,
+//!    how replay is sharded, and the per-node override points
+//!    (custom env factory, custom adder) for research forks.
+//!
+//! [`train`] is a thin wrapper over the builder; node errors are
+//! propagated through the launcher's typed outcome channel and turn
+//! into a `train()` error naming the failed node.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::core::StepType;
-use crate::env::wrappers::{Fingerprint, FingerprintWrapper};
-use crate::env::{make_env, ActionBuf, MultiAgentEnv, VecEnv, VecStepBuf};
+use crate::env::wrappers::Fingerprint;
+use crate::env::{MultiAgentEnv, VecEnv};
 use crate::eval::VecEvaluator;
-use crate::exploration::EpsilonSchedule;
-use crate::launch::{LocalLauncher, NodeKind, Program, StopSignal};
+use crate::launch::{
+    node_failure_error, LocalLauncher, NodeKind, Program, StopSignal,
+};
 use crate::metrics::{Counters, MovingStats};
 use crate::params::ParameterServer;
-use crate::replay::{
-    RateLimiter, Selector, SequenceAdder, ShardedTable, TransitionAdder,
-};
+use crate::replay::{RateLimiter, Selector, ShardedTable, Table};
 use crate::runtime::{Engine, Manifest};
-use crate::systems::{Executor, SystemKind, Trainer, VecExecutor};
+use crate::systems::nodes::{
+    Adder, AdderFactory, EnvFactory, EvalPoint, EvaluatorNode, ExecutorNode,
+    SystemHandles, TrainerNode,
+};
+use crate::systems::spec::env_for_preset;
+use crate::systems::{Executor, SystemSpec, VecExecutor};
 
-/// Per-instance adder slot for the vectorized executor loop: each
-/// environment instance accumulates its own episode independently.
-enum Adder {
-    Tr(TransitionAdder),
-    Sq(SequenceAdder),
-}
-
-impl Adder {
-    fn observe_first_row(&mut self, next: &VecStepBuf, row: usize) {
-        match self {
-            Adder::Tr(a) => a.observe_first_row(next, row),
-            Adder::Sq(a) => a.observe_first_row(next, row),
-        }
-    }
-
-    fn observe_row(
-        &mut self,
-        actions: &ActionBuf,
-        row: usize,
-        next: &VecStepBuf,
-    ) {
-        match self {
-            Adder::Tr(a) => a.observe_row(actions, row, next),
-            Adder::Sq(a) => a.observe_row(actions, row, next),
-        }
-    }
-}
-
-/// One evaluator measurement (a point on the paper's learning curves).
-#[derive(Clone, Copy, Debug)]
-pub struct EvalPoint {
-    /// Wall-clock seconds since the run started.
-    pub wall_s: f64,
-    /// Total environment steps across all executors at measurement time.
-    pub env_steps: u64,
-    /// Total trainer steps at measurement time.
-    pub train_steps: u64,
-    /// Mean greedy episode return over `eval_episodes`.
-    pub mean_return: f32,
+/// One node failure recorded by a system run: which node died and the
+/// rendered error chain.
+#[derive(Clone, Debug)]
+pub struct NodeFailure {
+    /// Name of the failed node (e.g. `executor_0`).
+    pub node: String,
+    /// The propagated error, rendered with its context chain.
+    pub error: String,
 }
 
 /// Outcome of a full distributed training run.
@@ -87,15 +69,19 @@ pub struct TrainResult {
     /// callers — the experiment harness in particular — can evaluate the
     /// trained policy without re-running the program graph.
     pub final_params: Vec<f32>,
+    /// Nodes that returned an error (or panicked) during the run, in
+    /// launch order. Empty on a clean run; [`System::run`] (and
+    /// therefore [`train`]) converts a non-empty list into an `Err`
+    /// naming the node.
+    pub node_failures: Vec<NodeFailure>,
 }
 
 impl TrainResult {
-    /// Best evaluator measurement of the run.
-    pub fn best_return(&self) -> f32 {
-        self.evals
-            .iter()
-            .map(|e| e.mean_return)
-            .fold(f32::NEG_INFINITY, f32::max)
+    /// Best evaluator measurement of the run, or `None` when no
+    /// evaluation ever completed (evaluator disabled, or the run was
+    /// shorter than one eval interval).
+    pub fn best_return(&self) -> Option<f32> {
+        self.evals.iter().map(|e| e.mean_return).reduce(f32::max)
     }
 
     /// First wall-clock time at which the evaluator reached `threshold`.
@@ -105,33 +91,10 @@ impl TrainResult {
             .find(|e| e.mean_return >= threshold)
             .map(|e| e.wall_s)
     }
-}
 
-/// Environment for an artifact preset (DESIGN.md §4). The `_fp` presets
-/// wrap the base env with the fingerprint stabilisation module.
-pub fn env_for_preset(
-    preset: &str,
-    seed: u64,
-    fingerprint: Option<Fingerprint>,
-) -> Result<Box<dyn MultiAgentEnv>> {
-    let base = match preset {
-        "matrix2" => "matrix",
-        "switch3" => "switch",
-        "smac3m" | "smac3m_fp" => "smac_lite",
-        "spread3" => "mpe_spread",
-        "speaker2" => "mpe_speaker_listener",
-        "walker3" => "multiwalker",
-        other => bail!("unknown preset {other:?}"),
-    };
-    let env = make_env(base, seed)?;
-    if preset.ends_with("_fp") {
-        let fp = fingerprint.unwrap_or_default();
-        // Box<dyn MultiAgentEnv> implements the trait (all SoA hooks
-        // forwarded), so the wrapper composes over it directly and the
-        // _fp preset stays on the allocation-free path
-        Ok(Box::new(FingerprintWrapper::new(env, fp)))
-    } else {
-        Ok(env)
+    /// Name of the first failed node, if any node failed.
+    pub fn failed_node(&self) -> Option<&str> {
+        self.node_failures.first().map(|f| f.node.as_str())
     }
 }
 
@@ -158,11 +121,11 @@ pub fn eval_policy_batch(
 }
 
 /// Build the vectorized greedy evaluator shared by the evaluator node
-/// and the experiment harness: parses `cfg.system`, picks the largest
-/// lowered policy batch that fits `cap` ([`eval_policy_batch`]),
-/// builds that many fingerprinted instances of `cfg.preset` (env `i`
-/// seeded `seed + 1 + i`) and pairs them with a
-/// [`VecExecutor`] holding `params`.
+/// and the experiment harness: resolves `cfg.system` into its
+/// [`SystemSpec`], picks the largest lowered policy batch that fits
+/// `cap` ([`eval_policy_batch`]), builds that many fingerprinted
+/// instances of `cfg.preset` (env `i` seeded `seed + 1 + i`) and pairs
+/// them with a [`VecExecutor`] holding `params`.
 pub fn make_vec_evaluator(
     engine: &mut Engine,
     cfg: &TrainConfig,
@@ -170,20 +133,33 @@ pub fn make_vec_evaluator(
     cap: usize,
     seed: u64,
 ) -> Result<VecEvaluator> {
-    let kind = SystemKind::parse(&cfg.system)?;
-    let policy_name = format!("{}_policy", cfg.artifact_prefix());
+    let preset = cfg.preset.clone();
+    let factory: EnvFactory =
+        Arc::new(move |s, fp| env_for_preset(&preset, s, fp));
+    make_vec_evaluator_with(engine, cfg, params, cap, seed, &factory)
+}
+
+/// [`make_vec_evaluator`] with an explicit [`EnvFactory`] — the hook
+/// the evaluator node uses so a builder-level custom environment also
+/// drives evaluation.
+pub fn make_vec_evaluator_with(
+    engine: &mut Engine,
+    cfg: &TrainConfig,
+    params: Vec<f32>,
+    cap: usize,
+    seed: u64,
+    env_factory: &EnvFactory,
+) -> Result<VecEvaluator> {
+    let spec = SystemSpec::parse(&cfg.system)?;
+    let prefix = spec.artifact_prefix(&cfg.preset, cfg.arch);
+    let policy_name = spec.policy_artifact(&prefix);
     let batch = eval_policy_batch(&engine.manifest, &policy_name, cap.max(1));
-    let artifact_name = if batch == 1 {
-        policy_name
-    } else {
-        format!("{policy_name}_b{batch}")
-    };
+    let artifact_name = spec.batched_policy_artifact(&prefix, batch);
     let artifact = engine.artifact(&artifact_name)?;
-    let executor = VecExecutor::new(kind, artifact, params, seed)?;
+    let executor = VecExecutor::new(spec.kind, artifact, params, seed)?;
     let mut instances = Vec::with_capacity(batch);
     for i in 0..batch {
-        instances.push(env_for_preset(
-            &cfg.preset,
+        instances.push(env_factory(
             seed.wrapping_add(1 + i as u64),
             Some(Fingerprint::new(0.0, 1.0)),
         )?);
@@ -208,371 +184,382 @@ pub fn eval_episode(
     Ok(ret)
 }
 
-/// Build and run the full distributed system described by `cfg`.
-/// `deadline` bounds wall-clock time (benches); `None` = until
-/// `max_env_steps`.
-pub fn train(cfg: &TrainConfig, deadline: Option<Duration>) -> Result<TrainResult> {
-    let kind = SystemKind::parse(&cfg.system)?;
-    let prefix = cfg.artifact_prefix();
-    let policy_name = format!("{prefix}_policy");
-    let train_name = format!("{prefix}_train");
-    // executors act through a batched policy artifact when vectorized;
-    // the evaluator picks its own batch (largest lowered batch that
-    // fits eval_episodes, see the evaluator node below)
-    let num_envs = cfg.num_envs_per_executor.max(1);
-    let exec_policy_name = if num_envs == 1 {
-        policy_name.clone()
-    } else {
-        format!("{prefix}_policy_b{num_envs}")
-    };
+/// Fluent constructor for a [`System`]: start from a
+/// [`SystemSpec`] + [`TrainConfig`], optionally override the node
+/// graph (executor count, evaluator presence) and the per-node
+/// factories, then [`SystemBuilder::build`].
+///
+/// ```no_run
+/// # use mava::config::TrainConfig;
+/// # use mava::systems::{SystemBuilder, SystemSpec};
+/// # fn main() -> anyhow::Result<()> {
+/// let cfg = TrainConfig::default();
+/// let spec = SystemSpec::parse("vdn")?;
+/// let result = SystemBuilder::new(spec, &cfg)
+///     .executors(4)
+///     .build()?
+///     .run(None)?;
+/// # Ok(()) }
+/// ```
+pub struct SystemBuilder {
+    spec: &'static SystemSpec,
+    cfg: TrainConfig,
+    evaluator: bool,
+    env_factory: Option<EnvFactory>,
+    adder_factory: Option<AdderFactory>,
+}
 
-    // --- initial parameters from the AOT init blobs ---
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    // fail fast on an un-lowered env batch: executor threads could only
-    // surface this after launch, leaving the trainer blocked on an
-    // empty replay table until the deadline
-    if manifest.get(&exec_policy_name).is_err() {
-        let mut batches: Vec<usize> = manifest
-            .artifacts
-            .keys()
-            .filter_map(|n| {
-                n.strip_prefix(&format!("{policy_name}_b"))
-                    .and_then(|b| b.parse().ok())
-            })
-            .collect();
-        batches.push(1);
-        batches.sort_unstable();
-        bail!(
-            "no policy artifact {exec_policy_name:?} for \
-             num_envs_per_executor={num_envs}; lowered batches for \
-             {policy_name:?}: {batches:?} (extend POLICY_BATCHES in \
-             python/compile/model.py and re-run `make artifacts`)"
-        );
-    }
-    let train_spec = manifest.get(&train_name)?.clone();
-    let params0 = manifest.read_init(&train_spec, "params0")?;
-    let opt0 = manifest.read_init(&train_spec, "opt0")?;
-    let seq_len = train_spec.meta_usize("seq_len")?;
-    let gamma = train_spec.meta_f32("gamma")?;
-    let batch = train_spec.meta_usize("batch")?;
-
-    // --- shared services (the "nodes" executors/trainer talk to) ---
-    // one replay shard per executor: the insert hot path never crosses
-    // executor threads, the trainer round-robins the shards
-    let table = Arc::new(ShardedTable::new(
-        cfg.num_executors.max(1),
-        cfg.replay_size,
-        Selector::Uniform,
-        RateLimiter::sample_to_insert(
-            cfg.samples_per_insert / batch as f64,
-            cfg.min_replay,
-        ),
-        cfg.seed ^ 0x7ab1e,
-    ));
-    let server = Arc::new(ParameterServer::new(params0.clone()));
-    let counters = Arc::new(Counters::default());
-    let stop = StopSignal::new();
-    let evals = Arc::new(Mutex::new(Vec::<EvalPoint>::new()));
-    let train_returns = Arc::new(Mutex::new(MovingStats::new(64)));
-    let fingerprint = Fingerprint::new(cfg.eps_start, 0.0);
-    let started = Instant::now();
-
-    let mut program = Program::new();
-
-    // --- trainer node (device-resident + prefetched, DESIGN.md §8) ---
-    {
-        let cfg = cfg.clone();
-        let table = table.clone();
-        let server = server.clone();
-        let counters = counters.clone();
-        let stop = stop.clone();
-        let train_name = train_name.clone();
-        let params0 = params0.clone();
-        program.add_node("trainer", NodeKind::Trainer, move || {
-            let run = || -> Result<()> {
-                let mut engine = Engine::load(&cfg.artifacts_dir)?;
-                let artifact = engine.artifact(&train_name)?;
-                let mut trainer = Trainer::new(
-                    kind.family(),
-                    artifact,
-                    params0,
-                    opt0,
-                    cfg.lr,
-                    cfg.tau,
-                    cfg.seed ^ 0x77aa,
-                )?;
-                trainer.set_publish_interval(cfg.publish_interval);
-                trainer.init_target_from_params()?;
-                server.push(trainer.params());
-                // sample+assemble runs on a prefetch thread; only plain
-                // HostTensors cross the channel (no PJRT handle leaves
-                // this thread — the §2 engine-per-thread rule holds)
-                let prefetch = trainer.spawn_prefetcher(table.clone(), 2);
-                while !stop.is_stopped() {
-                    // Ok(None) once the table closed (shutdown);
-                    // Err if assembly failed on the prefetch thread
-                    let Some(batch) = prefetch.next_batch()? else {
-                        break;
-                    };
-                    trainer.step_batch(&batch)?;
-                    prefetch.recycle(batch);
-                    counters.add_train_step();
-                    trainer.maybe_publish(&server)?;
-                    if cfg.max_train_steps > 0
-                        && trainer.stats.steps >= cfg.max_train_steps
-                    {
-                        break;
-                    }
-                }
-                // the publish cadence may be mid-window at shutdown:
-                // flush the final parameters unconditionally
-                trainer.publish(&server)?;
-                Ok(())
-            };
-            if let Err(e) = run() {
-                eprintln!("[trainer] error: {e:#}");
-            }
-        });
-    }
-
-    // --- executor nodes (vectorized hot path, DESIGN.md §6) ---
-    for worker in 0..cfg.num_executors {
-        let cfg = cfg.clone();
-        let shard = table.shard(worker);
-        let server = server.clone();
-        let counters = counters.clone();
-        let stop = stop.clone();
-        let exec_policy_name = exec_policy_name.clone();
-        let params0 = params0.clone();
-        let train_returns = train_returns.clone();
-        let fingerprint = fingerprint.clone();
-        program.add_node(
-            format!("executor_{worker}"),
-            NodeKind::Executor,
-            move || {
-                let run = || -> Result<()> {
-                    let mut engine = Engine::load(&cfg.artifacts_dir)?;
-                    let artifact = engine
-                        .artifact(&exec_policy_name)
-                        .with_context(|| {
-                            format!(
-                                "policy artifact {exec_policy_name:?} \
-                                 unavailable — num_envs_per_executor \
-                                 must match a lowered policy batch; \
-                                 regenerate with `make artifacts`"
-                            )
-                        })?;
-                    let mut executor = VecExecutor::new(
-                        kind,
-                        artifact,
-                        params0,
-                        cfg.seed + 1000 + worker as u64,
-                    )?;
-                    let mut instances = Vec::with_capacity(num_envs);
-                    for i in 0..num_envs {
-                        instances.push(env_for_preset(
-                            &cfg.preset,
-                            cfg.seed + (worker * num_envs + i) as u64,
-                            Some(fingerprint.clone()),
-                        )?);
-                    }
-                    let mut venv = VecEnv::new(instances)?;
-                    let schedule = EpsilonSchedule::new(
-                        cfg.eps_start,
-                        cfg.eps_end,
-                        cfg.eps_decay_steps,
-                    );
-                    // one adder per instance: episodes accumulate
-                    // independently across the batch
-                    let use_seq = kind.sequences();
-                    let mut adders: Vec<Adder> = (0..num_envs)
-                        .map(|_| {
-                            if use_seq {
-                                Adder::Sq(SequenceAdder::new(
-                                    shard.clone(),
-                                    seq_len.max(1),
-                                    seq_len.max(1),
-                                ))
-                            } else {
-                                Adder::Tr(TransitionAdder::new(
-                                    shard.clone(),
-                                    cfg.n_step,
-                                    gamma,
-                                ))
-                            }
-                        })
-                        .collect();
-                    let mut ep_returns = vec![0.0f32; num_envs];
-                    // SoA double buffer: `cur` feeds the policy call,
-                    // the envs write the next vector step into `next`,
-                    // then the buffers swap — allocated once here,
-                    // refilled in place forever after (DESIGN.md §6)
-                    let mut cur = venv.make_buf();
-                    let mut next = venv.make_buf();
-                    let mut abuf = venv.make_action_buf();
-                    let mut params_scratch = Vec::new();
-                    venv.reset_into(&mut cur);
-                    for (i, adder) in adders.iter_mut().enumerate() {
-                        adder.observe_first_row(&cur, i);
-                    }
-                    while !stop.is_stopped()
-                        && counters.env_steps() < cfg.max_env_steps
-                    {
-                        let eps = schedule.value(counters.env_steps());
-                        fingerprint.set(
-                            eps,
-                            (counters.env_steps() as f32
-                                / cfg.max_env_steps as f32)
-                                .min(1.0),
-                        );
-                        // ONE batched policy call for all B instances;
-                        // params + recurrent carry stay device-resident
-                        executor.select_actions_into(
-                            &cur,
-                            eps,
-                            cfg.noise_sigma,
-                            &mut abuf,
-                        )?;
-                        venv.step_into(&abuf, &mut next);
-                        let mut episode_ended = false;
-                        for (i, adder) in adders.iter_mut().enumerate() {
-                            if next.step_type(i) == StepType::First {
-                                // this slot auto-reset: new episode
-                                adder.observe_first_row(&next, i);
-                                executor.reset_instance(i);
-                                ep_returns[i] = 0.0;
-                                continue;
-                            }
-                            adder.observe_row(&abuf, i, &next);
-                            counters.add_env_steps(1);
-                            ep_returns[i] += next.mean_reward(i);
-                            if next.is_last(i) {
-                                counters.add_episode();
-                                train_returns
-                                    .lock()
-                                    .unwrap()
-                                    .push(ep_returns[i]);
-                                episode_ended = true;
-                            }
-                        }
-                        if episode_ended {
-                            // cheap version check at episode boundaries
-                            if let Some(v) = server.sync(
-                                executor.params_version,
-                                &mut params_scratch,
-                            ) {
-                                executor.set_params(v, &params_scratch);
-                            }
-                        }
-                        std::mem::swap(&mut cur, &mut next);
-                    }
-                    Ok(())
-                };
-                if let Err(e) = run() {
-                    eprintln!("[executor_{worker}] error: {e:#}");
-                }
-            },
-        );
-    }
-
-    // --- evaluator node (vectorized, eval/vec_eval.rs) ---
-    // Snapshots published params every `eval_every_steps` env steps and
-    // runs greedy episodes through the largest lowered policy batch that
-    // fits the episode budget — one artifact call advances B episodes,
-    // and the node never takes a lock the executors or trainer hold, so
-    // evaluation cannot stall acting or training.
-    {
-        let cfg = cfg.clone();
-        let server = server.clone();
-        let counters = counters.clone();
-        let stop = stop.clone();
-        let params0 = params0.clone();
-        let evals = evals.clone();
-        program.add_node("evaluator", NodeKind::Evaluator, move || {
-            let run = || -> Result<()> {
-                let mut engine = Engine::load(&cfg.artifacts_dir)?;
-                let mut evaluator = make_vec_evaluator(
-                    &mut engine,
-                    &cfg,
-                    params0,
-                    cfg.eval_episodes,
-                    cfg.seed ^ 0xe7a1,
-                )?;
-                let mut next_eval_at = 0u64;
-                while !stop.is_stopped() {
-                    let steps = counters.env_steps();
-                    if steps < next_eval_at {
-                        std::thread::sleep(Duration::from_millis(10));
-                        continue;
-                    }
-                    next_eval_at = steps + cfg.eval_every_steps;
-                    let mut buf = Vec::new();
-                    if let Some(v) =
-                        server.sync(evaluator.params_version(), &mut buf)
-                    {
-                        evaluator.set_params(v, &buf);
-                    }
-                    let returns = evaluator.evaluate_until(
-                        cfg.eval_episodes,
-                        || stop.is_stopped(),
-                    )?;
-                    if returns.is_empty() {
-                        continue; // stopped mid-wave or eval_episodes == 0
-                    }
-                    let point = EvalPoint {
-                        wall_s: started.elapsed().as_secs_f64(),
-                        env_steps: counters.env_steps(),
-                        train_steps: counters.train_steps(),
-                        mean_return: crate::eval::stats::mean(&returns)
-                            as f32,
-                    };
-                    evals.lock().unwrap().push(point);
-                }
-                Ok(())
-            };
-            if let Err(e) = run() {
-                eprintln!("[evaluator] error: {e:#}");
-            }
-        });
-    }
-
-    // --- launch and supervise ---
-    let handle = LocalLauncher::launch(program, stop.clone());
-    loop {
-        std::thread::sleep(Duration::from_millis(20));
-        if counters.env_steps() >= cfg.max_env_steps {
-            break;
+impl SystemBuilder {
+    /// Start building `spec`'s system under `cfg`. The spec is
+    /// authoritative: `cfg.system` is normalised to `spec.name`, so a
+    /// stale config string cannot select different artifacts than the
+    /// spec the caller chose.
+    pub fn new(spec: &'static SystemSpec, cfg: &TrainConfig) -> SystemBuilder {
+        let mut cfg = cfg.clone();
+        cfg.system = spec.name.to_string();
+        cfg.num_executors = cfg.num_executors.max(1);
+        SystemBuilder {
+            spec,
+            cfg,
+            evaluator: true,
+            env_factory: None,
+            adder_factory: None,
         }
-        if let Some(d) = deadline {
-            if started.elapsed() >= d {
+    }
+
+    /// Set the number of executor nodes (default: `cfg.num_executors`).
+    pub fn executors(mut self, n: usize) -> SystemBuilder {
+        self.cfg.num_executors = n;
+        self
+    }
+
+    /// Set the environment instances each executor steps per batched
+    /// policy call (default: `cfg.num_envs_per_executor`). Must match
+    /// a lowered `_b{B}` policy variant.
+    pub fn envs_per_executor(mut self, b: usize) -> SystemBuilder {
+        self.cfg.num_envs_per_executor = b;
+        self
+    }
+
+    /// Include (default) or drop the evaluator node. Headless runs
+    /// produce no [`EvalPoint`]s — `best_return()` is then `None`.
+    pub fn evaluator(mut self, on: bool) -> SystemBuilder {
+        self.evaluator = on;
+        self
+    }
+
+    /// Override how environment instances are built (research fork
+    /// hook): `(seed, fingerprint)` → env. Applies to executor *and*
+    /// evaluator nodes. The env must match the preset's lowered
+    /// artifact contract (obs/action dims — DESIGN.md §4).
+    pub fn env_factory(
+        mut self,
+        f: impl Fn(u64, Option<Fingerprint>) -> Result<Box<dyn MultiAgentEnv>>
+            + Send
+            + Sync
+            + 'static,
+    ) -> SystemBuilder {
+        self.env_factory = Some(Arc::new(f));
+        self
+    }
+
+    /// Override how per-instance adders are built (research fork
+    /// hook): replay shard → [`Adder`]. Default:
+    /// [`SystemSpec::make_adder`] with the run's `n_step`/`gamma` and
+    /// the artifact's `seq_len`.
+    pub fn adder_factory(
+        mut self,
+        f: impl Fn(Arc<Table>) -> Adder + Send + Sync + 'static,
+    ) -> SystemBuilder {
+        self.adder_factory = Some(Arc::new(f));
+        self
+    }
+
+    /// Validate the configuration and produce a runnable [`System`].
+    ///
+    /// Hermetic: the artifact directory is only touched by
+    /// [`System::run`], so a built system's graph shape can be
+    /// inspected (and tested) without lowered artifacts.
+    pub fn build(self) -> Result<System> {
+        ensure!(
+            self.cfg.num_executors >= 1,
+            "a system needs at least one executor node"
+        );
+        self.cfg.validate()?;
+        let env_factory = match self.env_factory {
+            Some(f) => f,
+            None => {
+                // fail at build, not on a node thread, for a bogus
+                // preset: constructing one throwaway env validates it
+                env_for_preset(&self.cfg.preset, self.cfg.seed, None)?;
+                let preset = self.cfg.preset.clone();
+                Arc::new(move |s, fp| env_for_preset(&preset, s, fp))
+                    as EnvFactory
+            }
+        };
+        Ok(System {
+            spec: self.spec,
+            cfg: self.cfg,
+            evaluator: self.evaluator,
+            env_factory,
+            adder_factory: self.adder_factory,
+        })
+    }
+}
+
+/// A built (but not yet launched) system: the node graph is fixed and
+/// inspectable; [`System::run`] loads artifacts, launches every node
+/// on its own thread and supervises the run.
+pub struct System {
+    spec: &'static SystemSpec,
+    cfg: TrainConfig,
+    evaluator: bool,
+    env_factory: EnvFactory,
+    adder_factory: Option<AdderFactory>,
+}
+
+impl System {
+    /// The system's spec.
+    pub fn spec(&self) -> &'static SystemSpec {
+        self.spec
+    }
+
+    /// The (normalised) configuration the system runs under.
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Number of replay shards — one per executor, so the insert hot
+    /// path never crosses executor threads (DESIGN.md §5).
+    pub fn num_replay_shards(&self) -> usize {
+        self.cfg.num_executors
+    }
+
+    /// The node graph, in launch order: `(name, kind)` per node.
+    pub fn nodes(&self) -> Vec<(String, NodeKind)> {
+        let mut plan =
+            vec![("trainer".to_string(), NodeKind::Trainer)];
+        for worker in 0..self.cfg.num_executors {
+            plan.push((format!("executor_{worker}"), NodeKind::Executor));
+        }
+        if self.evaluator {
+            plan.push(("evaluator".to_string(), NodeKind::Evaluator));
+        }
+        plan
+    }
+
+    /// Names of every node, in launch order.
+    pub fn node_names(&self) -> Vec<String> {
+        self.nodes().into_iter().map(|(n, _)| n).collect()
+    }
+
+    /// Number of nodes of the given kind.
+    pub fn node_count(&self, kind: NodeKind) -> usize {
+        self.nodes().iter().filter(|(_, k)| *k == kind).count()
+    }
+
+    /// Launch and supervise the system. `deadline` bounds wall-clock
+    /// time (benches); `None` = until `max_env_steps`.
+    ///
+    /// Returns `Err` — naming the node — if any node failed or
+    /// panicked; use [`System::run_collect`] to get the partial
+    /// [`TrainResult`] with the failures recorded instead.
+    pub fn run(&self, deadline: Option<Duration>) -> Result<TrainResult> {
+        let result = self.run_collect(deadline)?;
+        if result.node_failures.is_empty() {
+            return Ok(result);
+        }
+        let pairs: Vec<(&str, &str)> = result
+            .node_failures
+            .iter()
+            .map(|f| (f.node.as_str(), f.error.as_str()))
+            .collect();
+        Err(node_failure_error(&pairs))
+    }
+
+    /// Like [`System::run`], but node failures are *recorded* in
+    /// [`TrainResult::node_failures`] instead of becoming an `Err`
+    /// (the launcher's error channel, exposed raw). `Err` is reserved
+    /// for setup problems: missing artifacts, un-lowered batches.
+    pub fn run_collect(
+        &self,
+        deadline: Option<Duration>,
+    ) -> Result<TrainResult> {
+        let cfg = &self.cfg;
+        let spec = self.spec;
+        let prefix = spec.artifact_prefix(&cfg.preset, cfg.arch);
+        let policy_name = spec.policy_artifact(&prefix);
+        let train_name = spec.train_artifact(&prefix);
+        // executors act through a batched policy artifact when
+        // vectorized; the evaluator picks its own batch (largest
+        // lowered batch that fits eval_episodes)
+        let num_envs = cfg.num_envs_per_executor.max(1);
+        let exec_policy_name =
+            spec.batched_policy_artifact(&prefix, num_envs);
+
+        // --- initial parameters from the AOT init blobs ---
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        // fail fast on an un-lowered env batch: executor threads could
+        // only surface this after launch, leaving the trainer blocked
+        // on an empty replay table until the deadline
+        if manifest.get(&exec_policy_name).is_err() {
+            let mut batches: Vec<usize> = manifest
+                .artifacts
+                .keys()
+                .filter_map(|n| {
+                    n.strip_prefix(&format!("{policy_name}_b"))
+                        .and_then(|b| b.parse().ok())
+                })
+                .collect();
+            batches.push(1);
+            batches.sort_unstable();
+            bail!(
+                "no policy artifact {exec_policy_name:?} for \
+                 num_envs_per_executor={num_envs}; lowered batches for \
+                 {policy_name:?}: {batches:?} (extend POLICY_BATCHES in \
+                 python/compile/model.py and re-run `make artifacts`)"
+            );
+        }
+        let train_art = manifest.get(&train_name)?.clone();
+        let params0 = manifest.read_init(&train_art, "params0")?;
+        let opt0 = manifest.read_init(&train_art, "opt0")?;
+        let seq_len = train_art.meta_usize("seq_len")?;
+        let gamma = train_art.meta_f32("gamma")?;
+        let batch = train_art.meta_usize("batch")?;
+
+        // --- shared services (the handles every node runs against) ---
+        // one replay shard per executor: the insert hot path never
+        // crosses executor threads, the trainer round-robins the shards
+        let handles = SystemHandles {
+            table: Arc::new(ShardedTable::new(
+                self.num_replay_shards(),
+                cfg.replay_size,
+                Selector::Uniform,
+                RateLimiter::sample_to_insert(
+                    cfg.samples_per_insert / batch as f64,
+                    cfg.min_replay,
+                ),
+                cfg.seed ^ 0x7ab1e,
+            )),
+            server: Arc::new(ParameterServer::new(params0.clone())),
+            counters: Arc::new(Counters::default()),
+            stop: StopSignal::new(),
+            evals: Arc::new(Mutex::new(Vec::new())),
+            train_returns: Arc::new(Mutex::new(MovingStats::new(64))),
+            fingerprint: Fingerprint::new(cfg.eps_start, 0.0),
+            started: Instant::now(),
+        };
+        let adder_factory = self.adder_factory.clone().unwrap_or_else(|| {
+            let n_step = cfg.n_step;
+            Arc::new(move |shard: Arc<Table>| {
+                spec.make_adder(shard, n_step, gamma, seq_len)
+            }) as AdderFactory
+        });
+
+        // --- assemble the program graph (same order as `nodes()`) ---
+        let mut program = Program::new();
+        {
+            let mut node = TrainerNode {
+                spec,
+                cfg: cfg.clone(),
+                handles: handles.clone(),
+                train_name,
+                params0: params0.clone(),
+                opt0,
+            };
+            program.add_node("trainer", NodeKind::Trainer, move || {
+                node.run()
+            });
+        }
+        for worker in 0..cfg.num_executors {
+            let mut node = ExecutorNode {
+                worker,
+                spec,
+                cfg: cfg.clone(),
+                handles: handles.clone(),
+                shard: handles.table.shard(worker),
+                policy_name: exec_policy_name.clone(),
+                params0: params0.clone(),
+                env_factory: self.env_factory.clone(),
+                adder_factory: adder_factory.clone(),
+            };
+            program.add_node(
+                format!("executor_{worker}"),
+                NodeKind::Executor,
+                move || node.run(),
+            );
+        }
+        if self.evaluator {
+            let mut node = EvaluatorNode {
+                cfg: cfg.clone(),
+                handles: handles.clone(),
+                params0,
+                env_factory: self.env_factory.clone(),
+            };
+            program.add_node("evaluator", NodeKind::Evaluator, move || {
+                node.run()
+            });
+        }
+
+        // --- launch and supervise ---
+        let stop = handles.stop.clone();
+        let handle = LocalLauncher::launch(program, stop.clone());
+        loop {
+            std::thread::sleep(Duration::from_millis(20));
+            if handles.counters.env_steps() >= cfg.max_env_steps {
+                break;
+            }
+            if let Some(d) = deadline {
+                if handles.started.elapsed() >= d {
+                    break;
+                }
+            }
+            // also set by any node that errored: stop supervising a
+            // program whose trainer (or executor) is already dead
+            if stop.is_stopped() {
                 break;
             }
         }
-        if stop.is_stopped() {
-            break;
-        }
-    }
-    stop.stop();
-    table.close();
-    handle.join();
+        stop.stop();
+        handles.table.close();
+        let outcomes = handle.join();
 
-    let evals = Arc::try_unwrap(evals)
-        .map_err(|_| anyhow::anyhow!("eval history still shared"))?
-        .into_inner()
-        .unwrap();
-    // the trainer flushed its final publish before joining, so this is
-    // the trained policy (params0 if the trainer never stepped)
-    let (_, final_params) = server.get();
-    let result = TrainResult {
-        evals,
-        env_steps: counters.env_steps(),
-        train_steps: counters.train_steps(),
-        episodes: counters.episodes(),
-        wall_s: started.elapsed().as_secs_f64(),
-        train_return: train_returns.lock().unwrap().mean(),
-        final_params,
-    };
-    Ok(result)
+        let node_failures: Vec<NodeFailure> = outcomes
+            .iter()
+            .filter_map(|o| {
+                o.result.as_ref().err().map(|e| NodeFailure {
+                    node: o.name.clone(),
+                    error: format!("{e:#}"),
+                })
+            })
+            .collect();
+        let evals = std::mem::take(&mut *handles.evals.lock().unwrap());
+        // the trainer flushed its final publish before joining, so this
+        // is the trained policy (params0 if the trainer never stepped)
+        let (_, final_params) = handles.server.get();
+        Ok(TrainResult {
+            evals,
+            env_steps: handles.counters.env_steps(),
+            train_steps: handles.counters.train_steps(),
+            episodes: handles.counters.episodes(),
+            wall_s: handles.started.elapsed().as_secs_f64(),
+            train_return: handles.train_returns.lock().unwrap().mean(),
+            final_params,
+            node_failures,
+        })
+    }
+}
+
+/// Build and run the full distributed system described by `cfg` — a
+/// thin wrapper over [`SystemBuilder`]. `deadline` bounds wall-clock
+/// time (benches); `None` = until `max_env_steps`. Returns `Err`
+/// naming the node if any node of the program failed.
+pub fn train(
+    cfg: &TrainConfig,
+    deadline: Option<Duration>,
+) -> Result<TrainResult> {
+    let spec = SystemSpec::parse(&cfg.system)?;
+    SystemBuilder::new(spec, cfg).build()?.run(deadline)
 }
 
 /// Convenience wrapper used by tests and examples: errors if the
@@ -581,4 +568,100 @@ pub fn check_artifacts(cfg: &TrainConfig) -> Result<()> {
     Manifest::load(&cfg.artifacts_dir)
         .context("artifacts missing — run `make artifacts`")?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite: the graph shape of a built system is inspectable
+    /// without an artifacts directory — node count per kind, launch
+    /// order, and the shard wiring (one replay shard per executor).
+    #[test]
+    fn builder_graph_shape_is_hermetic() {
+        let cfg = TrainConfig::default();
+        let spec = SystemSpec::parse("vdn").unwrap();
+        let system =
+            SystemBuilder::new(spec, &cfg).executors(3).build().unwrap();
+        assert_eq!(
+            system.node_names(),
+            ["trainer", "executor_0", "executor_1", "executor_2", "evaluator"]
+        );
+        assert_eq!(system.node_count(NodeKind::Trainer), 1);
+        assert_eq!(system.node_count(NodeKind::Executor), 3);
+        assert_eq!(system.node_count(NodeKind::Evaluator), 1);
+        assert_eq!(system.num_replay_shards(), 3);
+
+        let headless = SystemBuilder::new(spec, &cfg)
+            .executors(1)
+            .evaluator(false)
+            .build()
+            .unwrap();
+        assert_eq!(headless.node_names(), ["trainer", "executor_0"]);
+        assert_eq!(headless.node_count(NodeKind::Evaluator), 0);
+    }
+
+    /// The spec passed to the builder is authoritative over the config
+    /// string; degenerate graphs are rejected at build.
+    #[test]
+    fn builder_normalises_system_and_validates() {
+        let mut cfg = TrainConfig::default();
+        cfg.system = "madqn".into();
+        let spec = SystemSpec::parse("qmix").unwrap();
+        let system = SystemBuilder::new(spec, &cfg).build().unwrap();
+        assert_eq!(system.config().system, "qmix");
+        assert_eq!(system.spec().kind, crate::systems::SystemKind::Qmix);
+
+        assert!(
+            SystemBuilder::new(spec, &cfg).executors(0).build().is_err(),
+            "zero executors is a dead graph"
+        );
+        cfg.preset = "not_a_preset".into();
+        let err = SystemBuilder::new(spec, &cfg).build().unwrap_err();
+        assert!(
+            err.to_string().contains("unknown preset"),
+            "bad preset must fail at build, not on a node thread: {err}"
+        );
+    }
+
+    /// A custom env factory skips the preset validation (the fork owns
+    /// its environment) and is kept for both executors and evaluator.
+    #[test]
+    fn builder_accepts_custom_env_factory_with_any_preset() {
+        let mut cfg = TrainConfig::default();
+        cfg.preset = "my_research_env".into();
+        let spec = SystemSpec::parse("madqn").unwrap();
+        let system = SystemBuilder::new(spec, &cfg)
+            .env_factory(|seed, _fp| {
+                crate::systems::env_for_preset("matrix2", seed, None)
+            })
+            .build()
+            .unwrap();
+        assert_eq!(system.node_count(NodeKind::Executor), 1);
+    }
+
+    /// `best_return` distinguishes "never evaluated" from any real
+    /// measurement (the n=0 mirror of the PR-3 ±INF fix).
+    #[test]
+    fn best_return_is_none_without_evals() {
+        let mut r = TrainResult::default();
+        assert_eq!(r.best_return(), None);
+        assert_eq!(r.failed_node(), None);
+        r.evals.push(EvalPoint {
+            wall_s: 1.0,
+            env_steps: 10,
+            train_steps: 1,
+            mean_return: -3.5,
+        });
+        assert_eq!(r.best_return(), Some(-3.5));
+        r.evals.push(EvalPoint {
+            wall_s: 2.0,
+            env_steps: 20,
+            train_steps: 2,
+            mean_return: 1.25,
+        });
+        assert_eq!(r.best_return(), Some(1.25));
+        assert_eq!(r.time_to(1.0), Some(2.0));
+        assert_eq!(r.time_to(9.0), None);
+    }
 }

@@ -32,7 +32,7 @@ use crate::env::{ActionBuf, VecStep, VecStepBuf};
 use crate::exploration::{epsilon_greedy, epsilon_greedy_masked, gaussian_noise};
 use crate::rng::Rng;
 use crate::runtime::{Arg, Artifact};
-use crate::systems::SystemKind;
+use crate::systems::{Family, SystemKind};
 
 /// Recurrent carry between environment steps (`B = 1` for [`Executor`],
 /// `B = num_envs_per_executor` for [`VecExecutor`]).
@@ -231,15 +231,17 @@ impl VecExecutor {
 
     /// Zero the recurrent carry of every instance (drops any
     /// device-resident carry; the zeroed host mirror feeds the next
-    /// call).
+    /// call). The carry shape is dictated by the system's data-plumbing
+    /// [`Family`] (via its [`crate::systems::SystemSpec`]), not by
+    /// per-kind special cases.
     pub fn reset_state(&mut self) {
         self.dev_state = None;
         self.pending_resets.clear();
-        self.state = match self.kind {
-            SystemKind::MadqnRec => ActorState::Hidden(HostTensor::zeros_f32(
+        self.state = match self.kind.family() {
+            Family::DqnRec => ActorState::Hidden(HostTensor::zeros_f32(
                 vec![self.batch, self.n_agents, self.hidden],
             )),
-            SystemKind::Dial => ActorState::HiddenInbox(
+            Family::Dial => ActorState::HiddenInbox(
                 HostTensor::zeros_f32(vec![
                     self.batch,
                     self.n_agents,

@@ -20,27 +20,44 @@
 //! buffers across steps, a [`BatchAssembler`] writes sampled items
 //! into a reusable [`BatchArena`], and a [`BatchPrefetcher`] thread
 //! assembles batch `k+1` while step `k` executes.
+//!
+//! System *construction* is layered (DESIGN.md §9): a declarative
+//! [`SystemSpec`] (what a system is), the [`mod@nodes`] module's
+//! executor/trainer/evaluator node structs (how each runs, over an
+//! explicit [`SystemHandles`] context), and the fluent
+//! [`SystemBuilder`] that wires them into a launchable [`System`].
+//! [`train`] is a thin wrapper over the builder.
 
 #![warn(missing_docs)]
 
 mod assemble;
 mod builder;
 mod executor;
+pub mod nodes;
 mod prefetch;
+mod spec;
 mod trainer;
 
 pub use assemble::{BatchArena, BatchAssembler};
 pub use builder::{
-    check_artifacts, env_for_preset, eval_episode, eval_policy_batch,
-    make_vec_evaluator, train, EvalPoint, TrainResult,
+    check_artifacts, eval_episode, eval_policy_batch, make_vec_evaluator,
+    make_vec_evaluator_with, train, NodeFailure, System, SystemBuilder,
+    TrainResult,
 };
 pub use executor::{
     select_discrete_row, ActorState, Executor, VecExecutor,
 };
+pub use nodes::{
+    Adder, AdderFactory, EnvFactory, EvalPoint, EvaluatorNode,
+    ExecutorNode, SystemHandles, TrainerNode,
+};
 pub use prefetch::BatchPrefetcher;
+pub use spec::{
+    env_for_preset, AdderKind, ExplorationMode, SystemSpec, SPECS,
+};
 pub use trainer::{Trainer, TrainerStats};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// Which baseline system is running (selects artifacts + data plumbing).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,44 +95,36 @@ pub enum Family {
 }
 
 impl SystemKind {
-    /// Parse a config `system` string (e.g. `"vdn"`).
+    /// Parse a config `system` string (e.g. `"vdn"`) through the
+    /// [`SystemSpec`] table.
     pub fn parse(s: &str) -> Result<SystemKind> {
-        Ok(match s {
-            "madqn" => SystemKind::Madqn,
-            "madqn_rec" => SystemKind::MadqnRec,
-            "dial" => SystemKind::Dial,
-            "vdn" => SystemKind::Vdn,
-            "qmix" => SystemKind::Qmix,
-            "maddpg" => SystemKind::Maddpg,
-            "mad4pg" => SystemKind::Mad4pg,
-            other => bail!("unknown system {other:?}"),
-        })
+        Ok(SystemSpec::parse(s)?.kind)
+    }
+
+    /// This kind's declarative spec — the single source of truth for
+    /// everything below.
+    pub fn spec(&self) -> &'static SystemSpec {
+        SystemSpec::of(*self)
     }
 
     /// The data-plumbing family this system trains with.
     pub fn family(&self) -> Family {
-        match self {
-            SystemKind::Madqn => Family::DqnFf,
-            SystemKind::MadqnRec => Family::DqnRec,
-            SystemKind::Dial => Family::Dial,
-            SystemKind::Vdn | SystemKind::Qmix => Family::ValueDecomp,
-            SystemKind::Maddpg | SystemKind::Mad4pg => Family::Ddpg,
-        }
+        self.spec().family
     }
 
     /// Whether the action space is discrete.
     pub fn discrete(&self) -> bool {
-        !matches!(self, SystemKind::Maddpg | SystemKind::Mad4pg)
+        self.spec().discrete
     }
 
     /// Does the executor carry recurrent state across steps?
     pub fn recurrent(&self) -> bool {
-        matches!(self, SystemKind::MadqnRec | SystemKind::Dial)
+        self.spec().recurrent
     }
 
     /// Does the trainer consume sequences rather than transitions?
     pub fn sequences(&self) -> bool {
-        self.recurrent()
+        self.spec().sequences()
     }
 }
 

@@ -1,0 +1,379 @@
+//! System nodes: the executor / trainer / evaluator programs that used
+//! to live as inline closures in `train()`.
+//!
+//! Each node is a plain struct with an explicit [`SystemHandles`]
+//! context (the shared services of paper Block 2's program graph:
+//! sharded replay table, parameter server, counters, stop signal, eval
+//! sink) and a fallible `run(&mut self) -> Result<()>`. Errors are
+//! *propagated* through the launcher's typed outcome channel
+//! ([`crate::launch::NodeOutcome`]) instead of `eprintln!`-and-die: a
+//! failing node trips the program's [`StopSignal`] and
+//! `SystemBuilder`-built runs surface it as a `train()` error naming
+//! the node.
+//!
+//! Research forks override what a node is made of, not how it runs:
+//! the [`EnvFactory`] and [`AdderFactory`] hooks (set on
+//! [`crate::systems::SystemBuilder`]) swap the environment or the
+//! experience packaging per node without touching the loop bodies.
+
+#![warn(missing_docs)]
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::core::StepType;
+use crate::env::wrappers::Fingerprint;
+use crate::env::{ActionBuf, MultiAgentEnv, VecEnv, VecStepBuf};
+use crate::exploration::EpsilonSchedule;
+use crate::launch::StopSignal;
+use crate::metrics::{Counters, MovingStats};
+use crate::params::ParameterServer;
+use crate::replay::{SequenceAdder, ShardedTable, Table, TransitionAdder};
+use crate::runtime::Engine;
+use crate::systems::builder::make_vec_evaluator_with;
+use crate::systems::{SystemSpec, Trainer, VecExecutor};
+
+/// Per-instance adder slot for the vectorized executor loop: each
+/// environment instance accumulates its own episode independently.
+/// Built by [`SystemSpec::make_adder`] or a custom [`AdderFactory`].
+pub enum Adder {
+    /// N-step transition adder (feedforward systems).
+    Tr(TransitionAdder),
+    /// Fixed-length sequence adder (recurrent systems).
+    Sq(SequenceAdder),
+}
+
+impl Adder {
+    /// Start a new episode from the reset step in `next`'s row `row`.
+    pub fn observe_first_row(&mut self, next: &VecStepBuf, row: usize) {
+        match self {
+            Adder::Tr(a) => a.observe_first_row(next, row),
+            Adder::Sq(a) => a.observe_first_row(next, row),
+        }
+    }
+
+    /// Record one (action, resulting step) pair for row `row`.
+    pub fn observe_row(
+        &mut self,
+        actions: &ActionBuf,
+        row: usize,
+        next: &VecStepBuf,
+    ) {
+        match self {
+            Adder::Tr(a) => a.observe_row(actions, row, next),
+            Adder::Sq(a) => a.observe_row(actions, row, next),
+        }
+    }
+}
+
+/// One evaluator measurement (a point on the paper's learning curves).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    /// Wall-clock seconds since the run started.
+    pub wall_s: f64,
+    /// Total environment steps across all executors at measurement time.
+    pub env_steps: u64,
+    /// Total trainer steps at measurement time.
+    pub train_steps: u64,
+    /// Mean greedy episode return over `eval_episodes`.
+    pub mean_return: f32,
+}
+
+/// Builds one environment instance for a node: `(seed, fingerprint)`
+/// → env. The default factory is [`crate::systems::env_for_preset`]
+/// over `cfg.preset`; override it on the builder to run a custom
+/// environment through an existing system's artifacts.
+pub type EnvFactory = Arc<
+    dyn Fn(u64, Option<Fingerprint>) -> Result<Box<dyn MultiAgentEnv>>
+        + Send
+        + Sync,
+>;
+
+/// Builds one per-instance [`Adder`] feeding a replay shard. The
+/// default factory is [`SystemSpec::make_adder`]; override it on the
+/// builder to change how experience is packaged (e.g. prioritised
+/// insertion or a different sequence period) without forking the
+/// executor loop.
+pub type AdderFactory = Arc<dyn Fn(Arc<Table>) -> Adder + Send + Sync>;
+
+/// Shared services every node of a built system runs against — the
+/// edges of the paper's program graph (Block 2 inset), made explicit
+/// instead of being closure captures.
+#[derive(Clone)]
+pub struct SystemHandles {
+    /// Replay table, one shard per executor (DESIGN.md §5).
+    pub table: Arc<ShardedTable>,
+    /// Versioned parameter server the trainer publishes to.
+    pub server: Arc<ParameterServer>,
+    /// Global env/train step + episode counters.
+    pub counters: Arc<Counters>,
+    /// Cooperative shutdown flag shared by every node.
+    pub stop: StopSignal,
+    /// Eval sink: the evaluator appends learning-curve points here.
+    pub evals: Arc<Mutex<Vec<EvalPoint>>>,
+    /// Moving window over training episode returns.
+    pub train_returns: Arc<Mutex<MovingStats>>,
+    /// Shared exploration fingerprint (the `_fp` presets read it).
+    pub fingerprint: Fingerprint,
+    /// Program start time (evaluator timestamps are relative to it).
+    pub started: Instant,
+}
+
+/// The trainer node: device-resident + prefetched train loop
+/// (DESIGN.md §8). Samples the sharded table round-robin, runs the
+/// fused train-step artifact and publishes parameters every
+/// `publish_interval` steps, with a final flush at shutdown.
+pub struct TrainerNode {
+    /// System being trained.
+    pub spec: &'static SystemSpec,
+    /// Run configuration.
+    pub cfg: TrainConfig,
+    /// Shared program services.
+    pub handles: SystemHandles,
+    /// Train-step artifact name (from [`SystemSpec::train_artifact`]).
+    pub train_name: String,
+    /// Initial parameters (the artifact's `params0` init blob).
+    pub params0: Vec<f32>,
+    /// Initial optimiser state (the artifact's `opt0` init blob).
+    pub opt0: Vec<f32>,
+}
+
+impl TrainerNode {
+    /// Run the train loop until stop / `max_train_steps` / table close.
+    pub fn run(&mut self) -> Result<()> {
+        let h = &self.handles;
+        let mut engine = Engine::load(&self.cfg.artifacts_dir)?;
+        let artifact = engine.artifact(&self.train_name)?;
+        let mut trainer = Trainer::new(
+            self.spec.family,
+            artifact,
+            self.params0.clone(),
+            self.opt0.clone(),
+            self.cfg.lr,
+            self.cfg.tau,
+            self.cfg.seed ^ 0x77aa,
+        )?;
+        trainer.set_publish_interval(self.cfg.publish_interval);
+        trainer.init_target_from_params()?;
+        h.server.push(trainer.params());
+        // sample+assemble runs on a prefetch thread; only plain
+        // HostTensors cross the channel (no PJRT handle leaves this
+        // thread — the §2 engine-per-thread rule holds)
+        let prefetch = trainer.spawn_prefetcher(h.table.clone(), 2);
+        while !h.stop.is_stopped() {
+            // Ok(None) once the table closed (shutdown);
+            // Err if assembly failed on the prefetch thread
+            let Some(batch) = prefetch.next_batch()? else {
+                break;
+            };
+            trainer.step_batch(&batch)?;
+            prefetch.recycle(batch);
+            h.counters.add_train_step();
+            trainer.maybe_publish(&h.server)?;
+            if self.cfg.max_train_steps > 0
+                && trainer.stats.steps >= self.cfg.max_train_steps
+            {
+                break;
+            }
+        }
+        // the publish cadence may be mid-window at shutdown: flush the
+        // final parameters unconditionally
+        trainer.publish(&h.server)?;
+        Ok(())
+    }
+}
+
+/// One executor node of the vectorized hot path (DESIGN.md §6): steps
+/// `num_envs_per_executor` environment instances through a [`VecEnv`]
+/// with one batched policy-artifact call per vector step, feeding its
+/// own replay shard so executors never contend on a replay lock.
+pub struct ExecutorNode {
+    /// Executor index (names the node and strides its seeds).
+    pub worker: usize,
+    /// System being run.
+    pub spec: &'static SystemSpec,
+    /// Run configuration.
+    pub cfg: TrainConfig,
+    /// Shared program services.
+    pub handles: SystemHandles,
+    /// This executor's own replay shard.
+    pub shard: Arc<Table>,
+    /// Policy artifact name lowered for this executor's env batch.
+    pub policy_name: String,
+    /// Initial parameters (the artifact's `params0` init blob).
+    pub params0: Vec<f32>,
+    /// Environment factory (default: the preset's env).
+    pub env_factory: EnvFactory,
+    /// Per-instance adder factory (default: the spec's adder).
+    pub adder_factory: AdderFactory,
+}
+
+impl ExecutorNode {
+    /// Run the acting loop until stop / `max_env_steps`.
+    pub fn run(&mut self) -> Result<()> {
+        let h = &self.handles;
+        let num_envs = self.cfg.num_envs_per_executor.max(1);
+        let mut engine = Engine::load(&self.cfg.artifacts_dir)?;
+        let artifact =
+            engine.artifact(&self.policy_name).with_context(|| {
+                format!(
+                    "policy artifact {:?} unavailable — \
+                     num_envs_per_executor must match a lowered policy \
+                     batch; regenerate with `make artifacts`",
+                    self.policy_name
+                )
+            })?;
+        let mut executor = VecExecutor::new(
+            self.spec.kind,
+            artifact,
+            self.params0.clone(),
+            self.cfg.seed + 1000 + self.worker as u64,
+        )?;
+        let mut instances = Vec::with_capacity(num_envs);
+        for i in 0..num_envs {
+            instances.push((self.env_factory)(
+                self.cfg.seed + (self.worker * num_envs + i) as u64,
+                Some(h.fingerprint.clone()),
+            )?);
+        }
+        let mut venv = VecEnv::new(instances)?;
+        let schedule = EpsilonSchedule::new(
+            self.cfg.eps_start,
+            self.cfg.eps_end,
+            self.cfg.eps_decay_steps,
+        );
+        // one adder per instance: episodes accumulate independently
+        // across the batch
+        let mut adders: Vec<Adder> = (0..num_envs)
+            .map(|_| (self.adder_factory)(self.shard.clone()))
+            .collect();
+        let mut ep_returns = vec![0.0f32; num_envs];
+        // SoA double buffer: `cur` feeds the policy call, the envs
+        // write the next vector step into `next`, then the buffers
+        // swap — allocated once here, refilled in place forever after
+        // (DESIGN.md §6)
+        let mut cur = venv.make_buf();
+        let mut next = venv.make_buf();
+        let mut abuf = venv.make_action_buf();
+        let mut params_scratch = Vec::new();
+        venv.reset_into(&mut cur);
+        for (i, adder) in adders.iter_mut().enumerate() {
+            adder.observe_first_row(&cur, i);
+        }
+        while !h.stop.is_stopped()
+            && h.counters.env_steps() < self.cfg.max_env_steps
+        {
+            let eps = schedule.value(h.counters.env_steps());
+            h.fingerprint.set(
+                eps,
+                (h.counters.env_steps() as f32
+                    / self.cfg.max_env_steps as f32)
+                    .min(1.0),
+            );
+            // ONE batched policy call for all B instances; params +
+            // recurrent carry stay device-resident
+            executor.select_actions_into(
+                &cur,
+                eps,
+                self.cfg.noise_sigma,
+                &mut abuf,
+            )?;
+            venv.step_into(&abuf, &mut next);
+            let mut episode_ended = false;
+            for (i, adder) in adders.iter_mut().enumerate() {
+                if next.step_type(i) == StepType::First {
+                    // this slot auto-reset: new episode
+                    adder.observe_first_row(&next, i);
+                    executor.reset_instance(i);
+                    ep_returns[i] = 0.0;
+                    continue;
+                }
+                adder.observe_row(&abuf, i, &next);
+                h.counters.add_env_steps(1);
+                ep_returns[i] += next.mean_reward(i);
+                if next.is_last(i) {
+                    h.counters.add_episode();
+                    h.train_returns.lock().unwrap().push(ep_returns[i]);
+                    episode_ended = true;
+                }
+            }
+            if episode_ended {
+                // cheap version check at episode boundaries
+                if let Some(v) = h
+                    .server
+                    .sync(executor.params_version, &mut params_scratch)
+                {
+                    executor.set_params(v, &params_scratch);
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        Ok(())
+    }
+}
+
+/// The evaluator node (vectorized, `eval/vec_eval.rs`). Snapshots
+/// published params every `eval_every_steps` env steps and runs greedy
+/// episodes through the largest lowered policy batch that fits the
+/// episode budget — one artifact call advances B episodes, and the
+/// node never takes a lock the executors or trainer hold, so
+/// evaluation cannot stall acting or training.
+pub struct EvaluatorNode {
+    /// Run configuration.
+    pub cfg: TrainConfig,
+    /// Shared program services.
+    pub handles: SystemHandles,
+    /// Initial parameters (the artifact's `params0` init blob).
+    pub params0: Vec<f32>,
+    /// Environment factory (default: the preset's env).
+    pub env_factory: EnvFactory,
+}
+
+impl EvaluatorNode {
+    /// Run the measurement loop until stop.
+    pub fn run(&mut self) -> Result<()> {
+        let h = &self.handles;
+        let mut engine = Engine::load(&self.cfg.artifacts_dir)?;
+        let mut evaluator = make_vec_evaluator_with(
+            &mut engine,
+            &self.cfg,
+            self.params0.clone(),
+            self.cfg.eval_episodes,
+            self.cfg.seed ^ 0xe7a1,
+            &self.env_factory,
+        )?;
+        let mut next_eval_at = 0u64;
+        while !h.stop.is_stopped() {
+            let steps = h.counters.env_steps();
+            if steps < next_eval_at {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            next_eval_at = steps + self.cfg.eval_every_steps;
+            let mut buf = Vec::new();
+            if let Some(v) =
+                h.server.sync(evaluator.params_version(), &mut buf)
+            {
+                evaluator.set_params(v, &buf);
+            }
+            let returns = evaluator
+                .evaluate_until(self.cfg.eval_episodes, || {
+                    h.stop.is_stopped()
+                })?;
+            if returns.is_empty() {
+                continue; // stopped mid-wave or eval_episodes == 0
+            }
+            let point = EvalPoint {
+                wall_s: h.started.elapsed().as_secs_f64(),
+                env_steps: h.counters.env_steps(),
+                train_steps: h.counters.train_steps(),
+                mean_return: crate::eval::stats::mean(&returns) as f32,
+            };
+            h.evals.lock().unwrap().push(point);
+        }
+        Ok(())
+    }
+}

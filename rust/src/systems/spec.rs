@@ -1,0 +1,380 @@
+//! Data-driven system specifications: the single source of truth for
+//! everything a [`SystemKind`] implies.
+//!
+//! The paper's core claim is that a MARL *system* is a reusable
+//! composition (§4, Figure 2). Before this module, the knowledge of
+//! what each system *is* — which artifact names it loads, what batch
+//! layout its trainer consumes, which adder packages its transitions,
+//! how it explores, whether it carries recurrent state — was scattered
+//! across `match kind` arms in the builder, executor, trainer and
+//! config. [`SystemSpec`] centralises all of it in one declarative
+//! table ([`SPECS`]), so adding a system is declaring a spec plus its
+//! lowered artifacts, not a builder rewrite.
+//!
+//! The spec also owns the *preset* → environment mapping
+//! ([`env_for_preset`]) and the artifact naming scheme
+//! (`{preset}_{system}[_{arch}]_{policy,train}` with `_b{B}` batched
+//! policy variants — DESIGN.md §4).
+
+#![warn(missing_docs)]
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::arch::Architecture;
+use crate::env::wrappers::{Fingerprint, FingerprintWrapper};
+use crate::env::{make_env, MultiAgentEnv};
+use crate::replay::{SequenceAdder, Table, TransitionAdder};
+use crate::systems::nodes::Adder;
+use crate::systems::{Family, SystemKind};
+
+/// How executor experience is packaged for the replay table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdderKind {
+    /// N-step transitions (feedforward systems).
+    Transition,
+    /// Fixed-length sequences (recurrent systems).
+    Sequence,
+}
+
+/// How the executor explores around the policy output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExplorationMode {
+    /// Discrete actions: ε-greedy over per-agent Q rows.
+    EpsilonGreedy,
+    /// Continuous actions: additive Gaussian noise on the action head.
+    GaussianNoise,
+}
+
+/// Declarative description of one baseline system: everything the
+/// builder, nodes and artifact lookup need beyond the hyperparameters
+/// in [`crate::config::TrainConfig`].
+#[derive(Debug)]
+pub struct SystemSpec {
+    /// The enum tag (kept for exhaustive matches in the runtime layers).
+    pub kind: SystemKind,
+    /// Config-string name (`TrainConfig::system`), e.g. `"vdn"`.
+    pub name: &'static str,
+    /// Batch layout the train artifact consumes.
+    pub family: Family,
+    /// How executor experience is packaged for replay.
+    pub adder: AdderKind,
+    /// How the executor explores.
+    pub exploration: ExplorationMode,
+    /// Whether the executor carries recurrent state across steps.
+    pub recurrent: bool,
+    /// Whether the action space is discrete.
+    pub discrete: bool,
+    /// Whether the artifact prefix carries the architecture tag
+    /// (actor-critic systems are lowered per architecture,
+    /// e.g. `walker3_mad4pg_dec`).
+    pub arch_in_prefix: bool,
+}
+
+/// The system table: one [`SystemSpec`] per implemented baseline
+/// (paper §4 "System implementations"). [`SystemSpec::parse`] and
+/// [`SystemSpec::of`] resolve into this table.
+pub const SPECS: &[SystemSpec] = &[
+    SystemSpec {
+        kind: SystemKind::Madqn,
+        name: "madqn",
+        family: Family::DqnFf,
+        adder: AdderKind::Transition,
+        exploration: ExplorationMode::EpsilonGreedy,
+        recurrent: false,
+        discrete: true,
+        arch_in_prefix: false,
+    },
+    SystemSpec {
+        kind: SystemKind::MadqnRec,
+        name: "madqn_rec",
+        family: Family::DqnRec,
+        adder: AdderKind::Sequence,
+        exploration: ExplorationMode::EpsilonGreedy,
+        recurrent: true,
+        discrete: true,
+        arch_in_prefix: false,
+    },
+    SystemSpec {
+        kind: SystemKind::Dial,
+        name: "dial",
+        family: Family::Dial,
+        adder: AdderKind::Sequence,
+        exploration: ExplorationMode::EpsilonGreedy,
+        recurrent: true,
+        discrete: true,
+        arch_in_prefix: false,
+    },
+    SystemSpec {
+        kind: SystemKind::Vdn,
+        name: "vdn",
+        family: Family::ValueDecomp,
+        adder: AdderKind::Transition,
+        exploration: ExplorationMode::EpsilonGreedy,
+        recurrent: false,
+        discrete: true,
+        arch_in_prefix: false,
+    },
+    SystemSpec {
+        kind: SystemKind::Qmix,
+        name: "qmix",
+        family: Family::ValueDecomp,
+        adder: AdderKind::Transition,
+        exploration: ExplorationMode::EpsilonGreedy,
+        recurrent: false,
+        discrete: true,
+        arch_in_prefix: false,
+    },
+    SystemSpec {
+        kind: SystemKind::Maddpg,
+        name: "maddpg",
+        family: Family::Ddpg,
+        adder: AdderKind::Transition,
+        exploration: ExplorationMode::GaussianNoise,
+        recurrent: false,
+        discrete: false,
+        arch_in_prefix: true,
+    },
+    SystemSpec {
+        kind: SystemKind::Mad4pg,
+        name: "mad4pg",
+        family: Family::Ddpg,
+        adder: AdderKind::Transition,
+        exploration: ExplorationMode::GaussianNoise,
+        recurrent: false,
+        discrete: false,
+        arch_in_prefix: true,
+    },
+];
+
+impl SystemSpec {
+    /// The spec of a [`SystemKind`].
+    pub fn of(kind: SystemKind) -> &'static SystemSpec {
+        SPECS.iter()
+            .find(|s| s.kind == kind)
+            .expect("every SystemKind has a spec")
+    }
+
+    /// Resolve a config `system` string (e.g. `"vdn"`) into the table.
+    pub fn parse(name: &str) -> Result<&'static SystemSpec> {
+        match SPECS.iter().find(|s| s.name == name) {
+            Some(s) => Ok(s),
+            None => bail!("unknown system {name:?}"),
+        }
+    }
+
+    /// Does the trainer consume sequences rather than transitions?
+    pub fn sequences(&self) -> bool {
+        self.adder == AdderKind::Sequence
+    }
+
+    /// Artifact name tag for this system on `preset` under `arch`,
+    /// e.g. `smac3m_vdn` or `walker3_mad4pg_dec` (DESIGN.md §4).
+    pub fn artifact_prefix(&self, preset: &str, arch: Architecture) -> String {
+        if self.arch_in_prefix {
+            format!("{preset}_{}_{}", self.name, arch.tag())
+        } else {
+            format!("{preset}_{}", self.name)
+        }
+    }
+
+    /// Name of the `[1, N, O]` policy artifact under `prefix`.
+    pub fn policy_artifact(&self, prefix: &str) -> String {
+        format!("{prefix}_policy")
+    }
+
+    /// Name of the policy artifact lowered for an environment batch of
+    /// `b` (the `_b{B}` variants the vectorized executor acts through;
+    /// `b <= 1` is the base `[1, N, O]` artifact).
+    pub fn batched_policy_artifact(&self, prefix: &str, b: usize) -> String {
+        if b <= 1 {
+            self.policy_artifact(prefix)
+        } else {
+            format!("{prefix}_policy_b{b}")
+        }
+    }
+
+    /// Name of the fused train-step artifact under `prefix`.
+    pub fn train_artifact(&self, prefix: &str) -> String {
+        format!("{prefix}_train")
+    }
+
+    /// Build the default adder for one environment instance feeding
+    /// `shard`, from the train artifact's metadata (`seq_len`) and the
+    /// run's hyperparameters (`n_step`, `gamma`). This is the factory
+    /// the [`crate::systems::SystemBuilder`] uses unless a per-node
+    /// override replaces it.
+    pub fn make_adder(
+        &self,
+        shard: Arc<Table>,
+        n_step: usize,
+        gamma: f32,
+        seq_len: usize,
+    ) -> Adder {
+        match self.adder {
+            AdderKind::Sequence => Adder::Sq(SequenceAdder::new(
+                shard,
+                seq_len.max(1),
+                seq_len.max(1),
+            )),
+            AdderKind::Transition => {
+                Adder::Tr(TransitionAdder::new(shard, n_step, gamma))
+            }
+        }
+    }
+}
+
+/// Environment for an artifact preset (DESIGN.md §4).
+///
+/// The `_fp` suffix is orthogonal to the base preset: `smac3m_fp`,
+/// `matrix2_fp`, … all wrap the base environment with the fingerprint
+/// stabilisation module ([`FingerprintWrapper`]); a genuinely unknown
+/// base is rejected with the same error as an unknown plain preset.
+pub fn env_for_preset(
+    preset: &str,
+    seed: u64,
+    fingerprint: Option<Fingerprint>,
+) -> Result<Box<dyn MultiAgentEnv>> {
+    let base_preset = preset.strip_suffix("_fp").unwrap_or(preset);
+    let base = match base_preset {
+        "matrix2" => "matrix",
+        "switch3" => "switch",
+        "smac3m" => "smac_lite",
+        "spread3" => "mpe_spread",
+        "speaker2" => "mpe_speaker_listener",
+        "walker3" => "multiwalker",
+        _ => bail!("unknown preset {preset:?}"),
+    };
+    let env = make_env(base, seed)?;
+    if preset.ends_with("_fp") {
+        let fp = fingerprint.unwrap_or_default();
+        // Box<dyn MultiAgentEnv> implements the trait (all SoA hooks
+        // forwarded), so the wrapper composes over it directly and the
+        // _fp preset stays on the allocation-free path
+        Ok(Box::new(FingerprintWrapper::new(env, fp)))
+    } else {
+        Ok(env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL_KINDS: [SystemKind; 7] = [
+        SystemKind::Madqn,
+        SystemKind::MadqnRec,
+        SystemKind::Dial,
+        SystemKind::Vdn,
+        SystemKind::Qmix,
+        SystemKind::Maddpg,
+        SystemKind::Mad4pg,
+    ];
+
+    /// Every kind resolves to exactly one spec and parse round-trips
+    /// through the spec's name.
+    #[test]
+    fn table_is_total_and_round_trips() {
+        assert_eq!(SPECS.len(), ALL_KINDS.len());
+        for kind in ALL_KINDS {
+            let spec = SystemSpec::of(kind);
+            assert_eq!(spec.kind, kind);
+            let reparsed = SystemSpec::parse(spec.name).unwrap();
+            assert_eq!(reparsed.kind, kind, "{} round-trip", spec.name);
+        }
+        assert!(SystemSpec::parse("bogus").is_err());
+    }
+
+    /// Spec fields must be mutually coherent for every system:
+    /// recurrent systems train on sequences, continuous systems explore
+    /// with noise, discrete with ε-greedy, and the family matches the
+    /// legacy SystemKind accessors (which now delegate here).
+    #[test]
+    fn specs_are_internally_coherent() {
+        for spec in SPECS {
+            assert_eq!(
+                spec.recurrent,
+                spec.adder == AdderKind::Sequence,
+                "{}: recurrence and sequence replay must agree",
+                spec.name
+            );
+            assert_eq!(
+                spec.discrete,
+                spec.exploration == ExplorationMode::EpsilonGreedy,
+                "{}: action space and exploration mode must agree",
+                spec.name
+            );
+            assert_eq!(
+                spec.arch_in_prefix,
+                spec.family == Family::Ddpg,
+                "{}: only actor-critic systems are lowered per arch",
+                spec.name
+            );
+            assert_eq!(spec.family, spec.kind.family(), "{}", spec.name);
+            assert_eq!(spec.discrete, spec.kind.discrete(), "{}", spec.name);
+            assert_eq!(spec.recurrent, spec.kind.recurrent(), "{}", spec.name);
+            assert_eq!(spec.sequences(), spec.kind.sequences(), "{}", spec.name);
+        }
+    }
+
+    /// Artifact naming: prefix carries the arch tag exactly for the
+    /// actor-critic systems, batched variants are `_b{B}` suffixed, and
+    /// `b <= 1` degrades to the base policy name.
+    #[test]
+    fn artifact_names_are_coherent() {
+        for spec in SPECS {
+            let prefix = spec.artifact_prefix("smac3m", Architecture::Decentralised);
+            if spec.arch_in_prefix {
+                assert_eq!(prefix, format!("smac3m_{}_dec", spec.name));
+            } else {
+                assert_eq!(prefix, format!("smac3m_{}", spec.name));
+            }
+            assert_eq!(
+                spec.policy_artifact(&prefix),
+                format!("{prefix}_policy")
+            );
+            assert_eq!(
+                spec.train_artifact(&prefix),
+                format!("{prefix}_train")
+            );
+            assert_eq!(
+                spec.batched_policy_artifact(&prefix, 16),
+                format!("{prefix}_policy_b16")
+            );
+            for b in [0, 1] {
+                assert_eq!(
+                    spec.batched_policy_artifact(&prefix, b),
+                    spec.policy_artifact(&prefix)
+                );
+            }
+        }
+    }
+
+    /// The `_fp` suffix wraps ANY known base preset and unknown bases
+    /// are rejected with the unknown-preset error, fp or not.
+    #[test]
+    fn fp_suffix_is_orthogonal_to_base_preset() {
+        for base in
+            ["matrix2", "switch3", "smac3m", "spread3", "speaker2", "walker3"]
+        {
+            let plain = env_for_preset(base, 0, None).unwrap();
+            let fp = env_for_preset(&format!("{base}_fp"), 0, None).unwrap();
+            // the wrapper widens each observation by the 2 fingerprint
+            // features; everything else matches the base env
+            assert_eq!(
+                fp.spec().obs_dim,
+                plain.spec().obs_dim + 2,
+                "{base}_fp must wrap the {base} base env"
+            );
+            assert_eq!(fp.spec().n_agents, plain.spec().n_agents);
+        }
+        for bogus in ["bogus", "bogus_fp", "_fp"] {
+            let err = env_for_preset(bogus, 0, None).unwrap_err();
+            assert!(
+                err.to_string().contains("unknown preset"),
+                "{bogus}: {err}"
+            );
+        }
+    }
+}

@@ -76,6 +76,9 @@ pub struct Trainer {
 impl Trainer {
     /// Build a device-resident trainer over a train-step artifact,
     /// starting from the artifact's `params0`/`opt0` init blobs.
+    /// `family` is the batch layout declared by the system's
+    /// [`crate::systems::SystemSpec`] (the
+    /// [`crate::systems::TrainerNode`] passes `spec.family`).
     pub fn new(
         family: Family,
         artifact: Rc<Artifact>,
