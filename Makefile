@@ -5,7 +5,7 @@
 PYTHON ?= python
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test experiment check-bench-schema bench-vector bench-trainer bench-build check fmt clippy doc
+.PHONY: artifacts build test test-dist experiment check-bench-schema bench-vector bench-trainer bench-build check fmt clippy doc
 
 # lower every AOT artifact (policy, batched policy variants, train steps)
 artifacts:
@@ -16,6 +16,12 @@ build:
 
 test:
 	cargo test -q
+
+# the distributed wire-layer suites alone: hermetic loopback +
+# fault-injection tests (dist_net) and the frame-codec property tests
+# (DESIGN.md §10). A subset of `make test`; no artifacts needed.
+test-dist:
+	cargo test -q --test dist_net --test properties
 
 # multi-seed experiment harness -> BENCH_<scenario>.json (EXPERIMENTS.md;
 # needs `make artifacts`). Override e.g. SEEDS=5.

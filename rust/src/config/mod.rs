@@ -70,6 +70,17 @@ pub struct TrainConfig {
     pub eval_every_steps: u64,
     pub eval_episodes: usize,
     pub params_sync_every: u64,
+
+    // distributed launch (DESIGN.md §10)
+    /// Host the `mava launch` driver binds its control / parameter /
+    /// replay services on (loopback by default — the multi-process
+    /// launcher is single-machine, like Launchpad's
+    /// `LOCAL_MULTI_PROCESSING`).
+    pub bind_host: String,
+    /// Seconds to wait for nodes to wind down after shutdown is
+    /// requested before a stuck node is abandoned and reported by name
+    /// (threads) or killed (processes).
+    pub dist_timeout_s: u64,
 }
 
 impl Default for TrainConfig {
@@ -100,6 +111,8 @@ impl Default for TrainConfig {
             eval_every_steps: 1_000,
             eval_episodes: 10,
             params_sync_every: 16,
+            bind_host: "127.0.0.1".into(),
+            dist_timeout_s: 60,
         }
     }
 }
@@ -135,6 +148,9 @@ impl TrainConfig {
         if let Some(v) = raw.get_str(sec, "log_dir") {
             c.log_dir = v.to_string();
         }
+        if let Some(v) = raw.get_str(sec, "bind_host") {
+            c.bind_host = v.to_string();
+        }
         get!(num_executors, get_usize);
         get!(num_envs_per_executor, get_usize);
         get!(max_env_steps, get_u64);
@@ -149,6 +165,7 @@ impl TrainConfig {
         get!(eval_every_steps, get_u64);
         get!(params_sync_every, get_u64);
         get!(publish_interval, get_u64);
+        get!(dist_timeout_s, get_u64);
         if let Some(v) = raw.get_f64(sec, "lr") {
             c.lr = v as f32;
         }
@@ -242,6 +259,8 @@ impl TrainConfig {
             }
             "eval_episodes" => self.eval_episodes = val.parse()?,
             "params_sync_every" => self.params_sync_every = val.parse()?,
+            "bind_host" => self.bind_host = val.into(),
+            "dist_timeout_s" => self.dist_timeout_s = val.parse()?,
             "publish_interval" => {
                 self.publish_interval = val.parse()?;
                 self.validate()?;
@@ -249,6 +268,50 @@ impl TrainConfig {
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
+    }
+
+    /// Serialize every key as `--key value` CLI flags, the inverse of
+    /// [`TrainConfig::apply_cli`]. The `mava launch` driver uses this
+    /// to hand its (file + CLI merged) configuration to `mava node`
+    /// child processes without writing a temp file; round-tripping
+    /// through [`TrainConfig::set`] is covered by a unit test.
+    pub fn to_cli_args(&self) -> Vec<String> {
+        let mut a = Vec::new();
+        let mut kv = |k: &str, v: String| {
+            a.push(format!("--{k}"));
+            a.push(v);
+        };
+        kv("system", self.system.clone());
+        kv("preset", self.preset.clone());
+        kv("arch", self.arch.tag().to_string());
+        kv("num_executors", self.num_executors.to_string());
+        kv(
+            "num_envs_per_executor",
+            self.num_envs_per_executor.to_string(),
+        );
+        kv("max_env_steps", self.max_env_steps.to_string());
+        kv("max_train_steps", self.max_train_steps.to_string());
+        kv("lr", self.lr.to_string());
+        kv("tau", self.tau.to_string());
+        kv("n_step", self.n_step.to_string());
+        kv("eps_start", self.eps_start.to_string());
+        kv("eps_end", self.eps_end.to_string());
+        kv("eps_decay_steps", self.eps_decay_steps.to_string());
+        kv("noise_sigma", self.noise_sigma.to_string());
+        kv("replay_size", self.replay_size.to_string());
+        kv("min_replay", self.min_replay.to_string());
+        kv("samples_per_insert", self.samples_per_insert.to_string());
+        kv("publish_interval", self.publish_interval.to_string());
+        kv("seed", self.seed.to_string());
+        kv("seeds", self.seeds.to_string());
+        kv("artifacts_dir", self.artifacts_dir.clone());
+        kv("log_dir", self.log_dir.clone());
+        kv("eval_every_steps", self.eval_every_steps.to_string());
+        kv("eval_episodes", self.eval_episodes.to_string());
+        kv("params_sync_every", self.params_sync_every.to_string());
+        kv("bind_host", self.bind_host.clone());
+        kv("dist_timeout_s", self.dist_timeout_s.to_string());
+        a
     }
 
     /// Name tag used by artifact lookup, e.g. `smac3m_vdn` or
@@ -329,6 +392,40 @@ mod tests {
         let raw = RawConfig::parse("[train]\nseeds = 0\n").unwrap();
         assert!(TrainConfig::from_raw(&raw).is_err());
         assert!(c.set("seeds", "0").is_err());
+    }
+
+    /// `to_cli_args` is the exact inverse of `apply_cli`: a config
+    /// shipped to a `mava node` child process arrives identical.
+    #[test]
+    fn cli_args_roundtrip() {
+        let c = TrainConfig {
+            system: "qmix".into(),
+            preset: "smac3m".into(),
+            arch: Architecture::Centralised,
+            num_executors: 3,
+            lr: 2.5e-4,
+            samples_per_insert: 0.125,
+            bind_host: "0.0.0.0".into(),
+            dist_timeout_s: 7,
+            ..TrainConfig::default()
+        };
+        let mut back = TrainConfig::default();
+        back.apply_cli(&c.to_cli_args()).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{c:?}"));
+    }
+
+    #[test]
+    fn dist_keys_from_file_and_cli() {
+        let raw = RawConfig::parse(
+            "[train]\nbind_host = \"10.1.2.3\"\ndist_timeout_s = 9\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.bind_host, "10.1.2.3");
+        assert_eq!(c.dist_timeout_s, 9);
+        let mut c = TrainConfig::default();
+        c.set("dist_timeout_s", "120").unwrap();
+        assert_eq!(c.dist_timeout_s, 120);
     }
 
     #[test]

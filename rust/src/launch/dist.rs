@@ -1,0 +1,675 @@
+//! Multi-process distributed launch (DESIGN.md §10): the `mava node`
+//! and `mava launch` entry points.
+//!
+//! [`run_node`] runs ONE node of the program graph — a parameter
+//! server, a replay shard, the trainer, an executor or the evaluator —
+//! in the current process, wired to its peers over the
+//! [`crate::net`] protocols. [`launch`] is the driver: it binds a
+//! [`ControlServer`], spawns one `mava node` child process per graph
+//! node (re-executing the current binary), discovers service
+//! addresses through the nodes' `Hello` registrations, supervises the
+//! children, and maps every child exit into a typed
+//! [`NodeOutcome`] — so a dead remote node trips the stop signal and
+//! is reported *by name*, exactly like a dead thread under the
+//! in-process [`crate::launch::LocalLauncher`].
+//!
+//! The node loops themselves are the unchanged structs from
+//! [`crate::systems::nodes`]: only the handles differ (remote clients
+//! instead of in-process `Arc`s). In-process threads stay the default
+//! launcher; this module is opt-in via `mava launch`.
+
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::env::wrappers::Fingerprint;
+use crate::launch::{
+    outcomes_to_result, NodeKind, NodeOutcome, StopSignal,
+};
+use crate::metrics::{Counters, MovingStats};
+use crate::net::control::{ControlClient, ControlServer};
+use crate::net::param::{ParamService, RemoteParamClient};
+use crate::net::replay::{
+    RemoteReplaySampler, RemoteShardClient, ReplayService,
+};
+use crate::params::{ParamStore, ParameterServer};
+use crate::replay::{ItemSink, RateLimiter, Selector, Table};
+use crate::runtime::{Engine, Manifest};
+use crate::systems::nodes::{
+    EnvFactory, ExecutorNode, SystemHandles, TrainerNode,
+};
+use crate::systems::{env_for_preset, make_vec_evaluator_with, SystemSpec};
+
+/// Which node of the program graph a `mava node` process runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// The versioned parameter server service.
+    Param,
+    /// Replay shard `k` (one [`Table`] behind a [`ReplayService`]).
+    Replay(usize),
+    /// The trainer.
+    Trainer,
+    /// Executor `k` (inserts into replay shard `k`).
+    Executor(usize),
+    /// The evaluator.
+    Evaluator,
+}
+
+impl Role {
+    /// Parse a `--role` argument: `param`, `replay:K`, `trainer`,
+    /// `executor:K` or `evaluator`.
+    pub fn parse(s: &str) -> Result<Role> {
+        if let Some(k) = s.strip_prefix("replay:") {
+            return Ok(Role::Replay(
+                k.parse().with_context(|| format!("bad role {s:?}"))?,
+            ));
+        }
+        if let Some(k) = s.strip_prefix("executor:") {
+            return Ok(Role::Executor(
+                k.parse().with_context(|| format!("bad role {s:?}"))?,
+            ));
+        }
+        match s {
+            "param" => Ok(Role::Param),
+            "trainer" => Ok(Role::Trainer),
+            "evaluator" => Ok(Role::Evaluator),
+            other => bail!(
+                "unknown role {other:?} (expected param | replay:K | \
+                 trainer | executor:K | evaluator)"
+            ),
+        }
+    }
+
+    /// The `--role` argument spelling (inverse of [`Role::parse`]).
+    pub fn arg(&self) -> String {
+        match self {
+            Role::Param => "param".into(),
+            Role::Replay(k) => format!("replay:{k}"),
+            Role::Trainer => "trainer".into(),
+            Role::Executor(k) => format!("executor:{k}"),
+            Role::Evaluator => "evaluator".into(),
+        }
+    }
+
+    /// Node name in the program graph (what failures are reported as).
+    pub fn name(&self) -> String {
+        match self {
+            Role::Param => "param_server".into(),
+            Role::Replay(k) => format!("replay_{k}"),
+            Role::Trainer => "trainer".into(),
+            Role::Executor(k) => format!("executor_{k}"),
+            Role::Evaluator => "evaluator".into(),
+        }
+    }
+
+    /// Node category for the typed outcome channel.
+    pub fn kind(&self) -> NodeKind {
+        match self {
+            Role::Param => NodeKind::ParameterServer,
+            Role::Replay(_) => NodeKind::Replay,
+            Role::Trainer => NodeKind::Trainer,
+            Role::Executor(_) => NodeKind::Executor,
+            Role::Evaluator => NodeKind::Evaluator,
+        }
+    }
+}
+
+/// Wiring arguments of one `mava node` process (everything beyond the
+/// shared [`TrainConfig`]).
+#[derive(Clone, Debug)]
+pub struct NodeOpts {
+    /// The node to run.
+    pub role: Role,
+    /// Address of the driver's [`ControlServer`].
+    pub control: String,
+    /// Parameter-service address (trainer / executor / evaluator).
+    pub param: Option<String>,
+    /// Replay-service addresses, shard order (trainer gets all,
+    /// executor `k` uses entry `k`).
+    pub replay: Vec<String>,
+}
+
+/// Artifact metadata shared by the replay / trainer / executor roles,
+/// resolved exactly like the in-process builder resolves it.
+struct TrainMeta {
+    spec: &'static SystemSpec,
+    train_name: String,
+    exec_policy_name: String,
+    params0: Vec<f32>,
+    opt0: Vec<f32>,
+    batch: usize,
+    gamma: f32,
+    seq_len: usize,
+}
+
+fn train_meta(cfg: &TrainConfig) -> Result<TrainMeta> {
+    let spec = SystemSpec::parse(&cfg.system)?;
+    let prefix = spec.artifact_prefix(&cfg.preset, cfg.arch);
+    let train_name = spec.train_artifact(&prefix);
+    let exec_policy_name = spec
+        .batched_policy_artifact(&prefix, cfg.num_envs_per_executor.max(1));
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let train_art = manifest.get(&train_name)?.clone();
+    Ok(TrainMeta {
+        spec,
+        train_name,
+        exec_policy_name,
+        params0: manifest.read_init(&train_art, "params0")?,
+        opt0: manifest.read_init(&train_art, "opt0")?,
+        batch: train_art.meta_usize("batch")?,
+        gamma: train_art.meta_f32("gamma")?,
+        seq_len: train_art.meta_usize("seq_len")?,
+    })
+}
+
+/// Per-process [`SystemHandles`] over a remote parameter store. The
+/// counters are process-local: in a multi-process run each executor
+/// paces itself against `max_env_steps` (there is no global step
+/// counter on the wire), so budgets are per-executor.
+fn remote_handles(
+    server: Arc<dyn ParamStore>,
+    stop: StopSignal,
+    cfg: &TrainConfig,
+) -> SystemHandles {
+    SystemHandles {
+        server,
+        counters: Arc::new(Counters::default()),
+        stop,
+        evals: Arc::new(Mutex::new(Vec::new())),
+        train_returns: Arc::new(Mutex::new(MovingStats::new(64))),
+        fingerprint: Fingerprint::new(cfg.eps_start, 0.0),
+        started: Instant::now(),
+    }
+}
+
+fn rpc_timeout(cfg: &TrainConfig) -> Duration {
+    Duration::from_secs(cfg.dist_timeout_s.max(1))
+}
+
+/// Run one node of the program graph in the current process until the
+/// driver broadcasts `Stop` (or the node's own budget completes).
+/// This is `mava node`'s body; a returned error makes the process
+/// exit non-zero, which the driver maps into the node's
+/// [`NodeOutcome`].
+pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
+    let stop = StopSignal::new();
+    let name = opts.role.name();
+    let role_arg = opts.role.arg();
+    match opts.role {
+        Role::Param => {
+            let server = Arc::new(ParameterServer::new(Vec::new()));
+            let mut svc = ParamService::bind(server, &cfg.bind_host)?;
+            let ctl = ControlClient::connect(
+                &opts.control,
+                &name,
+                &role_arg,
+                svc.addr(),
+            )?;
+            let _watch = ctl.watch_stop(stop.clone())?;
+            while !stop.is_stopped() {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            svc.shutdown();
+            Ok(())
+        }
+        Role::Replay(k) => {
+            // the same sharding arithmetic as the in-process
+            // ShardedTable: capacity and rate limiter are the global
+            // figures scaled down to one shard of `num_executors`
+            let meta = train_meta(cfg)?;
+            let shards = cfg.num_executors.max(1);
+            let limiter = RateLimiter::sample_to_insert(
+                cfg.samples_per_insert / meta.batch as f64,
+                cfg.min_replay,
+            )
+            .per_shard(shards);
+            let table = Arc::new(Table::new(
+                (cfg.replay_size / shards).max(1),
+                Selector::Uniform,
+                limiter,
+                (cfg.seed ^ 0x7ab1e)
+                    .wrapping_add(0x9e37_79b9u64.wrapping_mul(k as u64 + 1)),
+            ));
+            let mut svc =
+                ReplayService::bind(table.clone(), &cfg.bind_host)?;
+            let ctl = ControlClient::connect(
+                &opts.control,
+                &name,
+                &role_arg,
+                svc.addr(),
+            )?;
+            let _watch = ctl.watch_stop(stop.clone())?;
+            while !stop.is_stopped() {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            // close BEFORE service shutdown: unblocks rate-limited
+            // inserts and makes in-flight samplers see SourceClosed
+            table.close();
+            svc.shutdown();
+            Ok(())
+        }
+        Role::Trainer => {
+            let meta = train_meta(cfg)?;
+            let param_addr = opts
+                .param
+                .as_deref()
+                .context("trainer role needs --param ADDR")?;
+            anyhow::ensure!(
+                !opts.replay.is_empty(),
+                "trainer role needs --replay ADDR (one per shard)"
+            );
+            let server = Arc::new(RemoteParamClient::connect(
+                param_addr,
+                rpc_timeout(cfg),
+            )?);
+            let source = Arc::new(RemoteReplaySampler::connect(
+                &opts.replay,
+                rpc_timeout(cfg),
+            )?);
+            let ctl =
+                ControlClient::connect(&opts.control, &name, &role_arg, "")?;
+            let _watch = ctl.watch_stop(stop.clone())?;
+            let mut node = TrainerNode {
+                spec: meta.spec,
+                cfg: cfg.clone(),
+                handles: remote_handles(server, stop, cfg),
+                train_name: meta.train_name,
+                params0: meta.params0,
+                opt0: meta.opt0,
+                source,
+            };
+            node.run()
+        }
+        Role::Executor(k) => {
+            let meta = train_meta(cfg)?;
+            let param_addr = opts
+                .param
+                .as_deref()
+                .context("executor role needs --param ADDR")?;
+            let shard_addr = opts.replay.get(k).with_context(|| {
+                format!("executor:{k} needs --replay ADDR #{k}")
+            })?;
+            let server = Arc::new(RemoteParamClient::connect(
+                param_addr,
+                rpc_timeout(cfg),
+            )?);
+            let shard: Arc<dyn ItemSink> =
+                Arc::new(RemoteShardClient::connect(shard_addr)?);
+            let ctl =
+                ControlClient::connect(&opts.control, &name, &role_arg, "")?;
+            let _watch = ctl.watch_stop(stop.clone())?;
+            let preset = cfg.preset.clone();
+            let env_factory: EnvFactory =
+                Arc::new(move |s, fp| env_for_preset(&preset, s, fp));
+            let spec = meta.spec;
+            let (n_step, gamma, seq_len) =
+                (cfg.n_step, meta.gamma, meta.seq_len);
+            let mut node = ExecutorNode {
+                worker: k,
+                spec,
+                cfg: cfg.clone(),
+                handles: remote_handles(server, stop, cfg),
+                shard,
+                policy_name: meta.exec_policy_name,
+                params0: meta.params0,
+                env_factory,
+                adder_factory: Arc::new(move |shard| {
+                    spec.make_adder(shard, n_step, gamma, seq_len)
+                }),
+            };
+            node.run()
+        }
+        Role::Evaluator => {
+            let meta = train_meta(cfg)?;
+            let param_addr = opts
+                .param
+                .as_deref()
+                .context("evaluator role needs --param ADDR")?;
+            let server = Arc::new(RemoteParamClient::connect(
+                param_addr,
+                rpc_timeout(cfg),
+            )?);
+            let ctl =
+                ControlClient::connect(&opts.control, &name, &role_arg, "")?;
+            let _watch = ctl.watch_stop(stop.clone())?;
+            let preset = cfg.preset.clone();
+            let env_factory: EnvFactory =
+                Arc::new(move |s, fp| env_for_preset(&preset, s, fp));
+            run_remote_evaluator(cfg, meta, server, stop, &env_factory)
+        }
+    }
+}
+
+/// The evaluator loop for multi-process runs.
+/// [`crate::systems::nodes::EvaluatorNode`] paces itself on the shared
+/// env-step counter, which does not exist across
+/// processes — here evaluation is paced by *parameter version*
+/// instead: a wave runs whenever the parameter server has published
+/// something newer than the last wave saw.
+fn run_remote_evaluator(
+    cfg: &TrainConfig,
+    meta: TrainMeta,
+    server: Arc<dyn ParamStore>,
+    stop: StopSignal,
+    env_factory: &EnvFactory,
+) -> Result<()> {
+    let mut engine = Engine::load(&cfg.artifacts_dir)?;
+    let started = Instant::now();
+    let mut evaluator = make_vec_evaluator_with(
+        &mut engine,
+        cfg,
+        meta.params0.clone(),
+        cfg.eval_episodes,
+        cfg.seed ^ 0xe7a1,
+        env_factory,
+    )?;
+    let mut buf = Vec::new();
+    while !stop.is_stopped() {
+        let synced = server.sync(evaluator.params_version(), &mut buf)?;
+        let Some(v) = synced else {
+            // nothing new published yet
+            std::thread::sleep(Duration::from_millis(50));
+            continue;
+        };
+        evaluator.set_params(v, &buf);
+        let returns = evaluator
+            .evaluate_until(cfg.eval_episodes, || stop.is_stopped())?;
+        if returns.is_empty() {
+            continue;
+        }
+        println!(
+            "eval t={:<7.1}s params_v={v:<6} return={:.3}",
+            started.elapsed().as_secs_f64(),
+            crate::eval::stats::mean(&returns)
+        );
+    }
+    Ok(())
+}
+
+/// One spawned `mava node` child under supervision.
+struct ChildNode {
+    role: Role,
+    child: Child,
+}
+
+fn spawn_role(
+    cfg: &TrainConfig,
+    role: Role,
+    control: &str,
+    param: Option<&str>,
+    replay: &[String],
+) -> Result<ChildNode> {
+    let exe = std::env::current_exe().context("locate mava binary")?;
+    let mut cmd = Command::new(exe);
+    cmd.arg("node")
+        .arg("--role")
+        .arg(role.arg())
+        .arg("--control")
+        .arg(control);
+    if let Some(p) = param {
+        cmd.arg("--param").arg(p);
+    }
+    for addr in replay {
+        cmd.arg("--replay").arg(addr);
+    }
+    cmd.args(cfg.to_cli_args());
+    cmd.stdin(Stdio::null());
+    let child = cmd
+        .spawn()
+        .with_context(|| format!("spawn node {}", role.name()))?;
+    Ok(ChildNode { role, child })
+}
+
+/// Wait for `name` to register with the control server, polling the
+/// already-spawned children so a node that dies *before* saying Hello
+/// is reported by name instead of as a bare timeout.
+fn wait_registered(
+    control: &ControlServer,
+    children: &mut [ChildNode],
+    name: &str,
+    timeout: Duration,
+) -> Result<String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match control.wait_for(name, Duration::from_millis(50)) {
+            Ok(addr) => return Ok(addr),
+            Err(_) if Instant::now() < deadline => {
+                for c in children.iter_mut() {
+                    if let Ok(Some(status)) = c.child.try_wait() {
+                        bail!(
+                            "node {} exited during startup ({status})",
+                            c.role.name()
+                        );
+                    }
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Judge one child's exit `status` into the node's typed outcome.
+fn judge(
+    role: Role,
+    status: std::process::ExitStatus,
+    lost: bool,
+) -> NodeOutcome {
+    let result = if status.success() {
+        Ok(())
+    } else if lost {
+        Err(anyhow::anyhow!(
+            "control connection lost (process exited: {status})"
+        ))
+    } else {
+        Err(anyhow::anyhow!("process exited: {status}"))
+    };
+    NodeOutcome { name: role.name(), kind: role.kind(), result }
+}
+
+/// Spawn the whole program graph into `children`: services first
+/// (parameter server, replay shards), then — once their addresses are
+/// discovered through the control channel — the workers. Any spawn or
+/// registration failure aborts; [`launch`] tears the children down.
+fn spawn_graph(
+    cfg: &TrainConfig,
+    control: &ControlServer,
+    children: &mut Vec<ChildNode>,
+) -> Result<()> {
+    let startup = rpc_timeout(cfg).max(Duration::from_secs(10));
+    let shards = cfg.num_executors.max(1);
+    children.push(spawn_role(cfg, Role::Param, control.addr(), None, &[])?);
+    for k in 0..shards {
+        children.push(spawn_role(
+            cfg,
+            Role::Replay(k),
+            control.addr(),
+            None,
+            &[],
+        )?);
+    }
+    let param_addr =
+        wait_registered(control, children, "param_server", startup)?;
+    let mut replay_addrs = Vec::with_capacity(shards);
+    for k in 0..shards {
+        replay_addrs.push(wait_registered(
+            control,
+            children,
+            &Role::Replay(k).name(),
+            startup,
+        )?);
+    }
+    println!(
+        "services up: param {param_addr}, replay {}",
+        replay_addrs.join(" ")
+    );
+
+    // workers: trainer, executors, evaluator
+    let mut workers = vec![Role::Trainer];
+    for k in 0..shards {
+        workers.push(Role::Executor(k));
+    }
+    workers.push(Role::Evaluator);
+    for role in workers {
+        children.push(spawn_role(
+            cfg,
+            role,
+            control.addr(),
+            Some(&param_addr),
+            &replay_addrs,
+        )?);
+        wait_registered(control, children, &role.name(), startup)?;
+    }
+    println!(
+        "launched {} nodes: {}",
+        children.len(),
+        children
+            .iter()
+            .map(|c| c.role.name())
+            .collect::<Vec<_>>()
+            .join(" | ")
+    );
+    Ok(())
+}
+
+/// Spawn and supervise the full program graph as separate `mava node`
+/// processes. Runs until any worker exits (a completed budget or a
+/// death — either ends the run), then broadcasts `Stop`, waits up to
+/// `cfg.dist_timeout_s` for stragglers (killing any that ignore it)
+/// and folds every child's exit into the same typed-outcome error
+/// reporting the in-process launcher uses: `Err` names each failed
+/// node.
+pub fn launch(cfg: &TrainConfig) -> Result<()> {
+    let stop = StopSignal::new();
+    let mut control = ControlServer::bind(&cfg.bind_host, stop.clone())?;
+    let mut children: Vec<ChildNode> = Vec::new();
+    if let Err(e) = spawn_graph(cfg, &control, &mut children) {
+        // startup failed: tear everything down before reporting
+        for c in children.iter_mut() {
+            let _ = c.child.kill();
+            let _ = c.child.wait();
+        }
+        control.shutdown();
+        return Err(e.context("distributed launch startup"));
+    }
+
+    // --- supervise: any child exit (or a lost control connection,
+    // which trips `stop` inside the ControlServer) ends the run ---
+    let mut early: Vec<Option<std::process::ExitStatus>> =
+        children.iter().map(|_| None).collect();
+    'supervise: loop {
+        std::thread::sleep(Duration::from_millis(25));
+        for (i, c) in children.iter_mut().enumerate() {
+            if let Ok(Some(status)) = c.child.try_wait() {
+                early[i] = Some(status);
+                println!("node {} exited ({status})", c.role.name());
+                break 'supervise;
+            }
+        }
+        if stop.is_stopped() {
+            for lost in control.lost_nodes() {
+                eprintln!("node {lost} dropped its control connection");
+            }
+            break;
+        }
+    }
+
+    // --- wind down: broadcast Stop, give stragglers dist_timeout_s,
+    // kill any that ignore it ---
+    stop.stop();
+    control.stop_all();
+    let deadline = Instant::now() + rpc_timeout(cfg);
+    let mut outcomes = Vec::with_capacity(children.len());
+    for (i, mut c) in children.into_iter().enumerate() {
+        let status = match early[i] {
+            Some(status) => Some(status),
+            None => loop {
+                match c.child.try_wait() {
+                    Ok(Some(status)) => break Some(status),
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10))
+                    }
+                    _ => break None,
+                }
+            },
+        };
+        let lost = control.lost(&c.role.name());
+        outcomes.push(match status {
+            Some(status) => judge(c.role, status, lost),
+            None => {
+                let _ = c.child.kill();
+                let _ = c.child.wait();
+                NodeOutcome {
+                    name: c.role.name(),
+                    kind: c.role.kind(),
+                    result: Err(anyhow::anyhow!(
+                        "node stuck: did not exit within {:?} after \
+                         shutdown was requested (process killed)",
+                        rpc_timeout(cfg)
+                    )),
+                }
+            }
+        });
+    }
+    control.shutdown();
+    for o in &outcomes {
+        match &o.result {
+            Ok(()) => println!("  {:<12} ok", o.name),
+            Err(e) => println!("  {:<12} FAILED: {e:#}", o.name),
+        }
+    }
+    outcomes_to_result(&outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn role_arg_roundtrip() {
+        for role in [
+            Role::Param,
+            Role::Replay(3),
+            Role::Trainer,
+            Role::Executor(7),
+            Role::Evaluator,
+        ] {
+            assert_eq!(Role::parse(&role.arg()).unwrap(), role);
+        }
+        assert!(Role::parse("banana").is_err());
+        assert!(Role::parse("executor:x").is_err());
+    }
+
+    #[test]
+    fn role_names_and_kinds() {
+        assert_eq!(Role::Param.name(), "param_server");
+        assert_eq!(Role::Replay(2).name(), "replay_2");
+        assert_eq!(Role::Executor(0).name(), "executor_0");
+        assert_eq!(Role::Param.kind(), NodeKind::ParameterServer);
+        assert_eq!(Role::Replay(0).kind(), NodeKind::Replay);
+        assert_eq!(Role::Trainer.kind(), NodeKind::Trainer);
+        assert_eq!(Role::Evaluator.kind(), NodeKind::Evaluator);
+    }
+
+    /// `judge` is the driver's exit-status → typed-outcome map: clean
+    /// exits are Ok even when the control connection dropped (every
+    /// exiting process drops it), unclean exits name the loss.
+    #[test]
+    fn judge_maps_exit_statuses() {
+        use std::process::Command;
+        let ok = Command::new("true").status().unwrap();
+        let fail = Command::new("false").status().unwrap();
+        assert!(judge(Role::Trainer, ok, true).result.is_ok());
+        let o = judge(Role::Executor(1), fail, false);
+        assert_eq!(o.name, "executor_1");
+        assert!(o.result.unwrap_err().to_string().contains("exited"));
+        let o = judge(Role::Executor(1), fail, true);
+        assert!(o
+            .result
+            .unwrap_err()
+            .to_string()
+            .contains("control connection lost"));
+    }
+}

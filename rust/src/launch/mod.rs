@@ -20,8 +20,11 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
+
+pub mod dist;
 
 /// Cooperative shutdown flag shared by every node of a program.
 #[derive(Clone, Default)]
@@ -159,6 +162,70 @@ impl LaunchHandle {
     /// with the first failure's message.
     pub fn join_all(self) -> Result<()> {
         outcomes_to_result(&self.join())
+    }
+
+    /// [`LaunchHandle::join`] with a deadline: waits up to `timeout`
+    /// for every node to finish, joining them as they complete. A node
+    /// still running at the deadline — e.g. wedged in a blocking socket
+    /// read that no [`StopSignal`] can interrupt — is *abandoned* (its
+    /// `JoinHandle` is dropped, the thread detaches) and its
+    /// [`NodeOutcome`] is an `Err` naming it as stuck, instead of
+    /// hanging the supervisor forever.
+    pub fn join_deadline(self, timeout: Duration) -> Vec<NodeOutcome> {
+        let deadline = Instant::now() + timeout;
+        let mut slots: Vec<
+            Option<(String, NodeKind, JoinHandle<Result<()>>)>,
+        > = self.threads.into_iter().map(Some).collect();
+        let mut outcomes: Vec<Option<NodeOutcome>> =
+            (0..slots.len()).map(|_| None).collect();
+        loop {
+            let mut pending = false;
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let finished = match slot {
+                    Some((_, _, h)) => h.is_finished(),
+                    None => continue,
+                };
+                if !finished {
+                    pending = true;
+                    continue;
+                }
+                let (name, kind, h) = slot.take().unwrap();
+                let result = match h.join() {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!(
+                        "node panicked: {}",
+                        panic_message(&*p)
+                    )),
+                };
+                outcomes[i] = Some(NodeOutcome { name, kind, result });
+            }
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for (i, slot) in slots.into_iter().enumerate() {
+            if let Some((name, kind, _abandoned)) = slot {
+                outcomes[i] = Some(NodeOutcome {
+                    name,
+                    kind,
+                    result: Err(anyhow!(
+                        "node stuck: did not exit within {timeout:?} \
+                         after shutdown was requested (thread abandoned)"
+                    )),
+                });
+            }
+        }
+        outcomes
+            .into_iter()
+            .map(|o| o.expect("every slot resolved"))
+            .collect()
+    }
+
+    /// [`LaunchHandle::join_all`] with the deadline semantics of
+    /// [`LaunchHandle::join_deadline`].
+    pub fn join_all_deadline(self, timeout: Duration) -> Result<()> {
+        outcomes_to_result(&self.join_deadline(timeout))
     }
 
     /// Signal shutdown and wait.
@@ -335,6 +402,46 @@ mod tests {
             "must name the failed node: {collapsed}"
         );
         assert!(collapsed.to_string().contains("replay table corrupt"));
+    }
+
+    /// Satellite: a node wedged in a blocking call cannot hang the
+    /// supervisor — `join_deadline` abandons it and reports it *by
+    /// name* while well-behaved siblings join normally.
+    #[test]
+    fn join_deadline_names_the_stuck_node() {
+        let stop = StopSignal::new();
+        let mut p = Program::new();
+        let s = stop.clone();
+        p.add_node("executor_0", NodeKind::Executor, move || {
+            while !s.is_stopped() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            Ok(())
+        });
+        p.add_node("trainer", NodeKind::Trainer, || {
+            // simulates a blocking socket read with no timeout: never
+            // observes the stop signal
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        });
+        let h = LocalLauncher::launch(p, stop.clone());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        stop.stop();
+        let outcomes =
+            h.join_deadline(std::time::Duration::from_millis(200));
+        assert_eq!(outcomes.len(), 2);
+        assert!(outcomes[0].result.is_ok(), "sibling joined cleanly");
+        let err = outcomes[1].result.as_ref().unwrap_err();
+        assert!(
+            err.to_string().contains("stuck"),
+            "stuck node reported: {err}"
+        );
+        let collapsed = outcomes_to_result(&outcomes).unwrap_err();
+        assert!(
+            collapsed.to_string().contains("node trainer failed"),
+            "must name the stuck node: {collapsed}"
+        );
     }
 
     /// Panics flow through the same channel as errors.

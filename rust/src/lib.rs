@@ -18,7 +18,10 @@
 //! - [`replay`] — Reverb-style tables: selectors, rate limiters, adders;
 //!   `ShardedTable` per-executor sharding (DESIGN.md §5)
 //! - [`params`] — versioned parameter server
-//! - [`launch`] — Launchpad-style program graph + local launcher
+//! - [`launch`] — Launchpad-style program graph + local launcher;
+//!   `launch::dist` multi-process launch driver (DESIGN.md §10)
+//! - [`net`] — wire layer for multi-process runs: frame codec +
+//!   parameter / replay / control TCP protocols (DESIGN.md §10)
 //! - [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt`
 //! - [`arch`] — system architectures (decentralised / centralised / networked)
 //! - [`systems`] — MADQN, DIAL, VDN, QMIX, MADDPG, MAD4PG
@@ -41,6 +44,7 @@ pub mod experiment;
 pub mod exploration;
 pub mod launch;
 pub mod metrics;
+pub mod net;
 pub mod params;
 pub mod replay;
 pub mod rng;

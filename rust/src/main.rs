@@ -3,6 +3,10 @@
 //! ```text
 //! mava train       [--config FILE] [--key value ...]  run a distributed system
 //! mava eval        [--config FILE] [--key value ...]  greedy evaluation only
+//! mava launch      [--config FILE] [--key value ...]  multi-process run: one
+//!                                                     OS process per node
+//! mava node        --role R --control ADDR [...]      one node of a launch
+//!                                                     (spawned by `launch`)
 //! mava experiment  [--config FILE] [--key value ...]  multi-seed suite ->
 //!                                                     BENCH_<scenario>.json
 //! mava check-bench [DIR ...]                          validate BENCH_*.json
@@ -17,12 +21,13 @@ use anyhow::{bail, ensure, Context, Result};
 
 use mava::config::{RawConfig, TrainConfig};
 use mava::experiment::{self, ExperimentOpts};
+use mava::launch::dist::{self, NodeOpts, Role};
 use mava::runtime::{Engine, Manifest};
 use mava::systems::{self, SystemBuilder, SystemKind, SystemSpec};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mava <train|eval|experiment|check-bench|list|info>\n\
+        "usage: mava <train|eval|launch|node|experiment|check-bench|list|info>\n\
          \x20           [--config FILE] [--key value ...]\n\
          keys: system preset arch num_executors num_envs_per_executor\n\
          \x20     max_env_steps lr tau n_step eps_start eps_end\n\
@@ -107,6 +112,116 @@ fn cmd_train(args: &[String]) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn launch_usage() {
+    println!(
+        "usage: mava launch [--config FILE] [--key value ...]\n\
+         \n\
+         Multi-process run of the program graph (DESIGN.md §10): one\n\
+         OS process per node — parameter server, one replay shard per\n\
+         executor, trainer, executors, evaluator — wired over loopback\n\
+         TCP (--bind_host to change). The driver discovers service\n\
+         addresses through a control channel, supervises every child,\n\
+         and reports failures by node name; a node that dies trips the\n\
+         stop signal so its siblings wind down. Accepts every train\n\
+         config key, most relevantly:\n\
+         \x20 --num_executors N    executor processes (and replay shards)\n\
+         \x20 --bind_host HOST     service bind host (default 127.0.0.1)\n\
+         \x20 --dist_timeout_s S   wind-down grace before a straggler\n\
+         \x20                      is killed (default 60)"
+    );
+}
+
+fn node_usage() {
+    println!(
+        "usage: mava node --role ROLE --control ADDR\n\
+         \x20               [--param ADDR] [--replay ADDR ...]\n\
+         \x20               [--config FILE] [--key value ...]\n\
+         \n\
+         Runs ONE node of a distributed program (normally spawned by\n\
+         `mava launch`, not by hand).\n\
+         \x20 --role ROLE      param | replay:K | trainer | executor:K\n\
+         \x20                  | evaluator\n\
+         \x20 --control ADDR   the driver's control-server address\n\
+         \x20 --param ADDR     parameter service (worker roles)\n\
+         \x20 --replay ADDR    replay shard service, repeatable in\n\
+         \x20                  shard order (trainer: all; executor K:\n\
+         \x20                  entry K)"
+    );
+}
+
+fn cmd_launch(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "-h" || a == "--help" || a == "help") {
+        launch_usage();
+        return Ok(());
+    }
+    let cfg = parse_cfg(args)?;
+    systems::check_artifacts(&cfg)?;
+    println!(
+        "launching {} on {} ({} executor processes x {} envs)",
+        cfg.system, cfg.preset, cfg.num_executors, cfg.num_envs_per_executor
+    );
+    dist::launch(&cfg)
+}
+
+fn cmd_node(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "-h" || a == "--help" || a == "help") {
+        node_usage();
+        return Ok(());
+    }
+    let mut role = None;
+    let mut control = None;
+    let mut param = None;
+    let mut replay = Vec::new();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--role" => {
+                role = Some(Role::parse(
+                    args.get(i + 1).context("--role requires a value")?,
+                )?);
+                i += 2;
+            }
+            "--control" => {
+                control = Some(
+                    args.get(i + 1)
+                        .context("--control requires an address")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--param" => {
+                param = Some(
+                    args.get(i + 1)
+                        .context("--param requires an address")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            "--replay" => {
+                replay.push(
+                    args.get(i + 1)
+                        .context("--replay requires an address")?
+                        .clone(),
+                );
+                i += 2;
+            }
+            _ => {
+                rest.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let opts = NodeOpts {
+        role: role.context("mava node requires --role")?,
+        control: control.context("mava node requires --control")?,
+        param,
+        replay,
+    };
+    let cfg = parse_cfg(&rest)?;
+    dist::run_node(&cfg, &opts)
 }
 
 fn cmd_eval(args: &[String]) -> Result<()> {
@@ -314,6 +429,8 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&args[1..]),
         "eval" => cmd_eval(&args[1..]),
+        "launch" => cmd_launch(&args[1..]),
+        "node" => cmd_node(&args[1..]),
         "experiment" => cmd_experiment(&args[1..]),
         "check-bench" | "check_bench" => cmd_check_bench(&args[1..]),
         "list" => cmd_list(&args[1..]),

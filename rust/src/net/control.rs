@@ -1,0 +1,335 @@
+//! The launch driver's control channel: node registration (`Hello`)
+//! and cooperative shutdown (`Stop`) over one long-lived TCP
+//! connection per node.
+//!
+//! The [`ControlServer`] lives in the `mava launch` driver process.
+//! Every spawned node connects a [`ControlClient`] at startup, sends
+//! one `Hello` frame carrying its name, role and advertised service
+//! address (empty for pure workers), then holds the connection open.
+//! That gives the driver three things from one socket: address
+//! discovery ([`ControlServer::wait_for`]), a broadcast stop channel
+//! ([`ControlServer::stop_all`] → [`ControlClient::watch_stop`]), and
+//! *liveness* — a node that dies drops its connection, the server
+//! marks it lost and trips the driver's [`StopSignal`] so siblings
+//! wind down, exactly like a dead thread in the in-process launcher.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::launch::StopSignal;
+use crate::net::frame::{encode_frame, read_frame_polled, FrameKind};
+use crate::net::param::{spawn_accept_loop, POLL};
+use crate::net::wire;
+
+/// What the control server knows about one registered node.
+#[derive(Clone, Debug)]
+pub struct NodeEntry {
+    /// Role string from the node's `Hello` (e.g. `"executor:0"`).
+    pub role: String,
+    /// Service address the node advertised; empty for pure workers.
+    pub addr: String,
+    /// Whether the node's control connection dropped before shutdown
+    /// was requested.
+    pub lost: bool,
+}
+
+#[derive(Default)]
+struct Registry {
+    nodes: HashMap<String, NodeEntry>,
+    writers: Vec<(String, TcpStream)>,
+}
+
+/// Driver-side registration + stop channel (one per `mava launch`).
+pub struct ControlServer {
+    addr: String,
+    halt: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    registry: Arc<Mutex<Registry>>,
+}
+
+impl ControlServer {
+    /// Bind on `host` (ephemeral port). A node connection that drops
+    /// before `stop` is tripped marks the node lost and trips `stop`.
+    pub fn bind(host: &str, stop: StopSignal) -> Result<Self> {
+        let listener = std::net::TcpListener::bind((host, 0))
+            .with_context(|| format!("bind control server on {host}"))?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let halt = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let registry = Arc::new(Mutex::new(Registry::default()));
+        let conn_halt = halt.clone();
+        let conn_registry = registry.clone();
+        let accept = spawn_accept_loop(
+            listener,
+            halt.clone(),
+            conns.clone(),
+            "mava-ctl-srv",
+            move |stream| {
+                serve_conn(stream, &conn_registry, &stop, &conn_halt);
+            },
+        );
+        Ok(ControlServer {
+            addr,
+            halt,
+            accept: Some(accept),
+            conns,
+            registry,
+        })
+    }
+
+    /// The bound `host:port` nodes connect back to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Block until the node `name` has sent its `Hello`, returning the
+    /// address it advertised. Errors after `timeout`.
+    pub fn wait_for(&self, name: &str, timeout: Duration) -> Result<String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(entry) = self.registry.lock().unwrap().nodes.get(name)
+            {
+                return Ok(entry.addr.clone());
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "node {name} did not register with the control server \
+                     within {timeout:?}"
+                );
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Whether `name`'s control connection dropped before shutdown was
+    /// requested (i.e. the node died rather than being stopped).
+    pub fn lost(&self, name: &str) -> bool {
+        self.registry
+            .lock()
+            .unwrap()
+            .nodes
+            .get(name)
+            .is_some_and(|e| e.lost)
+    }
+
+    /// Names of nodes whose connections dropped unexpectedly.
+    pub fn lost_nodes(&self) -> Vec<String> {
+        let reg = self.registry.lock().unwrap();
+        let mut names: Vec<String> = reg
+            .nodes
+            .iter()
+            .filter(|(_, e)| e.lost)
+            .map(|(n, _)| n.clone())
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Broadcast a `Stop` frame to every registered node.
+    pub fn stop_all(&self) {
+        let mut frame = Vec::new();
+        encode_frame(FrameKind::Stop, &[], &mut frame);
+        let mut reg = self.registry.lock().unwrap();
+        for (_, stream) in reg.writers.iter_mut() {
+            // a dead peer's write failing is fine: its reader thread
+            // already marked it lost
+            let _ = stream.write_all(&frame);
+        }
+    }
+
+    /// Stop accepting and join every connection thread.
+    pub fn shutdown(&mut self) {
+        self.halt.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ControlServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve one node's control connection: read the `Hello`, register,
+/// then watch for EOF (node death) until halted.
+fn serve_conn(
+    mut stream: TcpStream,
+    registry: &Mutex<Registry>,
+    stop: &StopSignal,
+    halt: &AtomicBool,
+) {
+    let mut payload = Vec::new();
+    let hello = read_frame_polled(&mut stream, &mut payload, &mut || {
+        halt.load(Ordering::Acquire)
+    });
+    let name = match hello {
+        Ok(Some(FrameKind::Hello)) => {
+            let Ok((name, role, addr)) = wire::decode_hello(&payload) else {
+                return;
+            };
+            let mut reg = registry.lock().unwrap();
+            if let Ok(writer) = stream.try_clone() {
+                reg.writers.push((name.clone(), writer));
+            }
+            reg.nodes.insert(
+                name.clone(),
+                NodeEntry { role, addr, lost: false },
+            );
+            name
+        }
+        // anything else before a Hello is not a node: drop it
+        _ => return,
+    };
+    loop {
+        match read_frame_polled(&mut stream, &mut payload, &mut || {
+            halt.load(Ordering::Acquire)
+        }) {
+            Ok(Some(_)) => {} // nodes don't send after Hello; ignore
+            Ok(None) => return, // halted: clean driver shutdown
+            Err(_) => {
+                // EOF or socket error: the node is gone. If shutdown
+                // was not already requested this is a *death* — name
+                // it and wind the program down.
+                if !halt.load(Ordering::Acquire) && !stop.is_stopped() {
+                    if let Some(e) =
+                        registry.lock().unwrap().nodes.get_mut(&name)
+                    {
+                        e.lost = true;
+                    }
+                    stop.stop();
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Node-side end of the control channel.
+pub struct ControlClient {
+    stream: TcpStream,
+}
+
+impl ControlClient {
+    /// Connect to the driver at `addr` and register as `name` with
+    /// `role`, advertising `advertise` (a service address, or `""`).
+    pub fn connect(
+        addr: &str,
+        name: &str,
+        role: &str,
+        advertise: &str,
+    ) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect control server {addr}"))?;
+        stream.set_read_timeout(Some(POLL))?;
+        stream.set_nodelay(true)?;
+        let mut pay = Vec::new();
+        wire::encode_hello(name, role, advertise, &mut pay);
+        let mut frame = Vec::new();
+        encode_frame(FrameKind::Hello, &pay, &mut frame);
+        stream.write_all(&frame).context("send hello")?;
+        Ok(ControlClient { stream })
+    }
+
+    /// Spawn a watcher thread that trips `stop` when the driver sends
+    /// `Stop` — or when the driver's connection drops, so an orphaned
+    /// node winds down instead of running forever.
+    pub fn watch_stop(&self, stop: StopSignal) -> Result<JoinHandle<()>> {
+        let mut stream = self.stream.try_clone().context("clone control")?;
+        Ok(std::thread::Builder::new()
+            .name("mava-ctl-watch".into())
+            .spawn(move || {
+                let mut payload = Vec::new();
+                loop {
+                    match read_frame_polled(
+                        &mut stream,
+                        &mut payload,
+                        &mut || stop.is_stopped(),
+                    ) {
+                        Ok(Some(FrameKind::Stop)) | Ok(None) | Err(_) => {
+                            stop.stop();
+                            return;
+                        }
+                        Ok(Some(_)) => {}
+                    }
+                }
+            })
+            .expect("spawn control watcher"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_registers_and_stop_broadcasts() {
+        let stop = StopSignal::new();
+        let mut srv = ControlServer::bind("127.0.0.1", stop.clone()).unwrap();
+        let client = ControlClient::connect(
+            srv.addr(),
+            "trainer",
+            "trainer",
+            "10.0.0.1:5000",
+        )
+        .unwrap();
+        let addr = srv.wait_for("trainer", Duration::from_secs(5)).unwrap();
+        assert_eq!(addr, "10.0.0.1:5000");
+        assert!(!srv.lost("trainer"));
+
+        let node_stop = StopSignal::new();
+        let watcher = client.watch_stop(node_stop.clone()).unwrap();
+        srv.stop_all();
+        watcher.join().unwrap();
+        assert!(node_stop.is_stopped(), "Stop frame reached the node");
+        // an orderly stop is not a loss
+        assert!(!srv.lost("trainer"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn dropped_connection_marks_lost_and_trips_stop() {
+        let stop = StopSignal::new();
+        let srv = ControlServer::bind("127.0.0.1", stop.clone()).unwrap();
+        let client = ControlClient::connect(
+            srv.addr(),
+            "executor_0",
+            "executor:0",
+            "",
+        )
+        .unwrap();
+        srv.wait_for("executor_0", Duration::from_secs(5)).unwrap();
+        drop(client); // the node "dies"
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !stop.is_stopped() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(stop.is_stopped(), "node death trips the stop signal");
+        assert!(srv.lost("executor_0"));
+        assert_eq!(srv.lost_nodes(), vec!["executor_0".to_string()]);
+    }
+
+    #[test]
+    fn wait_for_times_out_with_name() {
+        let srv =
+            ControlServer::bind("127.0.0.1", StopSignal::new()).unwrap();
+        let err = srv
+            .wait_for("ghost", Duration::from_millis(50))
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+    }
+}

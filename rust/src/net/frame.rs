@@ -1,0 +1,416 @@
+//! The length-prefixed, versioned frame codec every mava wire protocol
+//! speaks (DESIGN.md §10).
+//!
+//! A frame is a fixed 12-byte header followed by the payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  b"MV"
+//! 2       1     wire version (WIRE_VERSION = 1)
+//! 3       1     frame kind (FrameKind as u8)
+//! 4       4     payload length, u32 little-endian (<= MAX_PAYLOAD)
+//! 8       4     CRC32 (IEEE) of the payload, u32 little-endian
+//! 12      len   payload bytes
+//! ```
+//!
+//! Decoding is total: truncated, corrupted or wrong-version input is
+//! rejected with a typed [`FrameError`] — never a panic, and never a
+//! read past the declared payload (the length field is validated
+//! against [`MAX_PAYLOAD`] *before* any allocation, so a corrupt
+//! length cannot trigger an abort-on-alloc).
+
+use std::io::Read;
+
+/// Wire protocol version; bumped on any incompatible frame or payload
+/// layout change. Peers reject frames from other versions.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame magic: the first two bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"MV";
+
+/// Fixed frame header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Upper bound on a frame payload (256 MiB). Large enough for any
+/// realistic parameter blob; small enough that a corrupt length field
+/// is rejected instead of driving a huge allocation.
+pub const MAX_PAYLOAD: usize = 256 * 1024 * 1024;
+
+/// Every message type of the parameter-server, replay and control
+/// protocols (DESIGN.md §10 wire tables).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Control: node → driver registration (name, role, advertised
+    /// service address).
+    Hello = 0,
+    /// Control: driver → node shutdown request (empty payload).
+    Stop = 1,
+    /// Param: client → server "send params newer than version V".
+    FetchParams = 2,
+    /// Param: server → client versioned parameter blob.
+    Params = 3,
+    /// Param: server → client "nothing newer than your version".
+    ParamsCurrent = 4,
+    /// Param: trainer → server new parameter blob.
+    PublishParams = 5,
+    /// Param: server → trainer publish acknowledgement (new version).
+    PublishAck = 6,
+    /// Replay: adder → shard one item insert (priority + item).
+    InsertItem = 7,
+    /// Replay: shard → adder insert acknowledgement (accepted flag).
+    InsertAck = 8,
+    /// Replay: trainer → shard "sample a batch of N items".
+    SampleRequest = 9,
+    /// Replay: shard → trainer a sampled batch of items.
+    SampleBatch = 10,
+    /// Replay: shard → trainer "not admissible yet, retry" (the remote
+    /// mirror of a rate-limited shard probe).
+    SampleRetry = 11,
+    /// Replay: shard → trainer "this shard is closed" (shutdown).
+    SourceClosed = 12,
+    /// Either direction: a rendered error message.
+    Error = 13,
+}
+
+impl FrameKind {
+    /// Every frame kind, for exhaustive round-trip tests.
+    pub const ALL: [FrameKind; 14] = [
+        FrameKind::Hello,
+        FrameKind::Stop,
+        FrameKind::FetchParams,
+        FrameKind::Params,
+        FrameKind::ParamsCurrent,
+        FrameKind::PublishParams,
+        FrameKind::PublishAck,
+        FrameKind::InsertItem,
+        FrameKind::InsertAck,
+        FrameKind::SampleRequest,
+        FrameKind::SampleBatch,
+        FrameKind::SampleRetry,
+        FrameKind::SourceClosed,
+        FrameKind::Error,
+    ];
+
+    /// Parse a kind byte; `None` for unknown kinds.
+    pub fn from_byte(b: u8) -> Option<FrameKind> {
+        Self::ALL.get(b as usize).copied()
+    }
+}
+
+/// Typed decode/IO failure of the frame codec. Every malformed input
+/// maps to one of these — the codec never panics.
+#[derive(Debug)]
+pub enum FrameError {
+    /// An underlying I/O error (excluding clean EOF, which is
+    /// [`FrameError::Truncated`]).
+    Io(std::io::Error),
+    /// Input ended (EOF or short slice) before the frame completed.
+    Truncated,
+    /// First two bytes were not [`MAGIC`].
+    BadMagic([u8; 2]),
+    /// Frame from an incompatible [`WIRE_VERSION`].
+    BadVersion(u8),
+    /// Unknown [`FrameKind`] byte.
+    UnknownKind(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// Payload CRC32 mismatch.
+    Corrupt {
+        /// CRC the header declared.
+        expected: u32,
+        /// CRC of the payload actually read.
+        got: u32,
+    },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+            FrameError::Truncated => write!(f, "truncated frame"),
+            FrameError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:02x?}")
+            }
+            FrameError::BadVersion(v) => write!(
+                f,
+                "unsupported wire version {v} (expected {WIRE_VERSION})"
+            ),
+            FrameError::UnknownKind(k) => {
+                write!(f, "unknown frame kind {k}")
+            }
+            FrameError::Oversized(n) => write!(
+                f,
+                "frame payload of {n} bytes exceeds the {MAX_PAYLOAD} \
+                 byte cap"
+            ),
+            FrameError::Corrupt { expected, got } => write!(
+                f,
+                "corrupt frame payload: crc {got:#010x}, header says \
+                 {expected:#010x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC32 (IEEE 802.3) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// Append one encoded frame (header + payload) to `out`.
+///
+/// Panics only if `payload` exceeds [`MAX_PAYLOAD`] — encoders own
+/// their payload sizes; the decode path never panics.
+pub fn encode_frame(kind: FrameKind, payload: &[u8], out: &mut Vec<u8>) {
+    assert!(
+        payload.len() <= MAX_PAYLOAD,
+        "frame payload {} exceeds MAX_PAYLOAD",
+        payload.len()
+    );
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// One encoded frame as a fresh vector ([`encode_frame`] convenience).
+pub fn frame_bytes(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_frame(kind, payload, &mut out);
+    out
+}
+
+/// Validate a 12-byte header; returns `(kind, payload_len, crc)`.
+fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(FrameKind, usize, u32), FrameError> {
+    if h[0..2] != MAGIC {
+        return Err(FrameError::BadMagic([h[0], h[1]]));
+    }
+    if h[2] != WIRE_VERSION {
+        return Err(FrameError::BadVersion(h[2]));
+    }
+    let kind = FrameKind::from_byte(h[3]).ok_or(FrameError::UnknownKind(h[3]))?;
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    if len as usize > MAX_PAYLOAD {
+        return Err(FrameError::Oversized(len));
+    }
+    let crc = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    Ok((kind, len as usize, crc))
+}
+
+/// Decode one frame from the front of `bytes` without consuming more
+/// than the frame itself: returns `(kind, payload, consumed)`. A slice
+/// shorter than the declared frame is [`FrameError::Truncated`] — the
+/// decoder never reads past `consumed` bytes.
+pub fn decode_slice(bytes: &[u8]) -> Result<(FrameKind, &[u8], usize), FrameError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(FrameError::Truncated);
+    }
+    let mut h = [0u8; HEADER_LEN];
+    h.copy_from_slice(&bytes[..HEADER_LEN]);
+    let (kind, len, crc) = parse_header(&h)?;
+    let end = HEADER_LEN + len;
+    if bytes.len() < end {
+        return Err(FrameError::Truncated);
+    }
+    let payload = &bytes[HEADER_LEN..end];
+    let got = crc32(payload);
+    if got != crc {
+        return Err(FrameError::Corrupt { expected: crc, got });
+    }
+    Ok((kind, payload, end))
+}
+
+/// Read exactly `buf.len()` bytes from `r`, retrying reads that time
+/// out (`WouldBlock` / `TimedOut`, as produced by socket read
+/// timeouts). Between retries `halt` is consulted: once it returns
+/// true and **no** byte of `buf` has been read yet, the wait is
+/// abandoned with `Ok(false)` (a clean between-frames stop); halting
+/// mid-buffer is [`FrameError::Truncated`] since the stream is no
+/// longer framed. Clean EOF is also `Truncated`.
+pub fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    halt: &mut dyn FnMut() -> bool,
+) -> Result<bool, FrameError> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => return Err(FrameError::Truncated),
+            Ok(n) => off += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if halt() {
+                    if off == 0 {
+                        return Ok(false);
+                    }
+                    return Err(FrameError::Truncated);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame from `r` into the reusable `payload` buffer
+/// (cleared and refilled — the steady-state receive path allocates
+/// only when a payload outgrows every previous one). `halt` is polled
+/// while waiting between frames (pair it with a socket read timeout);
+/// `Ok(None)` means it halted before a frame started.
+pub fn read_frame_polled<R: Read>(
+    r: &mut R,
+    payload: &mut Vec<u8>,
+    halt: &mut dyn FnMut() -> bool,
+) -> Result<Option<FrameKind>, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    if !read_full(r, &mut header, halt)? {
+        return Ok(None);
+    }
+    let (kind, len, crc) = parse_header(&header)?;
+    payload.clear();
+    payload.resize(len, 0);
+    if !read_full(r, payload, &mut || false)? {
+        unreachable!("halt closure is constant false");
+    }
+    let got = crc32(payload);
+    if got != crc {
+        return Err(FrameError::Corrupt { expected: crc, got });
+    }
+    Ok(Some(kind))
+}
+
+/// Blocking [`read_frame_polled`]: reads one frame or fails.
+pub fn read_frame_into<R: Read>(
+    r: &mut R,
+    payload: &mut Vec<u8>,
+) -> Result<FrameKind, FrameError> {
+    match read_frame_polled(r, payload, &mut || false)? {
+        Some(kind) => Ok(kind),
+        None => unreachable!("halt closure is constant false"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_slice_and_reader() {
+        let payload = b"hello wire".as_slice();
+        let bytes = frame_bytes(FrameKind::Hello, payload);
+        assert_eq!(bytes.len(), HEADER_LEN + payload.len());
+        let (kind, got, consumed) = decode_slice(&bytes).unwrap();
+        assert_eq!(kind, FrameKind::Hello);
+        assert_eq!(got, payload);
+        assert_eq!(consumed, bytes.len());
+
+        let mut cursor = std::io::Cursor::new(&bytes);
+        let mut buf = Vec::new();
+        let kind = read_frame_into(&mut cursor, &mut buf).unwrap();
+        assert_eq!(kind, FrameKind::Hello);
+        assert_eq!(buf, payload);
+    }
+
+    #[test]
+    fn two_frames_back_to_back() {
+        let mut bytes = frame_bytes(FrameKind::Stop, b"");
+        encode_frame(FrameKind::Error, b"boom", &mut bytes);
+        let (k1, p1, used) = decode_slice(&bytes).unwrap();
+        assert_eq!((k1, p1), (FrameKind::Stop, b"".as_slice()));
+        let (k2, p2, _) = decode_slice(&bytes[used..]).unwrap();
+        assert_eq!((k2, p2), (FrameKind::Error, b"boom".as_slice()));
+    }
+
+    #[test]
+    fn bad_magic_version_kind_size_are_typed() {
+        let good = frame_bytes(FrameKind::Stop, b"x");
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            decode_slice(&bad),
+            Err(FrameError::BadMagic(_))
+        ));
+        let mut bad = good.clone();
+        bad[2] = WIRE_VERSION + 1;
+        assert!(matches!(
+            decode_slice(&bad),
+            Err(FrameError::BadVersion(_))
+        ));
+        let mut bad = good.clone();
+        bad[3] = 200;
+        assert!(matches!(
+            decode_slice(&bad),
+            Err(FrameError::UnknownKind(200))
+        ));
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_slice(&bad),
+            Err(FrameError::Oversized(_))
+        ));
+        let mut bad = good;
+        *bad.last_mut().unwrap() ^= 0xff;
+        assert!(matches!(
+            decode_slice(&bad),
+            Err(FrameError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn eof_is_truncated_not_io() {
+        let bytes = frame_bytes(FrameKind::Params, &[1, 2, 3, 4]);
+        let mut cursor = std::io::Cursor::new(&bytes[..bytes.len() - 1]);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_frame_into(&mut cursor, &mut buf),
+            Err(FrameError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // IEEE CRC32 of "123456789"
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The multi-process wire layer (DESIGN.md §10): a length-prefixed,
+//! versioned frame codec ([`frame`]), payload codecs ([`wire`]) and
+//! three TCP protocols built on them —
+//!
+//! * [`param`] — publish/fetch of the flat `MAVATRN1` parameter blob
+//!   with a monotone version counter, so executors poll a *remote*
+//!   parameter server exactly like the in-process one;
+//! * [`replay`] — adder row inserts streaming to a remote replay
+//!   shard, and trainer sampling via request/response with receive
+//!   buffers reused across batches;
+//! * [`control`] — the launch driver's registration + stop channel
+//!   (`Hello` / `Stop`), which also detects lost nodes by connection
+//!   EOF.
+//!
+//! Everything here is transport only: the services wrap the existing
+//! [`crate::params::ParameterServer`] and [`crate::replay::Table`]
+//! unchanged, and the clients implement the same traits
+//! ([`crate::params::ParamStore`], [`crate::replay::ItemSink`],
+//! [`crate::replay::ItemSource`]) the in-process handles do, so node
+//! loops cannot tell whether their peers share the process.
+
+#![warn(missing_docs)]
+
+pub mod control;
+pub mod frame;
+pub mod param;
+pub mod replay;
+pub mod wire;

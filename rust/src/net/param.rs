@@ -1,0 +1,371 @@
+//! The parameter-server wire protocol (DESIGN.md §10): publish/fetch
+//! of the flat parameter blob with a monotone version counter.
+//!
+//! [`ParamService`] exposes an in-process
+//! [`crate::params::ParameterServer`] over TCP; [`RemoteParamClient`]
+//! implements [`ParamStore`] against such a service, so a
+//! [`crate::systems::TrainerNode`] publishes to — and executors poll —
+//! a remote server through the exact trait surface the in-process
+//! handle provides. Fetches are version-gated (`FetchParams` carries
+//! the client's known version, the server answers `ParamsCurrent` when
+//! nothing newer exists), so steady-state polling moves 12-byte
+//! frames, not parameter blobs.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::frame::{
+    encode_frame, read_frame_polled, FrameError, FrameKind,
+};
+use crate::net::wire;
+use crate::params::{ParamStore, ParameterServer};
+
+/// Poll cadence of the accept loop and the per-connection reads.
+pub(crate) const POLL: Duration = Duration::from_millis(25);
+
+/// Convert a frame-codec error into an `anyhow` error with context.
+pub(crate) fn frame_err(e: FrameError, what: &str) -> anyhow::Error {
+    anyhow::Error::new(e).context(what.to_string())
+}
+
+/// Spawn the shared accept loop every service in this module uses: a
+/// non-blocking listener polled against `halt`, each accepted
+/// connection handed to `handler` on its own thread (collected in
+/// `conns` so shutdown can join them).
+pub(crate) fn spawn_accept_loop(
+    listener: TcpListener,
+    halt: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    thread_name: &str,
+    handler: impl Fn(TcpStream) + Send + Sync + Clone + 'static,
+) -> JoinHandle<()> {
+    let name = thread_name.to_string();
+    std::thread::Builder::new()
+        .name(name.clone())
+        .spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_read_timeout(Some(POLL));
+                    let _ = stream.set_nodelay(true);
+                    let handler = handler.clone();
+                    let h = std::thread::Builder::new()
+                        .name(format!("{name}-conn"))
+                        .spawn(move || handler(stream))
+                        .expect("spawn service connection thread");
+                    conns.lock().unwrap().push(h);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    if halt.load(Ordering::Acquire) {
+                        break;
+                    }
+                    std::thread::sleep(POLL);
+                }
+                Err(_) => break,
+            }
+        })
+        .expect("spawn service accept thread")
+}
+
+/// A TCP front-end for one [`ParameterServer`]: accepts any number of
+/// publisher/fetcher connections and serves them until shutdown.
+pub struct ParamService {
+    addr: String,
+    halt: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ParamService {
+    /// Bind on `host` (ephemeral port) and serve `server`.
+    pub fn bind(server: Arc<ParameterServer>, host: &str) -> Result<Self> {
+        let listener = TcpListener::bind((host, 0))
+            .with_context(|| format!("bind param service on {host}"))?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let halt = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let conn_halt = halt.clone();
+        let accept = spawn_accept_loop(
+            listener,
+            halt.clone(),
+            conns.clone(),
+            "mava-param-srv",
+            move |stream| {
+                serve_conn(stream, &server, &conn_halt);
+            },
+        );
+        Ok(ParamService { addr, halt, accept: Some(accept), conns })
+    }
+
+    /// The bound `host:port` address clients connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting, drain every connection thread and join them.
+    pub fn shutdown(&mut self) {
+        self.halt.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ParamService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve one param connection until EOF, protocol error or halt.
+fn serve_conn(
+    mut stream: TcpStream,
+    server: &ParameterServer,
+    halt: &AtomicBool,
+) {
+    let mut payload = Vec::new();
+    let mut reply = Vec::new();
+    let mut pay = Vec::new();
+    loop {
+        let kind = match read_frame_polled(&mut stream, &mut payload, &mut || {
+            halt.load(Ordering::Acquire)
+        }) {
+            Ok(Some(kind)) => kind,
+            // halted between frames, or the peer went away / sent
+            // garbage: either way this connection is done
+            Ok(None) | Err(_) => break,
+        };
+        reply.clear();
+        pay.clear();
+        let ok = match kind {
+            FrameKind::FetchParams => {
+                let known = match wire::decode_u64(&payload) {
+                    Ok(v) => v,
+                    Err(_) => break,
+                };
+                let (v, blob) = server.get();
+                // an empty blob means nothing was published yet (a
+                // fresh distributed server): clients keep their init
+                // params until the first publish
+                if v > known && !blob.is_empty() {
+                    wire::encode_params(v, &blob, &mut pay);
+                    encode_frame(FrameKind::Params, &pay, &mut reply);
+                } else {
+                    encode_frame(
+                        FrameKind::ParamsCurrent,
+                        &[],
+                        &mut reply,
+                    );
+                }
+                true
+            }
+            FrameKind::PublishParams => {
+                let mut r = wire::WireReader::new(&payload);
+                let mut blob = Vec::new();
+                if r.f32_vec_into(&mut blob).is_err()
+                    || r.finish().is_err()
+                {
+                    break;
+                }
+                server.push(&blob);
+                wire::encode_u64(server.version(), &mut pay);
+                encode_frame(FrameKind::PublishAck, &pay, &mut reply);
+                true
+            }
+            FrameKind::Stop => false,
+            other => {
+                wire::encode_error(
+                    &format!("unexpected frame {other:?} on param port"),
+                    &mut pay,
+                );
+                encode_frame(FrameKind::Error, &pay, &mut reply);
+                false
+            }
+        };
+        if stream.write_all(&reply).is_err() || !ok {
+            break;
+        }
+    }
+}
+
+/// A [`ParamStore`] speaking the wire protocol to a remote
+/// [`ParamService`]. One connection, serialized behind a mutex (each
+/// node holds its own client, so there is no contention to shard);
+/// receive buffers are reused across calls.
+pub struct RemoteParamClient {
+    conn: Mutex<ClientConn>,
+    timeout: Duration,
+}
+
+struct ClientConn {
+    stream: TcpStream,
+    payload: Vec<u8>,
+    out: Vec<u8>,
+    pay: Vec<u8>,
+}
+
+impl RemoteParamClient {
+    /// Connect to a [`ParamService`] at `addr`. `timeout` bounds every
+    /// request/response round trip.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect param server {addr}"))?;
+        stream.set_read_timeout(Some(POLL))?;
+        stream.set_nodelay(true)?;
+        Ok(RemoteParamClient {
+            conn: Mutex::new(ClientConn {
+                stream,
+                payload: Vec::new(),
+                out: Vec::new(),
+                pay: Vec::new(),
+            }),
+            timeout,
+        })
+    }
+
+    /// One request/response round trip; returns the reply kind, with
+    /// the payload left in `conn.payload`.
+    fn rpc(
+        conn: &mut ClientConn,
+        kind: FrameKind,
+        timeout: Duration,
+    ) -> Result<FrameKind> {
+        let mut out = std::mem::take(&mut conn.out);
+        encode_frame(kind, &conn.pay, &mut out);
+        let sent = conn.stream.write_all(&out);
+        out.clear();
+        conn.out = out;
+        sent.context("param request send")?;
+        let deadline = Instant::now() + timeout;
+        match read_frame_polled(
+            &mut conn.stream,
+            &mut conn.payload,
+            &mut || Instant::now() >= deadline,
+        ) {
+            Ok(Some(reply)) => Ok(reply),
+            Ok(None) => bail!(
+                "param server reply timed out after {timeout:?}"
+            ),
+            Err(e) => Err(frame_err(e, "param reply")),
+        }
+    }
+
+    /// Fail on any reply kind other than the expected ones, decoding a
+    /// server-side [`FrameKind::Error`] frame into the message.
+    fn unexpected(conn: &ClientConn, got: FrameKind) -> anyhow::Error {
+        if got == FrameKind::Error {
+            if let Ok(msg) = wire::decode_error(&conn.payload) {
+                return anyhow::anyhow!("param server error: {msg}");
+            }
+        }
+        anyhow::anyhow!("unexpected param server reply {got:?}")
+    }
+}
+
+impl ParamStore for RemoteParamClient {
+    fn push(&self, params: &[f32]) -> Result<u64> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.pay.clear();
+        wire::put_f32s(&mut conn.pay, params);
+        match Self::rpc(&mut conn, FrameKind::PublishParams, self.timeout)? {
+            FrameKind::PublishAck => wire::decode_u64(&conn.payload),
+            other => Err(Self::unexpected(&conn, other)),
+        }
+    }
+
+    fn get(&self) -> Result<(u64, Vec<f32>)> {
+        let mut blob = Vec::new();
+        let version = self.sync(0, &mut blob)?.unwrap_or(0);
+        Ok((version, blob))
+    }
+
+    fn sync(
+        &self,
+        known_version: u64,
+        dst: &mut Vec<f32>,
+    ) -> Result<Option<u64>> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.pay.clear();
+        wire::encode_u64(known_version, &mut conn.pay);
+        match Self::rpc(&mut conn, FrameKind::FetchParams, self.timeout)? {
+            FrameKind::Params => {
+                let v = wire::decode_params_into(&conn.payload, dst)?;
+                Ok(Some(v))
+            }
+            FrameKind::ParamsCurrent => Ok(None),
+            other => Err(Self::unexpected(&conn, other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client(svc: &ParamService) -> RemoteParamClient {
+        RemoteParamClient::connect(svc.addr(), Duration::from_secs(5))
+            .unwrap()
+    }
+
+    #[test]
+    fn publish_fetch_roundtrip() {
+        let server = Arc::new(ParameterServer::new(vec![0.0; 4]));
+        let mut svc =
+            ParamService::bind(server.clone(), "127.0.0.1").unwrap();
+        let c = client(&svc);
+        // fetch the initial blob
+        let mut buf = Vec::new();
+        let v = c.sync(0, &mut buf).unwrap().expect("initial fetch");
+        assert_eq!(v, 1);
+        assert_eq!(buf, vec![0.0; 4]);
+        // current version -> no new blob
+        assert!(c.sync(v, &mut buf).unwrap().is_none());
+        // remote publish bumps the version for everyone
+        let v2 = ParamStore::push(&c, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(server.get(), (2, vec![1.0, 2.0, 3.0, 4.0]));
+        let v3 = c.sync(v, &mut buf).unwrap().expect("new version");
+        assert_eq!(v3, 2);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_blob_reads_as_current() {
+        // a fresh distributed param server holds no params until the
+        // trainer's first publish; fetchers must keep their init blob
+        let server = Arc::new(ParameterServer::new(Vec::new()));
+        let mut svc =
+            ParamService::bind(server.clone(), "127.0.0.1").unwrap();
+        let c = client(&svc);
+        let mut buf = vec![7.0];
+        assert!(c.sync(0, &mut buf).unwrap().is_none());
+        assert_eq!(buf, vec![7.0], "scratch untouched");
+        ParamStore::push(&c, &[5.0]).unwrap();
+        assert_eq!(c.sync(0, &mut buf).unwrap(), Some(2));
+        assert_eq!(buf, vec![5.0]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn get_on_fresh_server_is_empty() {
+        let server = Arc::new(ParameterServer::new(Vec::new()));
+        let svc = ParamService::bind(server, "127.0.0.1").unwrap();
+        let c = client(&svc);
+        let (v, blob) = ParamStore::get(&c).unwrap();
+        assert_eq!(v, 0);
+        assert!(blob.is_empty());
+    }
+}

@@ -1,0 +1,494 @@
+//! The replay wire protocol (DESIGN.md §10): adder inserts streaming
+//! to a remote [`Table`] shard, and trainer sampling via
+//! request/response.
+//!
+//! [`ReplayService`] exposes one shard over TCP. [`RemoteShardClient`]
+//! implements [`ItemSink`] (what executors' adders insert through) and
+//! [`RemoteReplaySampler`] implements [`ItemSource`] (what the trainer
+//! prefetches from, round-robin over every shard service — the remote
+//! mirror of [`crate::replay::ShardedTable`]'s skip-ahead sampling).
+//! Both reuse their receive/send buffers across calls, and both
+//! degrade on a lost connection instead of panicking: a dead sink
+//! reports through [`ItemSink::check`], a dead sampler shard is
+//! dropped from the rotation and sampling continues on the survivors.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::frame::{encode_frame, read_frame_polled, FrameKind};
+use crate::net::param::{frame_err, spawn_accept_loop, POLL};
+use crate::net::wire;
+use crate::replay::{Item, ItemSink, ItemSource, Table};
+
+/// A TCP front-end for one replay [`Table`] shard.
+///
+/// Shutdown order matters: [`Table::close`] the shard *first* (that
+/// unblocks rate-limited inserts and samplers, and makes the service
+/// answer `SourceClosed`), then [`ReplayService::shutdown`].
+pub struct ReplayService {
+    addr: String,
+    halt: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ReplayService {
+    /// Bind on `host` (ephemeral port) and serve `table`.
+    pub fn bind(table: Arc<Table>, host: &str) -> Result<Self> {
+        let listener = std::net::TcpListener::bind((host, 0))
+            .with_context(|| format!("bind replay service on {host}"))?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let halt = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let conn_halt = halt.clone();
+        let accept = spawn_accept_loop(
+            listener,
+            halt.clone(),
+            conns.clone(),
+            "mava-replay-srv",
+            move |stream| {
+                serve_conn(stream, &table, &conn_halt);
+            },
+        );
+        Ok(ReplayService { addr, halt, accept: Some(accept), conns })
+    }
+
+    /// The bound `host:port` address clients connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting and join every connection thread. Close the
+    /// served table *before* calling this, or in-flight blocking
+    /// inserts can delay the join by one rate-limiter wait.
+    pub fn shutdown(&mut self) {
+        self.halt.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReplayService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve one replay connection until EOF, protocol error or halt.
+fn serve_conn(mut stream: TcpStream, table: &Table, halt: &AtomicBool) {
+    let mut payload = Vec::new();
+    let mut reply = Vec::new();
+    let mut pay = Vec::new();
+    loop {
+        let kind = match read_frame_polled(&mut stream, &mut payload, &mut || {
+            halt.load(Ordering::Acquire)
+        }) {
+            Ok(Some(kind)) => kind,
+            Ok(None) | Err(_) => break,
+        };
+        reply.clear();
+        pay.clear();
+        let ok = match kind {
+            FrameKind::InsertItem => {
+                let (item, priority) = match wire::decode_insert(&payload)
+                {
+                    Ok(x) => x,
+                    Err(_) => break,
+                };
+                // blocks under the shard's rate limiter: socket
+                // backpressure is exactly Reverb's insert blocking,
+                // stretched over TCP. Unblocked by Table::close.
+                let (accepted, _evicted) =
+                    table.insert_reuse(item, priority);
+                wire::encode_u64(accepted as u64, &mut pay);
+                encode_frame(FrameKind::InsertAck, &pay, &mut reply);
+                true
+            }
+            FrameKind::SampleRequest => {
+                let n = match wire::decode_u64(&payload) {
+                    Ok(n) => n as usize,
+                    Err(_) => break,
+                };
+                if table.can_sample() {
+                    // may briefly block if a racing sampler drained
+                    // the shard; returns None only once closed
+                    match table.sample(n) {
+                        Some(items) => {
+                            wire::encode_batch(&items, &mut pay);
+                            encode_frame(
+                                FrameKind::SampleBatch,
+                                &pay,
+                                &mut reply,
+                            );
+                        }
+                        None => encode_frame(
+                            FrameKind::SourceClosed,
+                            &[],
+                            &mut reply,
+                        ),
+                    }
+                } else if table.is_closed() {
+                    encode_frame(FrameKind::SourceClosed, &[], &mut reply);
+                } else {
+                    // not admissible yet (warm-up / rate limiter):
+                    // the non-blocking retry keeps the client free to
+                    // round-robin other shards
+                    encode_frame(FrameKind::SampleRetry, &[], &mut reply);
+                }
+                true
+            }
+            FrameKind::Stop => false,
+            other => {
+                wire::encode_error(
+                    &format!("unexpected frame {other:?} on replay port"),
+                    &mut pay,
+                );
+                encode_frame(FrameKind::Error, &pay, &mut reply);
+                false
+            }
+        };
+        if stream.write_all(&reply).is_err() || !ok {
+            break;
+        }
+    }
+}
+
+/// An [`ItemSink`] streaming inserts to one remote [`ReplayService`]
+/// shard — the executor-side end of the replay wire protocol.
+///
+/// Inserts block until the shard acknowledges (mirroring the
+/// in-process rate-limiter blocking); the serialized item is always
+/// handed back for buffer recycling, so the adders' free lists work
+/// unchanged. A connection failure marks the sink dead: subsequent
+/// inserts are rejected and [`ItemSink::check`] reports the stored
+/// error so the executor node fails by name.
+pub struct RemoteShardClient {
+    conn: Mutex<ShardConn>,
+    dead: AtomicBool,
+}
+
+struct ShardConn {
+    stream: TcpStream,
+    payload: Vec<u8>,
+    out: Vec<u8>,
+    pay: Vec<u8>,
+    error: Option<String>,
+}
+
+impl RemoteShardClient {
+    /// Connect to a [`ReplayService`] at `addr`.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect replay shard {addr}"))?;
+        stream.set_read_timeout(Some(POLL))?;
+        stream.set_nodelay(true)?;
+        Ok(RemoteShardClient {
+            conn: Mutex::new(ShardConn {
+                stream,
+                payload: Vec::new(),
+                out: Vec::new(),
+                pay: Vec::new(),
+                error: None,
+            }),
+            dead: AtomicBool::new(false),
+        })
+    }
+
+    fn fail(&self, conn: &mut ShardConn, msg: String) {
+        conn.error.get_or_insert(msg);
+        self.dead.store(true, Ordering::Release);
+    }
+}
+
+impl ItemSink for RemoteShardClient {
+    fn insert_item_reuse(
+        &self,
+        item: Item,
+        priority: f64,
+    ) -> (bool, Option<Item>) {
+        if self.dead.load(Ordering::Acquire) {
+            return (false, Some(item));
+        }
+        let mut conn = self.conn.lock().unwrap();
+        conn.pay.clear();
+        wire::encode_insert(&item, priority, &mut conn.pay);
+        let mut out = std::mem::take(&mut conn.out);
+        encode_frame(FrameKind::InsertItem, &conn.pay, &mut out);
+        let sent = conn.stream.write_all(&out);
+        out.clear();
+        conn.out = out;
+        if let Err(e) = sent {
+            self.fail(&mut conn, format!("replay insert send: {e}"));
+            return (false, Some(item));
+        }
+        // Wait for the ack without a deadline: the shard's rate
+        // limiter may legitimately hold the insert (the in-process
+        // adder blocks identically); a closed table acks
+        // accepted=false, a dead service surfaces as an IO error.
+        let mut payload = std::mem::take(&mut conn.payload);
+        let got = read_frame_polled(
+            &mut conn.stream,
+            &mut payload,
+            &mut || false,
+        );
+        conn.payload = payload;
+        match got {
+            Ok(Some(FrameKind::InsertAck)) => {
+                let accepted = wire::decode_u64(&conn.payload)
+                    .map(|v| v != 0)
+                    .unwrap_or(false);
+                (accepted, Some(item))
+            }
+            Ok(Some(other)) => {
+                self.fail(
+                    &mut conn,
+                    format!("unexpected insert reply {other:?}"),
+                );
+                (false, Some(item))
+            }
+            Ok(None) => unreachable!("halt closure is constant false"),
+            Err(e) => {
+                self.fail(&mut conn, format!("replay insert: {e}"));
+                (false, Some(item))
+            }
+        }
+    }
+
+    fn check(&self) -> Result<()> {
+        if !self.dead.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let conn = self.conn.lock().unwrap();
+        match &conn.error {
+            Some(msg) => bail!("replay shard connection lost: {msg}"),
+            None => bail!("replay shard connection lost"),
+        }
+    }
+}
+
+/// An [`ItemSource`] drawing batches from several remote shard
+/// services round-robin — the trainer-side end of the replay wire
+/// protocol, mirroring [`crate::replay::ShardedTable::sample`]'s
+/// skip-ahead rotation. A shard that answers `SourceClosed`, times
+/// out or drops its connection is removed from the rotation
+/// (degrading to the survivors); only when every shard is gone does
+/// [`ItemSource::sample_batch`] return `None`.
+pub struct RemoteReplaySampler {
+    shards: Vec<Mutex<Option<SamplerConn>>>,
+    cursor: AtomicUsize,
+    timeout: Duration,
+}
+
+struct SamplerConn {
+    addr: String,
+    stream: TcpStream,
+    payload: Vec<u8>,
+    out: Vec<u8>,
+    pay: Vec<u8>,
+}
+
+impl RemoteReplaySampler {
+    /// Connect to every shard service in `addrs`. `timeout` bounds
+    /// each sample round trip (a healthy shard answers `SampleRetry`
+    /// immediately when not admissible, so replies are always fast —
+    /// a timeout means the shard is wedged and it is dropped).
+    pub fn connect(addrs: &[String], timeout: Duration) -> Result<Self> {
+        anyhow::ensure!(!addrs.is_empty(), "no replay shard addresses");
+        let mut shards = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let stream = TcpStream::connect(addr.as_str())
+                .with_context(|| format!("connect replay shard {addr}"))?;
+            stream.set_read_timeout(Some(POLL))?;
+            stream.set_nodelay(true)?;
+            shards.push(Mutex::new(Some(SamplerConn {
+                addr: addr.clone(),
+                stream,
+                payload: Vec::new(),
+                out: Vec::new(),
+                pay: Vec::new(),
+            })));
+        }
+        Ok(RemoteReplaySampler {
+            shards,
+            cursor: AtomicUsize::new(0),
+            timeout,
+        })
+    }
+
+    /// Number of shards still in the rotation.
+    pub fn live_shards(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.lock().unwrap().is_some())
+            .count()
+    }
+
+    /// One sample request against one shard. `Ok(Some)` is a batch,
+    /// `Ok(None)` means "retry later" (rate limiter), `Err` means the
+    /// shard is gone (closed, wedged or disconnected).
+    fn try_shard(
+        conn: &mut SamplerConn,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<Option<Vec<Item>>> {
+        conn.pay.clear();
+        wire::encode_u64(n as u64, &mut conn.pay);
+        let mut out = std::mem::take(&mut conn.out);
+        encode_frame(FrameKind::SampleRequest, &conn.pay, &mut out);
+        let sent = conn.stream.write_all(&out);
+        out.clear();
+        conn.out = out;
+        sent.with_context(|| format!("sample request to {}", conn.addr))?;
+        let deadline = Instant::now() + timeout;
+        let mut payload = std::mem::take(&mut conn.payload);
+        let got = read_frame_polled(
+            &mut conn.stream,
+            &mut payload,
+            &mut || Instant::now() >= deadline,
+        );
+        conn.payload = payload;
+        match got {
+            Ok(Some(FrameKind::SampleBatch)) => {
+                Ok(Some(wire::decode_batch(&conn.payload)?))
+            }
+            Ok(Some(FrameKind::SampleRetry)) => Ok(None),
+            Ok(Some(FrameKind::SourceClosed)) => {
+                bail!("shard {} closed", conn.addr)
+            }
+            Ok(Some(other)) => {
+                bail!("unexpected sample reply {other:?} from {}", conn.addr)
+            }
+            Ok(None) => bail!(
+                "shard {} sample timed out after {timeout:?}",
+                conn.addr
+            ),
+            Err(e) => {
+                Err(frame_err(e, "sample reply").context(conn.addr.clone()))
+            }
+        }
+    }
+}
+
+impl ItemSource for RemoteReplaySampler {
+    fn sample_batch(&self, n: usize) -> Option<Vec<Item>> {
+        let k = self.shards.len();
+        loop {
+            let start = self.cursor.load(Ordering::Relaxed);
+            let mut live = 0usize;
+            for off in 0..k {
+                let idx = (start + off) % k;
+                let mut slot = self.shards[idx].lock().unwrap();
+                let Some(conn) = slot.as_mut() else {
+                    continue;
+                };
+                match Self::try_shard(conn, n, self.timeout) {
+                    Ok(Some(items)) => {
+                        self.cursor.store((idx + 1) % k, Ordering::Relaxed);
+                        return Some(items);
+                    }
+                    Ok(None) => live += 1,
+                    Err(_) => {
+                        // closed / wedged / disconnected: drop the
+                        // shard from the rotation, keep the survivors
+                        *slot = None;
+                    }
+                }
+            }
+            if live == 0 {
+                // every shard gone: the source has ended
+                return None;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replay::Transition;
+
+    fn item(v: f32) -> Item {
+        Item::Transition(Transition { obs: vec![v], ..Default::default() })
+    }
+
+    fn val(i: &Item) -> f32 {
+        i.as_transition().obs[0]
+    }
+
+    #[test]
+    fn remote_insert_then_remote_sample() {
+        let table = Arc::new(Table::uniform(16, 2, 0));
+        let mut svc = ReplayService::bind(table.clone(), "127.0.0.1")
+            .unwrap();
+        let sink = RemoteShardClient::connect(svc.addr()).unwrap();
+        for i in 0..4 {
+            let (accepted, recycled) =
+                sink.insert_item_reuse(item(i as f32), 1.0);
+            assert!(accepted);
+            assert!(recycled.is_some(), "item handed back for reuse");
+        }
+        assert!(sink.check().is_ok());
+        assert_eq!(table.stats().inserts, 4);
+
+        let sampler = RemoteReplaySampler::connect(
+            &[svc.addr().to_string()],
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let batch = sampler.sample_batch(8).expect("batch");
+        assert_eq!(batch.len(), 8);
+        for it in &batch {
+            assert!((0.0..4.0).contains(&val(it)));
+        }
+        table.close();
+        assert!(sampler.sample_batch(1).is_none(), "closed source ends");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn closed_table_rejects_inserts_via_ack() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let svc = ReplayService::bind(table.clone(), "127.0.0.1").unwrap();
+        let sink = RemoteShardClient::connect(svc.addr()).unwrap();
+        table.close();
+        let (accepted, recycled) = sink.insert_item_reuse(item(1.0), 1.0);
+        assert!(!accepted);
+        assert!(recycled.is_some());
+        // a rejected insert is NOT a dead connection
+        assert!(sink.check().is_ok());
+    }
+
+    #[test]
+    fn dead_service_fails_sink_check() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut svc = ReplayService::bind(table.clone(), "127.0.0.1")
+            .unwrap();
+        let sink = RemoteShardClient::connect(svc.addr()).unwrap();
+        assert!(sink.insert_item_reuse(item(1.0), 1.0).0);
+        table.close();
+        svc.shutdown();
+        drop(svc);
+        // the service is gone: the next insert must fail and latch
+        let (accepted, recycled) = sink.insert_item_reuse(item(2.0), 1.0);
+        assert!(!accepted);
+        assert!(recycled.is_some());
+        let err = sink.check().unwrap_err();
+        assert!(
+            err.to_string().contains("connection lost"),
+            "typed sink failure: {err}"
+        );
+    }
+}

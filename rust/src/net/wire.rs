@@ -1,0 +1,399 @@
+//! Payload codecs for the frames of [`crate::net::frame`]: little-
+//! endian, length-prefixed field layouts for params, replay items and
+//! control messages (DESIGN.md §10 wire tables).
+//!
+//! Reading goes through [`WireReader`], a bounds-checked cursor that
+//! validates every length prefix against the bytes actually present
+//! *before* allocating — a corrupt prefix yields a typed error, never
+//! a panic, over-read or giant allocation.
+
+use anyhow::{bail, Result};
+
+use crate::replay::{Item, Sequence, Transition};
+
+/// Bounds-checked little-endian cursor over one frame payload.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    /// A reader over `buf` starting at offset 0.
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "wire payload truncated: need {n} bytes at offset {}, \
+                 have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// One byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Little-endian u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Little-endian u64.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Little-endian f32.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Little-endian f64.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u16-length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = u16::from_le_bytes(self.take(2)?.try_into().unwrap());
+        let bytes = self.take(n as usize)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("wire string not utf-8: {e}"))?
+            .to_string())
+    }
+
+    /// A u32-count-prefixed f32 array, appended to `dst` (cleared
+    /// first). The count is validated against the remaining bytes
+    /// before any allocation.
+    pub fn f32_vec_into(&mut self, dst: &mut Vec<f32>) -> Result<()> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        dst.clear();
+        dst.reserve(n);
+        for c in bytes.chunks_exact(4) {
+            dst.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// A u32-count-prefixed f32 array as a fresh vector.
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let mut v = Vec::new();
+        self.f32_vec_into(&mut v)?;
+        Ok(v)
+    }
+
+    /// A u32-count-prefixed i32 array as a fresh vector.
+    pub fn i32_vec(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        let mut v = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            v.push(i32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    /// Fail unless every byte was consumed (layout drift guard).
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!(
+                "wire payload has {} trailing bytes",
+                self.remaining()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Append a u16-length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    let n = u16::try_from(s.len()).expect("wire string over 64 KiB");
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append a u32-count-prefixed f32 array.
+pub fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append a u32-count-prefixed i32 array.
+pub fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode a `Params` payload: version u64 + f32 blob.
+pub fn encode_params(version: u64, params: &[f32], out: &mut Vec<u8>) {
+    out.extend_from_slice(&version.to_le_bytes());
+    put_f32s(out, params);
+}
+
+/// Decode a `Params` payload into a reusable destination vector;
+/// returns the version.
+pub fn decode_params_into(
+    payload: &[u8],
+    dst: &mut Vec<f32>,
+) -> Result<u64> {
+    let mut r = WireReader::new(payload);
+    let version = r.u64()?;
+    r.f32_vec_into(dst)?;
+    r.finish()?;
+    Ok(version)
+}
+
+/// Encode a `Hello` payload: node name, role tag, advertised address.
+pub fn encode_hello(name: &str, role: &str, addr: &str, out: &mut Vec<u8>) {
+    put_str(out, name);
+    put_str(out, role);
+    put_str(out, addr);
+}
+
+/// Decode a `Hello` payload: `(name, role, addr)`.
+pub fn decode_hello(payload: &[u8]) -> Result<(String, String, String)> {
+    let mut r = WireReader::new(payload);
+    let name = r.str()?;
+    let role = r.str()?;
+    let addr = r.str()?;
+    r.finish()?;
+    Ok((name, role, addr))
+}
+
+const ITEM_TRANSITION: u8 = 0;
+const ITEM_SEQUENCE: u8 = 1;
+
+/// Encode one replay [`Item`]: a kind tag then the field arrays.
+pub fn encode_item(item: &Item, out: &mut Vec<u8>) {
+    match item {
+        Item::Transition(t) => {
+            out.push(ITEM_TRANSITION);
+            put_f32s(out, &t.obs);
+            put_f32s(out, &t.state);
+            put_i32s(out, &t.actions_disc);
+            put_f32s(out, &t.actions_cont);
+            put_f32s(out, &t.rewards);
+            out.extend_from_slice(&t.discount.to_le_bytes());
+            put_f32s(out, &t.next_obs);
+            put_f32s(out, &t.next_state);
+        }
+        Item::Sequence(s) => {
+            out.push(ITEM_SEQUENCE);
+            out.extend_from_slice(&(s.t as u32).to_le_bytes());
+            put_f32s(out, &s.obs);
+            put_i32s(out, &s.actions);
+            put_f32s(out, &s.rewards);
+            put_f32s(out, &s.discounts);
+            put_f32s(out, &s.mask);
+        }
+    }
+}
+
+/// Decode one replay [`Item`] from the reader.
+pub fn decode_item(r: &mut WireReader<'_>) -> Result<Item> {
+    match r.u8()? {
+        ITEM_TRANSITION => Ok(Item::Transition(Transition {
+            obs: r.f32_vec()?,
+            state: r.f32_vec()?,
+            actions_disc: r.i32_vec()?,
+            actions_cont: r.f32_vec()?,
+            rewards: r.f32_vec()?,
+            discount: r.f32()?,
+            next_obs: r.f32_vec()?,
+            next_state: r.f32_vec()?,
+        })),
+        ITEM_SEQUENCE => Ok(Item::Sequence(Sequence {
+            t: r.u32()? as usize,
+            obs: r.f32_vec()?,
+            actions: r.i32_vec()?,
+            rewards: r.f32_vec()?,
+            discounts: r.f32_vec()?,
+            mask: r.f32_vec()?,
+        })),
+        tag => bail!("unknown wire item tag {tag}"),
+    }
+}
+
+/// Encode an `InsertItem` payload: priority f64 + item.
+pub fn encode_insert(item: &Item, priority: f64, out: &mut Vec<u8>) {
+    out.extend_from_slice(&priority.to_le_bytes());
+    encode_item(item, out);
+}
+
+/// Decode an `InsertItem` payload: `(item, priority)`.
+pub fn decode_insert(payload: &[u8]) -> Result<(Item, f64)> {
+    let mut r = WireReader::new(payload);
+    let priority = r.f64()?;
+    let item = decode_item(&mut r)?;
+    r.finish()?;
+    Ok((item, priority))
+}
+
+/// Encode a `SampleBatch` payload: count u32 + items.
+pub fn encode_batch(items: &[Item], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+    for item in items {
+        encode_item(item, out);
+    }
+}
+
+/// Decode a `SampleBatch` payload.
+pub fn decode_batch(payload: &[u8]) -> Result<Vec<Item>> {
+    let mut r = WireReader::new(payload);
+    let n = r.u32()? as usize;
+    // Each item is at least 1 tag byte; reject counts the payload
+    // cannot possibly hold before allocating.
+    if n > r.remaining() {
+        bail!("wire batch count {n} exceeds payload size");
+    }
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        items.push(decode_item(&mut r)?);
+    }
+    r.finish()?;
+    Ok(items)
+}
+
+/// Encode a `u64` payload (PublishAck version, SampleRequest count…).
+pub fn encode_u64(v: u64, out: &mut Vec<u8>) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Decode a `u64` payload.
+pub fn decode_u64(payload: &[u8]) -> Result<u64> {
+    let mut r = WireReader::new(payload);
+    let v = r.u64()?;
+    r.finish()?;
+    Ok(v)
+}
+
+/// Encode an `Error` payload: a rendered message string.
+pub fn encode_error(msg: &str, out: &mut Vec<u8>) {
+    let clipped = if msg.len() > u16::MAX as usize {
+        &msg[..u16::MAX as usize]
+    } else {
+        msg
+    };
+    put_str(out, clipped);
+}
+
+/// Decode an `Error` payload.
+pub fn decode_error(payload: &[u8]) -> Result<String> {
+    let mut r = WireReader::new(payload);
+    let msg = r.str()?;
+    r.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_transition() -> Item {
+        Item::Transition(Transition {
+            obs: vec![1.0, 2.0, 3.0],
+            state: vec![],
+            actions_disc: vec![0, 4],
+            actions_cont: vec![],
+            rewards: vec![0.5, -0.5],
+            discount: 0.99,
+            next_obs: vec![4.0, 5.0, 6.0],
+            next_state: vec![],
+        })
+    }
+
+    fn sample_sequence() -> Item {
+        Item::Sequence(Sequence {
+            t: 3,
+            obs: vec![0.0; 8],
+            actions: vec![1, 2, 3, 4, 5, 6],
+            rewards: vec![1.0; 6],
+            discounts: vec![0.99, 0.99, 0.0],
+            mask: vec![1.0, 1.0, 0.0],
+        })
+    }
+
+    #[test]
+    fn item_roundtrip_both_kinds() {
+        for item in [sample_transition(), sample_sequence()] {
+            let mut out = Vec::new();
+            encode_insert(&item, 2.5, &mut out);
+            let (got, pri) = decode_insert(&out).unwrap();
+            assert_eq!(got, item);
+            assert_eq!(pri, 2.5);
+        }
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let items = vec![sample_transition(), sample_sequence()];
+        let mut out = Vec::new();
+        encode_batch(&items, &mut out);
+        assert_eq!(decode_batch(&out).unwrap(), items);
+    }
+
+    #[test]
+    fn params_roundtrip_reuses_dst() {
+        let mut out = Vec::new();
+        encode_params(7, &[1.0, 2.0, 3.0], &mut out);
+        let mut dst = vec![9.0; 100];
+        let v = decode_params_into(&out, &mut dst).unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(dst, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let mut out = Vec::new();
+        encode_hello("executor_1", "executor:1", "127.0.0.1:9", &mut out);
+        let (name, role, addr) = decode_hello(&out).unwrap();
+        assert_eq!(name, "executor_1");
+        assert_eq!(role, "executor:1");
+        assert_eq!(addr, "127.0.0.1:9");
+    }
+
+    #[test]
+    fn corrupt_counts_error_without_allocating() {
+        // A params payload whose array count is absurdly larger than
+        // the bytes present must fail cleanly.
+        let mut out = Vec::new();
+        encode_params(1, &[1.0], &mut out);
+        let len = out.len();
+        out[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut dst = Vec::new();
+        assert!(decode_params_into(&out, &mut dst).is_err());
+        assert_eq!(out.len(), len);
+
+        let mut out = Vec::new();
+        encode_batch(&[sample_transition()], &mut out);
+        out[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_batch(&out).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut out = Vec::new();
+        encode_u64(3, &mut out);
+        out.push(0);
+        assert!(decode_u64(&out).is_err());
+    }
+}

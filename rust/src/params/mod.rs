@@ -7,6 +7,48 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
+use anyhow::Result;
+
+/// The parameter-store surface nodes program against: the in-process
+/// [`ParameterServer`] and the socket-backed
+/// [`crate::net::param::RemoteParamClient`] both implement it. The
+/// fallible signatures exist for the remote case — the in-process
+/// server never fails.
+pub trait ParamStore: Send + Sync {
+    /// Publish a new parameter vector; returns the new version.
+    fn push(&self, params: &[f32]) -> Result<u64>;
+
+    /// Unconditional fetch of `(version, params)`.
+    fn get(&self) -> Result<(u64, Vec<f32>)>;
+
+    /// Copy into `dst` only if the store moved past `known_version`;
+    /// returns the new version if updated.
+    fn sync(
+        &self,
+        known_version: u64,
+        dst: &mut Vec<f32>,
+    ) -> Result<Option<u64>>;
+}
+
+impl ParamStore for ParameterServer {
+    fn push(&self, params: &[f32]) -> Result<u64> {
+        ParameterServer::push(self, params);
+        Ok(self.version())
+    }
+
+    fn get(&self) -> Result<(u64, Vec<f32>)> {
+        Ok(ParameterServer::get(self))
+    }
+
+    fn sync(
+        &self,
+        known_version: u64,
+        dst: &mut Vec<f32>,
+    ) -> Result<Option<u64>> {
+        Ok(ParameterServer::sync(self, known_version, dst))
+    }
+}
+
 pub struct ParameterServer {
     version: AtomicU64,
     params: RwLock<Vec<f32>>,
@@ -91,7 +133,7 @@ mod tests {
             let s = s.clone();
             std::thread::spawn(move || {
                 for i in 1..200u32 {
-                    s.push(&vec![i as f32; 128]);
+                    s.push(&[i as f32; 128]);
                 }
             })
         };

@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use crate::core::{Actions, ActionsRef, TimeStep};
 use crate::env::{ActionBuf, VecStepBuf};
-use crate::replay::{Item, Sequence, Table, Transition};
+use crate::replay::{Item, ItemSink, Sequence, Transition};
 
 #[derive(Clone, Debug, Default)]
 struct StepRecord {
@@ -68,7 +68,7 @@ fn clear_sequence(s: &mut Sequence) {
 /// `gamma^(n-1) * prod(discounts)`, so the train artifact's single
 /// `y = r + gamma * disc * Q(next)` stays correct for any n.
 pub struct TransitionAdder {
-    table: Arc<Table>,
+    sink: Arc<dyn ItemSink>,
     n_step: usize,
     gamma: f32,
     has_pending: bool,
@@ -84,11 +84,12 @@ pub struct TransitionAdder {
 }
 
 impl TransitionAdder {
-    /// An adder emitting `n_step` transitions into `table`.
-    pub fn new(table: Arc<Table>, n_step: usize, gamma: f32) -> Self {
+    /// An adder emitting `n_step` transitions into `sink` (a local
+    /// [`crate::replay::Table`] or a remote shard client).
+    pub fn new(sink: Arc<dyn ItemSink>, n_step: usize, gamma: f32) -> Self {
         assert!(n_step >= 1);
         TransitionAdder {
-            table,
+            sink,
             n_step,
             gamma,
             has_pending: false,
@@ -251,7 +252,7 @@ impl TransitionAdder {
         front.clear();
         self.free_records.push(front);
         let (_, evicted) =
-            self.table.insert_reuse(Item::Transition(t), 1.0);
+            self.sink.insert_item_reuse(Item::Transition(t), 1.0);
         if let Some(Item::Transition(mut old)) = evicted {
             clear_transition(&mut old);
             self.free_items.push(old);
@@ -262,7 +263,7 @@ impl TransitionAdder {
 /// Builds fixed-length (padded, possibly overlapping) sequences for
 /// recurrent systems (recurrent MADQN, DIAL).
 pub struct SequenceAdder {
-    table: Arc<Table>,
+    sink: Arc<dyn ItemSink>,
     seq_len: usize,
     period: usize,
     /// per-step layout, learned from the first observation of an episode
@@ -281,10 +282,14 @@ pub struct SequenceAdder {
 
 impl SequenceAdder {
     /// An adder emitting `seq_len` windows every `period` steps.
-    pub fn new(table: Arc<Table>, seq_len: usize, period: usize) -> Self {
+    pub fn new(
+        sink: Arc<dyn ItemSink>,
+        seq_len: usize,
+        period: usize,
+    ) -> Self {
         assert!(seq_len >= 1 && period >= 1);
         SequenceAdder {
-            table,
+            sink,
             seq_len,
             period,
             n_agents: 0,
@@ -403,7 +408,7 @@ impl SequenceAdder {
                 }
             }
             let (_, evicted) =
-                self.table.insert_reuse(Item::Sequence(seq), 1.0);
+                self.sink.insert_item_reuse(Item::Sequence(seq), 1.0);
             if let Some(Item::Sequence(mut old)) = evicted {
                 clear_sequence(&mut old);
                 self.free_items.push(old);
@@ -422,6 +427,7 @@ impl SequenceAdder {
 mod tests {
     use super::*;
     use crate::core::StepType;
+    use crate::replay::Table;
 
     fn ts(step_type: StepType, obs: f32, rew: f32, disc: f32) -> TimeStep {
         TimeStep {

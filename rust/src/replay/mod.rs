@@ -33,4 +33,4 @@ pub use adders::{SequenceAdder, TransitionAdder};
 pub use limiter::RateLimiter;
 pub use selectors::{Selector, SumTree};
 pub use sharded::{ItemSource, ShardedTable};
-pub use table::{Item, Sequence, Table, TableStats, Transition};
+pub use table::{Item, ItemSink, Sequence, Table, TableStats, Transition};

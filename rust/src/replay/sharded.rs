@@ -202,10 +202,15 @@ impl ShardedTable {
         self.shards.iter().all(|s| s.is_closed())
     }
 
-    /// True when the aggregate warm-up gate is open and some shard
-    /// would currently admit a sample.
+    /// True when the aggregate warm-up gate is open and some *live*
+    /// shard would currently admit a sample (closed shards — e.g. a
+    /// remote shard that disconnected — no longer count).
     pub fn can_sample(&self) -> bool {
-        self.warmed_up() && self.shards.iter().any(|s| s.can_sample())
+        self.warmed_up()
+            && self
+                .shards
+                .iter()
+                .any(|s| !s.is_closed() && s.can_sample())
     }
 
     /// Round-robin convenience insert (tests, checkpoint restore);
@@ -236,14 +241,24 @@ impl ShardedTable {
                 let start = self.cursor.load(Ordering::Relaxed);
                 for k in 0..self.shards.len() {
                     let idx = (start + k) % self.shards.len();
-                    if self.shards[idx].can_sample() {
-                        self.cursor.store(
-                            (idx + 1) % self.shards.len(),
-                            Ordering::Relaxed,
-                        );
-                        // the shard may still block briefly if a racing
-                        // sampler drained it; its own limiter arbitrates.
-                        return self.shards[idx].sample(n);
+                    let shard = &self.shards[idx];
+                    // A shard that went away mid-run (closed, e.g. a
+                    // remote disconnect) is skipped: the aggregate
+                    // degrades to the survivors instead of ending the
+                    // whole source.
+                    if shard.is_closed() || !shard.can_sample() {
+                        continue;
+                    }
+                    self.cursor.store(
+                        (idx + 1) % self.shards.len(),
+                        Ordering::Relaxed,
+                    );
+                    // the shard may still block briefly if a racing
+                    // sampler drained it (its own limiter arbitrates),
+                    // or close under us — fall through to survivors.
+                    match shard.sample(n) {
+                        Some(batch) => return Some(batch),
+                        None => continue,
                     }
                 }
             }
@@ -384,6 +399,42 @@ mod tests {
         t.close();
         assert!(h.join().unwrap().is_none());
         assert!(t.is_closed());
+    }
+
+    #[test]
+    fn lost_shard_degrades_to_survivors() {
+        // A shard going away mid-run (remote disconnect → close) must
+        // not end the aggregate source: sampling continues from the
+        // survivors, and only once every shard is gone does sample()
+        // return None.
+        let t = ShardedTable::new(
+            3,
+            48,
+            Selector::Uniform,
+            RateLimiter::min_size(2),
+            4,
+        );
+        for k in 0..3 {
+            let shard = t.shard(k);
+            for j in 0..4 {
+                assert!(shard.insert(item((k * 10 + j) as f32), 1.0));
+            }
+        }
+        // lose shard 1 while it still holds items
+        t.shard(1).close();
+        assert!(t.can_sample(), "survivors should still admit samples");
+        for _ in 0..8 {
+            let batch = t.sample(2).expect("survivors must keep serving");
+            for it in &batch {
+                let shard_of = (val(it) / 10.0) as i32;
+                assert_ne!(shard_of, 1, "sampled from a closed shard");
+            }
+        }
+        assert!(!t.is_closed(), "aggregate not closed while shards live");
+        // losing the rest ends the source
+        t.close();
+        assert!(t.sample(1).is_none());
+        assert!(!t.can_sample());
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::rng::Rng;
 /// A single environment transition, flattened for batch assembly.
 /// `obs`/`next_obs` are `[N*O]`; exactly one of the action fields is
 /// non-empty depending on the action space.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Transition {
     /// Stacked per-agent observations `[N*O]`.
     pub obs: Vec<f32>,
@@ -35,7 +35,7 @@ pub struct Transition {
 /// A fixed-length (padded) trajectory slice for recurrent training.
 /// `obs` holds T+1 steps (`[(T+1)*N*O]`), the rest T steps; `mask[t]`
 /// is 1.0 for valid steps.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Sequence {
     /// Window length `T` (steps, excluding the trailing observation).
     pub t: usize,
@@ -52,7 +52,7 @@ pub struct Sequence {
 }
 
 /// A stored replay item: one transition or one sequence window.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Item {
     /// A flattened (n-step) transition.
     Transition(Transition),
@@ -287,6 +287,38 @@ impl Table {
         drop(inner);
         self.cv.notify_all();
         Some(out)
+    }
+}
+
+/// Where adders put finished items: a local [`Table`] or a remote
+/// replay shard ([`crate::net::replay::RemoteShardClient`]). Mirrors
+/// the insert half of the table API, including the evicted-item
+/// recycling of [`Table::insert_reuse`].
+pub trait ItemSink: Send + Sync {
+    /// Insert one item; returns `(accepted, recyclable)` exactly like
+    /// [`Table::insert_reuse`] — `recyclable` is an item whose buffers
+    /// the caller may reuse for the next insert.
+    fn insert_item_reuse(
+        &self,
+        item: Item,
+        priority: f64,
+    ) -> (bool, Option<Item>);
+
+    /// Non-blocking health probe: `Err` when the sink is permanently
+    /// gone (e.g. a remote shard disconnected) and the writing node
+    /// should fail rather than spin on rejected inserts.
+    fn check(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+impl ItemSink for Table {
+    fn insert_item_reuse(
+        &self,
+        item: Item,
+        priority: f64,
+    ) -> (bool, Option<Item>) {
+        self.insert_reuse(item, priority)
     }
 }
 

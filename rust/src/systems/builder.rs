@@ -31,7 +31,7 @@ use crate::launch::{
 };
 use crate::metrics::{Counters, MovingStats};
 use crate::params::ParameterServer;
-use crate::replay::{RateLimiter, Selector, ShardedTable, Table};
+use crate::replay::{ItemSink, RateLimiter, Selector, ShardedTable};
 use crate::runtime::{Engine, Manifest};
 use crate::systems::nodes::{
     Adder, AdderFactory, EnvFactory, EvalPoint, EvaluatorNode, ExecutorNode,
@@ -269,7 +269,7 @@ impl SystemBuilder {
     /// the artifact's `seq_len`.
     pub fn adder_factory(
         mut self,
-        f: impl Fn(Arc<Table>) -> Adder + Send + Sync + 'static,
+        f: impl Fn(Arc<dyn ItemSink>) -> Adder + Send + Sync + 'static,
     ) -> SystemBuilder {
         self.adder_factory = Some(Arc::new(f));
         self
@@ -430,17 +430,17 @@ impl System {
         // --- shared services (the handles every node runs against) ---
         // one replay shard per executor: the insert hot path never
         // crosses executor threads, the trainer round-robins the shards
+        let table = Arc::new(ShardedTable::new(
+            self.num_replay_shards(),
+            cfg.replay_size,
+            Selector::Uniform,
+            RateLimiter::sample_to_insert(
+                cfg.samples_per_insert / batch as f64,
+                cfg.min_replay,
+            ),
+            cfg.seed ^ 0x7ab1e,
+        ));
         let handles = SystemHandles {
-            table: Arc::new(ShardedTable::new(
-                self.num_replay_shards(),
-                cfg.replay_size,
-                Selector::Uniform,
-                RateLimiter::sample_to_insert(
-                    cfg.samples_per_insert / batch as f64,
-                    cfg.min_replay,
-                ),
-                cfg.seed ^ 0x7ab1e,
-            )),
             server: Arc::new(ParameterServer::new(params0.clone())),
             counters: Arc::new(Counters::default()),
             stop: StopSignal::new(),
@@ -451,7 +451,7 @@ impl System {
         };
         let adder_factory = self.adder_factory.clone().unwrap_or_else(|| {
             let n_step = cfg.n_step;
-            Arc::new(move |shard: Arc<Table>| {
+            Arc::new(move |shard: Arc<dyn ItemSink>| {
                 spec.make_adder(shard, n_step, gamma, seq_len)
             }) as AdderFactory
         });
@@ -466,6 +466,7 @@ impl System {
                 train_name,
                 params0: params0.clone(),
                 opt0,
+                source: table.clone(),
             };
             program.add_node("trainer", NodeKind::Trainer, move || {
                 node.run()
@@ -477,7 +478,7 @@ impl System {
                 spec,
                 cfg: cfg.clone(),
                 handles: handles.clone(),
-                shard: handles.table.shard(worker),
+                shard: table.shard(worker),
                 policy_name: exec_policy_name.clone(),
                 params0: params0.clone(),
                 env_factory: self.env_factory.clone(),
@@ -521,8 +522,12 @@ impl System {
             }
         }
         stop.stop();
-        handles.table.close();
-        let outcomes = handle.join();
+        table.close();
+        // deadline-aware join: a node wedged in a blocking call (e.g. a
+        // socket read in a remote-backed run) is reported by name
+        // instead of hanging the supervisor forever
+        let outcomes = handle
+            .join_deadline(Duration::from_secs(cfg.dist_timeout_s.max(1)));
 
         let node_failures: Vec<NodeFailure> = outcomes
             .iter()
@@ -536,7 +541,7 @@ impl System {
         let evals = std::mem::take(&mut *handles.evals.lock().unwrap());
         // the trainer flushed its final publish before joining, so this
         // is the trained policy (params0 if the trainer never stepped)
-        let (_, final_params) = handles.server.get();
+        let (_, final_params) = handles.server.get()?;
         Ok(TrainResult {
             evals,
             env_steps: handles.counters.env_steps(),

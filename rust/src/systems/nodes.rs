@@ -30,8 +30,10 @@ use crate::env::{ActionBuf, MultiAgentEnv, VecEnv, VecStepBuf};
 use crate::exploration::EpsilonSchedule;
 use crate::launch::StopSignal;
 use crate::metrics::{Counters, MovingStats};
-use crate::params::ParameterServer;
-use crate::replay::{SequenceAdder, ShardedTable, Table, TransitionAdder};
+use crate::params::ParamStore;
+use crate::replay::{
+    ItemSink, ItemSource, SequenceAdder, TransitionAdder,
+};
 use crate::runtime::Engine;
 use crate::systems::builder::make_vec_evaluator_with;
 use crate::systems::{SystemSpec, Trainer, VecExecutor};
@@ -97,17 +99,22 @@ pub type EnvFactory = Arc<
 /// builder to change how experience is packaged (e.g. prioritised
 /// insertion or a different sequence period) without forking the
 /// executor loop.
-pub type AdderFactory = Arc<dyn Fn(Arc<Table>) -> Adder + Send + Sync>;
+pub type AdderFactory =
+    Arc<dyn Fn(Arc<dyn ItemSink>) -> Adder + Send + Sync>;
 
 /// Shared services every node of a built system runs against — the
 /// edges of the paper's program graph (Block 2 inset), made explicit
-/// instead of being closure captures.
+/// instead of being closure captures. Replay handles are *not* here:
+/// each node owns its own end of the replay data path (the trainer a
+/// sample source, each executor its shard sink), which is what lets
+/// the same node structs run in-process or against remote services
+/// (DESIGN.md §10).
 #[derive(Clone)]
 pub struct SystemHandles {
-    /// Replay table, one shard per executor (DESIGN.md §5).
-    pub table: Arc<ShardedTable>,
-    /// Versioned parameter server the trainer publishes to.
-    pub server: Arc<ParameterServer>,
+    /// Versioned parameter store the trainer publishes to — the
+    /// in-process [`crate::params::ParameterServer`] or a remote
+    /// client speaking the param wire protocol.
+    pub server: Arc<dyn ParamStore>,
     /// Global env/train step + episode counters.
     pub counters: Arc<Counters>,
     /// Cooperative shutdown flag shared by every node.
@@ -139,6 +146,9 @@ pub struct TrainerNode {
     pub params0: Vec<f32>,
     /// Initial optimiser state (the artifact's `opt0` init blob).
     pub opt0: Vec<f32>,
+    /// Where sample batches come from: the in-process
+    /// [`crate::replay::ShardedTable`] or a remote replay sampler.
+    pub source: Arc<dyn ItemSource + Send + Sync>,
 }
 
 impl TrainerNode {
@@ -158,11 +168,11 @@ impl TrainerNode {
         )?;
         trainer.set_publish_interval(self.cfg.publish_interval);
         trainer.init_target_from_params()?;
-        h.server.push(trainer.params());
+        h.server.push(trainer.params())?;
         // sample+assemble runs on a prefetch thread; only plain
         // HostTensors cross the channel (no PJRT handle leaves this
         // thread — the §2 engine-per-thread rule holds)
-        let prefetch = trainer.spawn_prefetcher(h.table.clone(), 2);
+        let prefetch = trainer.spawn_prefetcher(self.source.clone(), 2);
         while !h.stop.is_stopped() {
             // Ok(None) once the table closed (shutdown);
             // Err if assembly failed on the prefetch thread
@@ -172,7 +182,7 @@ impl TrainerNode {
             trainer.step_batch(&batch)?;
             prefetch.recycle(batch);
             h.counters.add_train_step();
-            trainer.maybe_publish(&h.server)?;
+            trainer.maybe_publish(h.server.as_ref())?;
             if self.cfg.max_train_steps > 0
                 && trainer.stats.steps >= self.cfg.max_train_steps
             {
@@ -180,8 +190,14 @@ impl TrainerNode {
             }
         }
         // the publish cadence may be mid-window at shutdown: flush the
-        // final parameters unconditionally
-        trainer.publish(&h.server)?;
+        // final parameters unconditionally; a remote store may already
+        // be gone during a stop-requested teardown, which is not a
+        // trainer failure
+        if let Err(e) = trainer.publish(h.server.as_ref()) {
+            if !h.stop.is_stopped() {
+                return Err(e);
+            }
+        }
         Ok(())
     }
 }
@@ -199,8 +215,9 @@ pub struct ExecutorNode {
     pub cfg: TrainConfig,
     /// Shared program services.
     pub handles: SystemHandles,
-    /// This executor's own replay shard.
-    pub shard: Arc<Table>,
+    /// This executor's own replay shard sink — a local
+    /// [`crate::replay::Table`] or a remote shard client.
+    pub shard: Arc<dyn ItemSink>,
     /// Policy artifact name lowered for this executor's env batch.
     pub policy_name: String,
     /// Initial parameters (the artifact's `params0` init blob).
@@ -266,6 +283,9 @@ impl ExecutorNode {
         while !h.stop.is_stopped()
             && h.counters.env_steps() < self.cfg.max_env_steps
         {
+            // a permanently lost sink (remote shard disconnect) fails
+            // the node instead of silently dropping experience
+            self.shard.check()?;
             let eps = schedule.value(h.counters.env_steps());
             h.fingerprint.set(
                 eps,
@@ -304,7 +324,7 @@ impl ExecutorNode {
                 // cheap version check at episode boundaries
                 if let Some(v) = h
                     .server
-                    .sync(executor.params_version, &mut params_scratch)
+                    .sync(executor.params_version, &mut params_scratch)?
                 {
                     executor.set_params(v, &params_scratch);
                 }
@@ -355,7 +375,7 @@ impl EvaluatorNode {
             next_eval_at = steps + self.cfg.eval_every_steps;
             let mut buf = Vec::new();
             if let Some(v) =
-                h.server.sync(evaluator.params_version(), &mut buf)
+                h.server.sync(evaluator.params_version(), &mut buf)?
             {
                 evaluator.set_params(v, &buf);
             }

@@ -44,7 +44,7 @@ impl BatchPrefetcher {
         depth: usize,
     ) -> BatchPrefetcher
     where
-        S: ItemSource + Send + Sync + 'static,
+        S: ItemSource + Send + Sync + ?Sized + 'static,
     {
         let (full_tx, full_rx) = mpsc::sync_channel(depth.max(1));
         let (empty_tx, empty_rx) = mpsc::channel::<Vec<HostTensor>>();

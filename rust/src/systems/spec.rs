@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 use crate::arch::Architecture;
 use crate::env::wrappers::{Fingerprint, FingerprintWrapper};
 use crate::env::{make_env, MultiAgentEnv};
-use crate::replay::{SequenceAdder, Table, TransitionAdder};
+use crate::replay::{ItemSink, SequenceAdder, TransitionAdder};
 use crate::systems::nodes::Adder;
 use crate::systems::{Family, SystemKind};
 
@@ -207,7 +207,7 @@ impl SystemSpec {
     /// override replaces it.
     pub fn make_adder(
         &self,
-        shard: Arc<Table>,
+        shard: Arc<dyn ItemSink>,
         n_step: usize,
         gamma: f32,
         seq_len: usize,

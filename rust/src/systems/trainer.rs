@@ -20,7 +20,7 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use crate::core::HostTensor;
-use crate::params::ParameterServer;
+use crate::params::ParamStore;
 use crate::replay::ItemSource;
 use crate::runtime::{Arg, Artifact};
 use crate::systems::{BatchArena, BatchAssembler, BatchPrefetcher, Family};
@@ -228,7 +228,7 @@ impl Trainer {
         depth: usize,
     ) -> BatchPrefetcher
     where
-        S: ItemSource + Send + Sync + 'static,
+        S: ItemSource + Send + Sync + ?Sized + 'static,
     {
         BatchPrefetcher::spawn(source, self.assembler.clone(), depth)
     }
@@ -361,19 +361,19 @@ impl Trainer {
     /// parameters were already pushed. Downloads the flat param vector
     /// from the device first (the only steady-state host copy of the
     /// training state). Returns whether a push happened.
-    pub fn publish(&mut self, server: &ParameterServer) -> Result<bool> {
+    pub fn publish(&mut self, server: &dyn ParamStore) -> Result<bool> {
         if self.last_published_step == self.stats.steps {
             return Ok(false);
         }
         self.sync_params_mirror()?;
-        server.push(self.params.as_f32());
+        server.push(self.params.as_f32())?;
         self.last_published_step = self.stats.steps;
         Ok(true)
     }
 
     /// [`Trainer::publish`], gated on the publish cadence: pushes only
     /// when the step counter hits a multiple of `publish_interval`.
-    pub fn maybe_publish(&mut self, server: &ParameterServer) -> Result<bool> {
+    pub fn maybe_publish(&mut self, server: &dyn ParamStore) -> Result<bool> {
         if self.stats.steps % self.publish_every != 0 {
             return Ok(false);
         }
@@ -385,7 +385,7 @@ impl Trainer {
     pub fn step_and_publish<S: ItemSource>(
         &mut self,
         source: &S,
-        server: &ParameterServer,
+        server: &dyn ParamStore,
     ) -> Result<Option<f32>> {
         let r = self.step(source)?;
         if r.is_some() {

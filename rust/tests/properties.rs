@@ -326,6 +326,174 @@ fn prop_sharded_table_round_robin_aggregates() {
     }
 }
 
+/// Wire frame codec: every frame kind round-trips through
+/// encode/decode for random payloads, and the consumed length is
+/// exactly header + payload (no over-read).
+#[test]
+fn prop_frame_roundtrip_all_kinds() {
+    use mava::net::frame::{
+        decode_slice, encode_frame, FrameKind, HEADER_LEN,
+    };
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(400 + seed);
+        for kind in FrameKind::ALL {
+            let len = rng.below(200);
+            let payload: Vec<u8> =
+                (0..len).map(|_| rng.below(256) as u8).collect();
+            let mut out = Vec::new();
+            encode_frame(kind, &payload, &mut out);
+            // trailing garbage must not be consumed
+            out.extend_from_slice(&[0xde, 0xad]);
+            let (got_kind, got_payload, consumed) =
+                decode_slice(&out).unwrap_or_else(|e| {
+                    panic!("seed {seed}: {kind:?} failed to decode: {e}")
+                });
+            assert_eq!(got_kind, kind, "seed {seed}");
+            assert_eq!(got_payload, &payload[..], "seed {seed}");
+            assert_eq!(consumed, HEADER_LEN + len, "seed {seed}");
+        }
+    }
+}
+
+/// Every truncation of a valid frame decodes to a typed error — never
+/// a panic, never a bogus success.
+#[test]
+fn prop_frame_truncation_is_typed_error() {
+    use mava::net::frame::{decode_slice, encode_frame, FrameKind};
+    let mut rng = Rng::new(500);
+    for kind in [FrameKind::Hello, FrameKind::SampleBatch, FrameKind::Stop] {
+        let len = 1 + rng.below(64);
+        let payload: Vec<u8> =
+            (0..len).map(|_| rng.below(256) as u8).collect();
+        let mut out = Vec::new();
+        encode_frame(kind, &payload, &mut out);
+        for cut in 0..out.len() {
+            let err = decode_slice(&out[..cut]).expect_err("truncated");
+            // rendering must not panic either
+            let _ = err.to_string();
+        }
+    }
+}
+
+/// Corrupting bytes the codec checks (magic, version, payload under
+/// CRC, the CRC itself) always yields a typed error, and arbitrary
+/// single-byte corruption anywhere never panics or over-reads.
+#[test]
+fn prop_frame_corruption_is_typed_error() {
+    use mava::net::frame::{
+        decode_slice, encode_frame, FrameError, FrameKind, HEADER_LEN,
+    };
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(600 + seed);
+        let len = 1 + rng.below(64);
+        let payload: Vec<u8> =
+            (0..len).map(|_| rng.below(256) as u8).collect();
+        let mut clean = Vec::new();
+        encode_frame(FrameKind::Params, &payload, &mut clean);
+
+        // checked positions: magic [0,1], version [2], crc [8..12],
+        // any payload byte — all must produce a typed error
+        let mut checked = vec![0usize, 1, 2, 8, 9, 10, 11];
+        checked.push(HEADER_LEN + rng.below(len));
+        for &pos in &checked {
+            let mut bad = clean.clone();
+            bad[pos] ^= 1 << rng.below(8);
+            if bad == clean {
+                continue;
+            }
+            let err = decode_slice(&bad)
+                .expect_err("corruption must not decode");
+            let _ = err.to_string();
+        }
+
+        // wrong version specifically is named
+        let mut bad = clean.clone();
+        bad[2] = 7;
+        assert!(matches!(
+            decode_slice(&bad),
+            Err(FrameError::BadVersion(7))
+        ));
+
+        // arbitrary corruption anywhere: no panic, and on a lucky
+        // decode the consumed length never exceeds the buffer
+        for _ in 0..50 {
+            let mut bad = clean.clone();
+            bad[rng.below(bad.len())] = rng.below(256) as u8;
+            if let Ok((_, _, consumed)) = decode_slice(&bad) {
+                assert!(consumed <= bad.len(), "seed {seed}: over-read");
+            }
+        }
+    }
+}
+
+/// Replay items survive the wire: random transitions and sequences
+/// round-trip bit-exactly through the insert and batch payloads.
+#[test]
+fn prop_item_wire_roundtrip() {
+    use mava::net::wire;
+    use mava::replay::{Sequence, Transition};
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-10.0, 10.0)).collect()
+    }
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(700 + seed);
+        let item = if rng.chance(0.5) {
+            let (no, ns, na, nr) = (
+                1 + rng.below(8),
+                rng.below(4),
+                rng.below(4),
+                1 + rng.below(3),
+            );
+            let actions_disc: Vec<i32> =
+                (0..na).map(|_| rng.below(10) as i32).collect();
+            Item::Transition(Transition {
+                obs: rand_vec(&mut rng, no),
+                state: rand_vec(&mut rng, ns),
+                actions_disc,
+                actions_cont: rand_vec(&mut rng, na),
+                rewards: rand_vec(&mut rng, nr),
+                discount: rng.f32(),
+                next_obs: rand_vec(&mut rng, no),
+                next_state: rand_vec(&mut rng, ns),
+            })
+        } else {
+            let (t, no, nt) =
+                (1 + rng.below(8), 4 + rng.below(16), rng.below(8));
+            let actions: Vec<i32> =
+                (0..nt).map(|_| rng.below(10) as i32).collect();
+            Item::Sequence(Sequence {
+                t,
+                obs: rand_vec(&mut rng, no),
+                actions,
+                rewards: rand_vec(&mut rng, nt),
+                discounts: rand_vec(&mut rng, nt),
+                mask: rand_vec(&mut rng, nt),
+            })
+        };
+        let priority = rng.f64() * 5.0;
+        let mut pay = Vec::new();
+        wire::encode_insert(&item, priority, &mut pay);
+        let (back, p) = wire::decode_insert(&pay)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert_eq!(back, item, "seed {seed}");
+        assert!((p - priority).abs() < 1e-12, "seed {seed}");
+
+        let batch = vec![item.clone(), item.clone(), item];
+        pay.clear();
+        wire::encode_batch(&batch, &mut pay);
+        let back = wire::decode_batch(&pay)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert_eq!(back, batch, "seed {seed}");
+
+        // truncated payloads are typed errors, never panics
+        for cut in 0..pay.len().min(40) {
+            if let Err(e) = wire::decode_batch(&pay[..cut]) {
+                let _ = format!("{e:#}");
+            }
+        }
+    }
+}
+
 /// Environments never emit non-finite observations/rewards under long
 /// random play (regression guard for the MPE softplus overflow).
 #[test]
