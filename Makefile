@@ -7,7 +7,9 @@ ARTIFACTS_DIR ?= artifacts
 
 .PHONY: artifacts build test test-dist experiment check-bench-schema bench-vector bench-trainer bench-build check fmt clippy doc
 
-# lower every AOT artifact (policy, batched policy variants, train steps)
+# lower every AOT artifact: policies (the full POLICY_BATCHES bucket
+# ladder 1..64), fused train steps, and the _dp{2,4}/_apply
+# data-parallel splits for mean-loss systems (DESIGN.md §4, §11)
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
 

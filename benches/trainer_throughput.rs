@@ -7,7 +7,10 @@
 //! PJRT executable sat idle. The three modes measured here isolate the
 //! two fixes: device residency removes the ~5P-float state round-trip,
 //! the prefetch thread overlaps sample+assemble with artifact
-//! execution. Requires `make artifacts`; scale with MAVA_BENCH_SCALE.
+//! execution. A fourth mode — data-parallel lanes over the
+//! `{train}_dp{D}` sharded-gradient artifacts (DESIGN.md §11) — runs
+//! when those artifacts are lowered, adding the `devices` axis to the
+//! report. Requires `make artifacts`; scale with MAVA_BENCH_SCALE.
 //!
 //! Besides the grep-able `curve` rows, the run serialises every
 //! measured rate as `BENCH_trainer_throughput.json` (the versioned
@@ -15,7 +18,9 @@
 
 use std::sync::Arc;
 
-use mava::bench::report::{throughput_report, write_report};
+use mava::bench::report::{
+    throughput_report_rows, write_report, ThroughputRow,
+};
 use mava::bench::{curve_row, report, scale, section, time};
 use mava::replay::{Item, Table, Transition};
 use mava::rng::Rng;
@@ -64,7 +69,7 @@ fn bench_case(
     label: &str,
     family: Family,
     train_name: &str,
-    series: &mut Vec<(String, f64, String)>,
+    series: &mut Vec<ThroughputRow>,
 ) -> anyhow::Result<()> {
     section(&format!("trainer hot path: {label} ({family:?})"));
     let mut engine = Engine::load("artifacts")?;
@@ -94,7 +99,7 @@ fn bench_case(
             trainer.step(&t).unwrap().unwrap();
         });
         report(&format!("train_host_{label}"), &s);
-        rates.push(("host", s.per_sec()));
+        rates.push(("host", s.per_sec(), 1u64));
     }
 
     // 2. device-resident: state stays in PjRtBuffers between steps
@@ -114,7 +119,7 @@ fn bench_case(
             trainer.step(&t).unwrap().unwrap();
         });
         report(&format!("train_device_{label}"), &s);
-        rates.push(("device", s.per_sec()));
+        rates.push(("device", s.per_sec(), 1u64));
     }
 
     // 3. device-resident + prefetch: batch k+1 assembles while step k
@@ -140,20 +145,63 @@ fn bench_case(
             prefetch.recycle(batch);
         });
         report(&format!("train_device_prefetch_{label}"), &s);
-        rates.push(("device+prefetch", s.per_sec()));
+        rates.push(("device+prefetch", s.per_sec(), 1u64));
+    }
+
+    // 4. data-parallel lanes (artifact-gated): sharded gradients over
+    //    D lock-step replicas, host all-reduce, shared apply
+    //    (DESIGN.md §11). Lowered only for mean-loss systems.
+    for d in [2usize, 4] {
+        let dp_name = format!("{train_name}_dp{d}");
+        let apply_name = format!("{train_name}_apply");
+        if engine.manifest.get(&dp_name).is_err()
+            || engine.manifest.get(&apply_name).is_err()
+        {
+            continue;
+        }
+        let grad = engine.artifact(&dp_name)?;
+        let apply = engine.artifact(&apply_name)?;
+        let mut trainer = Trainer::new_data_parallel(
+            family,
+            grad,
+            apply,
+            params0.clone(),
+            opt0.clone(),
+            1e-3,
+            0.01,
+            3,
+        )?;
+        trainer.init_target_from_params()?;
+        let t = table.clone();
+        let s = time(warmup, iters, move || {
+            trainer.step(&t).unwrap().unwrap();
+        });
+        report(&format!("train_dp{d}_{label}"), &s);
+        rates.push(("dp", s.per_sec(), d as u64));
     }
     table.close();
 
     let base = rates[0].1;
     println!("\ntrain-step throughput, {label}:");
-    for (i, (mode, r)) in rates.iter().enumerate() {
+    for (i, (mode, r, devices)) in rates.iter().enumerate() {
         curve_row("trainer_throughput", label, i as f64, *r);
-        println!("  {mode:<16} {r:>9.0} steps/s   {:>5.2}x vs host", r / base);
-        series.push((
-            format!("{label}_{}", mode.replace('+', "_")),
-            *r,
-            "train_steps/s".into(),
-        ));
+        let mode_tag = if *mode == "dp" {
+            format!("dp{devices}")
+        } else {
+            mode.replace('+', "_")
+        };
+        println!(
+            "  {mode_tag:<16} {r:>9.0} steps/s   {:>5.2}x vs host",
+            r / base
+        );
+        series.push(
+            ThroughputRow::new(
+                format!("{label}_{mode_tag}"),
+                *r,
+                "train_steps/s",
+            )
+            .with_devices(*devices),
+        );
     }
     Ok(())
 }
@@ -172,7 +220,7 @@ fn main() -> anyhow::Result<()> {
         bench_case(label, family, train_name, &mut series)?;
     }
     if !series.is_empty() {
-        let json = throughput_report("trainer_throughput", &series);
+        let json = throughput_report_rows("trainer_throughput", &series);
         let path =
             write_report(std::path::Path::new("."), "trainer_throughput", &json)?;
         println!("\nwrote {}", path.display());

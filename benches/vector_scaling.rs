@@ -6,81 +6,93 @@
 //!
 //! 1. **Acting hot path** (no trainer): a `VecExecutor` + `VecEnv` pair
 //!    stepping smac3m with one batched policy call per vector step, for
-//!    `B ∈ {1, 4, 16}` — measured BOTH through the legacy per-TimeStep
-//!    path and the SoA `VecStepBuf` path (zero steady-state allocation,
-//!    device-resident carry). Per-executor env-steps/s should grow
-//!    ~linearly until the policy kernel saturates; the acceptance bar
-//!    is SoA B=16 achieving >= 3x the SoA B=1 per-executor throughput.
+//!    widths spanning the lowered bucket ladder INCLUDING non-bucket
+//!    widths (3, 12) that round up with padding rows masked out
+//!    (DESIGN.md §11) — measured through the legacy per-TimeStep path
+//!    (exact buckets only; it cannot pad) and the SoA `VecStepBuf`
+//!    path (zero steady-state allocation, device-resident carry).
+//!    Per-executor env-steps/s should grow ~linearly until the policy
+//!    kernel saturates; the acceptance bar is SoA B=16 achieving
+//!    >= 3x the SoA B=1 per-executor throughput.
 //! 2. **End-to-end training throughput**: `train()` on matrix2 madqn
 //!    over the `{1, 2} executors x {1, 4, 16} envs` grid with a fixed
 //!    wall budget, reporting total env-steps/s (replay sharding keeps
 //!    executors lock-free on the insert path).
 //!
-//! Requires `make artifacts` (including the `*_policy_b{4,16}` batched
-//! variants). Scale with MAVA_BENCH_SCALE. Besides the grep-able
+//! Requires `make artifacts` (which lowers the full `POLICY_BATCHES`
+//! bucket ladder). Scale with MAVA_BENCH_SCALE. Besides the grep-able
 //! `curve` rows, the run serialises every measured rate as
 //! `BENCH_vector_scaling.json` AND the legacy-vs-SoA comparison as
 //! `BENCH_executor_hotpath.json` (both in the versioned schema of
-//! `bench/report.rs` — validate with `mava check-bench`).
+//! `bench/report.rs` — validate with `mava check-bench`; bucketed
+//! rows carry the `bucket` axis).
 
-use mava::bench::report::{throughput_report, write_report};
+use mava::bench::report::{
+    throughput_report_rows, write_report, ThroughputRow,
+};
 use mava::bench::{self, curve_row, report, section, time};
 use mava::config::TrainConfig;
 use mava::env::VecEnv;
-use mava::runtime::{Engine, Manifest};
+use mava::runtime::{BucketLadder, Engine, Manifest};
 use mava::systems::{self, SystemKind, VecExecutor};
 
-const BATCHES: [usize; 3] = [1, 4, 16];
+const BASE_POLICY: &str = "smac3m_madqn_policy";
 
-fn policy_name(b: usize) -> String {
-    if b == 1 {
-        "smac3m_madqn_policy".into()
-    } else {
-        format!("smac3m_madqn_policy_b{b}")
-    }
-}
+/// Acting widths: exact buckets (1, 4, 16) plus padded widths (3, 12)
+/// that round up to the next lowered bucket.
+const WIDTHS: [usize; 5] = [1, 3, 4, 12, 16];
 
+/// End-to-end grid widths (exact buckets, matching earlier reports).
+const TRAIN_WIDTHS: [usize; 3] = [1, 4, 16];
+
+/// Build an `n`-wide executor/env pair: the policy artifact is the
+/// lowered bucket `n` rounds up to; the executor masks the padding
+/// rows out of action selection. Returns the pair and the bucket.
 fn make_pair(
     engine: &mut Engine,
     params: &[f32],
-    b: usize,
-) -> anyhow::Result<(VecExecutor, VecEnv)> {
-    let artifact = engine.artifact(&policy_name(b))?;
-    let executor =
+    n: usize,
+) -> anyhow::Result<(VecExecutor, VecEnv, usize)> {
+    let ladder = BucketLadder::from_manifest(&engine.manifest, BASE_POLICY)?;
+    let (bucket, _pad) = ladder.pick(n)?;
+    let artifact = engine.artifact(&ladder.artifact_name(bucket))?;
+    let mut executor =
         VecExecutor::new(SystemKind::Madqn, artifact, params.to_vec(), 7)?;
-    let mut instances = Vec::with_capacity(b);
-    for i in 0..b {
+    executor.set_active_rows(n)?;
+    let mut instances = Vec::with_capacity(n);
+    for i in 0..n {
         instances.push(systems::env_for_preset(
             "smac3m",
             100 + i as u64,
             None,
         )?);
     }
-    Ok((executor, VecEnv::new(instances)?))
+    Ok((executor, VecEnv::new(instances)?, bucket))
 }
 
 /// Measure one configuration of the acting loop; `soa` picks the
 /// struct-of-arrays zero-allocation path vs the legacy per-TimeStep
-/// path. Returns env steps/s.
+/// path (which needs `n` == the bucket). Returns `(env steps/s,
+/// bucket)`.
 fn measure_acting(
     engine: &mut Engine,
     params: &[f32],
-    b: usize,
+    n: usize,
     soa: bool,
-) -> anyhow::Result<f64> {
-    let (mut executor, mut venv) = make_pair(engine, params, b)?;
+) -> anyhow::Result<(f64, usize)> {
+    let (mut executor, mut venv, bucket) = make_pair(engine, params, n)?;
     let iters = (2_000.0 * bench::scale()) as u64;
     let s = if soa {
-        let mut cur = venv.make_buf();
-        let mut next = venv.make_buf();
-        let mut abuf = venv.make_action_buf();
+        let mut cur = venv.make_buf_padded(bucket);
+        let mut next = venv.make_buf_padded(bucket);
+        let mut abuf = venv.make_action_buf_padded(bucket);
         venv.reset_into(&mut cur);
         time(50, iters, move || {
             executor
                 .select_actions_into(&cur, 0.1, 0.0, &mut abuf)
                 .unwrap();
             venv.step_into(&abuf, &mut next);
-            for row in 0..next.num_envs() {
+            for row in 0..venv.num_envs() {
                 if next.step_type(row) == mava::StepType::First {
                     executor.reset_instance(row);
                 }
@@ -88,6 +100,7 @@ fn measure_acting(
             std::mem::swap(&mut cur, &mut next);
         })
     } else {
+        assert_eq!(n, bucket, "legacy path cannot pad");
         let mut vs = venv.reset();
         time(50, iters, move || {
             let actions =
@@ -96,52 +109,82 @@ fn measure_acting(
         })
     };
     let tag = if soa { "soa" } else { "legacy" };
-    report(&format!("vec_step_smac3m_madqn_{tag}_b{b}"), &s);
-    Ok(s.per_sec() * b as f64)
+    report(&format!("vec_step_smac3m_madqn_{tag}_n{n}"), &s);
+    Ok((s.per_sec() * n as f64, bucket))
 }
 
 fn bench_acting_hot_path(
-    series: &mut Vec<(String, f64, String)>,
-    hotpath: &mut Vec<(String, f64, String)>,
+    series: &mut Vec<ThroughputRow>,
+    hotpath: &mut Vec<ThroughputRow>,
 ) -> anyhow::Result<()> {
-    section("acting hot path: env steps/s per executor vs B (legacy vs SoA)");
+    section(
+        "acting hot path: env steps/s per executor vs width \
+         (legacy vs SoA, padded widths round up the bucket ladder)",
+    );
     let mut engine = Engine::load("artifacts")?;
     let params = engine.read_init("smac3m_madqn_train", "params0")?;
     let mut rates = Vec::new();
-    for b in BATCHES {
-        let legacy = measure_acting(&mut engine, &params, b, false)?;
-        let soa = measure_acting(&mut engine, &params, b, true)?;
+    for n in WIDTHS {
+        let (soa, bucket) = measure_acting(&mut engine, &params, n, true)?;
+        // the legacy AoS path has no padding mask: only exact buckets
+        let legacy = if n == bucket {
+            Some(measure_acting(&mut engine, &params, n, false)?.0)
+        } else {
+            None
+        };
         curve_row(
             "vector_scaling",
             "acting_env_steps_per_sec",
-            b as f64,
+            n as f64,
             soa,
         );
-        rates.push((b, legacy, soa));
-        series.push((format!("acting_b{b}"), soa, "env_steps/s".into()));
-        // the ISSUE-4 acceptance pair: legacy vs SoA at B ∈ {4, 16}
-        if b > 1 {
-            hotpath.push((
-                format!("legacy_b{b}"),
-                legacy,
-                "env_steps/s".into(),
-            ));
-            hotpath.push((format!("soa_b{b}"), soa, "env_steps/s".into()));
+        rates.push((n, bucket, legacy, soa));
+        series.push(
+            ThroughputRow::new(
+                format!("acting_n{n}"),
+                soa,
+                "env_steps/s",
+            )
+            .with_bucket(bucket as u64),
+        );
+        // the ISSUE-4 acceptance pair: legacy vs SoA at exact buckets
+        if n > 1 {
+            if let Some(legacy) = legacy {
+                hotpath.push(
+                    ThroughputRow::new(
+                        format!("legacy_b{n}"),
+                        legacy,
+                        "env_steps/s",
+                    )
+                    .with_bucket(bucket as u64),
+                );
+                hotpath.push(
+                    ThroughputRow::new(
+                        format!("soa_b{n}"),
+                        soa,
+                        "env_steps/s",
+                    )
+                    .with_bucket(bucket as u64),
+                );
+            }
         }
     }
-    let base = rates[0].2;
+    let base = rates[0].3;
     println!(
         "\nper-executor acting throughput (one PJRT call per vector step):"
     );
-    for (b, legacy, soa) in &rates {
+    for (n, bucket, legacy, soa) in &rates {
+        let legacy_txt = match legacy {
+            Some(l) => format!("legacy {l:>10.0}"),
+            None => format!("padded to b{bucket:<3}   "),
+        };
         println!(
-            "  B={b:<3} legacy {legacy:>10.0}  soa {soa:>10.0} env steps/s \
-             ({:>5.2}x legacy, {:>5.2}x vs soa B=1)",
-            soa / legacy,
+            "  n={n:<3} {legacy_txt}  soa {soa:>10.0} env steps/s \
+             ({:>5.2}x vs soa n=1)",
             soa / base
         );
     }
-    let b16 = rates.last().unwrap().2;
+    let b16 = rates.last().unwrap().3;
     println!(
         "speedup check: SoA B=16 is {:.2}x SoA B=1 ({})",
         b16 / base,
@@ -169,13 +212,13 @@ fn train_cfg(executors: usize, envs: usize) -> TrainConfig {
 }
 
 fn bench_end_to_end(
-    series: &mut Vec<(String, f64, String)>,
+    series: &mut Vec<ThroughputRow>,
 ) -> anyhow::Result<()> {
     section("end-to-end: total env steps/s vs executors x envs");
     let budget_s = (15.0 * bench::scale()) as u64;
     let mut baseline = None;
     for executors in [1usize, 2] {
-        for envs in BATCHES {
+        for envs in TRAIN_WIDTHS {
             let r = systems::train(
                 &train_cfg(executors, envs),
                 Some(std::time::Duration::from_secs(budget_s)),
@@ -189,11 +232,15 @@ fn bench_end_to_end(
                 rate,
             );
             let base = *baseline.get_or_insert(rate);
-            series.push((
-                format!("train_exec{executors}_b{envs}"),
-                rate,
-                "env_steps/s".into(),
-            ));
+            series.push(
+                ThroughputRow::new(
+                    format!("train_exec{executors}_b{envs}"),
+                    rate,
+                    "env_steps/s",
+                )
+                .with_bucket(envs as u64)
+                .with_devices(1),
+            );
             println!(
                 "  {executors} executor(s) x B={envs:<3} {:>9} env steps in \
                  {:>5.1}s = {:>9.0} steps/s ({:>5.2}x)  [{} train steps]",
@@ -213,25 +260,37 @@ fn main() -> anyhow::Result<()> {
         println!("artifacts missing; run `make artifacts` first");
         return Ok(());
     };
-    if manifest.get(&policy_name(16)).is_err() {
-        println!(
-            "batched policy artifacts missing (stale artifacts dir); \
-             re-run `make artifacts` to lower the *_policy_b{{4,16}} \
-             variants"
-        );
-        return Ok(());
+    // report the ladder the manifest ACTUALLY holds, not a hard-coded
+    // batch list: a stale artifacts dir names exactly what is missing
+    match BucketLadder::from_manifest(&manifest, BASE_POLICY) {
+        Ok(ladder) if ladder.max_bucket() >= *WIDTHS.last().unwrap() => {}
+        Ok(ladder) => {
+            println!(
+                "lowered policy ladder for {BASE_POLICY} is [{}], but \
+                 this bench needs buckets up to {}; re-run \
+                 `make artifacts` to lower the full POLICY_BATCHES \
+                 ladder",
+                ladder.describe(),
+                WIDTHS.last().unwrap()
+            );
+            return Ok(());
+        }
+        Err(e) => {
+            println!("{e:#}");
+            return Ok(());
+        }
     }
     let mut series = Vec::new();
     let mut hotpath = Vec::new();
     bench_acting_hot_path(&mut series, &mut hotpath)?;
     bench_end_to_end(&mut series)?;
-    let json = throughput_report("vector_scaling", &series);
+    let json = throughput_report_rows("vector_scaling", &series);
     let path =
         write_report(std::path::Path::new("."), "vector_scaling", &json)?;
     println!("\nwrote {}", path.display());
     // the ISSUE-4 perf artifact: legacy vs SoA at B ∈ {4, 16}, gated by
     // `mava check-bench` in CI like every other BENCH_*.json
-    let json = throughput_report("executor_hotpath", &hotpath);
+    let json = throughput_report_rows("executor_hotpath", &hotpath);
     let path =
         write_report(std::path::Path::new("."), "executor_hotpath", &json)?;
     println!("wrote {}", path.display());

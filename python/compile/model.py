@@ -9,11 +9,20 @@ from __future__ import annotations
 
 from .presets import PRESETS
 from .systems import dial, madqn, maddpg, value_decomp
-from .systems.base import batched_policy_variants
+from .systems.base import batched_policy_variants, dp_train_variants
 
-# policy batch sizes lowered for the vectorized executor hot path
-# (rust `num_envs_per_executor`; B=1 is the plain `*_policy` artifact)
-POLICY_BATCHES = (4, 16)
+# The bucketed policy-batch ladder lowered for the vectorized executor /
+# evaluator hot paths. Rust's `runtime/bucket.rs` rounds ANY requested
+# width 1..=max up to the nearest bucket and masks the padding rows, so
+# the ladder only has to cover the range, not every width (DESIGN.md
+# §11). B=1 is the plain `*_policy` artifact.
+POLICY_BATCHES = (1, 2, 4, 8, 16, 32, 64)
+
+# Device-shard counts lowered for data-parallel training: each eligible
+# `*_train` also gets `_dp{D}` per-shard gradient variants plus one
+# `_apply` post-all-reduce update step (systems/base.py
+# `dp_train_variants`; consumed by rust `Trainer` dp lanes).
+DP_SHARDS = (2, 4)
 
 
 def catalogue():
@@ -51,4 +60,8 @@ def catalogue():
     # batched policy clones for the vectorized executor (DESIGN.md §6):
     # every `*_policy` also lowers at [B, N, O] for B in POLICY_BATCHES
     arts += batched_policy_variants(arts, POLICY_BATCHES)
+    # data-parallel train shards (DESIGN.md §11): per-shard gradient
+    # variants + the post-all-reduce apply step for every train artifact
+    # whose loss decomposes over the batch (grad_fn set)
+    arts += dp_train_variants(arts, DP_SHARDS)
     return arts

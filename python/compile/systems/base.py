@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import zlib
 
 from ..networks import flatten_params
-from ..optim import adam_init
+from ..optim import adam_init, adam_update, clip_grads, polyak
 
 
 @dataclass
@@ -22,6 +22,15 @@ class ArtifactDef:
     manifest so the rust runtime can type-check its calls. ``init`` maps
     name -> concrete initial array (parameters, optimiser state) that
     aot.py serialises alongside the HLO so rust starts from the same init.
+
+    Train artifacts whose loss is an unweighted batch mean additionally
+    carry ``grad_fn`` — ``(params, target, *batch) -> (grads[P], loss[L])``
+    with UNCLIPPED gradients — plus the ``clip_norm`` the fused step
+    applies. ``dp_train_variants`` lowers those into per-device-shard
+    gradient artifacts for data-parallel training; systems with
+    mask-weighted losses (recurrent MADQN, DIAL) leave ``grad_fn`` unset
+    because the mean of their per-shard gradients is not the full-batch
+    gradient (the masked-mean denominator differs per shard).
     """
 
     name: str
@@ -30,6 +39,8 @@ class ArtifactDef:
     outputs: Sequence[tuple]         # (name, dtype_str, shape_tuple)
     meta: dict = field(default_factory=dict)
     init: dict = field(default_factory=dict)  # name -> np/jnp array
+    grad_fn: Callable | None = None  # (params, target, *batch) -> (g, loss)
+    clip_norm: float = 0.0           # global-norm clip the fused step uses
 
     def example_args(self):
         return [
@@ -47,7 +58,9 @@ def batched_policy_variants(arts, batches=(4, 16)):
     ``{name}_b{B}`` variants whose leading input/output dims of 1 become
     ``B`` and whose meta gains ``env_batch`` — the artifacts
     ``rust/src/systems/executor.rs``'s ``VecExecutor`` acts through
-    (DESIGN.md §6). Train artifacts are untouched.
+    (DESIGN.md §6). ``b <= 1`` entries of the ladder are skipped (the base
+    ``*_policy`` artifact IS the B=1 bucket); train artifacts are
+    untouched.
     """
 
     def rebatch(specs, b):
@@ -64,6 +77,8 @@ def batched_policy_variants(arts, batches=(4, 16)):
         if not art.name.endswith("_policy"):
             continue
         for b in batches:
+            if b <= 1:
+                continue
             variants.append(ArtifactDef(
                 f"{art.name}_b{b}",
                 art.fn,
@@ -71,6 +86,78 @@ def batched_policy_variants(arts, batches=(4, 16)):
                 rebatch(art.outputs, b),
                 dict(art.meta, env_batch=b),
             ))
+    return variants
+
+
+def dp_train_variants(arts, shards=(2, 4)):
+    """Data-parallel shards of every gradient-decomposable train artifact.
+
+    For each ``*_train`` artifact carrying a ``grad_fn`` this returns, per
+    shard count ``D`` (with ``B % D == 0``), a ``{name}_dp{D}`` artifact
+    computing UNCLIPPED gradients + loss on a ``B/D``-row batch shard:
+
+      (params, target, *shard_batch) -> (grads[P], loss[L])
+
+    plus ONE ``{name}_apply`` artifact performing the post-all-reduce
+    update (clip -> adam -> polyak) on already-reduced gradients:
+
+      (params, target, opt, grads, lr, tau) -> (params', target', opt')
+
+    The rust trainer calls the ``_dp{D}`` variant once per device lane,
+    mean-reduces the gradient vectors on the host in fixed lane order, and
+    runs the identical ``_apply`` step on every lane — so replicas stay in
+    bitwise lock-step (DESIGN.md §11). The decomposition is exact because
+    the eligible losses are unweighted batch means: the full-batch
+    gradient equals the equal-weight mean of the per-shard gradients.
+    Clipping happens inside ``_apply`` (after the reduce), matching the
+    fused step's clip-of-full-batch-gradient semantics.
+    """
+    f = "float32"
+    variants = []
+    for art in arts:
+        if not art.name.endswith("_train") or art.grad_fn is None:
+            continue
+        params_spec, target_spec, opt_spec = art.inputs[0], art.inputs[1], art.inputs[2]
+        lr_spec, tau_spec = art.inputs[-2], art.inputs[-1]
+        batch_specs = list(art.inputs[3:-2])
+        P = int(params_spec[2][0])
+        B = int(batch_specs[0][2][0])
+        loss_spec = art.outputs[3]
+        made_any = False
+        for d in shards:
+            if d < 2 or B % d != 0:
+                continue
+            made_any = True
+            shard = B // d
+            resharded = [
+                (n, dt, (shard,) + tuple(s)[1:]) for (n, dt, s) in batch_specs
+            ]
+            variants.append(ArtifactDef(
+                f"{art.name}_dp{d}",
+                art.grad_fn,
+                [params_spec, target_spec] + resharded,
+                [("grads", f, (P,)), ("loss", f, tuple(loss_spec[2]))],
+                dict(art.meta, dp_shards=d, shard_batch=shard),
+            ))
+        if not made_any:
+            continue
+
+        def make_apply(clip):
+            def apply(params, target, opt, grads, lr, tau):
+                g = clip_grads(grads, clip)
+                new_params, new_opt = adam_update(opt, params, g, lr)
+                new_target = polyak(target, new_params, tau)
+                return new_params, new_target, new_opt
+            return apply
+
+        variants.append(ArtifactDef(
+            f"{art.name}_apply",
+            make_apply(art.clip_norm),
+            [params_spec, target_spec, opt_spec,
+             ("grads", f, (P,)), lr_spec, tau_spec],
+            list(art.outputs[:3]),
+            dict(art.meta, clip_norm=art.clip_norm),
+        ))
     return variants
 
 

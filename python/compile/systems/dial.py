@@ -104,6 +104,9 @@ def build(preset, *, gamma: float = 1.0, topology: str = "broadcast",
         _, qs = jax.lax.scan(step, (h, inbox), xs)
         return jnp.moveaxis(qs, 0, 1)
 
+    # No grad_fn: the masked-mean loss denominator (sum of the padding
+    # mask) differs per batch shard, so mean-of-shard-gradients is NOT
+    # the full-batch gradient — DIAL is dp-ineligible (DESIGN.md §11).
     def train(params, target, opt, obs, act, rew, disc, mask, noise, lr, tau):
         def loss_fn(flat):
             qs = _unroll(unravel(flat), obs, noise, T)          # [B,T,N,A]

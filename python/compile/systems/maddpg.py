@@ -127,7 +127,10 @@ def build(preset, *, arch: str = "decentralised", distributional: bool = False,
         pre = agent_net_from_params(ps["actor"], obs)
         return (jnp.tanh(pre),)
 
-    def train(params, target, opt, obs, act, rew, disc, next_obs, lr, tau):
+    def grads(params, target, obs, act, rew, disc, next_obs):
+        """Unclipped gradients + [critic, actor] losses; both terms are
+        unweighted batch means, so shard gradients average exactly
+        (DESIGN.md §11)."""
         tps = unravel(target)
 
         def loss_fn(flat):
@@ -179,10 +182,14 @@ def build(preset, *, arch: str = "decentralised", distributional: bool = False,
         # uses the non-frozen `pi`.
         (loss, (cl, al)), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
         del loss
+        return g, jnp.stack([cl, al])
+
+    def train(params, target, opt, obs, act, rew, disc, next_obs, lr, tau):
+        g, losses = grads(params, target, obs, act, rew, disc, next_obs)
         g = clip_grads(g, 40.0)
         new_params, new_opt = adam_update(opt, params, g, lr)
         new_target = polyak(target, new_params, tau)
-        return new_params, new_target, new_opt, jnp.stack([cl, al])
+        return new_params, new_target, new_opt, losses
 
     B, N, O, A = p.batch, p.n_agents, p.obs_dim, p.act_dim
     f = "float32"
@@ -207,5 +214,6 @@ def build(preset, *, arch: str = "decentralised", distributional: bool = False,
             [("params", f, (P,)), ("target", f, (P,)),
              ("opt", f, (1 + 2 * P,)), ("loss", f, (2,))],
             meta, init={"params0": flat0, "opt0": opt0(P)},
+            grad_fn=grads, clip_norm=40.0,
         ),
     ]

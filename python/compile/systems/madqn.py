@@ -47,7 +47,9 @@ def build(preset, *, gamma: float = 0.99, shared_weights: bool = False):
     def policy(params, obs):
         return (agent_net_from_params(unravel(params), obs),)
 
-    def train(params, target, opt, obs, act, rew, disc, next_obs, lr, tau):
+    def grads(params, target, obs, act, rew, disc, next_obs):
+        """Unclipped full/shard-batch gradients + loss (loss is a plain
+        batch mean, so shard gradients average exactly — DESIGN.md §11)."""
         def loss_fn(flat):
             q = _q_apply(unravel(flat), obs)                       # [B,N,A]
             chosen = jnp.take_along_axis(q, act[..., None], -1)[..., 0]
@@ -56,10 +58,14 @@ def build(preset, *, gamma: float = 0.99, shared_weights: bool = False):
             return jnp.mean(huber(chosen - jax.lax.stop_gradient(y)))
 
         loss, g = jax.value_and_grad(loss_fn)(params)
+        return g, loss[None]
+
+    def train(params, target, opt, obs, act, rew, disc, next_obs, lr, tau):
+        g, loss = grads(params, target, obs, act, rew, disc, next_obs)
         g = clip_grads(g, 40.0)
         new_params, new_opt = adam_update(opt, params, g, lr)
         new_target = polyak(target, new_params, tau)
-        return new_params, new_target, new_opt, loss[None]
+        return new_params, new_target, new_opt, loss
 
     B, N, O, A = p.batch, p.n_agents, p.obs_dim, p.act_dim
     f, i = "float32", "int32"
@@ -79,6 +85,7 @@ def build(preset, *, gamma: float = 0.99, shared_weights: bool = False):
             [("params", f, (P,)), ("target", f, (P,)),
              ("opt", f, (1 + 2 * P,)), ("loss", f, (1,))],
             meta, init={"params0": flat0, "opt0": opt0(P)},
+            grad_fn=grads, clip_norm=40.0,
         ),
     ]
 
@@ -125,6 +132,9 @@ def build_recurrent(preset, *, gamma: float = 1.0):
         q, h2 = _rec_step(unravel(params), obs, h)
         return q, h2
 
+    # No grad_fn: the masked-mean loss denominator (sum of the padding
+    # mask) differs per batch shard, so mean-of-shard-gradients is NOT
+    # the full-batch gradient — recurrent MADQN is dp-ineligible.
     def train(params, target, opt, obs, act, rew, disc, mask, lr, tau):
         h0 = jnp.zeros((B, N, H), jnp.float32)
 

@@ -53,8 +53,10 @@ def build(preset, *, mixer: str = "vdn", gamma: float = 0.99,
     def policy(params, obs):
         return (agent_net_from_params(unravel(params)["qnet"], obs),)
 
-    def train(params, target, opt, obs, state, act, rew, disc, next_obs,
-              next_state, lr, tau):
+    def grads(params, target, obs, state, act, rew, disc, next_obs,
+              next_state):
+        """Unclipped gradients + loss; the TD loss is an unweighted batch
+        mean, so per-shard gradients average exactly (DESIGN.md §11)."""
         def loss_fn(flat):
             ps = unravel(flat)
             tps = unravel(target)
@@ -77,10 +79,16 @@ def build(preset, *, mixer: str = "vdn", gamma: float = 0.99,
             return jnp.mean(jnp.square(td))
 
         loss, g = jax.value_and_grad(loss_fn)(params)
+        return g, loss[None]
+
+    def train(params, target, opt, obs, state, act, rew, disc, next_obs,
+              next_state, lr, tau):
+        g, loss = grads(params, target, obs, state, act, rew, disc,
+                        next_obs, next_state)
         g = clip_grads(g, 10.0)
         new_params, new_opt = adam_update(opt, params, g, lr)
         new_target = polyak(target, new_params, tau)
-        return new_params, new_target, new_opt, loss[None]
+        return new_params, new_target, new_opt, loss
 
     B, N, O, A, S = p.batch, p.n_agents, p.obs_dim, p.act_dim, p.state_dim
     f, i = "float32", "int32"
@@ -101,5 +109,6 @@ def build(preset, *, mixer: str = "vdn", gamma: float = 0.99,
             [("params", f, (P,)), ("target", f, (P,)),
              ("opt", f, (1 + 2 * P,)), ("loss", f, (1,))],
             meta, init={"params0": flat0, "opt0": opt0(P)},
+            grad_fn=grads, clip_norm=10.0,
         ),
     ]

@@ -1,0 +1,188 @@
+"""Bucketed policy ladder + data-parallel train shards (DESIGN.md §11).
+
+Two properties keep the rust side honest:
+
+1. The bucketed ladder covers 1..=64 so `runtime/bucket.rs` can round any
+   executor/eval width up to a lowered variant, and padding rows can
+   never leak into real rows (the acting networks are row-independent).
+2. The `_dp{D}` + `_apply` decomposition is exact: the equal-weight mean
+   of per-shard gradients equals the full-batch gradient (eligible
+   losses are unweighted batch means), so shard-grads -> host all-reduce
+   -> `_apply` reproduces the fused `_train` step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import DP_SHARDS, POLICY_BATCHES, catalogue
+from compile.presets import PRESETS
+from compile.systems import madqn
+
+jax.config.update("jax_platform_name", "cpu")
+
+# systems whose train artifact must carry dp variants (unweighted-mean
+# losses) and systems that must NOT (masked-mean losses)
+DP_ELIGIBLE = ["matrix2_madqn", "matrix2_vdn", "matrix2_qmix",
+               "smac3m_madqn", "spread3_maddpg_dec"]
+DP_INELIGIBLE = ["switch3_madqn_rec", "switch3_dial"]
+
+
+def _arts():
+    if not hasattr(_arts, "cache"):
+        _arts.cache = {a.name: a for a in catalogue()}
+    return _arts.cache
+
+
+def test_ladder_covers_1_to_64():
+    assert POLICY_BATCHES[0] == 1 and POLICY_BATCHES[-1] == 64
+    assert list(POLICY_BATCHES) == sorted(POLICY_BATCHES)
+    # round-up gap bound: every n in 1..=64 has a bucket within 2x
+    for n in range(1, 65):
+        b = min(x for x in POLICY_BATCHES if x >= n)
+        assert b < 2 * n or b == 1, (n, b)
+
+
+def test_dp_variants_exist_exactly_for_mean_loss_systems():
+    arts = _arts()
+    for tag in DP_ELIGIBLE:
+        assert f"{tag}_train_apply" in arts, tag
+        base = arts[f"{tag}_train"]
+        B = base.inputs[3][2][0]
+        for d in DP_SHARDS:
+            if B % d != 0:
+                continue
+            v = arts[f"{tag}_train_dp{d}"]
+            assert v.meta["dp_shards"] == d
+            assert v.meta["shard_batch"] == B // d
+            # (params, target, *shard_batch) -> (grads, loss)
+            assert v.inputs[0][0] == "params" and v.inputs[1][0] == "target"
+            assert all(s[2][0] == B // d for s in v.inputs[2:])
+            assert v.outputs[0] == ("grads", "float32", base.inputs[0][2])
+            assert v.outputs[1][2] == tuple(base.outputs[3][2])
+            assert not v.init, "dp variants carry no init blobs"
+    for tag in DP_INELIGIBLE:
+        assert f"{tag}_train_apply" not in arts, tag
+        assert not any(n.startswith(f"{tag}_train_dp") for n in arts), tag
+
+
+def _train_batch(rng, art):
+    """Random full-batch inputs for every batch input (between opt and lr)."""
+    out = []
+    for (_, dt, shape) in art.inputs[3:-2]:
+        if dt == "int32":
+            out.append(jnp.asarray(rng.randint(0, 2, shape), jnp.int32))
+        else:
+            out.append(jnp.asarray(rng.randn(*shape), jnp.float32))
+    return out
+
+
+@pytest.mark.parametrize("tag", ["matrix2_madqn", "matrix2_qmix"])
+def test_shard_gradient_mean_equals_full_batch_gradient(tag):
+    arts = _arts()
+    base = arts[f"{tag}_train"]
+    rng = np.random.RandomState(11)
+    P = base.inputs[0][2][0]
+    params = jnp.asarray(rng.randn(P) * 0.1, jnp.float32)
+    target = jnp.asarray(rng.randn(P) * 0.1, jnp.float32)
+    batch = _train_batch(rng, base)
+    B = batch[0].shape[0]
+    g_full, loss_full = base.grad_fn(params, target, *batch)
+    for d in DP_SHARDS:
+        if B % d != 0:
+            continue
+        shard_fn = arts[f"{tag}_train_dp{d}"].fn
+        shard = B // d
+        gs, losses = [], []
+        for k in range(d):
+            rows = [x[k * shard:(k + 1) * shard] for x in batch]
+            g_k, l_k = shard_fn(params, target, *rows)
+            gs.append(g_k)
+            losses.append(l_k)
+        np.testing.assert_allclose(
+            np.mean(np.stack(gs), axis=0), np.asarray(g_full),
+            rtol=1e-4, atol=1e-5, err_msg=f"{tag} dp{d} gradient mean"
+        )
+        np.testing.assert_allclose(
+            np.mean(np.stack(losses), axis=0), np.asarray(loss_full),
+            rtol=1e-5, atol=1e-6, err_msg=f"{tag} dp{d} loss mean"
+        )
+
+
+def test_dp_pipeline_matches_fused_train_step():
+    """shard grads -> host mean all-reduce -> _apply == fused _train."""
+    arts = _arts()
+    base = arts["matrix2_madqn_train"]
+    apply_fn = arts["matrix2_madqn_train_apply"].fn
+    rng = np.random.RandomState(5)
+    P = base.inputs[0][2][0]
+    params = jnp.asarray(rng.randn(P) * 0.1, jnp.float32)
+    target = jnp.asarray(rng.randn(P) * 0.1, jnp.float32)
+    opt = jnp.asarray(base.init["opt0"])
+    batch = _train_batch(rng, base)
+    lr, tau = jnp.float32(1e-3), jnp.float32(0.01)
+
+    fused = base.fn(params, target, opt, *batch, lr, tau)
+
+    d = 2
+    shard_fn = arts[f"matrix2_madqn_train_dp{d}"].fn
+    shard = batch[0].shape[0] // d
+    gs = [
+        shard_fn(params, target,
+                 *[x[k * shard:(k + 1) * shard] for x in batch])[0]
+        for k in range(d)
+    ]
+    reduced = jnp.mean(jnp.stack(gs), axis=0)
+    applied = apply_fn(params, target, opt, reduced, lr, tau)
+
+    for (got, want, name) in zip(applied, fused, ("params", "target", "opt")):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6,
+            err_msg=f"dp pipeline diverged on {name}"
+        )
+
+
+def test_padding_rows_never_affect_real_rows():
+    """Bitwise: garbage in pad rows of a bucket call leaves real rows
+    untouched (the property rust's bucket masking relies on)."""
+    arts = _arts()
+    pol = arts["matrix2_madqn_policy_b8"]
+    rng = np.random.RandomState(3)
+    P = pol.inputs[0][2][0]
+    params = jnp.asarray(rng.randn(P) * 0.1, jnp.float32)
+    n, B = 5, 8
+    obs_shape = pol.inputs[1][2]
+    real = rng.randn(n, *obs_shape[1:]).astype(np.float32)
+    padded_zero = np.zeros(obs_shape, np.float32)
+    padded_zero[:n] = real
+    padded_junk = rng.randn(*obs_shape).astype(np.float32) * 100.0
+    padded_junk[:n] = real
+    fn = jax.jit(pol.fn)
+    q_zero = np.asarray(fn(params, jnp.asarray(padded_zero))[0])
+    q_junk = np.asarray(fn(params, jnp.asarray(padded_junk))[0])
+    np.testing.assert_array_equal(
+        q_zero[:n], q_junk[:n],
+        err_msg="pad-row contents leaked into real rows"
+    )
+
+
+def test_dp_shard_artifacts_lower_to_hlo():
+    from compile.hlo import lower_to_hlo_text
+
+    art = _arts()["matrix2_madqn_train_dp2"]
+    text = lower_to_hlo_text(art.fn, *art.example_args())
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    art = _arts()["matrix2_madqn_train_apply"]
+    text = lower_to_hlo_text(art.fn, *art.example_args())
+    assert text.startswith("HloModule")
+
+
+def test_grad_fn_and_clip_norm_recorded():
+    arts = madqn.build(PRESETS["matrix2"])
+    train = arts[1]
+    assert train.grad_fn is not None
+    assert train.clip_norm == 40.0
+    # the policy artifact carries neither
+    assert arts[0].grad_fn is None and arts[0].clip_norm == 0.0

@@ -444,28 +444,94 @@ pub fn experiment_report(
     Json::Obj(fields)
 }
 
+/// One named rate in a `throughput` report, with the optional
+/// data-parallel / bucketed-lowering axes (DESIGN.md §11): `devices`
+/// is the device-lane count the rate was measured at, `bucket` the
+/// lowered policy-batch bucket serving the run. Both are omitted from
+/// the JSON when `None`, so reports without the axes stay byte-stable.
+#[derive(Clone, Debug)]
+pub struct ThroughputRow {
+    /// Series entry name (unique within the report by convention).
+    pub name: String,
+    /// The measured rate.
+    pub value: f64,
+    /// Unit string, e.g. `"env_steps/s"`.
+    pub unit: String,
+    /// Device-lane count axis (`num_devices`), when measured.
+    pub devices: Option<u64>,
+    /// Policy bucket-size axis, when measured.
+    pub bucket: Option<u64>,
+}
+
+impl ThroughputRow {
+    /// Row without the optional axes.
+    pub fn new(
+        name: impl Into<String>,
+        value: f64,
+        unit: impl Into<String>,
+    ) -> ThroughputRow {
+        ThroughputRow {
+            name: name.into(),
+            value,
+            unit: unit.into(),
+            devices: None,
+            bucket: None,
+        }
+    }
+
+    /// Attach the device-count axis.
+    pub fn with_devices(mut self, d: u64) -> ThroughputRow {
+        self.devices = Some(d);
+        self
+    }
+
+    /// Attach the bucket-size axis.
+    pub fn with_bucket(mut self, b: u64) -> ThroughputRow {
+        self.bucket = Some(b);
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("value".into(), Json::Num(self.value)),
+            ("unit".into(), Json::Str(self.unit.clone())),
+        ];
+        if let Some(d) = self.devices {
+            fields.push(("devices".into(), Json::Num(d as f64)));
+        }
+        if let Some(b) = self.bucket {
+            fields.push(("bucket".into(), Json::Num(b as f64)));
+        }
+        Json::Obj(fields)
+    }
+}
+
 /// Build a schema-valid `throughput` report from named `(name, value,
 /// unit)` series rows — the writer the steps/s benches share with the
-/// experiment harness.
+/// experiment harness. Use [`throughput_report_rows`] to also record
+/// the `devices` / `bucket` axes.
 pub fn throughput_report(
     scenario: &str,
     series: &[(String, f64, String)],
 ) -> Json {
+    let rows: Vec<ThroughputRow> = series
+        .iter()
+        .map(|(n, v, u)| ThroughputRow::new(n.clone(), *v, u.clone()))
+        .collect();
+    throughput_report_rows(scenario, &rows)
+}
+
+/// [`throughput_report`] over full [`ThroughputRow`]s (optional
+/// `devices` / `bucket` axes included).
+pub fn throughput_report_rows(
+    scenario: &str,
+    series: &[ThroughputRow],
+) -> Json {
     let mut fields = header("throughput", scenario);
     fields.push((
         "series".into(),
-        Json::Arr(
-            series
-                .iter()
-                .map(|(name, value, unit)| {
-                    Json::Obj(vec![
-                        ("name".into(), Json::Str(name.clone())),
-                        ("value".into(), Json::Num(*value)),
-                        ("unit".into(), Json::Str(unit.clone())),
-                    ])
-                })
-                .collect(),
-        ),
+        Json::Arr(series.iter().map(ThroughputRow::to_json).collect()),
     ));
     Json::Obj(fields)
 }
@@ -576,6 +642,20 @@ pub fn validate(report: &Json) -> Result<()> {
                 require_str(row, "name").with_context(ctx)?;
                 require_num(row, "value").with_context(ctx)?;
                 require_str(row, "unit").with_context(ctx)?;
+                // optional axes: device-lane count and bucket size
+                // must be whole numbers >= 1 when present
+                for axis in ["devices", "bucket"] {
+                    if let Some(v) = row.get(axis) {
+                        let x = v.as_num().with_context(|| {
+                            format!("series[{i}].{axis} must be a number")
+                        })?;
+                        ensure!(
+                            x >= 1.0 && x.fract() == 0.0,
+                            "series[{i}].{axis} must be a whole number \
+                             >= 1, got {x}"
+                        );
+                    }
+                }
             }
         }
         other => bail!("unknown report kind {other:?}"),
@@ -654,6 +734,34 @@ mod tests {
             &[("host".into(), 120.0, "steps/s".into())],
         );
         validate(&tp).unwrap();
+    }
+
+    #[test]
+    fn throughput_axes_roundtrip_and_validate() {
+        let rows = [
+            ThroughputRow::new("train_dp2", 900.0, "train_steps/s")
+                .with_devices(2),
+            ThroughputRow::new("acting_n3", 5000.0, "env_steps/s")
+                .with_bucket(4),
+            ThroughputRow::new("plain", 1.0, "steps/s"),
+        ];
+        let json = throughput_report_rows("axes", &rows);
+        validate(&json).unwrap();
+        let back = parse(&json.render()).unwrap();
+        let series = back.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series[0].get("devices").unwrap().as_num(), Some(2.0));
+        assert_eq!(series[1].get("bucket").unwrap().as_num(), Some(4.0));
+        assert!(series[2].get("devices").is_none());
+        // a zero or fractional axis is rejected
+        for bad_axis in ["\"devices\": 0", "\"devices\": 1.5"] {
+            let bad = parse(
+                &json
+                    .render()
+                    .replace("\"devices\": 2", bad_axis),
+            )
+            .unwrap();
+            assert!(validate(&bad).is_err(), "{bad_axis} must fail");
+        }
     }
 
     #[test]

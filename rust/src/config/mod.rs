@@ -25,10 +25,19 @@ pub struct TrainConfig {
     /// Number of executor processes (paper `num_executors`).
     pub num_executors: usize,
     /// Environment instances each executor steps per batched policy
-    /// call (the vectorized hot path, DESIGN.md §6). Must match a
-    /// lowered policy-artifact batch (`POLICY_BATCHES` in
-    /// python/compile/model.py; 1, 4 and 16 by default).
+    /// call (the vectorized hot path, DESIGN.md §6). Any width up to
+    /// the largest lowered policy batch works: the runtime rounds up to
+    /// the nearest bucket of the lowered ladder (`POLICY_BATCHES` in
+    /// python/compile/model.py) and masks the padding rows
+    /// (DESIGN.md §11).
     pub num_envs_per_executor: usize,
+    /// Data-parallel trainer lanes (DESIGN.md §11): the assembled batch
+    /// is split into this many shards, gradients are computed per lane
+    /// via the `_train_dp{D}` artifacts and mean-all-reduced before one
+    /// shared `_train_apply` update. 1 = the fused single-device train
+    /// step. Validated >= 1; values > 1 must match a lowered
+    /// `DP_SHARDS` entry (python/compile/model.py).
+    pub num_devices: usize,
     /// Stop after this many total environment steps.
     pub max_env_steps: u64,
     /// Stop after this many trainer steps (0 = unlimited).
@@ -91,6 +100,7 @@ impl Default for TrainConfig {
             arch: Architecture::Decentralised,
             num_executors: 1,
             num_envs_per_executor: 1,
+            num_devices: 1,
             max_env_steps: 10_000,
             max_train_steps: 0,
             lr: 1e-3,
@@ -153,6 +163,7 @@ impl TrainConfig {
         }
         get!(num_executors, get_usize);
         get!(num_envs_per_executor, get_usize);
+        get!(num_devices, get_usize);
         get!(max_env_steps, get_u64);
         get!(max_train_steps, get_u64);
         get!(n_step, get_usize);
@@ -200,6 +211,11 @@ impl TrainConfig {
             "seeds must be >= 1 (got {})",
             self.seeds
         );
+        anyhow::ensure!(
+            self.num_devices >= 1,
+            "num_devices must be >= 1 (got {})",
+            self.num_devices
+        );
         Ok(())
     }
 
@@ -234,6 +250,10 @@ impl TrainConfig {
             "num_executors" | "executors" => self.num_executors = val.parse()?,
             "num_envs_per_executor" | "envs_per_executor" => {
                 self.num_envs_per_executor = val.parse()?
+            }
+            "num_devices" | "devices" => {
+                self.num_devices = val.parse()?;
+                self.validate()?;
             }
             "max_env_steps" | "steps" => self.max_env_steps = val.parse()?,
             "max_train_steps" => self.max_train_steps = val.parse()?,
@@ -289,6 +309,7 @@ impl TrainConfig {
             "num_envs_per_executor",
             self.num_envs_per_executor.to_string(),
         );
+        kv("num_devices", self.num_devices.to_string());
         kv("max_env_steps", self.max_env_steps.to_string());
         kv("max_train_steps", self.max_train_steps.to_string());
         kv("lr", self.lr.to_string());
@@ -426,6 +447,27 @@ mod tests {
         let mut c = TrainConfig::default();
         c.set("dist_timeout_s", "120").unwrap();
         assert_eq!(c.dist_timeout_s, 120);
+    }
+
+    #[test]
+    fn num_devices_validated_and_aliased() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.num_devices, 1);
+        c.set("num_devices", "2").unwrap();
+        assert_eq!(c.num_devices, 2);
+        c.set("devices", "4").unwrap();
+        assert_eq!(c.num_devices, 4);
+        assert!(c.set("num_devices", "0").is_err());
+        let raw = RawConfig::parse("[train]\nnum_devices = 0\n").unwrap();
+        assert!(TrainConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[train]\nnum_devices = 2\n").unwrap();
+        assert_eq!(TrainConfig::from_raw(&raw).unwrap().num_devices, 2);
+        // `to_cli_args` round-trips the new key like every other
+        let mut src = TrainConfig::default();
+        src.num_devices = 2;
+        let mut back = TrainConfig::default();
+        back.apply_cli(&src.to_cli_args()).unwrap();
+        assert_eq!(back.num_devices, 2);
     }
 
     #[test]

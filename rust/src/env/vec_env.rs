@@ -100,7 +100,11 @@ pub struct VecStepBuf {
 
 impl VecStepBuf {
     /// An all-zero buffer for `b` instances of `spec`; `with_legal`
-    /// adds the `[B, N, A]` mask plane.
+    /// adds the `[B, N, A]` mask plane. Fresh rows read as `Mid` steps
+    /// with zero discount/rewards — the pad-safe defaults: rows beyond
+    /// the real instance count of a bucket-padded buffer (DESIGN.md
+    /// §11) keep these values forever, so they never read as episode
+    /// ends (`any_last`) and never contribute reward.
     pub fn new(spec: &EnvSpec, b: usize, with_legal: bool) -> VecStepBuf {
         let (n, o, s) = (spec.n_agents, spec.obs_dim, spec.state_dim);
         let a = spec.n_actions();
@@ -112,8 +116,8 @@ impl VecStepBuf {
             s,
             obs: HostTensor::zeros_f32(vec![b, n, o]),
             rewards: vec![0.0; b * n],
-            step_types: vec![StepType::Last; b],
-            discounts: vec![1.0; b],
+            step_types: vec![StepType::Mid; b],
+            discounts: vec![0.0; b],
             legal: with_legal.then(|| vec![0.0; b * n * a]),
             state: vec![0.0; b * s],
         }
@@ -167,6 +171,12 @@ impl VecStepBuf {
     /// Row `i`'s per-agent rewards `[N]`.
     pub fn rewards_row(&self, i: usize) -> &[f32] {
         &self.rewards[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Mutable view of row `i`'s per-agent rewards (padding-poisoning
+    /// tests and external reward shaping).
+    pub fn rewards_row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.rewards[i * self.n..(i + 1) * self.n]
     }
 
     /// Row `i`'s mean-over-agents reward (episode-return accounting).
@@ -413,6 +423,24 @@ impl VecEnv {
         ActionBuf::new(&self.spec, self.envs.len())
     }
 
+    /// A [`VecStepBuf`] padded to `width >= num_envs` rows — the
+    /// bucketed-lowering path (DESIGN.md §11): the buffer matches a
+    /// lowered policy bucket while only the first `num_envs` rows carry
+    /// real environments. Padding rows stay zeroed (`StepType::Mid`,
+    /// zero obs/rewards/discount) and are never written by
+    /// [`VecEnv::reset_into`] / [`VecEnv::step_into`].
+    pub fn make_buf_padded(&self, width: usize) -> VecStepBuf {
+        assert!(width >= self.envs.len(), "pad width below num_envs");
+        VecStepBuf::new(&self.spec, width, self.has_legal)
+    }
+
+    /// An [`ActionBuf`] padded to `width >= num_envs` rows (see
+    /// [`VecEnv::make_buf_padded`]).
+    pub fn make_action_buf_padded(&self, width: usize) -> ActionBuf {
+        assert!(width >= self.envs.len(), "pad width below num_envs");
+        ActionBuf::new(&self.spec, width)
+    }
+
     /// Fill one row of `buf` from `env`'s current post-step state,
     /// via the SoA hooks when available, else by bridging the
     /// materialised timestep (allocates).
@@ -435,10 +463,13 @@ impl VecEnv {
         buf.set_meta(i, meta);
     }
 
-    /// Reset every instance **into** `buf`: every row comes back as a
-    /// `First` step. Allocation-free for SoA environments.
+    /// Reset every instance **into** `buf`: every real row comes back
+    /// as a `First` step. Allocation-free for SoA environments. `buf`
+    /// may be wider than the instance count (bucket padding,
+    /// [`VecEnv::make_buf_padded`]); rows past `num_envs` are left
+    /// untouched.
     pub fn reset_into(&mut self, buf: &mut VecStepBuf) {
-        assert_eq!(buf.num_envs(), self.envs.len(), "buf batch != num_envs");
+        assert!(buf.num_envs() >= self.envs.len(), "buf batch < num_envs");
         for (i, env) in self.envs.iter_mut().enumerate() {
             if env.writes_soa() {
                 let meta = env.reset_soa();
@@ -454,14 +485,15 @@ impl VecEnv {
     /// Step every instance with its [`ActionBuf`] row **into** `buf`.
     /// Instances whose previous step was `Last` are reset instead
     /// (their action row is ignored) and contribute a `First` row.
-    /// Allocation-free for SoA environments.
+    /// Allocation-free for SoA environments. Both buffers may be wider
+    /// than the instance count (bucket padding); rows past `num_envs`
+    /// are neither read nor written.
     pub fn step_into(&mut self, actions: &ActionBuf, buf: &mut VecStepBuf) {
-        assert_eq!(
-            actions.num_envs(),
-            self.envs.len(),
-            "actions batch != num_envs"
+        assert!(
+            actions.num_envs() >= self.envs.len(),
+            "actions batch < num_envs"
         );
-        assert_eq!(buf.num_envs(), self.envs.len(), "buf batch != num_envs");
+        assert!(buf.num_envs() >= self.envs.len(), "buf batch < num_envs");
         for (i, env) in self.envs.iter_mut().enumerate() {
             let resets = self.last_types[i] == StepType::Last;
             if env.writes_soa() {
@@ -787,6 +819,63 @@ mod tests {
                         panic!("{name} legal plane mismatch: {other:?}")
                     }
                 }
+            }
+        }
+    }
+
+    /// Bucket padding (DESIGN.md §11): a buffer wider than the instance
+    /// count fills only the real rows; pad rows are bitwise untouched
+    /// across resets and steps, and real rows match an unpadded run.
+    #[test]
+    fn padded_buf_real_rows_match_and_pad_rows_untouched() {
+        use crate::env::make_env;
+        let mk = |n: u64| -> Vec<Box<dyn MultiAgentEnv>> {
+            (0..n).map(|i| make_env("matrix", i).unwrap()).collect()
+        };
+        let mut plain = VecEnv::new(mk(3)).unwrap();
+        let mut padded = VecEnv::new(mk(3)).unwrap();
+        let mut buf = plain.make_buf();
+        let mut pbuf = padded.make_buf_padded(8);
+        let mut abuf = plain.make_action_buf();
+        let mut pabuf = padded.make_action_buf_padded(8);
+        assert_eq!(pbuf.num_envs(), 8);
+
+        // poison the pad rows' action slots; they must never be read
+        for i in 3..8 {
+            pabuf.disc_row_mut(i).fill(99);
+        }
+        plain.reset_into(&mut buf);
+        padded.reset_into(&mut pbuf);
+        for _ in 0..12 {
+            for i in 0..3 {
+                for (a, b) in abuf
+                    .disc_row_mut(i)
+                    .iter_mut()
+                    .zip(pabuf.disc_row_mut(i).iter_mut())
+                {
+                    *a = 1;
+                    *b = 1;
+                }
+            }
+            plain.step_into(&abuf, &mut buf);
+            padded.step_into(&pabuf, &mut pbuf);
+            for i in 0..3 {
+                assert_eq!(buf.obs_row(i), pbuf.obs_row(i), "row {i}");
+                assert_eq!(buf.rewards_row(i), pbuf.rewards_row(i));
+                assert_eq!(buf.step_type(i), pbuf.step_type(i));
+                assert_eq!(buf.discount(i), pbuf.discount(i));
+            }
+            for i in 3..8 {
+                assert!(
+                    pbuf.obs_row(i).iter().all(|&x| x == 0.0),
+                    "pad row {i} was written"
+                );
+                assert_eq!(pbuf.discount(i), 0.0, "pad row {i} discount");
+                assert_ne!(
+                    pbuf.step_type(i),
+                    StepType::Last,
+                    "pad row {i} must never read as episode end"
+                );
             }
         }
     }

@@ -72,10 +72,18 @@ impl EpisodeAccountant {
     /// [`EpisodeAccountant::observe`] over a struct-of-arrays
     /// [`VecStepBuf`]; the returned reset-row slice is backed by a
     /// reused scratch buffer (valid until the next call).
+    ///
+    /// The buffer may be *wider* than the accountant (bucket padding,
+    /// DESIGN.md §11): only the first `batch` rows — the real
+    /// environments — are folded in; padding rows can never contribute
+    /// a reward or a completed return.
     pub fn observe_buf(&mut self, buf: &VecStepBuf) -> &[usize] {
-        debug_assert_eq!(buf.num_envs(), self.running.len());
+        debug_assert!(
+            buf.num_envs() >= self.running.len(),
+            "step buf narrower than accountant"
+        );
         self.reset_scratch.clear();
-        for i in 0..buf.num_envs() {
+        for i in 0..self.running.len() {
             if buf.step_type(i) == StepType::First {
                 self.running[i] = 0.0;
                 self.reset_scratch.push(i);
@@ -118,17 +126,29 @@ pub struct VecEvaluator {
 }
 
 impl VecEvaluator {
-    /// Pair an executor and environment batch of matching width.
-    pub fn new(executor: VecExecutor, venv: VecEnv) -> Result<VecEvaluator> {
+    /// Pair an executor with an environment batch of at most its width.
+    ///
+    /// The executor's artifact bucket may exceed the number of real
+    /// environments (bucketed lowering, DESIGN.md §11): the SoA buffers
+    /// are sized at the bucket, the [`VecEnv`] fills only the first
+    /// `venv.num_envs()` rows, the executor selects actions only for
+    /// those rows, and the accountant never sees the padding.
+    pub fn new(
+        mut executor: VecExecutor,
+        venv: VecEnv,
+    ) -> Result<VecEvaluator> {
         ensure!(
-            executor.num_envs() == venv.num_envs(),
-            "policy artifact batch {} != VecEnv batch {}",
+            executor.num_envs() >= venv.num_envs(),
+            "policy artifact bucket {} < VecEnv batch {} — pick the \
+             bucket with BucketLadder::pick",
             executor.num_envs(),
             venv.num_envs()
         );
-        let cur = venv.make_buf();
-        let next = venv.make_buf();
-        let abuf = venv.make_action_buf();
+        let bucket = executor.num_envs();
+        executor.set_active_rows(venv.num_envs())?;
+        let cur = venv.make_buf_padded(bucket);
+        let next = venv.make_buf_padded(bucket);
+        let abuf = venv.make_action_buf_padded(bucket);
         Ok(VecEvaluator { executor, venv, cur, next, abuf })
     }
 
@@ -359,6 +379,45 @@ mod tests {
             assert_eq!(want, got);
         }
         assert_eq!(legacy.completed(), soa.completed());
+    }
+
+    /// Bucket padding (DESIGN.md §11): with a step buffer wider than
+    /// the accountant, padding rows must contribute no rewards, no
+    /// completed returns and no reset rows — the accounts must be
+    /// bitwise identical to an unpadded run of the same environments.
+    #[test]
+    fn accountant_ignores_padding_rows() {
+        let specs = [(1.0, 2), (10.0, 3)];
+        let mut plain_env = venv(&specs);
+        let mut padded_env = venv(&specs);
+        let mut plain = EpisodeAccountant::new(2);
+        let mut padded = EpisodeAccountant::new(2);
+        let mut buf = plain_env.make_buf();
+        let mut wide = padded_env.make_buf_padded(8); // 6 padding rows
+        let abuf = plain_env.make_action_buf();
+        let abuf_wide = padded_env.make_action_buf_padded(8);
+        plain_env.reset_into(&mut buf);
+        padded_env.reset_into(&mut wide);
+        // poison the padding rows' rewards: if the accountant ever
+        // read them, the running returns would diverge
+        for i in 2..8 {
+            for r in wide.rewards_row_mut(i) {
+                *r = 1.0e6;
+            }
+        }
+        for _ in 0..7 {
+            plain_env.step_into(&abuf, &mut buf);
+            padded_env.step_into(&abuf_wide, &mut wide);
+            for i in 2..8 {
+                for r in wide.rewards_row_mut(i) {
+                    *r = 1.0e6;
+                }
+            }
+            let want = plain.observe_buf(&buf).to_vec();
+            let got = padded.observe_buf(&wide).to_vec();
+            assert_eq!(want, got, "reset rows diverged");
+        }
+        assert_eq!(plain.completed(), padded.completed());
     }
 
     #[test]

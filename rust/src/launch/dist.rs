@@ -149,9 +149,16 @@ fn train_meta(cfg: &TrainConfig) -> Result<TrainMeta> {
     let spec = SystemSpec::parse(&cfg.system)?;
     let prefix = spec.artifact_prefix(&cfg.preset, cfg.arch);
     let train_name = spec.train_artifact(&prefix);
-    let exec_policy_name = spec
-        .batched_policy_artifact(&prefix, cfg.num_envs_per_executor.max(1));
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    // executors act at the lowered bucket num_envs rounds UP to
+    // (DESIGN.md §11), exactly like the in-process builder
+    let ladder = crate::runtime::BucketLadder::from_manifest(
+        &manifest,
+        &spec.policy_artifact(&prefix),
+    )?;
+    let (bucket, _pad) =
+        ladder.pick(cfg.num_envs_per_executor.max(1))?;
+    let exec_policy_name = ladder.artifact_name(bucket);
     let train_art = manifest.get(&train_name)?.clone();
     Ok(TrainMeta {
         spec,

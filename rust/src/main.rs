@@ -30,7 +30,7 @@ fn usage() -> ! {
         "usage: mava <train|eval|launch|node|experiment|check-bench|list|info>\n\
          \x20           [--config FILE] [--key value ...]\n\
          keys: system preset arch num_executors num_envs_per_executor\n\
-         \x20     max_env_steps lr tau n_step eps_start eps_end\n\
+         \x20     num_devices max_env_steps lr tau n_step eps_start eps_end\n\
          \x20     eps_decay_steps noise_sigma replay_size min_replay\n\
          \x20     samples_per_insert publish_interval seed seeds\n\
          \x20     artifacts_dir log_dir eval_every_steps (alias\n\

@@ -1,0 +1,192 @@
+//! Bucketed batch selection: map ANY requested env/eval/serve width to
+//! the nearest lowered `_b{B}` policy variant (DESIGN.md §11).
+//!
+//! AOT compilation freezes shapes, so the Python catalogue lowers a
+//! *ladder* of policy batch widths (`POLICY_BATCHES` in
+//! python/compile/model.py) rather than every width. [`BucketLadder`]
+//! scans the manifest for the variants that actually exist for one
+//! policy and [`BucketLadder::pick`] rounds a requested width `n` up to
+//! the smallest lowered bucket `B >= n`. The `B - n` padding rows are
+//! *masked* by the callers — [`crate::systems::VecExecutor`] selects
+//! actions only for active rows, [`crate::env::VecEnv`] fills only real
+//! rows, and [`crate::eval::EpisodeAccountant`] accounts only real
+//! rows — so padding can never leak into actions, replay inserts or
+//! episode returns.
+
+#![warn(missing_docs)]
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
+/// The lowered policy-batch ladder for ONE policy artifact, scanned
+/// from the manifest (so error messages and selection always reflect
+/// what `make artifacts` actually produced, never a stale literal).
+#[derive(Clone, Debug)]
+pub struct BucketLadder {
+    base: String,
+    buckets: Vec<usize>, // sorted ascending; 1 = the base `*_policy`
+}
+
+impl BucketLadder {
+    /// Scan `manifest` for `base_policy` (the plain `*_policy` name =
+    /// the B=1 bucket) and every `{base_policy}_b{B}` variant.
+    pub fn from_manifest(manifest: &Manifest, base_policy: &str) -> Result<BucketLadder> {
+        let mut buckets = Vec::new();
+        if manifest.artifacts.contains_key(base_policy) {
+            buckets.push(1);
+        }
+        let prefix = format!("{base_policy}_b");
+        for name in manifest.artifacts.keys() {
+            if let Some(b) = name
+                .strip_prefix(&prefix)
+                .and_then(|rest| rest.parse::<usize>().ok())
+            {
+                if b > 1 {
+                    buckets.push(b);
+                }
+            }
+        }
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            bail!(
+                "no lowered policy variants for {base_policy:?} in the \
+                 manifest — re-run `make artifacts`"
+            );
+        }
+        Ok(BucketLadder { base: base_policy.to_string(), buckets })
+    }
+
+    /// The lowered bucket widths, ascending (1 = the base policy).
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Largest lowered bucket.
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().expect("ladder is never empty")
+    }
+
+    /// Round `n` requested rows up to the smallest lowered bucket:
+    /// `(bucket, pad_rows)` with `bucket - pad_rows == n`. Errors on
+    /// `n == 0` and on `n > max`, listing the actually-lowered ladder.
+    pub fn pick(&self, n: usize) -> Result<(usize, usize)> {
+        if n == 0 {
+            bail!(
+                "cannot pick a policy bucket for 0 rows ({} ladder: {})",
+                self.base,
+                self.describe()
+            );
+        }
+        match self.buckets.iter().find(|&&b| b >= n) {
+            Some(&b) => Ok((b, b - n)),
+            None => bail!(
+                "{n} rows exceed the largest lowered policy batch for {} \
+                 (lowered ladder: {}); extend POLICY_BATCHES in \
+                 python/compile/model.py and re-run `make artifacts`",
+                self.base,
+                self.describe()
+            ),
+        }
+    }
+
+    /// Artifact name of a bucket: the base policy for `b <= 1`, the
+    /// `_b{B}` variant otherwise (the naming scheme
+    /// [`crate::systems::SystemSpec::batched_policy_artifact`] owns).
+    pub fn artifact_name(&self, bucket: usize) -> String {
+        if bucket <= 1 {
+            self.base.clone()
+        } else {
+            format!("{}_b{bucket}", self.base)
+        }
+    }
+
+    /// The ladder as a human-readable list for error messages,
+    /// e.g. `"1, 2, 4, 8, 16, 32, 64"`.
+    pub fn describe(&self) -> String {
+        self.buckets
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest(names: &[&str]) -> Manifest {
+        let text: String = names
+            .iter()
+            .map(|n| format!("artifact {n}\nfile {n}.hlo.txt\nend\n"))
+            .collect();
+        Manifest::parse(&text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    fn ladder() -> BucketLadder {
+        let m = manifest(&[
+            "p_policy",
+            "p_policy_b2",
+            "p_policy_b8",
+            "p_policy_b64",
+            "p_policy_bogus", // non-numeric suffix ignored
+            "q_policy_b4",    // different policy ignored
+        ]);
+        BucketLadder::from_manifest(&m, "p_policy").unwrap()
+    }
+
+    #[test]
+    fn scans_only_this_policys_numeric_variants() {
+        let l = ladder();
+        assert_eq!(l.buckets(), &[1, 2, 8, 64]);
+        assert_eq!(l.max_bucket(), 64);
+        assert_eq!(l.describe(), "1, 2, 8, 64");
+        assert_eq!(l.artifact_name(1), "p_policy");
+        assert_eq!(l.artifact_name(8), "p_policy_b8");
+    }
+
+    #[test]
+    fn pick_rounds_up_with_padding() {
+        let l = ladder();
+        assert_eq!(l.pick(1).unwrap(), (1, 0));
+        assert_eq!(l.pick(2).unwrap(), (2, 0));
+        assert_eq!(l.pick(3).unwrap(), (8, 5));
+        assert_eq!(l.pick(8).unwrap(), (8, 0));
+        assert_eq!(l.pick(9).unwrap(), (64, 55));
+    }
+
+    #[test]
+    fn pick_edge_cases() {
+        let l = ladder();
+        // n = 0 is a caller bug, named as such
+        let err = l.pick(0).unwrap_err().to_string();
+        assert!(err.contains("0 rows"), "{err}");
+        // n = max is exact
+        assert_eq!(l.pick(64).unwrap(), (64, 0));
+        // n > max errors listing the real ladder + the fix
+        let err = l.pick(65).unwrap_err().to_string();
+        assert!(err.contains("1, 2, 8, 64"), "{err}");
+        assert!(err.contains("POLICY_BATCHES"), "{err}");
+    }
+
+    #[test]
+    fn missing_policy_is_an_error() {
+        let m = manifest(&["other_policy"]);
+        let err = BucketLadder::from_manifest(&m, "p_policy")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn base_policy_alone_gives_b1_ladder() {
+        let m = manifest(&["p_policy"]);
+        let l = BucketLadder::from_manifest(&m, "p_policy").unwrap();
+        assert_eq!(l.buckets(), &[1]);
+        assert_eq!(l.pick(1).unwrap(), (1, 0));
+        assert!(l.pick(2).is_err());
+    }
+}

@@ -8,14 +8,14 @@ use anyhow::{bail, Context, Result};
 use crate::core::{Dtype, HostTensor};
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 
-/// One-shot latch for the [`Artifact::call_device`] tuple-output
-/// fallback warning, so a degraded runtime logs once, not per step.
-static UNTUPLE_FALLBACK_WARNED: AtomicBool = AtomicBool::new(false);
-
 /// A compiled artifact: PJRT executable + its manifest spec.
 pub struct Artifact {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
+    /// One-shot latch for the [`Artifact::call_device`] tuple-output
+    /// fallback warning: a degraded runtime logs once PER ARTIFACT (so
+    /// every affected hot path is named), never once per step.
+    untuple_warned: AtomicBool,
 }
 
 /// Argument to [`Artifact::call_mixed`] / [`Artifact::call_device`]:
@@ -139,7 +139,7 @@ impl Artifact {
                 self.spec.outputs.len()
             );
         }
-        if !UNTUPLE_FALLBACK_WARNED.swap(true, Ordering::Relaxed) {
+        if !self.untuple_warned.swap(true, Ordering::Relaxed) {
             eprintln!(
                 "[runtime] WARNING: {}: PJRT returned a tuple buffer \
                  instead of per-output buffers; device-resident callers \
@@ -300,7 +300,11 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("{name}: compile: {e:?}"))?;
-        let art = std::rc::Rc::new(Artifact { spec, exe });
+        let art = std::rc::Rc::new(Artifact {
+            spec,
+            exe,
+            untuple_warned: AtomicBool::new(false),
+        });
         self.cache.insert(name.to_string(), art.clone());
         Ok(art)
     }
@@ -313,6 +317,16 @@ impl Engine {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Number of PJRT devices this client enumerates. The CPU client
+    /// reports 1; the trainer's data-parallel lanes (DESIGN.md §11) use
+    /// this to report whether `num_devices` lanes map onto physical
+    /// devices or time-share one (logical lanes — the xla crate pins
+    /// execution to device 0, so lanes are a placement-ready structure,
+    /// not yet a physical spread).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
     }
 }
 

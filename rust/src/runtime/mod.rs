@@ -8,8 +8,10 @@
 //! process owns a runtime instance. Artifacts are HLO *text* (see
 //! python/compile/aot.py for why not serialized protos).
 
+mod bucket;
 mod engine;
 mod manifest;
 
+pub use bucket::BucketLadder;
 pub use engine::{Arg, Artifact, Engine};
 pub use manifest::{ArtifactSpec, InitSpec, Manifest, TensorSpec};

@@ -32,7 +32,7 @@ use crate::launch::{
 use crate::metrics::{Counters, MovingStats};
 use crate::params::ParameterServer;
 use crate::replay::{ItemSink, RateLimiter, Selector, ShardedTable};
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{BucketLadder, Engine, Manifest};
 use crate::systems::nodes::{
     Adder, AdderFactory, EnvFactory, EvalPoint, EvaluatorNode, ExecutorNode,
     SystemHandles, TrainerNode,
@@ -98,9 +98,12 @@ impl TrainResult {
     }
 }
 
-/// Largest lowered batch for `policy_name` that is still at most
-/// `cap`: scans the manifest for `{policy_name}_b{B}` variants and
-/// falls back to 1 (the base `[1, N, O]` artifact) when none fit.
+/// Number of evaluation episodes to advance per batched policy call:
+/// `cap` clamped to the largest lowered bucket of `policy_name`'s
+/// ladder ([`BucketLadder`], DESIGN.md §11). The executor then runs at
+/// the bucket `pick` rounds that width up to, with the surplus rows
+/// masked as padding — so any `cap` in `1..=max_bucket` vectorizes
+/// fully instead of dropping to the largest batch that divides it.
 ///
 /// The evaluator node and the experiment harness use this to vectorize
 /// evaluation opportunistically — a stale artifact directory without
@@ -110,22 +113,18 @@ pub fn eval_policy_batch(
     policy_name: &str,
     cap: usize,
 ) -> usize {
-    let prefix = format!("{policy_name}_b");
-    manifest
-        .artifacts
-        .keys()
-        .filter_map(|n| n.strip_prefix(&prefix).and_then(|b| b.parse().ok()))
-        .filter(|&b: &usize| b >= 1 && b <= cap.max(1))
-        .max()
-        .unwrap_or(1)
+    match BucketLadder::from_manifest(manifest, policy_name) {
+        Ok(ladder) => cap.max(1).min(ladder.max_bucket()),
+        Err(_) => 1,
+    }
 }
 
 /// Build the vectorized greedy evaluator shared by the evaluator node
 /// and the experiment harness: resolves `cfg.system` into its
-/// [`SystemSpec`], picks the largest lowered policy batch that fits
-/// `cap` ([`eval_policy_batch`]), builds that many fingerprinted
-/// instances of `cfg.preset` (env `i` seeded `seed + 1 + i`) and pairs
-/// them with a [`VecExecutor`] holding `params`.
+/// [`SystemSpec`], clamps `cap` to the lowered policy ladder
+/// ([`eval_policy_batch`]), builds that many fingerprinted instances
+/// of `cfg.preset` (env `i` seeded `seed + 1 + i`) and pairs them with
+/// a [`VecExecutor`] at the bucket that width rounds up to.
 pub fn make_vec_evaluator(
     engine: &mut Engine,
     cfg: &TrainConfig,
@@ -154,7 +153,13 @@ pub fn make_vec_evaluator_with(
     let prefix = spec.artifact_prefix(&cfg.preset, cfg.arch);
     let policy_name = spec.policy_artifact(&prefix);
     let batch = eval_policy_batch(&engine.manifest, &policy_name, cap.max(1));
-    let artifact_name = spec.batched_policy_artifact(&prefix, batch);
+    // round the real width up to its bucket; VecEvaluator masks the
+    // padding rows out of selection and accounting (DESIGN.md §11)
+    let artifact_name =
+        match BucketLadder::from_manifest(&engine.manifest, &policy_name) {
+            Ok(ladder) => ladder.artifact_name(ladder.pick(batch)?.0),
+            Err(_) => policy_name.clone(), // serial fallback, B = 1
+        };
     let artifact = engine.artifact(&artifact_name)?;
     let executor = VecExecutor::new(spec.kind, artifact, params, seed)?;
     let mut instances = Vec::with_capacity(batch);
@@ -391,34 +396,45 @@ impl System {
         let policy_name = spec.policy_artifact(&prefix);
         let train_name = spec.train_artifact(&prefix);
         // executors act through a batched policy artifact when
-        // vectorized; the evaluator picks its own batch (largest
-        // lowered batch that fits eval_episodes)
+        // vectorized: the requested env count rounds UP to the nearest
+        // lowered bucket, padding rows masked (DESIGN.md §11); the
+        // evaluator picks its own batch from the same ladder
         let num_envs = cfg.num_envs_per_executor.max(1);
-        let exec_policy_name =
-            spec.batched_policy_artifact(&prefix, num_envs);
 
         // --- initial parameters from the AOT init blobs ---
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        // fail fast on an un-lowered env batch: executor threads could
-        // only surface this after launch, leaving the trainer blocked
-        // on an empty replay table until the deadline
-        if manifest.get(&exec_policy_name).is_err() {
-            let mut batches: Vec<usize> = manifest
-                .artifacts
-                .keys()
-                .filter_map(|n| {
-                    n.strip_prefix(&format!("{policy_name}_b"))
-                        .and_then(|b| b.parse().ok())
-                })
-                .collect();
-            batches.push(1);
-            batches.sort_unstable();
-            bail!(
-                "no policy artifact {exec_policy_name:?} for \
-                 num_envs_per_executor={num_envs}; lowered batches for \
-                 {policy_name:?}: {batches:?} (extend POLICY_BATCHES in \
-                 python/compile/model.py and re-run `make artifacts`)"
-            );
+        // fail fast on an un-bucketable env batch: executor threads
+        // could only surface this after launch, leaving the trainer
+        // blocked on an empty replay table until the deadline. pick()
+        // errors name the ladder the manifest actually holds.
+        let ladder = BucketLadder::from_manifest(&manifest, &policy_name)?;
+        let (exec_bucket, _pad) =
+            ladder.pick(num_envs).with_context(|| {
+                format!(
+                    "num_envs_per_executor={num_envs} has no lowered \
+                     policy bucket"
+                )
+            })?;
+        let exec_policy_name = ladder.artifact_name(exec_bucket);
+        // data-parallel training needs the sharded grad + apply pair
+        // lowered for exactly this device count — fail fast with the
+        // fix, not after launch
+        if cfg.num_devices > 1 {
+            let dp_name = format!("{train_name}_dp{}", cfg.num_devices);
+            let apply_name = format!("{train_name}_apply");
+            if manifest.get(&dp_name).is_err()
+                || manifest.get(&apply_name).is_err()
+            {
+                bail!(
+                    "num_devices={} needs data-parallel artifacts \
+                     {dp_name:?} and {apply_name:?}; they are lowered \
+                     for DP_SHARDS in python/compile/model.py for \
+                     systems whose loss is an unweighted batch mean \
+                     (recurrent/masked-mean systems are dp-ineligible) \
+                     — re-run `make artifacts` or set num_devices=1",
+                    cfg.num_devices
+                );
+            }
         }
         let train_art = manifest.get(&train_name)?.clone();
         let params0 = manifest.read_init(&train_art, "params0")?;

@@ -163,6 +163,10 @@ pub struct VecExecutor {
     pending_resets: Vec<usize>,
     rng: Rng,
     batch: usize,
+    /// rows 0..active are real environments; rows active..batch are
+    /// bucket padding (never selected for, so the RNG stream matches
+    /// an unpadded run of the same `active` width)
+    active: usize,
     n_agents: usize,
     obs_dim: usize,
     n_actions: usize,
@@ -209,6 +213,7 @@ impl VecExecutor {
             pending_resets: Vec::new(),
             rng: Rng::new(seed),
             batch,
+            active: batch,
             n_agents,
             obs_dim,
             n_actions,
@@ -219,9 +224,34 @@ impl VecExecutor {
         Ok(ex)
     }
 
-    /// Number of environment instances the artifact was lowered for.
+    /// Number of environment instances the artifact was lowered for
+    /// (the bucket width, including any padding rows).
     pub fn num_envs(&self) -> usize {
         self.batch
+    }
+
+    /// Number of real (non-padding) rows actions are selected for.
+    pub fn active_rows(&self) -> usize {
+        self.active
+    }
+
+    /// Restrict action selection to the first `n` rows of the bucket
+    /// (DESIGN.md §11): when a `num_envs` request is rounded up to the
+    /// nearest lowered `_b{B}` bucket, the `B - n` trailing rows are
+    /// padding. The policy artifact still computes Q-values for them
+    /// (shapes are frozen), but no action is selected, no RNG draw is
+    /// consumed and nothing is written to their action-buffer rows —
+    /// the stream of random numbers matches an unpadded run exactly.
+    pub fn set_active_rows(&mut self, n: usize) -> Result<()> {
+        anyhow::ensure!(
+            n >= 1 && n <= self.batch,
+            "active rows {} out of range 1..={} (artifact bucket {})",
+            n,
+            self.batch,
+            self.batch
+        );
+        self.active = n;
+        Ok(())
     }
 
     /// Number of agents per environment instance.
@@ -428,7 +458,9 @@ impl VecExecutor {
 
         let per_env = self.n_agents * self.n_actions;
         let qs = q.as_f32(); // [B, N, A]
-        for b in 0..self.batch {
+        // padding rows (active..batch) are skipped entirely: no action
+        // selection, no RNG consumption, no action-buffer writes
+        for b in 0..self.active {
             let q_row = &qs[b * per_env..(b + 1) * per_env];
             if self.kind.discrete() {
                 select_discrete_row(

@@ -156,16 +156,54 @@ impl TrainerNode {
     pub fn run(&mut self) -> Result<()> {
         let h = &self.handles;
         let mut engine = Engine::load(&self.cfg.artifacts_dir)?;
-        let artifact = engine.artifact(&self.train_name)?;
-        let mut trainer = Trainer::new(
-            self.spec.family,
-            artifact,
-            self.params0.clone(),
-            self.opt0.clone(),
-            self.cfg.lr,
-            self.cfg.tau,
-            self.cfg.seed ^ 0x77aa,
-        )?;
+        let mut trainer = if self.cfg.num_devices > 1 {
+            // data-parallel lanes (DESIGN.md §11): sharded gradients
+            // all-reduced across `num_devices` lock-step replicas.
+            // The builder fail-fasts on missing dp artifacts; this
+            // context covers direct TrainerNode construction.
+            let d = self.cfg.num_devices;
+            let grad = engine
+                .artifact(&format!("{}_dp{d}", self.train_name))
+                .with_context(|| {
+                    format!(
+                        "num_devices={d} needs a lowered \
+                         {}_dp{d} artifact (DP_SHARDS in \
+                         python/compile/model.py; mean-loss systems \
+                         only) — re-run `make artifacts`",
+                        self.train_name
+                    )
+                })?;
+            let apply =
+                engine.artifact(&format!("{}_apply", self.train_name))?;
+            if engine.device_count() < d {
+                eprintln!(
+                    "[trainer] note: {} PJRT device(s) visible, \
+                     running {d} data-parallel lanes on them",
+                    engine.device_count()
+                );
+            }
+            Trainer::new_data_parallel(
+                self.spec.family,
+                grad,
+                apply,
+                self.params0.clone(),
+                self.opt0.clone(),
+                self.cfg.lr,
+                self.cfg.tau,
+                self.cfg.seed ^ 0x77aa,
+            )?
+        } else {
+            let artifact = engine.artifact(&self.train_name)?;
+            Trainer::new(
+                self.spec.family,
+                artifact,
+                self.params0.clone(),
+                self.opt0.clone(),
+                self.cfg.lr,
+                self.cfg.tau,
+                self.cfg.seed ^ 0x77aa,
+            )?
+        };
         trainer.set_publish_interval(self.cfg.publish_interval);
         trainer.init_target_from_params()?;
         h.server.push(trainer.params())?;
@@ -237,9 +275,9 @@ impl ExecutorNode {
         let artifact =
             engine.artifact(&self.policy_name).with_context(|| {
                 format!(
-                    "policy artifact {:?} unavailable — \
-                     num_envs_per_executor must match a lowered policy \
-                     batch; regenerate with `make artifacts`",
+                    "policy artifact {:?} unavailable — it was picked \
+                     from the manifest's bucket ladder; regenerate with \
+                     `make artifacts`",
                     self.policy_name
                 )
             })?;
@@ -249,6 +287,11 @@ impl ExecutorNode {
             self.params0.clone(),
             self.cfg.seed + 1000 + self.worker as u64,
         )?;
+        // the artifact is the BUCKET num_envs rounded up to
+        // (DESIGN.md §11): real envs fill rows 0..num_envs, the
+        // executor masks the padding rows out of action selection
+        executor.set_active_rows(num_envs)?;
+        let bucket = executor.num_envs();
         let mut instances = Vec::with_capacity(num_envs);
         for i in 0..num_envs {
             instances.push((self.env_factory)(
@@ -271,10 +314,11 @@ impl ExecutorNode {
         // SoA double buffer: `cur` feeds the policy call, the envs
         // write the next vector step into `next`, then the buffers
         // swap — allocated once here, refilled in place forever after
-        // (DESIGN.md §6)
-        let mut cur = venv.make_buf();
-        let mut next = venv.make_buf();
-        let mut abuf = venv.make_action_buf();
+        // (DESIGN.md §6). Sized at the bucket; rows num_envs..bucket
+        // stay pad-safe defaults and are never read.
+        let mut cur = venv.make_buf_padded(bucket);
+        let mut next = venv.make_buf_padded(bucket);
+        let mut abuf = venv.make_action_buf_padded(bucket);
         let mut params_scratch = Vec::new();
         venv.reset_into(&mut cur);
         for (i, adder) in adders.iter_mut().enumerate() {

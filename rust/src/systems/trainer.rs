@@ -14,12 +14,22 @@
 //! batch and downloads only the loss — the ~5P-float state round-trip
 //! the seed trainer paid per step is gone (DESIGN.md §8). Host copies
 //! are refreshed only on publish ticks and checkpoints.
+//!
+//! The *data-parallel* mode ([`Trainer::new_data_parallel`],
+//! DESIGN.md §11) runs D device lanes in lock-step over the sharded
+//! `{train}_dp{D}` gradient artifact: the assembled full batch is
+//! split into D leading-dim shards, each lane computes its shard's
+//! gradient, the gradients are all-reduced (fixed-order mean) on the
+//! host, and every lane applies the SAME reduced gradient through the
+//! `{train}_apply` artifact (clip + Adam + Polyak) — so the lane
+//! states stay bitwise identical and lane 0 is always the system of
+//! record for publishes and checkpoints.
 
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::core::HostTensor;
+use crate::core::{Dtype, HostTensor};
 use crate::params::ParamStore;
 use crate::replay::ItemSource;
 use crate::runtime::{Arg, Artifact};
@@ -45,6 +55,29 @@ struct DeviceState {
     tau: xla::PjRtBuffer,
 }
 
+/// Data-parallel lane state (DESIGN.md §11): D replicas of the
+/// training state plus the sharded-gradient / apply artifact pair.
+/// The lanes are bitwise identical between steps by construction —
+/// every lane applies the same host-reduced gradient — so any lane
+/// can serve reads; lane 0 is used by convention.
+struct DpLanes {
+    /// `{train}_dp{D}`: `(params, target, shard_batch...) ->
+    /// (grads [P], loss)` — the shard's UNCLIPPED mean gradient.
+    grad: Rc<Artifact>,
+    /// `{train}_apply`: `(params, target, opt, grads, lr, tau) ->
+    /// (params', target', opt')` — clip + Adam + Polyak, applied
+    /// post-all-reduce.
+    apply: Rc<Artifact>,
+    lanes: Vec<DeviceState>,
+    /// Reused per-lane shard tensors (one per batch input; refilled in
+    /// place each lane, alive only while that lane's call runs).
+    shard_scratch: Vec<HostTensor>,
+    /// Reused fixed-order all-reduce accumulator `[P]`.
+    grad_acc: Vec<f32>,
+    /// Reused per-lane loss accumulator (loss vectors are tiny).
+    loss_acc: Vec<f32>,
+}
+
 /// The multi-agent learner: samples replay, runs the fused train-step
 /// artifact and publishes fresh parameters.
 pub struct Trainer {
@@ -57,6 +90,8 @@ pub struct Trainer {
     opt: HostTensor,
     /// `Some` = device-resident mode (the default).
     dev: Option<DeviceState>,
+    /// `Some` = data-parallel mode (`dev` is then `None`).
+    dp: Option<DpLanes>,
     params_mirror_fresh: bool,
     /// covers the target + opt mirrors (downloaded only by checkpoints)
     aux_mirror_fresh: bool,
@@ -107,6 +142,93 @@ impl Trainer {
         Self::build(family, artifact, params0, opt0, lr, tau, seed, false)
     }
 
+    /// Build a data-parallel trainer over the `{train}_dp{D}` sharded
+    /// gradient artifact and its `{train}_apply` companion
+    /// (DESIGN.md §11). The lane count D is the gradient artifact's
+    /// `dp_shards` meta; batches are still assembled at the FULL batch
+    /// size (the gradient artifact carries the same `batch` meta as
+    /// the fused train step), split into D leading-dim shards per
+    /// step. Only losses that are unweighted batch means are lowered
+    /// this way, so mean-of-shard-gradients equals the full-batch
+    /// gradient exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_data_parallel(
+        family: Family,
+        grad_artifact: Rc<Artifact>,
+        apply_artifact: Rc<Artifact>,
+        params0: Vec<f32>,
+        opt0: Vec<f32>,
+        lr: f32,
+        tau: f32,
+        seed: u64,
+    ) -> Result<Trainer> {
+        let gspec = &grad_artifact.spec;
+        let aspec = &apply_artifact.spec;
+        let p = gspec.meta_usize("params")?;
+        anyhow::ensure!(params0.len() == p, "params0 len mismatch");
+        anyhow::ensure!(opt0.len() == 1 + 2 * p, "opt0 len mismatch");
+        let shards = gspec.meta_usize("dp_shards")?;
+        let shard_batch = gspec.meta_usize("shard_batch")?;
+        let batch = gspec.meta_usize("batch")?;
+        anyhow::ensure!(
+            shards >= 2 && shards * shard_batch == batch,
+            "{}: dp_shards {} * shard_batch {} != batch {}",
+            gspec.name,
+            shards,
+            shard_batch,
+            batch
+        );
+        anyhow::ensure!(
+            gspec.inputs.len() >= 3 && gspec.outputs.len() == 2,
+            "{}: dp gradient artifact must take (params, target, \
+             shard_batch...) and return (grads, loss)",
+            gspec.name
+        );
+        anyhow::ensure!(
+            aspec.inputs.len() == 6 && aspec.outputs.len() == 3,
+            "{}: apply artifact must take (params, target, opt, grads, \
+             lr, tau) and return (params', target', opt')",
+            aspec.name
+        );
+        let assembler = BatchAssembler::new(family, gspec, seed)?;
+        let mut t = Trainer {
+            batch,
+            artifact: grad_artifact,
+            params: HostTensor::f32(vec![p], params0),
+            target: HostTensor::f32(vec![p], vec![0.0; p]),
+            opt: HostTensor::f32(vec![1 + 2 * p], opt0),
+            dev: None,
+            dp: None,
+            params_mirror_fresh: true,
+            aux_mirror_fresh: true,
+            lr: HostTensor::scalar_f32(lr),
+            tau: HostTensor::scalar_f32(tau),
+            assembler,
+            arena: BatchArena::default(),
+            trace: std::env::var_os("MAVA_TRACE_LOSS").is_some(),
+            publish_every: 1,
+            last_published_step: 0,
+            stats: TrainerStats::default(),
+        };
+        let lanes = (0..shards)
+            .map(|_| t.upload_lane(&apply_artifact))
+            .collect::<Result<Vec<_>>>()?;
+        t.dp = Some(DpLanes {
+            grad: t.artifact.clone(),
+            apply: apply_artifact,
+            lanes,
+            shard_scratch: Vec::new(),
+            grad_acc: Vec::new(),
+            loss_acc: Vec::new(),
+        });
+        Ok(t)
+    }
+
+    /// Number of data-parallel device lanes (1 on the fused paths).
+    pub fn num_lanes(&self) -> usize {
+        self.dp.as_ref().map_or(1, |dp| dp.lanes.len())
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn build(
         family: Family,
@@ -136,6 +258,7 @@ impl Trainer {
             target: HostTensor::f32(vec![p], vec![0.0; p]),
             opt: HostTensor::f32(vec![1 + 2 * p], opt0),
             dev: None,
+            dp: None,
             params_mirror_fresh: true,
             aux_mirror_fresh: true,
             lr: HostTensor::scalar_f32(lr),
@@ -168,9 +291,23 @@ impl Trainer {
         })
     }
 
+    /// Upload the host mirrors as one fresh data-parallel lane. The
+    /// apply artifact's inputs dictate the state shapes:
+    /// `(params, target, opt, grads, lr, tau)`.
+    fn upload_lane(&self, apply: &Artifact) -> Result<DeviceState> {
+        let ins = &apply.spec.inputs;
+        Ok(DeviceState {
+            params: apply.upload(&self.params, &ins[0].dims)?,
+            target: apply.upload(&self.target, &ins[1].dims)?,
+            opt: apply.upload(&self.opt, &ins[2].dims)?,
+            lr: apply.upload(&self.lr, &ins[4].dims)?,
+            tau: apply.upload(&self.tau, &ins[5].dims)?,
+        })
+    }
+
     /// Whether the training state lives in device buffers.
     pub fn device_resident(&self) -> bool {
-        self.dev.is_some()
+        self.dev.is_some() || self.dp.is_some()
     }
 
     /// Publish to the parameter server every `every` steps (default 1).
@@ -185,6 +322,16 @@ impl Trainer {
         self.sync_mirrors_full()?;
         let p = self.params.as_f32().to_vec();
         self.target.as_f32_mut().copy_from_slice(&p);
+        if let Some(dp) = &mut self.dp {
+            // every lane gets its own fresh upload of the same mirror,
+            // preserving the bitwise lock-step invariant
+            for lane in &mut dp.lanes {
+                lane.target = dp
+                    .apply
+                    .upload(&self.target, &dp.apply.spec.inputs[1].dims)?;
+            }
+            return Ok(());
+        }
         if self.dev.is_none() {
             return Ok(());
         }
@@ -237,7 +384,14 @@ impl Trainer {
         if self.params_mirror_fresh {
             return Ok(());
         }
-        // stale mirrors only exist on the device path
+        if let Some(dp) = &self.dp {
+            // lanes are bitwise identical; lane 0 is the system of
+            // record (apply outputs: params', target', opt')
+            self.params = dp.apply.to_host(&dp.lanes[0].params, 0)?;
+            self.params_mirror_fresh = true;
+            return Ok(());
+        }
+        // stale mirrors only exist on the device paths
         let dev = self.dev.as_ref().expect("host path mirrors never stale");
         self.params = self.artifact.to_host(&dev.params, 0)?;
         self.params_mirror_fresh = true;
@@ -247,6 +401,12 @@ impl Trainer {
     fn sync_mirrors_full(&mut self) -> Result<()> {
         self.sync_params_mirror()?;
         if self.aux_mirror_fresh {
+            return Ok(());
+        }
+        if let Some(dp) = &self.dp {
+            self.target = dp.apply.to_host(&dp.lanes[0].target, 1)?;
+            self.opt = dp.apply.to_host(&dp.lanes[0].opt, 2)?;
+            self.aux_mirror_fresh = true;
             return Ok(());
         }
         let dev = self.dev.as_ref().expect("host path mirrors never stale");
@@ -278,6 +438,9 @@ impl Trainer {
     pub fn step_batch(&mut self, inputs: &[HostTensor]) -> Result<f32> {
         if self.trace {
             trace_inputs(inputs, self.stats.steps);
+        }
+        if self.dp.is_some() {
+            return self.step_batch_dp(inputs);
         }
         let loss_t: HostTensor;
         if let Some(mut dev) = self.dev.take() {
@@ -352,6 +515,43 @@ impl Trainer {
                 "[trainer] WARNING: non-finite loss at step {}: {:?}",
                 self.stats.steps,
                 loss_t.as_f32()
+            );
+        }
+        Ok(loss)
+    }
+
+    /// One data-parallel train step (DESIGN.md §11): split the
+    /// full-batch `inputs` into D leading-dim shards, compute each
+    /// lane's shard gradient, all-reduce on the host (fixed lane
+    /// order, so the reduction is deterministic), then apply the SAME
+    /// reduced gradient on every lane — the lane states stay bitwise
+    /// identical. The reported loss is the mean of the lane losses.
+    ///
+    /// On error the lanes may be mid-update and no longer lock-step;
+    /// the step is not counted and the trainer must be rebuilt (a
+    /// failed node is torn down by the launcher anyway).
+    fn step_batch_dp(&mut self, inputs: &[HostTensor]) -> Result<f32> {
+        let mut dp = self.dp.take().expect("dp path");
+        let stepped = dp_step(&mut dp, inputs);
+        self.dp = Some(dp);
+        let loss_vec = stepped?;
+        self.params_mirror_fresh = false;
+        self.aux_mirror_fresh = false;
+        self.stats.steps += 1;
+        let loss = loss_vec[0];
+        self.stats.last_loss = loss;
+        if self.trace {
+            eprintln!(
+                "[trainer] step {} losses {:?} (dp mean over {} lanes)",
+                self.stats.steps,
+                loss_vec,
+                self.num_lanes()
+            );
+        }
+        if !loss.is_finite() {
+            eprintln!(
+                "[trainer] WARNING: non-finite loss at step {}: {:?}",
+                self.stats.steps, loss_vec
             );
         }
         Ok(loss)
@@ -450,11 +650,134 @@ impl Trainer {
         self.aux_mirror_fresh = true;
         // the restored parameters have not been pushed anywhere yet
         self.last_published_step = u64::MAX;
-        if self.dev.is_some() {
+        if self.dp.is_some() {
+            // rebuild every lane from the restored mirrors: all lanes
+            // restart bitwise identical
+            let apply =
+                self.dp.as_ref().expect("dp path").apply.clone();
+            let n = self.dp.as_ref().expect("dp path").lanes.len();
+            let lanes = (0..n)
+                .map(|_| self.upload_lane(&apply))
+                .collect::<Result<Vec<_>>>()?;
+            self.dp.as_mut().expect("dp path").lanes = lanes;
+        } else if self.dev.is_some() {
             self.dev = Some(self.upload_state()?);
         }
         Ok(())
     }
+}
+
+/// Run one data-parallel step over `dp`'s lanes. Returns the
+/// element-wise mean of the lane loss vectors (multi-loss systems —
+/// MADDPG — report `[critic, actor]`).
+fn dp_step(dp: &mut DpLanes, inputs: &[HostTensor]) -> Result<Vec<f32>> {
+    let shards = dp.lanes.len();
+    // --- phase 1: per-lane shard gradients, host all-reduce ---
+    // fixed lane order makes the f32 summation deterministic: the
+    // reduced gradient is a pure function of (lane states, batch),
+    // and every lane receives the identical result
+    dp.grad_acc.clear();
+    dp.loss_acc.clear();
+    for (d, lane) in dp.lanes.iter().enumerate() {
+        fill_shards(&mut dp.shard_scratch, inputs, d, shards)?;
+        let outs = {
+            let mut args: Vec<Arg> =
+                Vec::with_capacity(2 + dp.shard_scratch.len());
+            args.push(Arg::Dev(&lane.params));
+            args.push(Arg::Dev(&lane.target));
+            for t in &dp.shard_scratch {
+                args.push(Arg::Host(t));
+            }
+            dp.grad
+                .call_device(&args)
+                .context("dp gradient artifact execution")?
+        };
+        // the download is the lane's sync point, so the shard scratch
+        // can be refilled for the next lane right after
+        let g = dp.grad.to_host(&outs[0], 0)?;
+        let l = dp.grad.to_host(&outs[1], 1)?;
+        if d == 0 {
+            dp.grad_acc.extend_from_slice(g.as_f32());
+            dp.loss_acc.extend_from_slice(l.as_f32());
+        } else {
+            for (a, &x) in dp.grad_acc.iter_mut().zip(g.as_f32()) {
+                *a += x;
+            }
+            for (a, &x) in dp.loss_acc.iter_mut().zip(l.as_f32()) {
+                *a += x;
+            }
+        }
+    }
+    let inv = 1.0 / shards as f32;
+    for a in &mut dp.grad_acc {
+        *a *= inv;
+    }
+    for a in &mut dp.loss_acc {
+        *a *= inv;
+    }
+    let reduced =
+        HostTensor::f32(vec![dp.grad_acc.len()], dp.grad_acc.clone());
+    // --- phase 2: identical apply (clip + Adam + Polyak) per lane ---
+    for lane in &mut dp.lanes {
+        let outs = {
+            let args = [
+                Arg::Dev(&lane.params),
+                Arg::Dev(&lane.target),
+                Arg::Dev(&lane.opt),
+                Arg::Host(&reduced),
+                Arg::Dev(&lane.lr),
+                Arg::Dev(&lane.tau),
+            ];
+            dp.apply
+                .call_device(&args)
+                .context("dp apply artifact execution")?
+        };
+        let mut it = outs.into_iter();
+        lane.params = it.next().unwrap();
+        lane.target = it.next().unwrap();
+        lane.opt = it.next().unwrap();
+    }
+    Ok(dp.loss_acc.clone())
+}
+
+/// Split `inputs` (leading dim = full batch) into shard `d` of
+/// `shards`, refilling the reusable `scratch` tensors in place (they
+/// are allocated on the first step and reused forever after).
+fn fill_shards(
+    scratch: &mut Vec<HostTensor>,
+    inputs: &[HostTensor],
+    d: usize,
+    shards: usize,
+) -> Result<()> {
+    if scratch.len() != inputs.len() {
+        scratch.clear();
+        for t in inputs {
+            anyhow::ensure!(
+                t.dims.first().is_some_and(|b| b % shards == 0),
+                "batch tensor dims {:?} do not split into {} shards",
+                t.dims,
+                shards
+            );
+            let mut dims = t.dims.clone();
+            dims[0] /= shards;
+            scratch.push(match t.dtype {
+                Dtype::F32 => HostTensor::zeros_f32(dims),
+                Dtype::I32 => HostTensor::zeros_i32(dims),
+            });
+        }
+    }
+    for (s, t) in scratch.iter_mut().zip(inputs) {
+        let n = t.len() / shards;
+        match t.dtype {
+            Dtype::F32 => s
+                .as_f32_mut()
+                .copy_from_slice(&t.as_f32()[d * n..(d + 1) * n]),
+            Dtype::I32 => s
+                .as_i32_mut()
+                .copy_from_slice(&t.as_i32()[d * n..(d + 1) * n]),
+        }
+    }
+    Ok(())
 }
 
 /// `MAVA_TRACE_LOSS` diagnostics over the assembled batch inputs.
@@ -471,6 +794,46 @@ fn trace_inputs(inputs: &[HostTensor], steps: u64) {
                 );
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shards must tile the batch exactly: concatenating shard
+    /// 0..D of every input reproduces the full tensors bitwise, and
+    /// the scratch is reused (no shape churn between calls).
+    #[test]
+    fn fill_shards_tiles_the_batch_exactly() {
+        let obs = HostTensor::f32(
+            vec![4, 2, 3],
+            (0..24).map(|x| x as f32 * 0.5).collect(),
+        );
+        let act = HostTensor::i32(vec![4, 2], (0..8).collect());
+        let inputs = [obs, act];
+        let mut scratch = Vec::new();
+        let mut got_f = Vec::new();
+        let mut got_i = Vec::new();
+        for d in 0..2 {
+            fill_shards(&mut scratch, &inputs, d, 2).unwrap();
+            assert_eq!(scratch[0].dims, [2, 2, 3]);
+            assert_eq!(scratch[1].dims, [2, 2]);
+            got_f.extend_from_slice(scratch[0].as_f32());
+            got_i.extend_from_slice(scratch[1].as_i32());
+        }
+        assert_eq!(got_f, inputs[0].as_f32());
+        assert_eq!(got_i, inputs[1].as_i32());
+    }
+
+    #[test]
+    fn fill_shards_rejects_indivisible_batch() {
+        let inputs = [HostTensor::f32(vec![3, 2], vec![0.0; 6])];
+        let mut scratch = Vec::new();
+        let err = fill_shards(&mut scratch, &inputs, 0, 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("do not split"), "{err}");
     }
 }
 

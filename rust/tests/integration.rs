@@ -534,6 +534,151 @@ fn vec_evaluator_runs_batched_greedy_episodes() {
     assert_eq!(evaluator.evaluate(3).unwrap().len(), 3);
 }
 
+/// Every width in 1..=64 maps onto a lowered bucket (tentpole
+/// acceptance: no "no lowered variant" error anywhere in the range),
+/// and representative non-bucket widths actually evaluate end-to-end
+/// with padding rows masked out of the episode accounting.
+#[test]
+fn any_width_up_to_64_picks_a_bucket_and_evaluates() {
+    if !batched_artifacts_ready("matrix2_madqn_policy_b64") {
+        eprintln!("skipping: re-run `make artifacts` (bucket ladder)");
+        return;
+    }
+    use mava::runtime::BucketLadder;
+    let mut engine = Engine::load("artifacts").unwrap();
+    let ladder =
+        BucketLadder::from_manifest(&engine.manifest, "matrix2_madqn_policy")
+            .unwrap();
+    for n in 1..=64usize {
+        let (bucket, pad) = ladder
+            .pick(n)
+            .unwrap_or_else(|e| panic!("width {n} has no bucket: {e:#}"));
+        assert!(bucket >= n && bucket - n == pad, "n={n} -> b{bucket}+{pad}");
+        assert!(
+            engine.manifest.get(&ladder.artifact_name(bucket)).is_ok(),
+            "picked bucket b{bucket} is not in the manifest"
+        );
+    }
+    // padded widths run for real: 3 -> b4, 5 -> b8, 33 -> b64
+    let params = engine.read_init("matrix2_madqn_train", "params0").unwrap();
+    for n in [3usize, 5, 33] {
+        let (bucket, _) = ladder.pick(n).unwrap();
+        let artifact =
+            engine.artifact(&ladder.artifact_name(bucket)).unwrap();
+        let executor = systems::VecExecutor::new(
+            SystemKind::Madqn,
+            artifact,
+            params.clone(),
+            0,
+        )
+        .unwrap();
+        let instances: Vec<_> = (0..n)
+            .map(|i| {
+                systems::env_for_preset("matrix2", i as u64, None).unwrap()
+            })
+            .collect();
+        let venv = mava::env::VecEnv::new(instances).unwrap();
+        // VecEvaluator pads the buffers to the bucket and masks the
+        // padding rows out of selection + accounting internally
+        let mut evaluator =
+            mava::eval::VecEvaluator::new(executor, venv).unwrap();
+        let returns = evaluator.evaluate(n).unwrap();
+        assert_eq!(returns.len(), n, "width {n} (bucket {bucket})");
+        assert!(returns.iter().all(|r| r.is_finite()), "width {n}");
+    }
+}
+
+/// Tentpole acceptance: a D=2 data-parallel step is equivalent to the
+/// fused single-device step on the same full batch. Bitwise equality
+/// is not expected (XLA associates the batch reduction differently for
+/// B and B/2 shapes); the losses and the final parameters must agree
+/// to tight relative tolerance, and two dp trainers fed the same
+/// stream must be bitwise deterministic (fixed-order all-reduce).
+#[test]
+fn dp2_trainer_matches_fused_step_and_is_deterministic() {
+    if !batched_artifacts_ready("matrix2_madqn_train_dp2") {
+        eprintln!("skipping: re-run `make artifacts` (dp variants)");
+        return;
+    }
+    use mava::systems::{Family, Trainer};
+    let mut engine = Engine::load("artifacts").unwrap();
+    let fused = engine.artifact("matrix2_madqn_train").unwrap();
+    let grad = engine.artifact("matrix2_madqn_train_dp2").unwrap();
+    let apply = engine.artifact("matrix2_madqn_train_apply").unwrap();
+    let p0 = engine.read_init("matrix2_madqn_train", "params0").unwrap();
+    let o0 = engine.read_init("matrix2_madqn_train", "opt0").unwrap();
+
+    let mut make_dp = |seed: u64| {
+        let mut t = Trainer::new_data_parallel(
+            Family::DqnFf,
+            grad.clone(),
+            apply.clone(),
+            p0.clone(),
+            o0.clone(),
+            1e-3,
+            0.01,
+            seed,
+        )
+        .unwrap();
+        t.init_target_from_params().unwrap();
+        t
+    };
+    let mut dp_a = make_dp(7);
+    let mut dp_b = make_dp(7);
+    let mut single =
+        Trainer::new(Family::DqnFf, fused, p0.clone(), o0, 1e-3, 0.01, 7)
+            .unwrap();
+    single.init_target_from_params().unwrap();
+    assert_eq!(dp_a.num_lanes(), 2);
+    assert!(dp_a.device_resident());
+
+    let (ta, tb, ts) =
+        (filled_madqn_table(5), filled_madqn_table(5), filled_madqn_table(5));
+    for i in 0..10 {
+        let la = dp_a.step(&ta).unwrap().unwrap();
+        let lb = dp_b.step(&tb).unwrap().unwrap();
+        let ls = single.step(&ts).unwrap().unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(), "dp nondeterminism, step {i}");
+        let denom = ls.abs().max(1e-6);
+        assert!(
+            ((la - ls) / denom).abs() < 1e-4,
+            "dp loss diverged at step {i}: {la} vs fused {ls}"
+        );
+    }
+    let pa = dp_a.params_synced().unwrap().to_vec();
+    let pb = dp_b.params_synced().unwrap().to_vec();
+    let ps = single.params_synced().unwrap().to_vec();
+    assert_eq!(pa, pb, "dp lanes are not bitwise deterministic");
+    assert_eq!(pa.len(), ps.len());
+    for (i, (a, s)) in pa.iter().zip(&ps).enumerate() {
+        let denom = s.abs().max(1e-5);
+        assert!(
+            ((a - s) / denom).abs() < 1e-3,
+            "param {i} diverged: dp {a} vs fused {s}"
+        );
+    }
+}
+
+/// The full pipeline with `num_devices=2`: TrainerNode builds the
+/// data-parallel trainer from the `_dp2`/`_apply` artifacts and the
+/// system still learns the climbing game.
+#[test]
+fn num_devices_2_pipeline_learns_matrix_game() {
+    if !batched_artifacts_ready("matrix2_madqn_train_dp2") {
+        return;
+    }
+    let mut c = tiny_cfg("madqn");
+    c.num_devices = 2;
+    let result =
+        systems::train(&c, Some(Duration::from_secs(120))).unwrap();
+    assert!(result.train_steps > 100, "dp trainer starved");
+    assert!(
+        result.best_return().is_some_and(|b| b >= 20.0),
+        "dp run did not learn: {:?}",
+        result.best_return()
+    );
+}
+
 /// End-to-end experiment harness: one scenario, two seeds, writes a
 /// schema-valid BENCH_<scenario>.json with per-seed returns and CIs.
 #[test]
