@@ -5,7 +5,7 @@
 PYTHON ?= python
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test test-dist experiment check-bench-schema bench-vector bench-trainer bench-build check fmt clippy doc
+.PHONY: artifacts build test test-dist test-serve serve experiment check-bench-schema bench-vector bench-trainer bench-serve bench-build check fmt clippy doc
 
 # lower every AOT artifact: policies (the full POLICY_BATCHES bucket
 # ladder 1..64), fused train steps, and the _dp{2,4}/_apply
@@ -24,6 +24,18 @@ test:
 # (DESIGN.md §10). A subset of `make test`; no artifacts needed.
 test-dist:
 	cargo test -q --test dist_net --test properties
+
+# the serve suites alone: hermetic clock-driven batching/hot-reload
+# tests plus the loopback TCP fault-injection tier (DESIGN.md §12).
+# A subset of `make test`; no artifacts needed (the one EngineBackend
+# test self-skips without artifacts/).
+test-serve:
+	cargo test -q --test serve
+
+# policy inference service on the lowered artifacts (DESIGN.md §12;
+# needs `make artifacts`). Prints its address; runs until killed.
+serve:
+	cargo run --release -- serve
 
 # multi-seed experiment harness -> BENCH_<scenario>.json (EXPERIMENTS.md;
 # needs `make artifacts`). Override e.g. SEEDS=5.
@@ -47,6 +59,12 @@ bench-vector:
 # (ISSUE 2 acceptance bench)
 bench-trainer:
 	cargo bench --bench trainer_throughput
+
+# serve request-latency distribution across offered loads; writes
+# BENCH_serve_latency.json (latency schema kind, gated by `make
+# check-bench-schema`). Mock policy — no artifacts needed.
+bench-serve:
+	cargo bench --bench serve_latency
 
 # compile-gate every bench harness without running it (CI)
 bench-build:

@@ -1,0 +1,81 @@
+//! `mava serve` request-latency bench: the deadline-vs-batching
+//! tradeoff of the coalescing core (DESIGN.md §12).
+//!
+//! Drives [`ServeCore`] directly (mock policy, real [`SystemClock`])
+//! at three offered loads. One client can never fill a bucket, so its
+//! p50 sits at ~`serve_deadline_us`; at a load matching the largest
+//! lowered bucket the flush is size-triggered and latency collapses
+//! to the inference cost. Emits a schema-versioned `latency` report
+//! (`BENCH_serve_latency.json`) gated by `mava check-bench` like every
+//! other bench artifact (EXPERIMENTS.md §2).
+
+use std::sync::Arc;
+
+use mava::bench::report::{latency_report, write_report, LatencyRow};
+use mava::bench::{scale, section};
+use mava::serve::{Clock, MockBackend, ServeCore, SystemClock};
+
+const DEADLINE_US: u64 = 2_000;
+const OBS_WIDTH: usize = 4;
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn pct(sorted: &[u64], q: f64) -> f64 {
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx] as f64
+}
+
+fn bench_load(clients: usize, rounds: usize) -> LatencyRow {
+    let clock = Arc::new(SystemClock::new());
+    let backend = MockBackend::new(OBS_WIDTH, 1, 2, &[1, 2, 4, 8, 16]);
+    let mut core = ServeCore::new(backend, clock.clone(), 32, DEADLINE_US);
+    let sessions: Vec<u64> =
+        (0..clients).map(|_| core.open_session().unwrap()).collect();
+    let mut lat = Vec::with_capacity(clients * rounds);
+    for _ in 0..rounds {
+        let t0 = clock.now_us();
+        for &s in &sessions {
+            core.submit(s, vec![1.0; OBS_WIDTH]).unwrap();
+        }
+        let mut got = 0;
+        while got < sessions.len() {
+            let responses = core.step().unwrap();
+            let now = clock.now_us();
+            for _ in &responses {
+                lat.push(now - t0);
+                got += 1;
+            }
+            if responses.is_empty() {
+                std::thread::yield_now();
+            }
+        }
+    }
+    lat.sort_unstable();
+    let count = lat.len() as u64;
+    LatencyRow {
+        name: format!("load_{clients}_clients"),
+        count,
+        p50_us: pct(&lat, 0.50),
+        p99_us: pct(&lat, 0.99),
+        mean_us: lat.iter().sum::<u64>() as f64 / count as f64,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    section("serve request latency (mock policy, real clock)");
+    let rounds = (300.0 * scale()) as usize;
+    let mut rows = Vec::new();
+    // 1 = deadline-bound, 8 = partial coalescing, 16 = full buckets
+    for &clients in &[1usize, 8, 16] {
+        let row = bench_load(clients, rounds);
+        println!(
+            "serve {:<18} n={:<6} p50 {:>9.0} us  p99 {:>9.0} us  \
+             mean {:>9.0} us",
+            row.name, row.count, row.p50_us, row.p99_us, row.mean_us
+        );
+        rows.push(row);
+    }
+    let json = latency_report("serve_latency", &rows);
+    let path = write_report(std::path::Path::new("."), "serve_latency", &json)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -10,17 +10,21 @@
 //! the `mava check-bench` CLI subcommand and CI's
 //! `make check-bench-schema` gate run.
 //!
-//! Schema v[`BENCH_SCHEMA_VERSION`], two report kinds sharing a header:
+//! Schema v[`BENCH_SCHEMA_VERSION`], three report kinds sharing a
+//! header:
 //!
 //! ```text
-//! { "schema_version": 1, "kind": "experiment" | "throughput",
+//! { "schema_version": 1,
+//!   "kind": "experiment" | "throughput" | "latency",
 //!   "scenario": "<file tag>", ... }
 //! ```
 //!
 //! `experiment` reports add per-seed episode returns and the robust
 //! aggregates of [`crate::eval::stats`]; `throughput` reports add a
-//! flat `series` of named rates. See EXPERIMENTS.md for the full field
-//! tables.
+//! flat `series` of named rates; `latency` reports (the `mava serve`
+//! request-latency axis) add a `series` of named distributions with
+//! request counts and p50/p99/mean microseconds. See EXPERIMENTS.md
+//! for the full field tables.
 
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
@@ -536,6 +540,46 @@ pub fn throughput_report_rows(
     Json::Obj(fields)
 }
 
+/// One named latency distribution in a `latency` report (`mava
+/// serve`'s request-latency axis): `count` requests measured, with
+/// the p50/p99/mean of their end-to-end latency in microseconds.
+#[derive(Clone, Debug)]
+pub struct LatencyRow {
+    /// Series entry name, e.g. `"load_4_clients"`.
+    pub name: String,
+    /// Number of requests the distribution summarises.
+    pub count: u64,
+    /// Median latency in microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile latency in microseconds.
+    pub p99_us: f64,
+    /// Mean latency in microseconds.
+    pub mean_us: f64,
+}
+
+impl LatencyRow {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("count".into(), Json::Num(self.count as f64)),
+            ("p50_us".into(), Json::Num(self.p50_us)),
+            ("p99_us".into(), Json::Num(self.p99_us)),
+            ("mean_us".into(), Json::Num(self.mean_us)),
+        ])
+    }
+}
+
+/// Build a schema-valid `latency` report from per-load-level
+/// distributions — the writer `benches/serve_latency.rs` uses.
+pub fn latency_report(scenario: &str, series: &[LatencyRow]) -> Json {
+    let mut fields = header("latency", scenario);
+    fields.push((
+        "series".into(),
+        Json::Arr(series.iter().map(LatencyRow::to_json).collect()),
+    ));
+    Json::Obj(fields)
+}
+
 /// Write a validated report as `<dir>/BENCH_<scenario>.json`; returns
 /// the path. Refuses to write a report that fails [`validate`] — the
 /// schema gate runs at write time, not just in CI.
@@ -658,6 +702,27 @@ pub fn validate(report: &Json) -> Result<()> {
                 }
             }
         }
+        "latency" => {
+            let series = require_arr(report, "series")?;
+            ensure!(!series.is_empty(), "series must be non-empty");
+            for (i, row) in series.iter().enumerate() {
+                let ctx = || format!("series[{i}]");
+                require_str(row, "name").with_context(ctx)?;
+                let count = require_num(row, "count").with_context(ctx)?;
+                ensure!(
+                    count >= 1.0 && count.fract() == 0.0,
+                    "series[{i}].count must be a whole number >= 1, \
+                     got {count}"
+                );
+                let p50 = require_num(row, "p50_us").with_context(ctx)?;
+                let p99 = require_num(row, "p99_us").with_context(ctx)?;
+                require_num(row, "mean_us").with_context(ctx)?;
+                ensure!(
+                    p50 >= 0.0 && p50 <= p99,
+                    "series[{i}]: need 0 <= p50 ({p50}) <= p99 ({p99})"
+                );
+            }
+        }
         other => bail!("unknown report kind {other:?}"),
     }
     Ok(())
@@ -762,6 +827,46 @@ mod tests {
             .unwrap();
             assert!(validate(&bad).is_err(), "{bad_axis} must fail");
         }
+    }
+
+    #[test]
+    fn latency_report_validates_and_gates() {
+        let rows = [
+            LatencyRow {
+                name: "load_1".into(),
+                count: 100,
+                p50_us: 250.0,
+                p99_us: 900.0,
+                mean_us: 300.0,
+            },
+            LatencyRow {
+                name: "load_8".into(),
+                count: 800,
+                p50_us: 400.0,
+                p99_us: 2_000.0,
+                mean_us: 520.0,
+            },
+        ];
+        let json = latency_report("serve_latency", &rows);
+        validate(&json).unwrap();
+        let back = parse(&json.render()).unwrap();
+        assert_eq!(back.get("kind").unwrap().as_str(), Some("latency"));
+        let series = back.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series[0].get("count").unwrap().as_num(), Some(100.0));
+        // p50 > p99 is rejected
+        let bad = parse(
+            &json.render().replace("\"p50_us\": 250", "\"p50_us\": 9999"),
+        )
+        .unwrap();
+        assert!(validate(&bad).is_err(), "inverted percentiles must fail");
+        // fractional request count is rejected
+        let bad = parse(
+            &json.render().replace("\"count\": 100", "\"count\": 1.5"),
+        )
+        .unwrap();
+        assert!(validate(&bad).is_err(), "fractional count must fail");
+        // empty series is rejected
+        assert!(validate(&latency_report("empty", &[])).is_err());
     }
 
     #[test]

@@ -90,6 +90,16 @@ pub struct TrainConfig {
     /// requested before a stuck node is abandoned and reported by name
     /// (threads) or killed (processes).
     pub dist_timeout_s: u64,
+
+    // serving (DESIGN.md §12)
+    /// `mava serve` coalescing window in microseconds: a partial batch
+    /// flushes once its oldest request has waited this long (a full
+    /// bucket flushes immediately). Lower = lower tail latency,
+    /// higher = bigger batches per artifact call.
+    pub serve_deadline_us: u64,
+    /// Maximum concurrently open serve sessions (each owns one row of
+    /// the recurrent carry for its episode lifetime).
+    pub serve_max_sessions: usize,
 }
 
 impl Default for TrainConfig {
@@ -123,6 +133,8 @@ impl Default for TrainConfig {
             params_sync_every: 16,
             bind_host: "127.0.0.1".into(),
             dist_timeout_s: 60,
+            serve_deadline_us: 2_000,
+            serve_max_sessions: 64,
         }
     }
 }
@@ -177,6 +189,8 @@ impl TrainConfig {
         get!(params_sync_every, get_u64);
         get!(publish_interval, get_u64);
         get!(dist_timeout_s, get_u64);
+        get!(serve_deadline_us, get_u64);
+        get!(serve_max_sessions, get_usize);
         if let Some(v) = raw.get_f64(sec, "lr") {
             c.lr = v as f32;
         }
@@ -215,6 +229,16 @@ impl TrainConfig {
             self.num_devices >= 1,
             "num_devices must be >= 1 (got {})",
             self.num_devices
+        );
+        anyhow::ensure!(
+            self.serve_deadline_us >= 1,
+            "serve_deadline_us must be >= 1 (got {})",
+            self.serve_deadline_us
+        );
+        anyhow::ensure!(
+            self.serve_max_sessions >= 1,
+            "serve_max_sessions must be >= 1 (got {})",
+            self.serve_max_sessions
         );
         Ok(())
     }
@@ -281,6 +305,14 @@ impl TrainConfig {
             "params_sync_every" => self.params_sync_every = val.parse()?,
             "bind_host" => self.bind_host = val.into(),
             "dist_timeout_s" => self.dist_timeout_s = val.parse()?,
+            "serve_deadline_us" => {
+                self.serve_deadline_us = val.parse()?;
+                self.validate()?;
+            }
+            "serve_max_sessions" => {
+                self.serve_max_sessions = val.parse()?;
+                self.validate()?;
+            }
             "publish_interval" => {
                 self.publish_interval = val.parse()?;
                 self.validate()?;
@@ -332,6 +364,8 @@ impl TrainConfig {
         kv("params_sync_every", self.params_sync_every.to_string());
         kv("bind_host", self.bind_host.clone());
         kv("dist_timeout_s", self.dist_timeout_s.to_string());
+        kv("serve_deadline_us", self.serve_deadline_us.to_string());
+        kv("serve_max_sessions", self.serve_max_sessions.to_string());
         a
     }
 
@@ -468,6 +502,34 @@ mod tests {
         let mut back = TrainConfig::default();
         back.apply_cli(&src.to_cli_args()).unwrap();
         assert_eq!(back.num_devices, 2);
+    }
+
+    #[test]
+    fn serve_keys_validated_and_roundtrip() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.serve_deadline_us, 2_000);
+        assert_eq!(c.serve_max_sessions, 64);
+        c.set("serve_deadline_us", "500").unwrap();
+        c.set("serve-max-sessions", "8").unwrap();
+        assert_eq!((c.serve_deadline_us, c.serve_max_sessions), (500, 8));
+        assert!(c.set("serve_deadline_us", "0").is_err());
+        assert!(c.set("serve_max_sessions", "0").is_err());
+        let raw = RawConfig::parse(
+            "[train]\nserve_deadline_us = 750\nserve_max_sessions = 16\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!((c.serve_deadline_us, c.serve_max_sessions), (750, 16));
+        let raw =
+            RawConfig::parse("[train]\nserve_max_sessions = 0\n").unwrap();
+        assert!(TrainConfig::from_raw(&raw).is_err());
+        let mut src = TrainConfig::default();
+        src.serve_deadline_us = 123;
+        src.serve_max_sessions = 9;
+        let mut back = TrainConfig::default();
+        back.apply_cli(&src.to_cli_args()).unwrap();
+        assert_eq!(back.serve_deadline_us, 123);
+        assert_eq!(back.serve_max_sessions, 9);
     }
 
     #[test]

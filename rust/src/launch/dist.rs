@@ -217,7 +217,7 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
             )?;
             let _watch = ctl.watch_stop(stop.clone())?;
             while !stop.is_stopped() {
-                std::thread::sleep(Duration::from_millis(25));
+                std::thread::sleep(crate::net::frame::POLL_INTERVAL);
             }
             svc.shutdown();
             Ok(())
@@ -250,7 +250,7 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
             )?;
             let _watch = ctl.watch_stop(stop.clone())?;
             while !stop.is_stopped() {
-                std::thread::sleep(Duration::from_millis(25));
+                std::thread::sleep(crate::net::frame::POLL_INTERVAL);
             }
             // close BEFORE service shutdown: unblocks rate-limited
             // inserts and makes in-flight samplers see SourceClosed
@@ -567,7 +567,7 @@ pub fn launch(cfg: &TrainConfig) -> Result<()> {
     let mut early: Vec<Option<std::process::ExitStatus>> =
         children.iter().map(|_| None).collect();
     'supervise: loop {
-        std::thread::sleep(Duration::from_millis(25));
+        std::thread::sleep(crate::net::frame::POLL_INTERVAL);
         for (i, c) in children.iter_mut().enumerate() {
             if let Ok(Some(status)) = c.child.try_wait() {
                 early[i] = Some(status);

@@ -23,6 +23,8 @@
 //! - [`net`] — wire layer for multi-process runs: frame codec +
 //!   parameter / replay / control TCP protocols (DESIGN.md §10)
 //! - [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt`
+//! - [`serve`] — `mava serve`: policy inference service with
+//!   deadline-based dynamic batching (DESIGN.md §12)
 //! - [`arch`] — system architectures (decentralised / centralised / networked)
 //! - [`systems`] — MADQN, DIAL, VDN, QMIX, MADDPG, MAD4PG
 //! - [`exploration`] — ε-greedy schedules, Gaussian/OU noise
@@ -49,6 +51,7 @@ pub mod params;
 pub mod replay;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod systems;
 
 pub use crate::core::{Actions, EnvSpec, StepType, TimeStep};

@@ -9,12 +9,15 @@
 //!                                                     (spawned by `launch`)
 //! mava experiment  [--config FILE] [--key value ...]  multi-seed suite ->
 //!                                                     BENCH_<scenario>.json
+//! mava serve       [--param ADDR] [--key value ...]   policy inference
+//!                                                     service (DESIGN.md §12)
 //! mava check-bench [DIR ...]                          validate BENCH_*.json
 //! mava list                                           list artifacts
 //! mava info                                           runtime/platform info
 //! ```
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -22,12 +25,16 @@ use anyhow::{bail, ensure, Context, Result};
 use mava::config::{RawConfig, TrainConfig};
 use mava::experiment::{self, ExperimentOpts};
 use mava::launch::dist::{self, NodeOpts, Role};
-use mava::runtime::{Engine, Manifest};
+use mava::net::frame::POLL_INTERVAL;
+use mava::net::param::RemoteParamClient;
+use mava::params::ParamStore;
+use mava::runtime::{BucketLadder, Engine, Manifest};
+use mava::serve::{EngineBackend, ServeService, SystemClock};
 use mava::systems::{self, SystemBuilder, SystemKind, SystemSpec};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: mava <train|eval|launch|node|experiment|check-bench|list|info>\n\
+        "usage: mava <train|eval|launch|node|experiment|serve|check-bench|list|info>\n\
          \x20           [--config FILE] [--key value ...]\n\
          keys: system preset arch num_executors num_envs_per_executor\n\
          \x20     num_devices max_env_steps lr tau n_step eps_start eps_end\n\
@@ -35,7 +42,9 @@ fn usage() -> ! {
          \x20     samples_per_insert publish_interval seed seeds\n\
          \x20     artifacts_dir log_dir eval_every_steps (alias\n\
          \x20     eval_interval) eval_episodes params_sync_every\n\
-         see `mava experiment --help` for the experiment harness"
+         \x20     serve_deadline_us serve_max_sessions\n\
+         see `mava experiment --help` for the experiment harness\n\
+         see `mava serve --help` for the inference service"
     );
     std::process::exit(2);
 }
@@ -330,6 +339,103 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn serve_usage() {
+    println!(
+        "usage: mava serve [--config FILE] [--param ADDR] [--key value ...]\n\
+         \n\
+         Policy inference service (DESIGN.md §12). Clients open a\n\
+         session (one recurrent-carry row per episode), stream\n\
+         observations, and receive one greedy discrete action per\n\
+         agent. Concurrent requests coalesce into the largest lowered\n\
+         _b{{B}} policy bucket reachable within the batching deadline;\n\
+         smaller batches flush at the deadline into the smallest\n\
+         covering bucket with the padding rows masked. Binds an\n\
+         ephemeral port and prints the address; runs until killed.\n\
+         \n\
+         \x20 --param ADDR             hot-reload checkpoints from a\n\
+         \x20                          running parameter service (`mava\n\
+         \x20                          launch` prints its address);\n\
+         \x20                          without it the artifact's params0\n\
+         \x20                          init is served, frozen\n\
+         \x20 --serve_deadline_us N    batching deadline in microseconds\n\
+         \x20                          (default 2000)\n\
+         \x20 --serve_max_sessions N   concurrent-session cap = carry\n\
+         \x20                          rows held on device (default 64)\n\
+         \x20 --bind_host HOST         listener host (default 127.0.0.1)\n\
+         \x20 --system NAME --preset P policy to serve (must be a\n\
+         \x20                          discrete-action system)"
+    );
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    if args.iter().any(|a| a == "-h" || a == "--help" || a == "help") {
+        serve_usage();
+        return Ok(());
+    }
+    let mut param_addr: Option<String> = None;
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--param" {
+            param_addr = Some(
+                args.get(i + 1)
+                    .context("--param requires an address")?
+                    .clone(),
+            );
+            i += 2;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let cfg = parse_cfg(&rest)?;
+    let kind = SystemKind::parse(&cfg.system)?;
+    let prefix = cfg.artifact_prefix();
+    let store: Option<Arc<dyn ParamStore>> = match &param_addr {
+        Some(addr) => Some(Arc::new(RemoteParamClient::connect(
+            addr,
+            Duration::from_secs(5),
+        )?)),
+        None => None,
+    };
+    // The factory runs on the serve core thread: PJRT artifacts are
+    // single-threaded, so the engine must be loaded where it is used.
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    let seed = cfg.seed;
+    let make_backend = move || -> Result<EngineBackend> {
+        let mut engine = Engine::load(&artifacts_dir)?;
+        let ladder = BucketLadder::from_manifest(
+            &engine.manifest,
+            &format!("{prefix}_policy"),
+        )?;
+        let params = engine.read_init(&format!("{prefix}_train"), "params0")?;
+        EngineBackend::new(&mut engine, kind, &ladder, params, seed)
+    };
+    let svc = ServeService::bind(
+        &cfg.bind_host,
+        make_backend,
+        Arc::new(SystemClock::new()),
+        store,
+        cfg.serve_max_sessions,
+        cfg.serve_deadline_us,
+    )?;
+    println!(
+        "serving {} ({}) on {}  deadline={}us  max_sessions={}{}",
+        cfg.system,
+        cfg.preset,
+        svc.addr(),
+        cfg.serve_deadline_us,
+        cfg.serve_max_sessions,
+        match &param_addr {
+            Some(a) => format!("  hot-reload from {a}"),
+            None => String::new(),
+        }
+    );
+    loop {
+        std::thread::sleep(POLL_INTERVAL);
+    }
+}
+
 /// Collect every `BENCH_*.json` under `dir`, recursing into
 /// subdirectories but skipping hidden ones and build/dependency trees
 /// (`target`, `node_modules`, `__pycache__`).
@@ -432,6 +538,7 @@ fn main() -> Result<()> {
         "launch" => cmd_launch(&args[1..]),
         "node" => cmd_node(&args[1..]),
         "experiment" => cmd_experiment(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "check-bench" | "check_bench" => cmd_check_bench(&args[1..]),
         "list" => cmd_list(&args[1..]),
         "info" => cmd_info(&args[1..]),

@@ -20,10 +20,22 @@
 //! length cannot trigger an abort-on-alloc).
 
 use std::io::Read;
+use std::time::Duration;
 
 /// Wire protocol version; bumped on any incompatible frame or payload
 /// layout change. Peers reject frames from other versions.
 pub const WIRE_VERSION: u8 = 1;
+
+/// THE socket poll cadence of every polled read in the crate: services
+/// and clients set their socket read timeout to this value so the
+/// `halt` probe of [`read_frame_polled`] fires at this period while a
+/// peer is idle. It bounds shutdown latency (a blocked read notices a
+/// halt within one interval), so every accept loop, connection thread
+/// and driver wind-down wait must use this ONE constant — a private
+/// copy that drifts from it silently changes how fast `mava launch`
+/// and `mava serve` wind down. 25 ms is far above a loopback RTT and
+/// far below human-visible shutdown lag.
+pub const POLL_INTERVAL: Duration = Duration::from_millis(25);
 
 /// Frame magic: the first two bytes of every frame.
 pub const MAGIC: [u8; 2] = *b"MV";
@@ -71,11 +83,27 @@ pub enum FrameKind {
     SourceClosed = 12,
     /// Either direction: a rendered error message.
     Error = 13,
+    /// Serve: client → service "open an inference session" (empty
+    /// payload).
+    SessionOpen = 14,
+    /// Serve: service → client the new session id.
+    SessionOpened = 15,
+    /// Serve: client → service "close session N" (frees its carry
+    /// slot).
+    SessionClose = 16,
+    /// Serve: service → client session-close acknowledgement.
+    SessionClosed = 17,
+    /// Serve: client → service one observation to act on (session id +
+    /// flat obs).
+    ActRequest = 18,
+    /// Serve: service → client the selected joint action (session id +
+    /// params version + per-agent actions).
+    ActResponse = 19,
 }
 
 impl FrameKind {
     /// Every frame kind, for exhaustive round-trip tests.
-    pub const ALL: [FrameKind; 14] = [
+    pub const ALL: [FrameKind; 20] = [
         FrameKind::Hello,
         FrameKind::Stop,
         FrameKind::FetchParams,
@@ -90,6 +118,12 @@ impl FrameKind {
         FrameKind::SampleRetry,
         FrameKind::SourceClosed,
         FrameKind::Error,
+        FrameKind::SessionOpen,
+        FrameKind::SessionOpened,
+        FrameKind::SessionClose,
+        FrameKind::SessionClosed,
+        FrameKind::ActRequest,
+        FrameKind::ActResponse,
     ];
 
     /// Parse a kind byte; `None` for unknown kinds.

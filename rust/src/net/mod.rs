@@ -12,6 +12,10 @@
 //!   (`Hello` / `Stop`), which also detects lost nodes by connection
 //!   EOF.
 //!
+//! The `mava serve` inference protocol (session open/close +
+//! `ActRequest`/`ActResponse`, DESIGN.md §12) rides the same frame
+//! codec; its service lives in [`crate::serve::service`].
+//!
 //! Everything here is transport only: the services wrap the existing
 //! [`crate::params::ParameterServer`] and [`crate::replay::Table`]
 //! unchanged, and the clients implement the same traits

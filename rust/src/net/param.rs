@@ -26,8 +26,11 @@ use crate::net::frame::{
 use crate::net::wire;
 use crate::params::{ParamStore, ParameterServer};
 
-/// Poll cadence of the accept loop and the per-connection reads.
-pub(crate) const POLL: Duration = Duration::from_millis(25);
+/// Poll cadence of the accept loop and the per-connection reads — the
+/// crate-wide [`crate::net::frame::POLL_INTERVAL`] (the constant used
+/// to live here as a private copy; it is load-bearing for shutdown
+/// latency, so there is exactly one).
+pub(crate) use crate::net::frame::POLL_INTERVAL as POLL;
 
 /// Convert a frame-codec error into an `anyhow` error with context.
 pub(crate) fn frame_err(e: FrameError, what: &str) -> anyhow::Error {

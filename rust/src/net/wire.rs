@@ -286,6 +286,49 @@ pub fn decode_u64(payload: &[u8]) -> Result<u64> {
     Ok(v)
 }
 
+/// Encode an `ActRequest` payload: session id u64 + flat `[N*O]`
+/// observation.
+pub fn encode_act_request(session: u64, obs: &[f32], out: &mut Vec<u8>) {
+    out.extend_from_slice(&session.to_le_bytes());
+    put_f32s(out, obs);
+}
+
+/// Decode an `ActRequest` payload into a reusable observation vector;
+/// returns the session id.
+pub fn decode_act_request(
+    payload: &[u8],
+    obs: &mut Vec<f32>,
+) -> Result<u64> {
+    let mut r = WireReader::new(payload);
+    let session = r.u64()?;
+    r.f32_vec_into(obs)?;
+    r.finish()?;
+    Ok(session)
+}
+
+/// Encode an `ActResponse` payload: session id u64 + parameter version
+/// u64 + per-agent discrete actions.
+pub fn encode_act_response(
+    session: u64,
+    version: u64,
+    actions: &[i32],
+    out: &mut Vec<u8>,
+) {
+    out.extend_from_slice(&session.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
+    put_i32s(out, actions);
+}
+
+/// Decode an `ActResponse` payload: `(session, version, actions)`.
+pub fn decode_act_response(payload: &[u8]) -> Result<(u64, u64, Vec<i32>)> {
+    let mut r = WireReader::new(payload);
+    let session = r.u64()?;
+    let version = r.u64()?;
+    let actions = r.i32_vec()?;
+    r.finish()?;
+    Ok((session, version, actions))
+}
+
 /// Encode an `Error` payload: a rendered message string.
 pub fn encode_error(msg: &str, out: &mut Vec<u8>) {
     let clipped = if msg.len() > u16::MAX as usize {
@@ -387,6 +430,36 @@ mod tests {
         encode_batch(&[sample_transition()], &mut out);
         out[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_batch(&out).is_err());
+    }
+
+    #[test]
+    fn act_request_roundtrip_reuses_obs() {
+        let mut out = Vec::new();
+        encode_act_request(42, &[0.25, -1.0, 3.5], &mut out);
+        let mut obs = vec![9.0; 64];
+        let session = decode_act_request(&out, &mut obs).unwrap();
+        assert_eq!(session, 42);
+        assert_eq!(obs, vec![0.25, -1.0, 3.5]);
+    }
+
+    #[test]
+    fn act_response_roundtrip() {
+        let mut out = Vec::new();
+        encode_act_response(7, 12, &[3, 0, 4], &mut out);
+        let (session, version, actions) =
+            decode_act_response(&out).unwrap();
+        assert_eq!(session, 7);
+        assert_eq!(version, 12);
+        assert_eq!(actions, vec![3, 0, 4]);
+    }
+
+    #[test]
+    fn corrupt_act_request_count_errors() {
+        let mut out = Vec::new();
+        encode_act_request(1, &[1.0], &mut out);
+        out[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut obs = Vec::new();
+        assert!(decode_act_request(&out, &mut obs).is_err());
     }
 
     #[test]

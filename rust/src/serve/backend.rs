@@ -1,0 +1,382 @@
+//! The policy surface the batching core drives (DESIGN.md §12).
+//!
+//! [`PolicyBackend`] is the seam that makes the whole serve state
+//! machine hermetically testable: [`crate::serve::core::ServeCore`]
+//! only ever sees this trait, so the deadline/coalescing/reload suites
+//! run against the deterministic [`MockBackend`] — no artifacts, no
+//! PJRT. Production uses [`EngineBackend`], one
+//! [`VecExecutor`] per lowered `_b{B}` bucket of the artifact ladder,
+//! with the per-session recurrent carry gathered/scattered through
+//! [`VecExecutor::import_carry`] / [`VecExecutor::export_carry`] and
+//! padding rows masked by [`VecExecutor::set_active_rows`].
+
+#![warn(missing_docs)]
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::core::{ActionSpec, EnvSpec};
+use crate::env::{ActionBuf, VecStepBuf};
+use crate::runtime::{BucketLadder, Engine};
+use crate::serve::session::ServeError;
+use crate::systems::{SystemKind, VecExecutor};
+
+/// A batched, recurrent-carry-aware policy: the only thing the serve
+/// core knows how to call.
+///
+/// Contract of [`PolicyBackend::infer`]: `obs` is `[bucket *
+/// obs_width]` with padding rows zeroed, `carry` is `[bucket *
+/// carry_width]` in/out (row `r` is the carry of the request in row
+/// `r`), `actions` is `[bucket * act_width]` and the backend must
+/// write **only** rows `0..active` — padding rows consume no RNG and
+/// produce no actions.
+pub trait PolicyBackend {
+    /// Flat per-request observation width (`n_agents * obs_dim`).
+    fn obs_width(&self) -> usize;
+
+    /// Per-request action count (`n_agents`, one discrete action per
+    /// agent).
+    fn act_width(&self) -> usize;
+
+    /// Per-session recurrent carry width in f32s (0 = feedforward).
+    fn carry_width(&self) -> usize;
+
+    /// Lowered bucket widths, ascending — the batcher's ladder.
+    fn buckets(&self) -> &[usize];
+
+    /// Run the policy for one padded batch (see trait docs for the
+    /// buffer contract).
+    fn infer(
+        &mut self,
+        bucket: usize,
+        active: usize,
+        obs: &[f32],
+        carry: &mut [f32],
+        actions: &mut [i32],
+    ) -> Result<(), ServeError>;
+
+    /// Swap in a new parameter blob (checkpoint hot-reload). Called
+    /// only *between* batches, never mid-inference.
+    fn set_params(
+        &mut self,
+        version: u64,
+        params: &[f32],
+    ) -> Result<(), ServeError>;
+}
+
+/// One recorded [`MockBackend::infer`] call, for asserting coalescing
+/// decisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MockCall {
+    /// Bucket the batch executed at.
+    pub bucket: usize,
+    /// Real rows in the batch.
+    pub active: usize,
+    /// Parameter version the backend held during the call.
+    pub version: u64,
+}
+
+/// Deterministic in-memory [`PolicyBackend`] for the hermetic suites.
+///
+/// Behaviour is arranged so tests can *prove* routing and masking:
+/// every agent's action is the first observation element of its row
+/// (so a response is traceable to the request that produced it), and
+/// each call adds 1.0 to every active carry element (so the carry of a
+/// session counts exactly how many times *that session* was inferred).
+/// Padding rows are asserted untouched.
+pub struct MockBackend {
+    obs_width: usize,
+    act_width: usize,
+    carry_width: usize,
+    buckets: Vec<usize>,
+    version: u64,
+    /// Last parameter blob installed via `set_params` (tests inspect
+    /// it for torn reads).
+    pub params: Vec<f32>,
+    /// Every `infer` call in order.
+    pub calls: Vec<MockCall>,
+    /// When true, the next `infer` fails with a typed backend error
+    /// (and clears the flag).
+    pub fail_next: bool,
+}
+
+impl MockBackend {
+    /// A mock policy with the given widths and bucket ladder.
+    pub fn new(
+        obs_width: usize,
+        act_width: usize,
+        carry_width: usize,
+        buckets: &[usize],
+    ) -> MockBackend {
+        MockBackend {
+            obs_width,
+            act_width,
+            carry_width,
+            buckets: buckets.to_vec(),
+            version: 0,
+            params: Vec::new(),
+            calls: Vec::new(),
+            fail_next: false,
+        }
+    }
+}
+
+impl PolicyBackend for MockBackend {
+    fn obs_width(&self) -> usize {
+        self.obs_width
+    }
+
+    fn act_width(&self) -> usize {
+        self.act_width
+    }
+
+    fn carry_width(&self) -> usize {
+        self.carry_width
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn infer(
+        &mut self,
+        bucket: usize,
+        active: usize,
+        obs: &[f32],
+        carry: &mut [f32],
+        actions: &mut [i32],
+    ) -> Result<(), ServeError> {
+        if self.fail_next {
+            self.fail_next = false;
+            return Err(ServeError::Backend("injected mock failure".into()));
+        }
+        assert_eq!(obs.len(), bucket * self.obs_width);
+        assert_eq!(carry.len(), bucket * self.carry_width);
+        assert_eq!(actions.len(), bucket * self.act_width);
+        assert!(active >= 1 && active <= bucket);
+        assert!(
+            obs[active * self.obs_width..].iter().all(|&x| x == 0.0),
+            "padding observation rows must be zero"
+        );
+        self.calls.push(MockCall {
+            bucket,
+            active,
+            version: self.version,
+        });
+        for row in 0..active {
+            let a = obs[row * self.obs_width] as i32;
+            actions[row * self.act_width..(row + 1) * self.act_width]
+                .fill(a);
+            for c in &mut carry
+                [row * self.carry_width..(row + 1) * self.carry_width]
+            {
+                *c += 1.0;
+            }
+        }
+        Ok(())
+    }
+
+    fn set_params(
+        &mut self,
+        version: u64,
+        params: &[f32],
+    ) -> Result<(), ServeError> {
+        assert!(
+            version > self.version,
+            "hot-reload must be version-monotone ({} -> {version})",
+            self.version
+        );
+        self.version = version;
+        self.params.clear();
+        self.params.extend_from_slice(params);
+        Ok(())
+    }
+}
+
+/// The real-engine [`PolicyBackend`]: one [`VecExecutor`] per lowered
+/// bucket, all sharing one parameter blob, driven at `eps = 0`
+/// (serving is greedy — exploration belongs to training executors).
+///
+/// Lives on the serve core thread (PJRT artifacts are
+/// single-threaded `Rc`s), which is why [`PolicyBackend`] does not
+/// require `Send` and the service constructs its backend *on* that
+/// thread via a factory.
+pub struct EngineBackend {
+    buckets: Vec<usize>,
+    execs: HashMap<usize, VecExecutor>,
+    /// Reusable per-bucket obs/action staging buffers.
+    bufs: HashMap<usize, (VecStepBuf, ActionBuf)>,
+    obs_width: usize,
+    act_width: usize,
+    carry_width: usize,
+    param_len: usize,
+}
+
+impl EngineBackend {
+    /// Build an executor for every bucket of `ladder`, starting from
+    /// `initial_params` (the artifact's `params0` blob or a
+    /// checkpoint). Continuous-action systems are rejected: the serve
+    /// wire format carries one discrete action per agent.
+    pub fn new(
+        engine: &mut Engine,
+        kind: SystemKind,
+        ladder: &BucketLadder,
+        initial_params: Vec<f32>,
+        seed: u64,
+    ) -> Result<EngineBackend> {
+        anyhow::ensure!(
+            kind.discrete(),
+            "mava serve only serves discrete-action systems \
+             (the ActResponse wire format is one discrete action per \
+             agent)"
+        );
+        let buckets = ladder.buckets().to_vec();
+        let mut execs = HashMap::new();
+        let mut bufs = HashMap::new();
+        let mut dims = None;
+        let mut carry_width = 0;
+        for &b in &buckets {
+            let artifact = engine.artifact(&ladder.artifact_name(b))?;
+            let ex = VecExecutor::new(
+                kind,
+                artifact,
+                initial_params.clone(),
+                seed ^ (b as u64),
+            )?;
+            anyhow::ensure!(
+                ex.num_envs() == b,
+                "artifact {} lowered for batch {}, ladder says {b}",
+                ladder.artifact_name(b),
+                ex.num_envs()
+            );
+            carry_width = ex.carry_width();
+            dims.get_or_insert((ex.n_agents(), ex.obs_dim(), ex.n_actions()));
+            let (n, o, a) = dims.unwrap();
+            let spec = EnvSpec {
+                name: "serve".into(),
+                n_agents: n,
+                obs_dim: o,
+                action: ActionSpec::Discrete { n: a },
+                state_dim: 0,
+                episode_limit: 0,
+            };
+            bufs.insert(
+                b,
+                (VecStepBuf::new(&spec, b, false), ActionBuf::new(&spec, b)),
+            );
+            execs.insert(b, ex);
+        }
+        let (n, o, _) = dims.expect("ladder is never empty");
+        Ok(EngineBackend {
+            buckets,
+            execs,
+            bufs,
+            obs_width: n * o,
+            act_width: n,
+            carry_width,
+            param_len: initial_params.len(),
+        })
+    }
+}
+
+impl PolicyBackend for EngineBackend {
+    fn obs_width(&self) -> usize {
+        self.obs_width
+    }
+
+    fn act_width(&self) -> usize {
+        self.act_width
+    }
+
+    fn carry_width(&self) -> usize {
+        self.carry_width
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn infer(
+        &mut self,
+        bucket: usize,
+        active: usize,
+        obs: &[f32],
+        carry: &mut [f32],
+        actions: &mut [i32],
+    ) -> Result<(), ServeError> {
+        let ex = self
+            .execs
+            .get_mut(&bucket)
+            .ok_or_else(|| {
+                ServeError::Backend(format!("no executor for bucket {bucket}"))
+            })?;
+        let (buf, abuf) = self.bufs.get_mut(&bucket).expect("bufs match execs");
+        let run = || -> Result<()> {
+            ex.set_active_rows(active)?;
+            ex.import_carry(carry)?;
+            buf.obs.as_f32_mut().copy_from_slice(obs);
+            ex.select_actions_into(buf, 0.0, 0.0, abuf)?;
+            ex.export_carry(carry)?;
+            Ok(())
+        };
+        run().map_err(|e| ServeError::Backend(format!("{e:#}")))?;
+        for row in 0..active {
+            let w = self.act_width;
+            actions[row * w..(row + 1) * w]
+                .copy_from_slice(abuf.row(row).as_discrete());
+        }
+        Ok(())
+    }
+
+    fn set_params(
+        &mut self,
+        version: u64,
+        params: &[f32],
+    ) -> Result<(), ServeError> {
+        if params.len() != self.param_len {
+            return Err(ServeError::Backend(format!(
+                "hot-reload blob has {} params, artifacts expect {}",
+                params.len(),
+                self.param_len
+            )));
+        }
+        for ex in self.execs.values_mut() {
+            ex.set_params(version, params);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_actions_trace_back_to_their_row() {
+        let mut m = MockBackend::new(2, 3, 1, &[4]);
+        let obs = [5.0, 0.5, 7.0, 0.5, 0.0, 0.0, 0.0, 0.0];
+        let mut carry = [0.0; 4];
+        let mut actions = [0; 12];
+        m.infer(4, 2, &obs, &mut carry, &mut actions).unwrap();
+        assert_eq!(&actions[..6], &[5, 5, 5, 7, 7, 7]);
+        assert_eq!(&actions[6..], &[0; 6], "padding rows untouched");
+        assert_eq!(carry, [1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(
+            m.calls,
+            vec![MockCall { bucket: 4, active: 2, version: 0 }]
+        );
+    }
+
+    #[test]
+    fn mock_fail_next_is_one_shot() {
+        let mut m = MockBackend::new(1, 1, 0, &[1]);
+        m.fail_next = true;
+        let err = m
+            .infer(1, 1, &[1.0], &mut [], &mut [0])
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Backend(_)));
+        m.infer(1, 1, &[1.0], &mut [], &mut [0]).unwrap();
+        assert_eq!(m.calls.len(), 1);
+    }
+}

@@ -1,0 +1,230 @@
+//! Deadline-based dynamic batching: the serve coalescing state machine
+//! (DESIGN.md §12).
+//!
+//! Requests queue in arrival order. A batch flushes the moment either
+//! trigger fires:
+//!
+//! - **full bucket** — the queue reaches the largest lowered bucket:
+//!   flush `max_bucket` rows immediately (zero padding, zero added
+//!   latency under load), or
+//! - **deadline** — the *oldest* queued request has waited
+//!   `deadline_us`: flush everything queued into the smallest lowered
+//!   bucket that covers it (the `bucket - n` trailing rows are padding
+//!   the executor masks out).
+//!
+//! The batcher is pure state + arithmetic over caller-supplied clock
+//! readings — it never reads a real clock and never sleeps, which is
+//! what makes every coalescing decision hermetically testable.
+
+#![warn(missing_docs)]
+
+use std::collections::VecDeque;
+
+/// One queued act request, tagged with the carry slot its session owns
+/// and the clock reading at enqueue time.
+#[derive(Debug)]
+pub struct PendingRequest {
+    /// The session that sent it.
+    pub session: u64,
+    /// The session's carry slot (resolved at submit time).
+    pub slot: usize,
+    /// Flat `[N*O]` observation.
+    pub obs: Vec<f32>,
+    /// [`crate::serve::clock::Clock::now_us`] when the request queued;
+    /// its deadline is `enqueued_us + deadline_us`.
+    pub enqueued_us: u64,
+}
+
+/// One flushed batch: `requests.len()` real rows padded up to a
+/// lowered `bucket` width.
+#[derive(Debug)]
+pub struct Batch {
+    /// The lowered bucket width this batch executes at.
+    pub bucket: usize,
+    /// The real requests, in arrival order (rows `0..active()`).
+    pub requests: Vec<PendingRequest>,
+}
+
+impl Batch {
+    /// Number of real (non-padding) rows.
+    pub fn active(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Number of trailing padding rows the executor must mask.
+    pub fn pad(&self) -> usize {
+        self.bucket - self.requests.len()
+    }
+}
+
+/// The coalescing queue. [`Batcher::poll`] is the whole state machine:
+/// called with "now", it either returns the next batch to execute or
+/// tells the caller (via [`Batcher::next_deadline_us`]) how long it
+/// may sleep.
+pub struct Batcher {
+    /// Lowered bucket widths, ascending (from the artifact ladder).
+    buckets: Vec<usize>,
+    deadline_us: u64,
+    queue: VecDeque<PendingRequest>,
+}
+
+impl Batcher {
+    /// A batcher over the ascending lowered `buckets` with a
+    /// `deadline_us` coalescing window.
+    pub fn new(buckets: &[usize], deadline_us: u64) -> Batcher {
+        assert!(!buckets.is_empty(), "serve needs a non-empty ladder");
+        assert!(
+            buckets.windows(2).all(|w| w[0] < w[1]),
+            "bucket ladder must be strictly ascending"
+        );
+        Batcher {
+            buckets: buckets.to_vec(),
+            deadline_us,
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Largest lowered bucket (the full-batch flush trigger).
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().expect("ladder is never empty")
+    }
+
+    /// Number of queued requests.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Queue one request (arrival order is preserved end to end).
+    pub fn submit(&mut self, req: PendingRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Drop every queued request of `session` (the session closed or
+    /// its connection died); returns how many were dropped. Their
+    /// responses must never be emitted.
+    pub fn drop_session(&mut self, session: u64) -> usize {
+        let before = self.queue.len();
+        self.queue.retain(|r| r.session != session);
+        before - self.queue.len()
+    }
+
+    /// Absolute clock time at which the oldest queued request must
+    /// flush, or `None` when the queue is empty. The caller sleeps at
+    /// most until this instant.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.queue
+            .front()
+            .map(|r| r.enqueued_us.saturating_add(self.deadline_us))
+    }
+
+    /// Flush decision at clock reading `now_us`. Returns at most one
+    /// batch; callers loop until `None` so a backlog of several full
+    /// buckets drains in order.
+    pub fn poll(&mut self, now_us: u64) -> Option<Batch> {
+        let max = self.max_bucket();
+        if self.queue.len() >= max {
+            return Some(self.drain(max, max));
+        }
+        let deadline = self.next_deadline_us()?;
+        if now_us >= deadline {
+            let n = self.queue.len();
+            let bucket = *self
+                .buckets
+                .iter()
+                .find(|&&b| b >= n)
+                .expect("n < max_bucket is always coverable");
+            return Some(self.drain(n, bucket));
+        }
+        None
+    }
+
+    fn drain(&mut self, n: usize, bucket: usize) -> Batch {
+        Batch {
+            bucket,
+            requests: self.queue.drain(..n).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(session: u64, at_us: u64) -> PendingRequest {
+        PendingRequest {
+            session,
+            slot: session as usize,
+            obs: vec![session as f32],
+            enqueued_us: at_us,
+        }
+    }
+
+    #[test]
+    fn full_bucket_flushes_immediately() {
+        let mut b = Batcher::new(&[1, 2, 4], 1_000);
+        for i in 0..4 {
+            b.submit(req(i, 0));
+            if i < 3 {
+                assert!(b.poll(0).is_none(), "partial must wait");
+            }
+        }
+        let batch = b.poll(0).expect("full bucket flushes at once");
+        assert_eq!(batch.bucket, 4);
+        assert_eq!(batch.active(), 4);
+        assert_eq!(batch.pad(), 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_flush_picks_smallest_covering_bucket() {
+        let mut b = Batcher::new(&[1, 2, 4, 8], 1_000);
+        b.submit(req(0, 100));
+        b.submit(req(1, 400));
+        b.submit(req(2, 900));
+        // deadline runs off the OLDEST request
+        assert_eq!(b.next_deadline_us(), Some(1_100));
+        assert!(b.poll(1_099).is_none());
+        let batch = b.poll(1_100).expect("deadline reached");
+        assert_eq!(batch.bucket, 4, "3 rows round up to bucket 4");
+        assert_eq!(batch.active(), 3);
+        assert_eq!(batch.pad(), 1);
+        let order: Vec<u64> =
+            batch.requests.iter().map(|r| r.session).collect();
+        assert_eq!(order, vec![0, 1, 2], "arrival order preserved");
+    }
+
+    #[test]
+    fn overflow_drains_in_bucket_sized_batches() {
+        let mut b = Batcher::new(&[1, 2], 500);
+        for i in 0..5 {
+            b.submit(req(i, 0));
+        }
+        // two full buckets drain immediately, the odd request waits
+        // for its deadline
+        assert_eq!(b.poll(0).unwrap().active(), 2);
+        assert_eq!(b.poll(0).unwrap().active(), 2);
+        assert!(b.poll(0).is_none());
+        assert_eq!(b.pending(), 1);
+        let last = b.poll(500).unwrap();
+        assert_eq!((last.active(), last.bucket), (1, 1));
+    }
+
+    #[test]
+    fn drop_session_removes_only_that_sessions_rows() {
+        let mut b = Batcher::new(&[8], 500);
+        b.submit(req(1, 0));
+        b.submit(req(2, 0));
+        b.submit(req(1, 10));
+        assert_eq!(b.drop_session(1), 2);
+        assert_eq!(b.pending(), 1);
+        let batch = b.poll(500).unwrap();
+        assert_eq!(batch.requests[0].session, 2);
+    }
+
+    #[test]
+    fn empty_queue_has_no_deadline() {
+        let mut b = Batcher::new(&[4], 100);
+        assert_eq!(b.next_deadline_us(), None);
+        assert!(b.poll(u64::MAX).is_none());
+    }
+}

@@ -1,0 +1,99 @@
+//! The injected time source of the serve batcher (DESIGN.md §12).
+//!
+//! Every deadline decision in [`crate::serve`] reads time through
+//! [`Clock`], so the whole coalescing state machine runs hermetically
+//! under a [`MockClock`] in tests — deadline expiry is a `set_us`
+//! call, never a real sleep. Production uses [`SystemClock`], a
+//! monotonic microsecond counter anchored at service start.
+
+#![warn(missing_docs)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic microsecond time source. Implementations must never go
+/// backwards; the absolute epoch is arbitrary (only differences are
+/// compared against `serve_deadline_us`).
+pub trait Clock: Send + Sync {
+    /// Microseconds since the clock's (arbitrary) epoch.
+    fn now_us(&self) -> u64;
+}
+
+/// Wall-clock [`Clock`]: microseconds since construction, backed by
+/// [`Instant`] so it is monotone under NTP step adjustments.
+pub struct SystemClock {
+    start: Instant,
+}
+
+impl SystemClock {
+    /// A clock anchored at "now".
+    pub fn new() -> SystemClock {
+        SystemClock { start: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+/// Manually advanced [`Clock`] for hermetic tests: time moves only
+/// when the test says so.
+pub struct MockClock {
+    now_us: AtomicU64,
+}
+
+impl MockClock {
+    /// A mock clock reading `start_us`.
+    pub fn new(start_us: u64) -> MockClock {
+        MockClock { now_us: AtomicU64::new(start_us) }
+    }
+
+    /// Jump to the absolute time `us` (must not move backwards).
+    pub fn set_us(&self, us: u64) {
+        debug_assert!(us >= self.now_us.load(Ordering::Acquire));
+        self.now_us.store(us, Ordering::Release);
+    }
+
+    /// Advance by `us` microseconds.
+    pub fn advance_us(&self, us: u64) {
+        self.now_us.fetch_add(us, Ordering::AcqRel);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_us(&self) -> u64 {
+        self.now_us.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_clock_moves_only_on_command() {
+        let c = MockClock::new(100);
+        assert_eq!(c.now_us(), 100);
+        assert_eq!(c.now_us(), 100);
+        c.advance_us(50);
+        assert_eq!(c.now_us(), 150);
+        c.set_us(1_000);
+        assert_eq!(c.now_us(), 1_000);
+    }
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let c = SystemClock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,234 @@
+//! The serve core: sessions + batcher + backend + hot-reload, wired
+//! into one single-threaded state machine (DESIGN.md §12).
+//!
+//! [`ServeCore`] owns everything stateful about serving and exposes
+//! exactly four operations: open/close a session, submit an
+//! observation, and [`ServeCore::step`] — which flushes every batch
+//! the batcher deems due and returns the finished responses. It has no
+//! threads, no sockets and no real clock: the TCP service drives it
+//! from one ticker thread, and the hermetic suites drive it directly
+//! with a [`crate::serve::clock::MockClock`] and a
+//! [`crate::serve::backend::MockBackend`].
+//!
+//! Hot-reload ordering: the [`ParamStore`] is sync'd at most once per
+//! flushed batch, *before* that batch infers. A trainer publish
+//! therefore lands between batches, never mid-batch — every response
+//! in a batch reports the one version its actions were computed with,
+//! and the version sequence across responses is monotone.
+
+#![warn(missing_docs)]
+
+use std::sync::Arc;
+
+use crate::params::ParamStore;
+use crate::serve::backend::PolicyBackend;
+use crate::serve::batcher::{Batcher, PendingRequest};
+use crate::serve::clock::Clock;
+use crate::serve::session::{ServeError, SessionTable};
+
+/// One finished inference: the actions for one request, stamped with
+/// the parameter version that produced them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ActResponse {
+    /// The session that asked.
+    pub session: u64,
+    /// Parameter version the actions were computed with.
+    pub version: u64,
+    /// One discrete action per agent.
+    pub actions: Vec<i32>,
+}
+
+/// The single-threaded serving state machine over an injected clock,
+/// backend and (optional) parameter store.
+pub struct ServeCore<B: PolicyBackend> {
+    clock: Arc<dyn Clock>,
+    backend: B,
+    sessions: SessionTable,
+    batcher: Batcher,
+    store: Option<Arc<dyn ParamStore>>,
+    known_version: u64,
+    param_scratch: Vec<f32>,
+    obs_scratch: Vec<f32>,
+    carry_scratch: Vec<f32>,
+    act_scratch: Vec<i32>,
+}
+
+impl<B: PolicyBackend> ServeCore<B> {
+    /// A core serving `backend` with `max_sessions` carry slots and a
+    /// `deadline_us` coalescing window.
+    pub fn new(
+        backend: B,
+        clock: Arc<dyn Clock>,
+        max_sessions: usize,
+        deadline_us: u64,
+    ) -> ServeCore<B> {
+        let sessions = SessionTable::new(max_sessions, backend.carry_width());
+        let batcher = Batcher::new(backend.buckets(), deadline_us);
+        ServeCore {
+            clock,
+            backend,
+            sessions,
+            batcher,
+            store: None,
+            known_version: 0,
+            param_scratch: Vec::new(),
+            obs_scratch: Vec::new(),
+            carry_scratch: Vec::new(),
+            act_scratch: Vec::new(),
+        }
+    }
+
+    /// Attach a checkpoint source: each batch checks it (version-
+    /// gated) before inferring, so trainer publishes hot-reload
+    /// without dropping requests.
+    pub fn with_store(mut self, store: Arc<dyn ParamStore>) -> ServeCore<B> {
+        self.store = Some(store);
+        self
+    }
+
+    /// Open a session (a carry slot for one client episode).
+    pub fn open_session(&mut self) -> Result<u64, ServeError> {
+        self.sessions.open()
+    }
+
+    /// Close a session: drops its queued-but-unflushed requests (their
+    /// responses must never be emitted) and zeroes its carry slot.
+    /// Returns how many pending requests were dropped.
+    pub fn close_session(
+        &mut self,
+        session: u64,
+    ) -> Result<usize, ServeError> {
+        self.sessions.close(session)?;
+        Ok(self.batcher.drop_session(session))
+    }
+
+    /// Queue one observation for `session`. The response comes out of
+    /// a later [`ServeCore::step`].
+    pub fn submit(
+        &mut self,
+        session: u64,
+        obs: Vec<f32>,
+    ) -> Result<(), ServeError> {
+        if obs.len() != self.backend.obs_width() {
+            return Err(ServeError::BadRequest(format!(
+                "observation has {} floats, the policy expects {}",
+                obs.len(),
+                self.backend.obs_width()
+            )));
+        }
+        let slot = self.sessions.slot(session)?;
+        self.batcher.submit(PendingRequest {
+            session,
+            slot,
+            obs,
+            enqueued_us: self.clock.now_us(),
+        });
+        Ok(())
+    }
+
+    /// Number of queued (unflushed) requests.
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Number of open sessions.
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.open_count()
+    }
+
+    /// Absolute clock time of the next forced flush (`None`: idle).
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.batcher.next_deadline_us()
+    }
+
+    /// The parameter version responses are currently stamped with.
+    pub fn known_version(&self) -> u64 {
+        self.known_version
+    }
+
+    /// The backend (tests inspect mock call logs through this).
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Mutable backend access (tests arrange fault injection).
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    /// Version-gated checkpoint sync. Called between batches only —
+    /// never mid-batch — so a concurrent trainer publish can delay a
+    /// batch's parameters but never tear them.
+    fn maybe_reload(&mut self) -> Result<(), ServeError> {
+        let Some(store) = &self.store else {
+            return Ok(());
+        };
+        match store.sync(self.known_version, &mut self.param_scratch) {
+            // an empty blob is a fresh store nothing was published to
+            // yet: keep the init params (mirrors the param service)
+            Ok(Some(v)) if !self.param_scratch.is_empty() => {
+                self.backend.set_params(v, &self.param_scratch)?;
+                self.known_version = v;
+            }
+            Ok(_) => {}
+            Err(e) => {
+                return Err(ServeError::Backend(format!(
+                    "checkpoint sync failed: {e:#}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush every due batch: reload params if the store moved, gather
+    /// each batch's obs + per-session carry rows, infer with padding
+    /// rows masked, scatter the carry back and emit one response per
+    /// real request. Requests submitted after a flush decision simply
+    /// stay queued for the next one — nothing is lost or answered
+    /// twice.
+    pub fn step(&mut self) -> Result<Vec<ActResponse>, ServeError> {
+        let mut out = Vec::new();
+        loop {
+            let now = self.clock.now_us();
+            let Some(batch) = self.batcher.poll(now) else {
+                break;
+            };
+            self.maybe_reload()?;
+            let ow = self.backend.obs_width();
+            let aw = self.backend.act_width();
+            let cw = self.backend.carry_width();
+            let bucket = batch.bucket;
+            self.obs_scratch.clear();
+            self.obs_scratch.resize(bucket * ow, 0.0);
+            self.carry_scratch.clear();
+            self.carry_scratch.resize(bucket * cw, 0.0);
+            self.act_scratch.clear();
+            self.act_scratch.resize(bucket * aw, 0);
+            for (row, req) in batch.requests.iter().enumerate() {
+                self.obs_scratch[row * ow..(row + 1) * ow]
+                    .copy_from_slice(&req.obs);
+                self.carry_scratch[row * cw..(row + 1) * cw]
+                    .copy_from_slice(self.sessions.carry_row(req.slot));
+            }
+            self.backend.infer(
+                bucket,
+                batch.active(),
+                &self.obs_scratch,
+                &mut self.carry_scratch,
+                &mut self.act_scratch,
+            )?;
+            for (row, req) in batch.requests.iter().enumerate() {
+                self.sessions.carry_row_mut(req.slot).copy_from_slice(
+                    &self.carry_scratch[row * cw..(row + 1) * cw],
+                );
+                out.push(ActResponse {
+                    session: req.session,
+                    version: self.known_version,
+                    actions: self.act_scratch[row * aw..(row + 1) * aw]
+                        .to_vec(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,41 @@
+//! `mava serve`: a policy inference service with deadline-based
+//! dynamic batching (DESIGN.md §12).
+//!
+//! The request-facing consumer of everything the training stack
+//! produces: checkpoints (through the version-gated
+//! [`crate::params::ParamStore`] seam), the lowered `_b{B}` policy
+//! ladder ([`crate::runtime::BucketLadder`]) and the padding-masked
+//! batched executor ([`crate::systems::VecExecutor`]). Concurrent
+//! observation requests coalesce into the largest bucket reachable
+//! within `serve_deadline_us`; each open session owns one row of the
+//! recurrent carry for the lifetime of its episode.
+//!
+//! Layering (bottom-up), built so every batching/deadline/reload
+//! decision tests hermetically — no artifacts, no sockets, no sleeps:
+//!
+//! - [`clock`] — the injected time source ([`MockClock`] in tests)
+//! - [`session`] — session-id ↔ carry-slot allocation, typed
+//!   [`ServeError`]
+//! - [`batcher`] — the pure coalescing state machine
+//! - [`backend`] — the [`PolicyBackend`] seam: [`MockBackend`]
+//!   (hermetic) and [`EngineBackend`] (real artifacts)
+//! - [`core`] — sessions + batcher + backend + hot-reload in one
+//!   single-threaded [`ServeCore`]
+//! - [`service`] — the TCP front-end on the [`crate::net`] frame
+//!   codec, plus [`ServeClient`]
+
+#![warn(missing_docs)]
+
+pub mod backend;
+pub mod batcher;
+pub mod clock;
+pub mod core;
+pub mod service;
+pub mod session;
+
+pub use backend::{EngineBackend, MockBackend, MockCall, PolicyBackend};
+pub use batcher::{Batch, Batcher, PendingRequest};
+pub use clock::{Clock, MockClock, SystemClock};
+pub use core::{ActResponse, ServeCore};
+pub use service::{ServeClient, ServeService};
+pub use session::{ServeError, SessionTable};

@@ -1,0 +1,567 @@
+//! The TCP front-end of `mava serve` (DESIGN.md §12): frames in,
+//! frames out, with all inference on one core thread.
+//!
+//! Threading model — three roles per the engine-per-thread rule
+//! (PJRT artifacts are `Rc`-based, so the backend must be *built and
+//! used* on a single thread):
+//!
+//! - **core ticker** (one): owns the [`ServeCore`] + backend
+//!   (constructed on-thread via the factory passed to
+//!   [`ServeService::bind`]). Waits on a command channel with a
+//!   timeout bounded by the next batch deadline, applies commands,
+//!   steps the core and routes responses to connection writers.
+//! - **reader** (one per connection): parses frames and forwards
+//!   typed commands to the ticker. A corrupt payload gets a typed
+//!   error frame and the connection *survives* (the stream is still
+//!   frame-aligned after a CRC failure); EOF/desync tears the
+//!   connection down, closing its sessions so their carry slots free.
+//! - **writer** (one per connection): drains an mpsc of pre-encoded
+//!   frames into the socket, so responses and error replies from the
+//!   ticker and the reader serialize without locking the stream.
+//!
+//! A response for a vanished connection is simply dropped — the rest
+//! of its batch completes untouched.
+
+#![warn(missing_docs)]
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::frame::{
+    frame_bytes, read_frame_polled, FrameError, FrameKind, POLL_INTERVAL,
+};
+use crate::net::param::{frame_err, spawn_accept_loop};
+use crate::net::wire;
+use crate::params::ParamStore;
+use crate::serve::backend::PolicyBackend;
+use crate::serve::clock::Clock;
+use crate::serve::core::{ActResponse, ServeCore};
+
+/// Commands connection readers send the core ticker.
+enum ServeCmd {
+    /// A new connection: register its writer channel.
+    Register {
+        conn: u64,
+        tx: Sender<Vec<u8>>,
+    },
+    /// `SessionOpen` frame.
+    Open { conn: u64 },
+    /// `SessionClose` frame.
+    Close { conn: u64, session: u64 },
+    /// `ActRequest` frame.
+    Act {
+        conn: u64,
+        session: u64,
+        obs: Vec<f32>,
+    },
+    /// The connection died: close its sessions, drop its writer.
+    Disconnect { conn: u64 },
+}
+
+/// A running serve listener. Dropping it (or calling
+/// [`ServeService::shutdown`]) stops the accept loop, the core ticker
+/// and every connection thread.
+pub struct ServeService {
+    addr: String,
+    halt: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    ticker: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ServeService {
+    /// Bind on `host` (ephemeral port) and serve the backend
+    /// `make_backend` constructs **on the core thread** (the factory
+    /// crosses the thread boundary; the backend never does). A factory
+    /// error surfaces here, from `bind`, not as a dead service.
+    pub fn bind<B, F>(
+        host: &str,
+        make_backend: F,
+        clock: Arc<dyn Clock>,
+        store: Option<Arc<dyn ParamStore>>,
+        max_sessions: usize,
+        deadline_us: u64,
+    ) -> Result<ServeService>
+    where
+        B: PolicyBackend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
+        let listener = TcpListener::bind((host, 0))
+            .with_context(|| format!("bind serve service on {host}"))?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let halt = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ServeCmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let ticker_clock = clock.clone();
+        let ticker_halt = halt.clone();
+        let ticker = std::thread::Builder::new()
+            .name("mava-serve-core".into())
+            .spawn(move || {
+                let backend = match make_backend() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut core = ServeCore::new(
+                    backend,
+                    ticker_clock.clone(),
+                    max_sessions,
+                    deadline_us,
+                );
+                if let Some(store) = store {
+                    core = core.with_store(store);
+                }
+                ticker_loop(core, cmd_rx, &ticker_clock, &ticker_halt);
+            })
+            .expect("spawn serve core thread");
+        ready_rx
+            .recv()
+            .context("serve core thread died before reporting ready")??;
+
+        // Sender<ServeCmd> is Clone + Send; the Mutex wrapper is only
+        // there to hand each accepted connection its own clone from
+        // the shared accept-loop closure.
+        let cmd_tx = Arc::new(Mutex::new(cmd_tx));
+        let conn_ids = Arc::new(AtomicU64::new(1));
+        let conn_halt = halt.clone();
+        let accept = spawn_accept_loop(
+            listener,
+            halt.clone(),
+            conns.clone(),
+            "mava-serve",
+            move |stream| {
+                let conn = conn_ids.fetch_add(1, Ordering::AcqRel);
+                let tx = cmd_tx.lock().unwrap().clone();
+                serve_conn(stream, conn, tx, &conn_halt);
+            },
+        );
+
+        Ok(ServeService {
+            addr,
+            halt,
+            accept: Some(accept),
+            ticker: Some(ticker),
+            conns,
+        })
+    }
+
+    /// The bound `host:port` address clients connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting, stop the core ticker, join every thread. The
+    /// ticker is joined before the connection threads: each reader's
+    /// writer drains only once the ticker has dropped its sender.
+    pub fn shutdown(&mut self) {
+        self.halt.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.ticker.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Encode + enqueue one frame for a connection's writer. A failed
+/// send means the connection is gone: the frame is dropped, nothing
+/// else is affected.
+fn send_frame(tx: &Sender<Vec<u8>>, kind: FrameKind, payload: &[u8]) {
+    let _ = tx.send(frame_bytes(kind, payload));
+}
+
+fn send_error(tx: &Sender<Vec<u8>>, msg: &str) {
+    let mut pay = Vec::new();
+    wire::encode_error(msg, &mut pay);
+    send_frame(tx, FrameKind::Error, &pay);
+}
+
+/// The core ticker: commands in, responses out, batches stepped in
+/// between. Wakes at least every [`POLL_INTERVAL`] (to notice halt)
+/// and exactly at the next batch deadline when one is pending.
+fn ticker_loop<B: PolicyBackend>(
+    mut core: ServeCore<B>,
+    cmd_rx: Receiver<ServeCmd>,
+    clock: &Arc<dyn Clock>,
+    halt: &AtomicBool,
+) {
+    let mut conn_tx: HashMap<u64, Sender<Vec<u8>>> = HashMap::new();
+    let mut session_conn: HashMap<u64, u64> = HashMap::new();
+    let mut conn_sessions: HashMap<u64, Vec<u64>> = HashMap::new();
+    let mut pay = Vec::new();
+    loop {
+        if halt.load(Ordering::Acquire) {
+            break;
+        }
+        let timeout = core
+            .next_deadline_us()
+            .map(|d| {
+                Duration::from_micros(d.saturating_sub(clock.now_us()))
+            })
+            .unwrap_or(POLL_INTERVAL)
+            .min(POLL_INTERVAL);
+        match cmd_rx.recv_timeout(timeout) {
+            Ok(cmd) => {
+                handle_cmd(
+                    cmd,
+                    &mut core,
+                    &mut conn_tx,
+                    &mut session_conn,
+                    &mut conn_sessions,
+                    &mut pay,
+                );
+                // drain whatever else arrived without blocking, so one
+                // wake-up coalesces a burst into one batch decision
+                while let Ok(cmd) = cmd_rx.try_recv() {
+                    handle_cmd(
+                        cmd,
+                        &mut core,
+                        &mut conn_tx,
+                        &mut session_conn,
+                        &mut conn_sessions,
+                        &mut pay,
+                    );
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        match core.step() {
+            Ok(responses) => {
+                for r in responses {
+                    route_response(&r, &conn_tx, &session_conn, &mut pay);
+                }
+            }
+            Err(e) => {
+                // a failed batch consumed its requests: tell every
+                // live client rather than leaving them waiting
+                for tx in conn_tx.values() {
+                    send_error(tx, &format!("inference step failed: {e}"));
+                }
+            }
+        }
+    }
+}
+
+fn handle_cmd<B: PolicyBackend>(
+    cmd: ServeCmd,
+    core: &mut ServeCore<B>,
+    conn_tx: &mut HashMap<u64, Sender<Vec<u8>>>,
+    session_conn: &mut HashMap<u64, u64>,
+    conn_sessions: &mut HashMap<u64, Vec<u64>>,
+    pay: &mut Vec<u8>,
+) {
+    match cmd {
+        ServeCmd::Register { conn, tx } => {
+            conn_tx.insert(conn, tx);
+        }
+        ServeCmd::Open { conn } => {
+            let Some(tx) = conn_tx.get(&conn) else { return };
+            match core.open_session() {
+                Ok(id) => {
+                    session_conn.insert(id, conn);
+                    conn_sessions.entry(conn).or_default().push(id);
+                    pay.clear();
+                    wire::encode_u64(id, pay);
+                    send_frame(tx, FrameKind::SessionOpened, pay);
+                }
+                Err(e) => send_error(tx, &e.to_string()),
+            }
+        }
+        ServeCmd::Close { conn, session } => {
+            let Some(tx) = conn_tx.get(&conn) else { return };
+            if session_conn.get(&session) != Some(&conn) {
+                send_error(
+                    tx,
+                    &format!("session {session} is not yours to close"),
+                );
+                return;
+            }
+            match core.close_session(session) {
+                Ok(_dropped) => {
+                    session_conn.remove(&session);
+                    if let Some(s) = conn_sessions.get_mut(&conn) {
+                        s.retain(|&id| id != session);
+                    }
+                    pay.clear();
+                    wire::encode_u64(session, pay);
+                    send_frame(tx, FrameKind::SessionClosed, pay);
+                }
+                Err(e) => send_error(tx, &e.to_string()),
+            }
+        }
+        ServeCmd::Act { conn, session, obs } => {
+            let Some(tx) = conn_tx.get(&conn) else { return };
+            if session_conn.get(&session) != Some(&conn) {
+                send_error(
+                    tx,
+                    &format!("session {session} is not yours to act in"),
+                );
+                return;
+            }
+            if let Err(e) = core.submit(session, obs) {
+                send_error(tx, &e.to_string());
+            }
+        }
+        ServeCmd::Disconnect { conn } => {
+            conn_tx.remove(&conn);
+            for session in conn_sessions.remove(&conn).unwrap_or_default() {
+                session_conn.remove(&session);
+                // closing drops the session's queued requests, so a
+                // dead client's rows never reach the backend
+                let _ = core.close_session(session);
+            }
+        }
+    }
+}
+
+/// Deliver one response to the connection owning its session; both
+/// lookups can fail (the client vanished mid-batch) and then this one
+/// row is dropped while the rest of the batch delivers.
+fn route_response(
+    r: &ActResponse,
+    conn_tx: &HashMap<u64, Sender<Vec<u8>>>,
+    session_conn: &HashMap<u64, u64>,
+    pay: &mut Vec<u8>,
+) {
+    let Some(conn) = session_conn.get(&r.session) else { return };
+    let Some(tx) = conn_tx.get(conn) else { return };
+    pay.clear();
+    wire::encode_act_response(r.session, r.version, &r.actions, pay);
+    send_frame(tx, FrameKind::ActResponse, pay);
+}
+
+/// One connection: spawn the writer, then parse frames until the
+/// stream dies or the service halts.
+fn serve_conn(
+    mut stream: TcpStream,
+    conn: u64,
+    cmd_tx: Sender<ServeCmd>,
+    halt: &AtomicBool,
+) {
+    let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+    let mut wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer = std::thread::Builder::new()
+        .name("mava-serve-writer".into())
+        .spawn(move || {
+            // exits when every sender (reader + ticker map entry) is
+            // gone, or on the first failed write
+            for buf in wrx {
+                if wstream.write_all(&buf).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn serve writer thread");
+    if cmd_tx
+        .send(ServeCmd::Register { conn, tx: wtx.clone() })
+        .is_err()
+    {
+        drop(wtx);
+        let _ = writer.join();
+        return;
+    }
+
+    let mut payload = Vec::new();
+    loop {
+        let kind = match read_frame_polled(&mut stream, &mut payload, &mut || {
+            halt.load(Ordering::Acquire)
+        }) {
+            Ok(Some(kind)) => kind,
+            // halted between frames, EOF, or a desynced stream: done
+            Ok(None) => break,
+            // a CRC failure leaves the stream frame-aligned (header +
+            // declared payload were fully consumed): reply with a
+            // typed error and keep serving this connection
+            Err(e @ FrameError::Corrupt { .. }) => {
+                send_error(&wtx, &e.to_string());
+                continue;
+            }
+            Err(_) => break,
+        };
+        match kind {
+            FrameKind::SessionOpen => {
+                if cmd_tx.send(ServeCmd::Open { conn }).is_err() {
+                    break;
+                }
+            }
+            FrameKind::SessionClose => match wire::decode_u64(&payload) {
+                Ok(session) => {
+                    if cmd_tx
+                        .send(ServeCmd::Close { conn, session })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                Err(e) => send_error(&wtx, &format!("bad close: {e:#}")),
+            },
+            FrameKind::ActRequest => {
+                let mut obs = Vec::new();
+                match wire::decode_act_request(&payload, &mut obs) {
+                    Ok(session) => {
+                        if cmd_tx
+                            .send(ServeCmd::Act { conn, session, obs })
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Err(e) => send_error(
+                        &wtx,
+                        &format!("bad act request: {e:#}"),
+                    ),
+                }
+            }
+            FrameKind::Stop => break,
+            other => send_error(
+                &wtx,
+                &format!("unexpected frame {other:?} on serve port"),
+            ),
+        }
+    }
+    let _ = cmd_tx.send(ServeCmd::Disconnect { conn });
+    drop(cmd_tx);
+    drop(wtx);
+    let _ = writer.join();
+}
+
+/// A blocking client for the serve protocol — the test harness and
+/// the `examples`-grade consumer of `mava serve`.
+pub struct ServeClient {
+    stream: TcpStream,
+    payload: Vec<u8>,
+}
+
+impl ServeClient {
+    /// Connect to a [`ServeService`] at `addr`.
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect serve service {addr}"))?;
+        stream.set_read_timeout(Some(POLL_INTERVAL))?;
+        stream.set_nodelay(true)?;
+        Ok(ServeClient { stream, payload: Vec::new() })
+    }
+
+    /// Send pre-encoded bytes as-is (fault-injection tests tear
+    /// frames with this).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes).context("serve client send")
+    }
+
+    /// Send one frame.
+    pub fn send(&mut self, kind: FrameKind, payload: &[u8]) -> Result<()> {
+        let buf = frame_bytes(kind, payload);
+        self.send_raw(&buf)
+    }
+
+    /// Receive one frame within `timeout`; returns the kind, with the
+    /// payload left in `self.payload`.
+    pub fn recv(&mut self, timeout: Duration) -> Result<FrameKind> {
+        let deadline = Instant::now() + timeout;
+        match read_frame_polled(&mut self.stream, &mut self.payload, &mut || {
+            Instant::now() >= deadline
+        }) {
+            Ok(Some(kind)) => Ok(kind),
+            Ok(None) => bail!("serve reply timed out after {timeout:?}"),
+            Err(e) => Err(frame_err(e, "serve reply")),
+        }
+    }
+
+    /// The payload of the last received frame.
+    pub fn last_payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    fn bail_error(&self, got: FrameKind) -> anyhow::Error {
+        if got == FrameKind::Error {
+            if let Ok(msg) = wire::decode_error(&self.payload) {
+                return anyhow::anyhow!("serve error: {msg}");
+            }
+        }
+        anyhow::anyhow!("unexpected serve reply {got:?}")
+    }
+
+    /// Open a session; returns its id.
+    pub fn open_session(&mut self, timeout: Duration) -> Result<u64> {
+        self.send(FrameKind::SessionOpen, &[])?;
+        match self.recv(timeout)? {
+            FrameKind::SessionOpened => wire::decode_u64(&self.payload),
+            other => Err(self.bail_error(other)),
+        }
+    }
+
+    /// Close a session (acknowledged).
+    pub fn close_session(
+        &mut self,
+        session: u64,
+        timeout: Duration,
+    ) -> Result<()> {
+        let mut pay = Vec::new();
+        wire::encode_u64(session, &mut pay);
+        self.send(FrameKind::SessionClose, &pay)?;
+        match self.recv(timeout)? {
+            FrameKind::SessionClosed => Ok(()),
+            other => Err(self.bail_error(other)),
+        }
+    }
+
+    /// Fire an act request without waiting for the response.
+    pub fn send_act(&mut self, session: u64, obs: &[f32]) -> Result<()> {
+        let mut pay = Vec::new();
+        wire::encode_act_request(session, obs, &mut pay);
+        self.send(FrameKind::ActRequest, &pay)
+    }
+
+    /// One observation in, `(version, actions)` out.
+    pub fn act(
+        &mut self,
+        session: u64,
+        obs: &[f32],
+        timeout: Duration,
+    ) -> Result<(u64, Vec<i32>)> {
+        self.send_act(session, obs)?;
+        match self.recv(timeout)? {
+            FrameKind::ActResponse => {
+                let (got, version, actions) =
+                    wire::decode_act_response(&self.payload)?;
+                anyhow::ensure!(
+                    got == session,
+                    "response for session {got}, expected {session}"
+                );
+                Ok((version, actions))
+            }
+            other => Err(self.bail_error(other)),
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Per-session slot allocation: session ids → rows of the recurrent
+//! carry (DESIGN.md §12).
+//!
+//! A serving session owns one row of a `[max_sessions, carry_width]`
+//! host-side carry table for as long as it is open. Session ids are
+//! monotone and never reused, so a late frame for a closed session is
+//! a typed [`ServeError::UnknownSession`] — it can never alias a new
+//! session that happens to occupy the same slot. Closing a session
+//! zeroes its carry row *before* the slot returns to the free list, so
+//! the next session to land on that row starts from the exact state a
+//! fresh recurrent episode starts from.
+
+#![warn(missing_docs)]
+
+/// Typed failure of the serve layer. Every client-visible error maps
+/// to one of these — the service never panics on bad input.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// All `serve_max_sessions` carry slots are in use.
+    SlotsExhausted {
+        /// The configured session cap that was hit.
+        max: usize,
+    },
+    /// The session id is not open (never existed, or already closed).
+    UnknownSession(u64),
+    /// The request itself is malformed (wrong observation width…).
+    BadRequest(String),
+    /// The policy backend failed (artifact call, parameter reload…).
+    Backend(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::SlotsExhausted { max } => write!(
+                f,
+                "all {max} serve sessions in use (raise \
+                 serve_max_sessions)"
+            ),
+            ServeError::UnknownSession(id) => {
+                write!(f, "unknown serve session {id}")
+            }
+            ServeError::BadRequest(msg) => {
+                write!(f, "bad serve request: {msg}")
+            }
+            ServeError::Backend(msg) => {
+                write!(f, "serve backend error: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The session ↔ carry-row map: a fixed pool of `max_sessions` slots,
+/// each backing one open session's recurrent carry row.
+pub struct SessionTable {
+    carry_width: usize,
+    /// slot → open session id (`None` = free).
+    slots: Vec<Option<u64>>,
+    /// Free slot indices (stack; order is irrelevant because carry
+    /// rows are zeroed on close).
+    free: Vec<usize>,
+    /// Next session id to hand out; ids are never reused.
+    next_id: u64,
+    /// Row-major `[max_sessions, carry_width]` recurrent carry.
+    carry: Vec<f32>,
+}
+
+impl SessionTable {
+    /// A table of `max_sessions` slots, each carrying `carry_width`
+    /// f32s (0 for feedforward systems).
+    pub fn new(max_sessions: usize, carry_width: usize) -> SessionTable {
+        assert!(max_sessions >= 1, "serve needs at least one session");
+        SessionTable {
+            carry_width,
+            slots: vec![None; max_sessions],
+            free: (0..max_sessions).rev().collect(),
+            next_id: 1,
+            carry: vec![0.0; max_sessions * carry_width],
+        }
+    }
+
+    /// The configured session cap.
+    pub fn max_sessions(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Per-session carry row width in f32s.
+    pub fn carry_width(&self) -> usize {
+        self.carry_width
+    }
+
+    /// Number of currently open sessions.
+    pub fn open_count(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Open a session: allocate a slot and a fresh id. The slot's
+    /// carry row is already zero (zeroed at close time).
+    pub fn open(&mut self) -> Result<u64, ServeError> {
+        let slot = self.free.pop().ok_or(ServeError::SlotsExhausted {
+            max: self.slots.len(),
+        })?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.slots[slot] = Some(id);
+        debug_assert!(
+            self.carry_row(slot).iter().all(|&x| x == 0.0),
+            "slot {slot} reused with a dirty carry row"
+        );
+        Ok(id)
+    }
+
+    /// The slot of an open session.
+    pub fn slot(&self, session: u64) -> Result<usize, ServeError> {
+        self.slots
+            .iter()
+            .position(|s| *s == Some(session))
+            .ok_or(ServeError::UnknownSession(session))
+    }
+
+    /// Close a session: zero its carry row, then free the slot.
+    /// Returns the freed slot index.
+    pub fn close(&mut self, session: u64) -> Result<usize, ServeError> {
+        let slot = self.slot(session)?;
+        self.slots[slot] = None;
+        self.carry_row_mut_raw(slot).fill(0.0);
+        self.free.push(slot);
+        Ok(slot)
+    }
+
+    /// Carry row of `slot` (length [`Self::carry_width`]).
+    pub fn carry_row(&self, slot: usize) -> &[f32] {
+        let w = self.carry_width;
+        &self.carry[slot * w..(slot + 1) * w]
+    }
+
+    /// Mutable carry row of an *open* slot.
+    pub fn carry_row_mut(&mut self, slot: usize) -> &mut [f32] {
+        debug_assert!(
+            self.slots[slot].is_some(),
+            "writing the carry of a free slot"
+        );
+        self.carry_row_mut_raw(slot)
+    }
+
+    fn carry_row_mut_raw(&mut self, slot: usize) -> &mut [f32] {
+        let w = self.carry_width;
+        &mut self.carry[slot * w..(slot + 1) * w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_monotone_and_never_reused() {
+        let mut t = SessionTable::new(2, 3);
+        let a = t.open().unwrap();
+        let b = t.open().unwrap();
+        assert_ne!(a, b);
+        t.close(a).unwrap();
+        let c = t.open().unwrap();
+        assert!(c > b, "ids must never be reused");
+        assert_eq!(t.slot(a), Err(ServeError::UnknownSession(a)));
+    }
+
+    #[test]
+    fn exhaustion_is_typed_not_a_panic() {
+        let mut t = SessionTable::new(1, 0);
+        t.open().unwrap();
+        assert_eq!(t.open(), Err(ServeError::SlotsExhausted { max: 1 }));
+        assert_eq!(t.open_count(), 1);
+    }
+
+    #[test]
+    fn close_zeroes_the_row_before_reuse() {
+        let mut t = SessionTable::new(1, 4);
+        let a = t.open().unwrap();
+        let slot = t.slot(a).unwrap();
+        t.carry_row_mut(slot).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        t.close(a).unwrap();
+        let b = t.open().unwrap();
+        let slot_b = t.slot(b).unwrap();
+        assert_eq!(slot_b, slot, "single slot must be recycled");
+        assert_eq!(t.carry_row(slot_b), &[0.0; 4]);
+    }
+
+    #[test]
+    fn close_unknown_session_errors() {
+        let mut t = SessionTable::new(2, 1);
+        assert_eq!(t.close(99), Err(ServeError::UnknownSession(99)));
+    }
+}

@@ -259,6 +259,94 @@ impl VecExecutor {
         self.n_agents
     }
 
+    /// Per-agent observation width the artifact was lowered for.
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    /// Per-agent action-space size (discrete actions / head width).
+    pub fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    /// Per-row width of the flat recurrent carry in f32s: hidden state
+    /// plus (for DIAL) the message inbox, concatenated per row. 0 for
+    /// feedforward families — such systems have no carry to export.
+    pub fn carry_width(&self) -> usize {
+        match self.kind.family() {
+            Family::DqnRec => self.n_agents * self.hidden,
+            Family::Dial => self.n_agents * (self.hidden + self.msg_dim),
+            _ => 0,
+        }
+    }
+
+    /// Copy the recurrent carry of every row into `out` (shape
+    /// `[batch, carry_width]`, each row laid out `[hidden | inbox]`).
+    /// Drains any device-resident carry first, so the copy reflects
+    /// the state *after* the most recent policy call and pending
+    /// per-row resets. The serve path uses this to scatter a batch's
+    /// carry rows back to their per-session slots.
+    pub fn export_carry(&mut self, out: &mut [f32]) -> Result<()> {
+        let cw = self.carry_width();
+        anyhow::ensure!(
+            out.len() == self.batch * cw,
+            "carry export buffer {} != batch {} x width {cw}",
+            out.len(),
+            self.batch
+        );
+        self.apply_pending_resets()?;
+        self.drain_device_state()?;
+        let hw = self.n_agents * self.hidden;
+        match &self.state {
+            ActorState::None => {}
+            ActorState::Hidden(h) => out.copy_from_slice(h.as_f32()),
+            ActorState::HiddenInbox(h, inbox) => {
+                let iw = self.n_agents * self.msg_dim;
+                let (hs, is) = (h.as_f32(), inbox.as_f32());
+                for b in 0..self.batch {
+                    let row = &mut out[b * cw..(b + 1) * cw];
+                    row[..hw].copy_from_slice(&hs[b * hw..(b + 1) * hw]);
+                    row[hw..].copy_from_slice(&is[b * iw..(b + 1) * iw]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Overwrite the recurrent carry of every row from `rows` (the
+    /// inverse layout of [`VecExecutor::export_carry`]). Any
+    /// device-resident carry and pending resets are discarded — the
+    /// imported rows are authoritative and feed the next policy call
+    /// as the host mirror. The serve path uses this to gather a
+    /// batch's per-session carry rows before inference.
+    pub fn import_carry(&mut self, rows: &[f32]) -> Result<()> {
+        let cw = self.carry_width();
+        anyhow::ensure!(
+            rows.len() == self.batch * cw,
+            "carry import buffer {} != batch {} x width {cw}",
+            rows.len(),
+            self.batch
+        );
+        self.dev_state = None;
+        self.pending_resets.clear();
+        let hw = self.n_agents * self.hidden;
+        let iw = self.n_agents * self.msg_dim;
+        let batch = self.batch;
+        match &mut self.state {
+            ActorState::None => {}
+            ActorState::Hidden(h) => h.as_f32_mut().copy_from_slice(rows),
+            ActorState::HiddenInbox(h, inbox) => {
+                let (hs, is) = (h.as_f32_mut(), inbox.as_f32_mut());
+                for b in 0..batch {
+                    let row = &rows[b * cw..(b + 1) * cw];
+                    hs[b * hw..(b + 1) * hw].copy_from_slice(&row[..hw]);
+                    is[b * iw..(b + 1) * iw].copy_from_slice(&row[hw..]);
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Zero the recurrent carry of every instance (drops any
     /// device-resident carry; the zeroed host mirror feeds the next
     /// call). The carry shape is dictated by the system's data-plumbing

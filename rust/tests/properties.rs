@@ -561,3 +561,132 @@ fn prop_envs_stay_finite_under_random_play() {
         }
     }
 }
+
+/// Serve session slots (DESIGN.md §12): under random open/close
+/// interleavings a freshly opened slot is always zeroed, every open
+/// session's carry row holds exactly what that session wrote (no
+/// cross-contamination through slot reuse), and exhaustion / unknown
+/// ids are typed errors, never panics.
+#[test]
+fn prop_serve_session_slots_zeroed_and_isolated() {
+    use mava::serve::{ServeError, SessionTable};
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let max = 1 + rng.below(6);
+        let w = 1 + rng.below(4);
+        let mut t = SessionTable::new(max, w);
+        let mut open: Vec<u64> = Vec::new();
+        for _ in 0..300 {
+            if rng.chance(0.5) {
+                match t.open() {
+                    Ok(id) => {
+                        let slot = t.slot(id).unwrap();
+                        assert!(
+                            t.carry_row(slot).iter().all(|&x| x == 0.0),
+                            "seed {seed}: dirty slot handed out"
+                        );
+                        // stamp the row with the (unique) session id
+                        t.carry_row_mut(slot).fill(id as f32);
+                        open.push(id);
+                    }
+                    Err(e) => {
+                        assert_eq!(e, ServeError::SlotsExhausted { max });
+                        assert_eq!(open.len(), max);
+                    }
+                }
+            } else if !open.is_empty() {
+                let id = open.swap_remove(rng.below(open.len()));
+                t.close(id).unwrap();
+                assert_eq!(t.slot(id), Err(ServeError::UnknownSession(id)));
+            }
+            for &id in &open {
+                let slot = t.slot(id).unwrap();
+                assert!(
+                    t.carry_row(slot).iter().all(|&x| x == id as f32),
+                    "seed {seed}: carry row of {id} cross-contaminated"
+                );
+            }
+        }
+    }
+}
+
+/// The full serve core under random open/act/close/step interleavings:
+/// every response traces back to the session that asked (a mixed-up
+/// carry/obs row would answer with the wrong action), closed sessions
+/// are never answered, and submitted - dropped == answered exactly —
+/// nothing lost, nothing double-answered.
+#[test]
+fn prop_serve_core_routes_without_cross_contamination() {
+    use mava::serve::{MockBackend, MockClock, ServeCore, ServeError};
+    use std::collections::HashMap;
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed);
+        let clock = std::sync::Arc::new(MockClock::new(0));
+        let max = 1 + rng.below(5);
+        let mut core = ServeCore::new(
+            MockBackend::new(1, 1, 2, &[1, 2, 4]),
+            clock.clone(),
+            max,
+            500,
+        );
+        let mut open: Vec<u64> = Vec::new();
+        let mut submitted = 0u64;
+        let mut dropped = 0u64;
+        let mut answered: HashMap<u64, u64> = HashMap::new();
+        for _ in 0..400 {
+            match rng.below(4) {
+                0 => match core.open_session() {
+                    Ok(id) => open.push(id),
+                    Err(e) => {
+                        assert_eq!(
+                            e,
+                            ServeError::SlotsExhausted { max },
+                            "seed {seed}"
+                        );
+                        assert_eq!(open.len(), max);
+                    }
+                },
+                1 if !open.is_empty() => {
+                    let id = open[rng.below(open.len())];
+                    core.submit(id, vec![id as f32]).unwrap();
+                    submitted += 1;
+                }
+                2 if !open.is_empty() => {
+                    let id = open.swap_remove(rng.below(open.len()));
+                    dropped += core.close_session(id).unwrap() as u64;
+                    assert_eq!(
+                        core.submit(id, vec![0.0]),
+                        Err(ServeError::UnknownSession(id)),
+                        "seed {seed}: closed session must be typed"
+                    );
+                }
+                _ => {
+                    clock.advance_us(200);
+                    for r in core.step().unwrap() {
+                        assert_eq!(
+                            r.actions,
+                            vec![r.session as i32],
+                            "seed {seed}: response from the wrong row"
+                        );
+                        assert!(
+                            open.contains(&r.session),
+                            "seed {seed}: closed session answered"
+                        );
+                        *answered.entry(r.session).or_default() += 1;
+                    }
+                }
+            }
+        }
+        clock.advance_us(10_000);
+        for r in core.step().unwrap() {
+            assert_eq!(r.actions, vec![r.session as i32], "seed {seed}");
+            *answered.entry(r.session).or_default() += 1;
+        }
+        let total: u64 = answered.values().sum();
+        assert_eq!(
+            total + dropped,
+            submitted,
+            "seed {seed}: lost or duplicated responses"
+        );
+    }
+}

@@ -1,0 +1,378 @@
+//! The `mava serve` acceptance suites (DESIGN.md §12).
+//!
+//! Two tiers, both self-contained in this test process:
+//!
+//! * **hermetic** — [`ServeCore`] driven directly with a [`MockClock`]
+//!   and [`MockBackend`]: every coalescing, deadline, pad-masking and
+//!   hot-reload decision is asserted without artifacts, sockets or
+//!   sleeps (deadline expiry is a `set_us` call);
+//! * **loopback TCP** — a real [`ServeService`] on 127.0.0.1 with an
+//!   ephemeral port, still backed by the mock policy: frame-level
+//!   fault injection (torn payloads, client disconnects), typed slot
+//!   exhaustion over the wire, and the halt-probe regression for
+//!   shutdown under idle connections.
+//!
+//! The one artifact-dependent test (the real [`EngineBackend`]) skips
+//! when `artifacts/` is not lowered, like the integration suite.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use mava::net::frame::{frame_bytes, FrameKind};
+use mava::params::{ParamStore, ParameterServer};
+use mava::runtime::{BucketLadder, Engine, Manifest};
+use mava::serve::{
+    EngineBackend, MockBackend, MockCall, MockClock, PolicyBackend,
+    ServeClient, ServeCore, ServeError, ServeService, SystemClock,
+};
+use mava::systems::SystemKind;
+
+const RPC: Duration = Duration::from_secs(10);
+
+fn mock_core(
+    buckets: &[usize],
+    deadline_us: u64,
+    max_sessions: usize,
+) -> (Arc<MockClock>, ServeCore<MockBackend>) {
+    let clock = Arc::new(MockClock::new(0));
+    let backend = MockBackend::new(1, 1, 2, buckets);
+    let core =
+        ServeCore::new(backend, clock.clone(), max_sessions, deadline_us);
+    (clock, core)
+}
+
+/// Satellite 1a: a full largest bucket flushes immediately — zero
+/// padding, zero added latency, no waiting for the deadline.
+#[test]
+fn full_bucket_flushes_immediately() {
+    let (_clock, mut core) = mock_core(&[1, 2, 4], 1_000, 8);
+    let sessions: Vec<u64> =
+        (0..4).map(|_| core.open_session().unwrap()).collect();
+    for &s in &sessions {
+        core.submit(s, vec![s as f32]).unwrap();
+    }
+    // the clock never moved: this flush is size-triggered
+    let out = core.step().unwrap();
+    assert_eq!(out.len(), 4);
+    for (r, &s) in out.iter().zip(&sessions) {
+        assert_eq!(r.session, s, "arrival order preserved");
+        assert_eq!(r.actions, vec![s as i32], "action traces to its row");
+    }
+    assert_eq!(
+        core.backend().calls,
+        vec![MockCall { bucket: 4, active: 4, version: 0 }]
+    );
+    assert_eq!(core.pending(), 0);
+    assert_eq!(core.next_deadline_us(), None);
+}
+
+/// Satellite 1b: a partial batch waits until exactly the deadline,
+/// then flushes into the smallest covering bucket with the padding
+/// rows masked (the mock backend asserts pad observation rows are
+/// zero and never writes their actions or carry).
+#[test]
+fn partial_batch_flushes_exactly_at_deadline_with_padding() {
+    let (clock, mut core) = mock_core(&[1, 2, 4], 1_000, 8);
+    let sessions: Vec<u64> =
+        (0..3).map(|_| core.open_session().unwrap()).collect();
+    for &s in &sessions {
+        core.submit(s, vec![s as f32]).unwrap();
+    }
+    assert_eq!(core.next_deadline_us(), Some(1_000));
+    clock.set_us(999);
+    assert!(core.step().unwrap().is_empty(), "one tick early: no flush");
+    clock.set_us(1_000);
+    let out = core.step().unwrap();
+    assert_eq!(out.len(), 3);
+    for (r, &s) in out.iter().zip(&sessions) {
+        assert_eq!((r.session, r.actions.clone()), (s, vec![s as i32]));
+    }
+    assert_eq!(
+        core.backend().calls,
+        vec![MockCall { bucket: 4, active: 3, version: 0 }],
+        "3 rows round up to bucket 4, one masked pad row"
+    );
+}
+
+/// Satellite 1c: requests arriving while a batch flushes land in the
+/// next batch — nothing is lost and nothing is answered twice.
+#[test]
+fn requests_during_flush_land_in_next_batch() {
+    let (clock, mut core) = mock_core(&[1, 2], 1_000, 8);
+    let a = core.open_session().unwrap();
+    let b = core.open_session().unwrap();
+    let c = core.open_session().unwrap();
+    core.submit(a, vec![a as f32]).unwrap();
+    core.submit(b, vec![b as f32]).unwrap();
+    // c arrives after the (a, b) bucket is already full: the same
+    // step() flushes (a, b) and must leave c queued, untouched
+    core.submit(c, vec![c as f32]).unwrap();
+    let first = core.step().unwrap();
+    assert_eq!(
+        first.iter().map(|r| r.session).collect::<Vec<_>>(),
+        vec![a, b]
+    );
+    assert_eq!(core.pending(), 1, "late request stays queued");
+    assert!(core.step().unwrap().is_empty(), "not answered early");
+    clock.set_us(1_000);
+    let second = core.step().unwrap();
+    assert_eq!(second.len(), 1);
+    assert_eq!(second[0].session, c);
+    assert_eq!(second[0].actions, vec![c as i32]);
+    assert_eq!(
+        core.backend().calls.len(),
+        2,
+        "exactly two batches, no re-answering"
+    );
+}
+
+/// Hot-reload is version-gated and lands only between batches: every
+/// response is stamped with the exact version that computed it, the
+/// version sequence is monotone, and the installed blob is never torn
+/// even under a concurrent publisher.
+#[test]
+fn hot_reload_is_version_monotone_and_untorn() {
+    const DIM: usize = 64;
+    let store = Arc::new(ParameterServer::new(vec![0.0f32; DIM]));
+    let clock = Arc::new(MockClock::new(0));
+    let backend = MockBackend::new(1, 1, 0, &[1, 2]);
+    let mut core = ServeCore::new(backend, clock.clone(), 4, 100)
+        .with_store(store.clone());
+    let s = core.open_session().unwrap();
+
+    // deterministic part: initial blob (version 1), then one publish
+    core.submit(s, vec![1.0]).unwrap();
+    clock.advance_us(100);
+    let out = core.step().unwrap();
+    assert_eq!(out[0].version, 1, "initial store blob is version 1");
+    assert_eq!(core.backend().params, vec![0.0; DIM]);
+    store.push(&[5.0; DIM]).unwrap();
+    core.submit(s, vec![1.0]).unwrap();
+    clock.advance_us(100);
+    let out = core.step().unwrap();
+    assert_eq!(out[0].version, 2, "publish picked up before the batch");
+    assert_eq!(core.backend().params, vec![5.0; DIM]);
+
+    // racing part: a publisher hammers the store while batches flush;
+    // each publish is a constant vector so a torn install is visible
+    let publisher = {
+        let store = store.clone();
+        thread::spawn(move || {
+            for i in 0..200u64 {
+                store.push(&[i as f32; DIM]).unwrap();
+            }
+        })
+    };
+    let mut last_version = 2;
+    for _ in 0..100 {
+        core.submit(s, vec![1.0]).unwrap();
+        clock.advance_us(100);
+        let out = core.step().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].version >= last_version, "version went backwards");
+        last_version = out[0].version;
+        let p = &core.backend().params;
+        assert!(
+            p.windows(2).all(|w| w[0] == w[1]),
+            "torn reload at version {last_version}"
+        );
+    }
+    publisher.join().unwrap();
+    // MockBackend::set_params additionally asserts strict version
+    // monotonicity on every install (a stale re-install would panic)
+}
+
+/// Closing a session drops its queued requests (their responses are
+/// never emitted), and late submits for it are typed errors.
+#[test]
+fn close_drops_pending_and_late_submits_are_typed() {
+    let (clock, mut core) = mock_core(&[1, 2, 4], 1_000, 8);
+    let a = core.open_session().unwrap();
+    let b = core.open_session().unwrap();
+    core.submit(a, vec![a as f32]).unwrap();
+    core.submit(b, vec![b as f32]).unwrap();
+    assert_eq!(core.close_session(a), Ok(1), "one queued request dropped");
+    assert_eq!(
+        core.submit(a, vec![0.0]),
+        Err(ServeError::UnknownSession(a))
+    );
+    clock.set_us(1_000);
+    let out = core.step().unwrap();
+    assert_eq!(out.len(), 1, "closed session must not be answered");
+    assert_eq!(out[0].session, b);
+}
+
+/// A backend failure is a typed error that consumes the batch; the
+/// core keeps serving afterwards.
+#[test]
+fn backend_failure_is_typed_and_recoverable() {
+    let (clock, mut core) = mock_core(&[1, 2], 1_000, 8);
+    let s = core.open_session().unwrap();
+    core.backend_mut().fail_next = true;
+    core.submit(s, vec![1.0]).unwrap();
+    clock.set_us(1_000);
+    assert!(matches!(core.step(), Err(ServeError::Backend(_))));
+    core.submit(s, vec![2.0]).unwrap();
+    clock.set_us(2_000);
+    assert_eq!(core.step().unwrap().len(), 1, "core serves on after a fault");
+    // malformed observations are rejected at submit time
+    assert!(matches!(
+        core.submit(s, vec![0.0, 0.0]),
+        Err(ServeError::BadRequest(_))
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// loopback TCP tier
+// ---------------------------------------------------------------------------
+
+/// A serve service over a mock policy: obs width 2, one action per
+/// request, buckets {1, 2}.
+fn mock_service(max_sessions: usize, deadline_us: u64) -> ServeService {
+    ServeService::bind(
+        "127.0.0.1",
+        || Ok(MockBackend::new(2, 1, 1, &[1, 2])),
+        Arc::new(SystemClock::new()),
+        None,
+        max_sessions,
+        deadline_us,
+    )
+    .unwrap()
+}
+
+#[test]
+fn serve_over_tcp_end_to_end() {
+    let mut svc = mock_service(4, 1_000);
+    let mut c = ServeClient::connect(svc.addr()).unwrap();
+    let s = c.open_session(RPC).unwrap();
+    let (version, actions) = c.act(s, &[7.0, 0.5], RPC).unwrap();
+    assert_eq!((version, actions), (0, vec![7]));
+    let (_, actions) = c.act(s, &[3.0, 0.5], RPC).unwrap();
+    assert_eq!(actions, vec![3]);
+    c.close_session(s, RPC).unwrap();
+    // the session is gone: acting in it is a typed error frame
+    let err = c.act(s, &[1.0, 0.0], RPC).unwrap_err().to_string();
+    assert!(err.contains("not yours"), "got: {err}");
+    svc.shutdown();
+}
+
+/// Satellite 3a: a torn (CRC-corrupt) ActRequest frame gets a typed
+/// error response and the connection survives — the stream is still
+/// frame-aligned, so the same socket serves real traffic afterwards.
+#[test]
+fn torn_frame_gets_typed_error_and_connection_survives() {
+    let mut svc = mock_service(4, 1_000);
+    let mut c = ServeClient::connect(svc.addr()).unwrap();
+    let s = c.open_session(RPC).unwrap();
+
+    let mut pay = Vec::new();
+    mava::net::wire::encode_act_request(s, &[7.0, 0.5], &mut pay);
+    let mut frame = frame_bytes(FrameKind::ActRequest, &pay);
+    frame[12] ^= 0xFF; // flip a payload byte under an intact CRC
+    c.send_raw(&frame).unwrap();
+    let kind = c.recv(RPC).unwrap();
+    assert_eq!(kind, FrameKind::Error);
+    let msg =
+        mava::net::wire::decode_error(c.last_payload()).unwrap();
+    assert!(msg.contains("crc"), "typed corruption error, got: {msg}");
+
+    // same connection, same session: still fully functional
+    let (_, actions) = c.act(s, &[9.0, 0.5], RPC).unwrap();
+    assert_eq!(actions, vec![9]);
+    svc.shutdown();
+}
+
+/// Satellite 2 (wire view): slot exhaustion surfaces as a typed error
+/// frame, never a panic or a dropped connection.
+#[test]
+fn slot_exhaustion_is_typed_over_tcp() {
+    let mut svc = mock_service(1, 1_000);
+    let mut c = ServeClient::connect(svc.addr()).unwrap();
+    let s = c.open_session(RPC).unwrap();
+    let err = c.open_session(RPC).unwrap_err().to_string();
+    assert!(err.contains("sessions in use"), "got: {err}");
+    // the first session still works after the rejected open
+    let (_, actions) = c.act(s, &[4.0, 0.5], RPC).unwrap();
+    assert_eq!(actions, vec![4]);
+    svc.shutdown();
+}
+
+/// Satellite 3b: a client disconnecting mid-batch loses only its own
+/// row — the surviving client's request in the same coalescing window
+/// completes normally.
+#[test]
+fn disconnect_mid_batch_drops_only_that_row() {
+    // long deadline so both requests share one coalescing window
+    let mut svc = mock_service(4, 300_000);
+    let mut alive = ServeClient::connect(svc.addr()).unwrap();
+    let mut doomed = ServeClient::connect(svc.addr()).unwrap();
+    let sa = alive.open_session(RPC).unwrap();
+    let sd = doomed.open_session(RPC).unwrap();
+    assert_ne!(sa, sd);
+    alive.send_act(sa, &[6.0, 0.5]).unwrap();
+    doomed.send_act(sd, &[8.0, 0.5]).unwrap();
+    drop(doomed); // EOF tears the connection down, closing sd
+    match alive.recv(RPC).unwrap() {
+        FrameKind::ActResponse => {
+            let (session, _, actions) =
+                mava::net::wire::decode_act_response(alive.last_payload())
+                    .unwrap();
+            assert_eq!((session, actions), (sa, vec![6]));
+        }
+        other => panic!("expected the surviving response, got {other:?}"),
+    }
+    svc.shutdown();
+}
+
+/// Satellite 4 regression: halt probes still fire under the serve
+/// listener — shutdown with an idle open connection (a reader parked
+/// in its poll loop) completes promptly instead of hanging on a
+/// blocking read.
+#[test]
+fn shutdown_is_prompt_with_idle_connections() {
+    let mut svc = mock_service(2, 1_000);
+    let mut c = ServeClient::connect(svc.addr()).unwrap();
+    let _s = c.open_session(RPC).unwrap();
+    let t0 = Instant::now();
+    svc.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown hung {:?} with an idle connection",
+        t0.elapsed()
+    );
+}
+
+/// The real-engine backend end to end through the core (artifact-
+/// gated, like the integration suite).
+#[test]
+fn engine_backend_serves_lowered_artifacts() {
+    if Manifest::load("artifacts").is_err() {
+        eprintln!("artifacts missing; skipping engine serve test");
+        return;
+    }
+    let mut engine = Engine::load("artifacts").unwrap();
+    let ladder =
+        BucketLadder::from_manifest(&engine.manifest, "smac3m_madqn_policy")
+            .unwrap();
+    let params = engine.read_init("smac3m_madqn_train", "params0").unwrap();
+    let backend = EngineBackend::new(
+        &mut engine,
+        SystemKind::Madqn,
+        &ladder,
+        params,
+        7,
+    )
+    .unwrap();
+    let ow = backend.obs_width();
+    let aw = backend.act_width();
+    let clock = Arc::new(MockClock::new(0));
+    let mut core = ServeCore::new(backend, clock.clone(), 4, 1_000);
+    let s = core.open_session().unwrap();
+    core.submit(s, vec![0.3; ow]).unwrap();
+    clock.set_us(1_000);
+    let out = core.step().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].session, s);
+    assert_eq!(out[0].actions.len(), aw, "one discrete action per agent");
+}
