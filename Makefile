@@ -5,7 +5,7 @@
 PYTHON ?= python
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test test-dist test-serve serve experiment check-bench-schema bench-vector bench-trainer bench-serve bench-build check fmt clippy doc
+.PHONY: artifacts build test test-dist test-serve test-fault serve experiment check-bench-schema bench-vector bench-trainer bench-serve bench-build check fmt clippy doc
 
 # lower every AOT artifact: policies (the full POLICY_BATCHES bucket
 # ladder 1..64), fused train steps, and the _dp{2,4}/_apply
@@ -24,6 +24,17 @@ test:
 # (DESIGN.md §10). A subset of `make test`; no artifacts needed.
 test-dist:
 	cargo test -q --test dist_net --test properties
+
+# the fault-tolerance tier alone (DESIGN.md §13): the chaos scenarios
+# (SIGKILLed executor restarted, trainer checkpoint resume, restart
+# budget exhaustion -> degraded run) plus the supervisor, retry/backoff
+# and heartbeat tests in the lib + property suites. A subset of `make
+# test`; hermetic (loopback TCP + self-exec'd child processes), no
+# artifacts needed.
+test-fault:
+	cargo test -q --test dist_net chaos_
+	cargo test -q --test properties prop_backoff prop_heartbeat
+	cargo test -q --lib launch::supervise:: net::retry:: net::control::
 
 # the serve suites alone: hermetic clock-driven batching/hot-reload
 # tests plus the loopback TCP fault-injection tier (DESIGN.md §12).

@@ -91,6 +91,26 @@ pub struct TrainConfig {
     /// (threads) or killed (processes).
     pub dist_timeout_s: u64,
 
+    // fault tolerance (DESIGN.md §13)
+    /// Liveness beacon period in milliseconds: every `mava node` sends
+    /// a heartbeat frame on its control connection at this cadence, and
+    /// the supervisor treats a node silent for several periods as
+    /// wedged (it is killed and handled by its restart policy).
+    /// Validated >= 1.
+    pub heartbeat_interval_ms: u64,
+    /// Restart budget per node: how many times the supervisor respawns
+    /// a crashed restartable node (trainer, executors, evaluator)
+    /// before giving up — degrading the run to the survivors
+    /// (executors / evaluator) or failing it (trainer). 0 = crashes
+    /// are never restarted.
+    pub max_restarts: u64,
+    /// Trainer checkpoint cadence in train steps: every K steps the
+    /// trainer atomically rewrites `{log_dir}/trainer.ckpt`, and a
+    /// restarted trainer resumes from it with a monotone param
+    /// version. 0 = checkpointing off (a trainer restart retrains from
+    /// scratch).
+    pub checkpoint_interval: u64,
+
     // serving (DESIGN.md §12)
     /// `mava serve` coalescing window in microseconds: a partial batch
     /// flushes once its oldest request has waited this long (a full
@@ -133,6 +153,9 @@ impl Default for TrainConfig {
             params_sync_every: 16,
             bind_host: "127.0.0.1".into(),
             dist_timeout_s: 60,
+            heartbeat_interval_ms: 250,
+            max_restarts: 2,
+            checkpoint_interval: 0,
             serve_deadline_us: 2_000,
             serve_max_sessions: 64,
         }
@@ -189,6 +212,9 @@ impl TrainConfig {
         get!(params_sync_every, get_u64);
         get!(publish_interval, get_u64);
         get!(dist_timeout_s, get_u64);
+        get!(heartbeat_interval_ms, get_u64);
+        get!(max_restarts, get_u64);
+        get!(checkpoint_interval, get_u64);
         get!(serve_deadline_us, get_u64);
         get!(serve_max_sessions, get_usize);
         if let Some(v) = raw.get_f64(sec, "lr") {
@@ -229,6 +255,11 @@ impl TrainConfig {
             self.num_devices >= 1,
             "num_devices must be >= 1 (got {})",
             self.num_devices
+        );
+        anyhow::ensure!(
+            self.heartbeat_interval_ms >= 1,
+            "heartbeat_interval_ms must be >= 1 (got {})",
+            self.heartbeat_interval_ms
         );
         anyhow::ensure!(
             self.serve_deadline_us >= 1,
@@ -305,6 +336,14 @@ impl TrainConfig {
             "params_sync_every" => self.params_sync_every = val.parse()?,
             "bind_host" => self.bind_host = val.into(),
             "dist_timeout_s" => self.dist_timeout_s = val.parse()?,
+            "heartbeat_interval_ms" => {
+                self.heartbeat_interval_ms = val.parse()?;
+                self.validate()?;
+            }
+            "max_restarts" => self.max_restarts = val.parse()?,
+            "checkpoint_interval" => {
+                self.checkpoint_interval = val.parse()?
+            }
             "serve_deadline_us" => {
                 self.serve_deadline_us = val.parse()?;
                 self.validate()?;
@@ -364,6 +403,12 @@ impl TrainConfig {
         kv("params_sync_every", self.params_sync_every.to_string());
         kv("bind_host", self.bind_host.clone());
         kv("dist_timeout_s", self.dist_timeout_s.to_string());
+        kv(
+            "heartbeat_interval_ms",
+            self.heartbeat_interval_ms.to_string(),
+        );
+        kv("max_restarts", self.max_restarts.to_string());
+        kv("checkpoint_interval", self.checkpoint_interval.to_string());
         kv("serve_deadline_us", self.serve_deadline_us.to_string());
         kv("serve_max_sessions", self.serve_max_sessions.to_string());
         a
@@ -530,6 +575,49 @@ mod tests {
         back.apply_cli(&src.to_cli_args()).unwrap();
         assert_eq!(back.serve_deadline_us, 123);
         assert_eq!(back.serve_max_sessions, 9);
+    }
+
+    #[test]
+    fn fault_keys_validated_and_roundtrip() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.heartbeat_interval_ms, 250);
+        assert_eq!(c.max_restarts, 2);
+        assert_eq!(c.checkpoint_interval, 0, "checkpointing off by default");
+        c.set("heartbeat_interval_ms", "50").unwrap();
+        c.set("max-restarts", "5").unwrap();
+        c.set("checkpoint_interval", "100").unwrap();
+        assert_eq!(
+            (c.heartbeat_interval_ms, c.max_restarts, c.checkpoint_interval),
+            (50, 5, 100)
+        );
+        // a zero heartbeat would make staleness detection divide by
+        // the interval — rejected; zero restarts / no checkpointing
+        // are legitimate choices
+        assert!(c.set("heartbeat_interval_ms", "0").is_err());
+        assert!(c.set("max_restarts", "0").is_ok());
+        assert!(c.set("checkpoint_interval", "0").is_ok());
+        let raw = RawConfig::parse(
+            "[train]\nheartbeat_interval_ms = 125\nmax_restarts = 1\n\
+             checkpoint_interval = 32\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(
+            (c.heartbeat_interval_ms, c.max_restarts, c.checkpoint_interval),
+            (125, 1, 32)
+        );
+        let raw = RawConfig::parse("[train]\nheartbeat_interval_ms = 0\n")
+            .unwrap();
+        assert!(TrainConfig::from_raw(&raw).is_err());
+        let mut src = TrainConfig::default();
+        src.heartbeat_interval_ms = 75;
+        src.max_restarts = 4;
+        src.checkpoint_interval = 64;
+        let mut back = TrainConfig::default();
+        back.apply_cli(&src.to_cli_args()).unwrap();
+        assert_eq!(back.heartbeat_interval_ms, 75);
+        assert_eq!(back.max_restarts, 4);
+        assert_eq!(back.checkpoint_interval, 64);
     }
 
     #[test]

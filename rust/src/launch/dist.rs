@@ -26,15 +26,17 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::env::wrappers::Fingerprint;
-use crate::launch::{
-    outcomes_to_result, NodeKind, NodeOutcome, StopSignal,
+use crate::launch::supervise::{
+    supervise, SupervisedSpec, Supervision, SupervisorConfig,
 };
+use crate::launch::{outcomes_to_result, NodeKind, StopSignal};
 use crate::metrics::{Counters, MovingStats};
 use crate::net::control::{ControlClient, ControlServer};
 use crate::net::param::{ParamService, RemoteParamClient};
 use crate::net::replay::{
     RemoteReplaySampler, RemoteShardClient, ReplayService,
 };
+use crate::net::retry::RetryPolicy;
 use crate::params::{ParamStore, ParameterServer};
 use crate::replay::{ItemSink, RateLimiter, Selector, Table};
 use crate::runtime::{Engine, Manifest};
@@ -216,6 +218,10 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
                 svc.addr(),
             )?;
             let _watch = ctl.watch_stop(stop.clone())?;
+            let _beat = ctl.start_heartbeat(
+                Duration::from_millis(cfg.heartbeat_interval_ms),
+                stop.clone(),
+            )?;
             while !stop.is_stopped() {
                 std::thread::sleep(crate::net::frame::POLL_INTERVAL);
             }
@@ -249,6 +255,10 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
                 svc.addr(),
             )?;
             let _watch = ctl.watch_stop(stop.clone())?;
+            let _beat = ctl.start_heartbeat(
+                Duration::from_millis(cfg.heartbeat_interval_ms),
+                stop.clone(),
+            )?;
             while !stop.is_stopped() {
                 std::thread::sleep(crate::net::frame::POLL_INTERVAL);
             }
@@ -279,6 +289,10 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
             let ctl =
                 ControlClient::connect(&opts.control, &name, &role_arg, "")?;
             let _watch = ctl.watch_stop(stop.clone())?;
+            let _beat = ctl.start_heartbeat(
+                Duration::from_millis(cfg.heartbeat_interval_ms),
+                stop.clone(),
+            )?;
             let mut node = TrainerNode {
                 spec: meta.spec,
                 cfg: cfg.clone(),
@@ -287,6 +301,7 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
                 params0: meta.params0,
                 opt0: meta.opt0,
                 source,
+                checkpoint: crate::systems::trainer_checkpoint_path(cfg),
             };
             node.run()
         }
@@ -308,6 +323,10 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
             let ctl =
                 ControlClient::connect(&opts.control, &name, &role_arg, "")?;
             let _watch = ctl.watch_stop(stop.clone())?;
+            let _beat = ctl.start_heartbeat(
+                Duration::from_millis(cfg.heartbeat_interval_ms),
+                stop.clone(),
+            )?;
             let preset = cfg.preset.clone();
             let env_factory: EnvFactory =
                 Arc::new(move |s, fp| env_for_preset(&preset, s, fp));
@@ -342,6 +361,10 @@ pub fn run_node(cfg: &TrainConfig, opts: &NodeOpts) -> Result<()> {
             let ctl =
                 ControlClient::connect(&opts.control, &name, &role_arg, "")?;
             let _watch = ctl.watch_stop(stop.clone())?;
+            let _beat = ctl.start_heartbeat(
+                Duration::from_millis(cfg.heartbeat_interval_ms),
+                stop.clone(),
+            )?;
             let preset = cfg.preset.clone();
             let env_factory: EnvFactory =
                 Arc::new(move |s, fp| env_for_preset(&preset, s, fp));
@@ -458,33 +481,17 @@ fn wait_registered(
     }
 }
 
-/// Judge one child's exit `status` into the node's typed outcome.
-fn judge(
-    role: Role,
-    status: std::process::ExitStatus,
-    lost: bool,
-) -> NodeOutcome {
-    let result = if status.success() {
-        Ok(())
-    } else if lost {
-        Err(anyhow::anyhow!(
-            "control connection lost (process exited: {status})"
-        ))
-    } else {
-        Err(anyhow::anyhow!("process exited: {status}"))
-    };
-    NodeOutcome { name: role.name(), kind: role.kind(), result }
-}
-
 /// Spawn the whole program graph into `children`: services first
 /// (parameter server, replay shards), then — once their addresses are
-/// discovered through the control channel — the workers. Any spawn or
+/// discovered through the control channel — the workers. Returns the
+/// discovered `(param_addr, replay_addrs)` so the supervisor can
+/// respawn workers against the same services. Any spawn or
 /// registration failure aborts; [`launch`] tears the children down.
 fn spawn_graph(
     cfg: &TrainConfig,
     control: &ControlServer,
     children: &mut Vec<ChildNode>,
-) -> Result<()> {
+) -> Result<(String, Vec<String>)> {
     let startup = rpc_timeout(cfg).max(Duration::from_secs(10));
     let shards = cfg.num_executors.max(1);
     children.push(spawn_role(cfg, Role::Param, control.addr(), None, &[])?);
@@ -538,96 +545,123 @@ fn spawn_graph(
             .collect::<Vec<_>>()
             .join(" | ")
     );
-    Ok(())
+    Ok((param_addr, replay_addrs))
+}
+
+/// The per-role restart policy (the DESIGN.md §13 matrix): stateful
+/// services fail-stop, the trainer restarts (resuming from its
+/// checkpoint) and fails the run once its budget is spent, executors
+/// and the evaluator restart and then degrade to the survivors.
+fn supervision_for(role: Role) -> Supervision {
+    match role {
+        Role::Param | Role::Replay(_) => Supervision::FailStop,
+        Role::Trainer => Supervision::RestartThenFailStop,
+        Role::Executor(_) | Role::Evaluator => {
+            Supervision::RestartThenDegrade
+        }
+    }
+}
+
+/// The supervisor timing knobs derived from a [`TrainConfig`]:
+/// restarts are paced 200ms doubling to 5s under the `max_restarts`
+/// budget, a node is stale after 4 missed heartbeats, and wind-down
+/// grace is `dist_timeout_s`.
+fn supervisor_config(cfg: &TrainConfig) -> SupervisorConfig {
+    SupervisorConfig {
+        restart: RetryPolicy::new(
+            200,
+            5_000,
+            cfg.max_restarts.min(u32::MAX as u64) as u32,
+        ),
+        startup: rpc_timeout(cfg).max(Duration::from_secs(10)),
+        heartbeat_stale: Duration::from_millis(
+            cfg.heartbeat_interval_ms.saturating_mul(4).max(100),
+        ),
+        wind_down: rpc_timeout(cfg),
+    }
 }
 
 /// Spawn and supervise the full program graph as separate `mava node`
-/// processes. Runs until any worker exits (a completed budget or a
-/// death — either ends the run), then broadcasts `Stop`, waits up to
-/// `cfg.dist_timeout_s` for stragglers (killing any that ignore it)
-/// and folds every child's exit into the same typed-outcome error
+/// processes under the DESIGN.md §13 restart matrix: a crashed
+/// executor / evaluator / trainer is respawned (the trainer resuming
+/// from its checkpoint) up to `cfg.max_restarts` times with backoff,
+/// a node whose heartbeats go silent is killed and treated the same,
+/// and a spent budget degrades the run to the survivors (workers) or
+/// fails it (trainer, services). A clean worker exit (completed
+/// budget) ends the run; then the driver broadcasts `Stop`, waits up
+/// to `cfg.dist_timeout_s` for stragglers (killing any that ignore
+/// it) and folds every child's exit into the same typed-outcome error
 /// reporting the in-process launcher uses: `Err` names each failed
 /// node.
 pub fn launch(cfg: &TrainConfig) -> Result<()> {
     let stop = StopSignal::new();
-    let mut control = ControlServer::bind(&cfg.bind_host, stop.clone())?;
+    // supervised binding: a lost control connection is the
+    // supervisor's signal to act on, not an immediate program stop
+    let mut control =
+        ControlServer::bind_supervised(&cfg.bind_host, stop.clone())?;
     let mut children: Vec<ChildNode> = Vec::new();
-    if let Err(e) = spawn_graph(cfg, &control, &mut children) {
-        // startup failed: tear everything down before reporting
-        for c in children.iter_mut() {
-            let _ = c.child.kill();
-            let _ = c.child.wait();
-        }
-        control.shutdown();
-        return Err(e.context("distributed launch startup"));
-    }
-
-    // --- supervise: any child exit (or a lost control connection,
-    // which trips `stop` inside the ControlServer) ends the run ---
-    let mut early: Vec<Option<std::process::ExitStatus>> =
-        children.iter().map(|_| None).collect();
-    'supervise: loop {
-        std::thread::sleep(crate::net::frame::POLL_INTERVAL);
-        for (i, c) in children.iter_mut().enumerate() {
-            if let Ok(Some(status)) = c.child.try_wait() {
-                early[i] = Some(status);
-                println!("node {} exited ({status})", c.role.name());
-                break 'supervise;
-            }
-        }
-        if stop.is_stopped() {
-            for lost in control.lost_nodes() {
-                eprintln!("node {lost} dropped its control connection");
-            }
-            break;
-        }
-    }
-
-    // --- wind down: broadcast Stop, give stragglers dist_timeout_s,
-    // kill any that ignore it ---
-    stop.stop();
-    control.stop_all();
-    let deadline = Instant::now() + rpc_timeout(cfg);
-    let mut outcomes = Vec::with_capacity(children.len());
-    for (i, mut c) in children.into_iter().enumerate() {
-        let status = match early[i] {
-            Some(status) => Some(status),
-            None => loop {
-                match c.child.try_wait() {
-                    Ok(Some(status)) => break Some(status),
-                    Ok(None) if Instant::now() < deadline => {
-                        std::thread::sleep(Duration::from_millis(10))
-                    }
-                    _ => break None,
+    let (param_addr, replay_addrs) =
+        match spawn_graph(cfg, &control, &mut children) {
+            Ok(addrs) => addrs,
+            Err(e) => {
+                // startup failed: tear everything down before reporting
+                for c in children.iter_mut() {
+                    let _ = c.child.kill();
+                    let _ = c.child.wait();
                 }
-            },
+                control.shutdown();
+                return Err(e.context("distributed launch startup"));
+            }
         };
-        let lost = control.lost(&c.role.name());
-        outcomes.push(match status {
-            Some(status) => judge(c.role, status, lost),
-            None => {
-                let _ = c.child.kill();
-                let _ = c.child.wait();
-                NodeOutcome {
-                    name: c.role.name(),
-                    kind: c.role.kind(),
-                    result: Err(anyhow::anyhow!(
-                        "node stuck: did not exit within {:?} after \
-                         shutdown was requested (process killed)",
-                        rpc_timeout(cfg)
-                    )),
-                }
+
+    let control_addr = control.addr().to_string();
+    let specs: Vec<SupervisedSpec> = children
+        .into_iter()
+        .map(|c| {
+            let role = c.role;
+            let cfg = cfg.clone();
+            let control_addr = control_addr.clone();
+            let param_addr = param_addr.clone();
+            let replay_addrs = replay_addrs.clone();
+            SupervisedSpec {
+                name: role.name(),
+                kind: role.kind(),
+                supervision: supervision_for(role),
+                child: c.child,
+                spawn: Box::new(move |_ordinal| {
+                    let (param, replay): (Option<&str>, &[String]) =
+                        match role {
+                            Role::Param | Role::Replay(_) => (None, &[]),
+                            _ => (Some(&param_addr), &replay_addrs),
+                        };
+                    spawn_role(&cfg, role, &control_addr, param, replay)
+                        .map(|c| c.child)
+                }),
             }
-        });
-    }
+        })
+        .collect();
+
+    let report =
+        supervise(&control, &stop, specs, &supervisor_config(cfg));
     control.shutdown();
-    for o in &outcomes {
+    if report.restarts > 0 {
+        println!("supervisor: {} restart(s) performed", report.restarts);
+    }
+    for o in &report.outcomes {
+        if report.degraded.contains(&o.name) {
+            println!(
+                "  {:<12} DEGRADED (restart budget spent; run \
+                 continued on the survivors)",
+                o.name
+            );
+            continue;
+        }
         match &o.result {
             Ok(()) => println!("  {:<12} ok", o.name),
             Err(e) => println!("  {:<12} FAILED: {e:#}", o.name),
         }
     }
-    outcomes_to_result(&outcomes)
+    outcomes_to_result(&report.outcomes)
 }
 
 #[cfg(test)]
@@ -660,23 +694,39 @@ mod tests {
         assert_eq!(Role::Evaluator.kind(), NodeKind::Evaluator);
     }
 
-    /// `judge` is the driver's exit-status → typed-outcome map: clean
-    /// exits are Ok even when the control connection dropped (every
-    /// exiting process drops it), unclean exits name the loss.
+    /// The restart matrix: stateful services fail-stop, the trainer
+    /// restarts-then-fails, workers restart-then-degrade.
     #[test]
-    fn judge_maps_exit_statuses() {
-        use std::process::Command;
-        let ok = Command::new("true").status().unwrap();
-        let fail = Command::new("false").status().unwrap();
-        assert!(judge(Role::Trainer, ok, true).result.is_ok());
-        let o = judge(Role::Executor(1), fail, false);
-        assert_eq!(o.name, "executor_1");
-        assert!(o.result.unwrap_err().to_string().contains("exited"));
-        let o = judge(Role::Executor(1), fail, true);
-        assert!(o
-            .result
-            .unwrap_err()
-            .to_string()
-            .contains("control connection lost"));
+    fn supervision_matrix_per_role() {
+        assert_eq!(supervision_for(Role::Param), Supervision::FailStop);
+        assert_eq!(
+            supervision_for(Role::Replay(1)),
+            Supervision::FailStop
+        );
+        assert_eq!(
+            supervision_for(Role::Trainer),
+            Supervision::RestartThenFailStop
+        );
+        assert_eq!(
+            supervision_for(Role::Executor(0)),
+            Supervision::RestartThenDegrade
+        );
+        assert_eq!(
+            supervision_for(Role::Evaluator),
+            Supervision::RestartThenDegrade
+        );
+    }
+
+    /// The supervisor knobs derive from the config: the restart budget
+    /// is `max_restarts` and staleness is 4 heartbeat intervals.
+    #[test]
+    fn supervisor_config_derivation() {
+        let mut cfg = TrainConfig::default();
+        cfg.max_restarts = 3;
+        cfg.heartbeat_interval_ms = 50;
+        let sup = supervisor_config(&cfg);
+        assert_eq!(sup.restart.max_attempts, 3);
+        assert_eq!(sup.heartbeat_stale, Duration::from_millis(200));
+        assert_eq!(sup.wind_down, rpc_timeout(&cfg));
     }
 }

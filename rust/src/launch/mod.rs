@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 pub mod dist;
+pub mod supervise;
 
 /// Cooperative shutdown flag shared by every node of a program.
 #[derive(Clone, Default)]

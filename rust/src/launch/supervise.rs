@@ -1,0 +1,511 @@
+//! Supervised restart of `mava node` child processes (DESIGN.md §13).
+//!
+//! The driver's supervision tree is flat: one supervisor (the `mava
+//! launch` process) over every node of the program graph, with a
+//! per-role [`Supervision`] policy —
+//!
+//! * [`Supervision::FailStop`] — stateful services (parameter server,
+//!   replay shards). Their in-memory state cannot be respawned, so a
+//!   death ends the run immediately, exactly like the pre-supervision
+//!   driver.
+//! * [`Supervision::RestartThenFailStop`] — the trainer. Respawned
+//!   under the restart budget (it resumes from its checkpoint, see
+//!   [`crate::systems::TrainerNode`]); a spent budget fails the run,
+//!   because nothing trains without it.
+//! * [`Supervision::RestartThenDegrade`] — executors and the
+//!   evaluator. Respawned under the budget; a spent budget *degrades*
+//!   the run to the survivors instead of failing it — losing one
+//!   actor's throughput beats losing the experiment.
+//!
+//! Failure is detected three ways: child exit (`try_wait`), a lost
+//! control connection, and heartbeat silence — a node that stops
+//! beating for longer than the staleness window while its process
+//! still runs is wedged, and is killed and handled by its policy.
+//! A *clean* child exit (status 0) is a completed budget and ends the
+//! run.
+//!
+//! The supervisor is deliberately generic over how children are
+//! (re)spawned — a [`SupervisedSpec`] carries a closure — so the
+//! fault-injection tests drive it with scripted processes instead of
+//! real `mava node` graphs.
+
+#![warn(missing_docs)]
+
+use std::process::Child;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::launch::{NodeKind, NodeOutcome, StopSignal};
+use crate::net::control::ControlServer;
+use crate::net::frame::POLL_INTERVAL;
+use crate::net::retry::{Backoff, RetryPolicy};
+
+/// What the supervisor does when a node dies uncleanly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Supervision {
+    /// Never restart: the death ends the run as a failure.
+    FailStop,
+    /// Restart under the budget; a spent budget removes the node from
+    /// the run (degraded) without failing it.
+    RestartThenDegrade,
+    /// Restart under the budget; a spent budget fails the run.
+    RestartThenFailStop,
+}
+
+/// One node under supervision: its identity, policy, the already
+/// running first incarnation, and how to spawn the next one. The
+/// closure receives the restart ordinal (1 for the first respawn) so
+/// scripted test children can change behaviour across incarnations.
+pub struct SupervisedSpec {
+    /// Node name — must match the name the node registers with on the
+    /// control channel (liveness is looked up by it).
+    pub name: String,
+    /// Node category for the typed outcome channel.
+    pub kind: NodeKind,
+    /// Restart policy.
+    pub supervision: Supervision,
+    /// The running first incarnation.
+    pub child: Child,
+    /// Spawn incarnation `n` (1-based restart ordinal).
+    pub spawn: Box<dyn FnMut(u32) -> Result<Child>>,
+}
+
+/// Supervisor timing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Restart pacing and budget: `max_attempts` is the per-node
+    /// `max_restarts`, the delays pace respawns so a crash loop cannot
+    /// spin the machine.
+    pub restart: RetryPolicy,
+    /// How long a fresh incarnation may take to register on the
+    /// control channel before it is presumed wedged at startup.
+    pub startup: Duration,
+    /// Heartbeat silence window: a registered node not seen within
+    /// this window — and still silent one window later — is killed as
+    /// wedged. Twice the window total, so a clean exit's connection
+    /// teardown is never mistaken for a wedge.
+    pub heartbeat_stale: Duration,
+    /// Grace between requesting shutdown and killing stragglers.
+    pub wind_down: Duration,
+}
+
+/// What a supervised run did, per node and overall.
+pub struct SuperviseReport {
+    /// One typed outcome per spec, in spec order. Degraded nodes
+    /// report `Ok` here (their loss was absorbed, not fatal) and are
+    /// listed in [`SuperviseReport::degraded`].
+    pub outcomes: Vec<NodeOutcome>,
+    /// Names of nodes removed from the run after spending their
+    /// restart budget.
+    pub degraded: Vec<String>,
+    /// Total successful respawns across all nodes.
+    pub restarts: u64,
+}
+
+/// Per-node supervision state.
+enum State {
+    Running {
+        child: Child,
+        /// `hello_count` before this incarnation was spawned: the
+        /// incarnation has registered once the count exceeds it.
+        hellos_at_spawn: u64,
+        spawned_at: Instant,
+        /// When heartbeat staleness was first observed (kill only if
+        /// it persists a full extra window).
+        stale_since: Option<Instant>,
+    },
+    /// Respawn scheduled.
+    Waiting { due: Instant },
+    /// Budget spent under `RestartThenDegrade`: out of the run.
+    Degraded,
+    /// Terminal outcome recorded.
+    Exited(Result<()>),
+}
+
+struct Node {
+    name: String,
+    kind: NodeKind,
+    supervision: Supervision,
+    spawn: Box<dyn FnMut(u32) -> Result<Child>>,
+    backoff: Backoff,
+    restarts: u32,
+    state: State,
+}
+
+/// What one poll of a node decided.
+enum Event {
+    None,
+    CleanExit,
+    Failure(String),
+}
+
+/// Supervise `specs` until a node exits cleanly (a completed budget),
+/// a fail-stop death occurs, nothing supervisable remains, or `stop`
+/// is tripped externally; then wind everything down and report.
+///
+/// `control` must be a supervised-mode server
+/// ([`ControlServer::bind_supervised`]): the supervisor — not the
+/// control channel — decides what a lost connection means.
+pub fn supervise(
+    control: &ControlServer,
+    stop: &StopSignal,
+    specs: Vec<SupervisedSpec>,
+    cfg: &SupervisorConfig,
+) -> SuperviseReport {
+    let mut nodes: Vec<Node> = specs
+        .into_iter()
+        .map(|s| Node {
+            name: s.name,
+            kind: s.kind,
+            supervision: s.supervision,
+            spawn: s.spawn,
+            backoff: Backoff::new(cfg.restart),
+            restarts: 0,
+            state: State::Running {
+                child: s.child,
+                hellos_at_spawn: 0,
+                spawned_at: Instant::now(),
+                stale_since: None,
+            },
+        })
+        .collect();
+    let mut total_restarts = 0u64;
+
+    let mut end_run = false;
+    while !end_run && !stop.is_stopped() {
+        std::thread::sleep(POLL_INTERVAL);
+        let mut anything_live = false;
+        for node in nodes.iter_mut() {
+            let event = match &mut node.state {
+                State::Running {
+                    child,
+                    hellos_at_spawn,
+                    spawned_at,
+                    stale_since,
+                } => {
+                    anything_live = true;
+                    match child.try_wait() {
+                        Ok(Some(status)) if status.success() => {
+                            Event::CleanExit
+                        }
+                        Ok(Some(status)) => Event::Failure(format!(
+                            "process exited: {status}"
+                        )),
+                        _ => {
+                            // process alive: check liveness through
+                            // the control channel
+                            let registered = control
+                                .hello_count(&node.name)
+                                > *hellos_at_spawn;
+                            if !registered {
+                                if spawned_at.elapsed() > cfg.startup {
+                                    let _ = child.kill();
+                                    let _ = child.wait();
+                                    Event::Failure(format!(
+                                        "did not register within {:?} \
+                                         of spawn (killed)",
+                                        cfg.startup
+                                    ))
+                                } else {
+                                    Event::None
+                                }
+                            } else if !control.seen_within(
+                                &node.name,
+                                cfg.heartbeat_stale,
+                            ) {
+                                // stale: wedged, or a connection blip.
+                                // Kill only if silence persists a full
+                                // extra window.
+                                match stale_since {
+                                    Some(t)
+                                        if t.elapsed()
+                                            >= cfg.heartbeat_stale =>
+                                    {
+                                        let _ = child.kill();
+                                        let _ = child.wait();
+                                        Event::Failure(format!(
+                                            "no heartbeat within {:?} \
+                                             (killed as wedged)",
+                                            cfg.heartbeat_stale
+                                        ))
+                                    }
+                                    Some(_) => Event::None,
+                                    None => {
+                                        *stale_since =
+                                            Some(Instant::now());
+                                        Event::None
+                                    }
+                                }
+                            } else {
+                                *stale_since = None;
+                                Event::None
+                            }
+                        }
+                    }
+                }
+                State::Waiting { due } => {
+                    anything_live = true;
+                    if Instant::now() >= *due {
+                        let hellos_before =
+                            control.hello_count(&node.name);
+                        let ordinal = node.restarts;
+                        match (node.spawn)(ordinal) {
+                            Ok(child) => {
+                                eprintln!(
+                                    "supervisor: restarted node {} \
+                                     (restart #{ordinal})",
+                                    node.name
+                                );
+                                node.state = State::Running {
+                                    child,
+                                    hellos_at_spawn: hellos_before,
+                                    spawned_at: Instant::now(),
+                                    stale_since: None,
+                                };
+                                Event::None
+                            }
+                            Err(e) => {
+                                Event::Failure(format!("respawn: {e:#}"))
+                            }
+                        }
+                    } else {
+                        Event::None
+                    }
+                }
+                State::Degraded | State::Exited(_) => Event::None,
+            };
+            match event {
+                Event::None => {}
+                Event::CleanExit => {
+                    // a completed budget: the run is over
+                    node.state = State::Exited(Ok(()));
+                    end_run = true;
+                }
+                Event::Failure(err) => {
+                    let delay = if node.supervision
+                        == Supervision::FailStop
+                    {
+                        None
+                    } else {
+                        node.backoff.next_delay()
+                    };
+                    match delay {
+                        Some(d) => {
+                            node.restarts += 1;
+                            total_restarts += 1;
+                            eprintln!(
+                                "supervisor: node {} failed ({err}); \
+                                 restart #{} in {d:?}",
+                                node.name, node.restarts
+                            );
+                            node.state =
+                                State::Waiting { due: Instant::now() + d };
+                        }
+                        None if node.supervision
+                            == Supervision::RestartThenDegrade =>
+                        {
+                            eprintln!(
+                                "supervisor: node {} failed ({err}); \
+                                 restart budget spent — degrading to \
+                                 the survivors",
+                                node.name
+                            );
+                            node.state = State::Degraded;
+                        }
+                        None => {
+                            let msg = match node.supervision {
+                                Supervision::FailStop => err,
+                                _ => format!(
+                                    "{err} (restart budget spent)"
+                                ),
+                            };
+                            node.state =
+                                State::Exited(Err(anyhow!("{msg}")));
+                            end_run = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !anything_live {
+            // every node degraded or exited: nothing left to supervise
+            break;
+        }
+    }
+
+    // --- wind down: broadcast Stop, give stragglers the grace
+    // period, kill any that ignore it ---
+    stop.stop();
+    control.stop_all();
+    let deadline = Instant::now() + cfg.wind_down;
+    let mut outcomes = Vec::with_capacity(nodes.len());
+    let mut degraded = Vec::new();
+    for node in nodes {
+        let result = match node.state {
+            State::Exited(result) => result,
+            State::Degraded => {
+                degraded.push(node.name.clone());
+                Ok(())
+            }
+            State::Waiting { .. } => {
+                // a respawn was still pending when the run ended: the
+                // node was not running at the end — degraded, not
+                // failed
+                degraded.push(node.name.clone());
+                Ok(())
+            }
+            State::Running { mut child, .. } => {
+                let status = loop {
+                    match child.try_wait() {
+                        Ok(Some(status)) => break Some(status),
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10))
+                        }
+                        _ => break None,
+                    }
+                };
+                match status {
+                    Some(s) if s.success() => Ok(()),
+                    Some(s) => Err(anyhow!("process exited: {s}")),
+                    None => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        Err(anyhow!(
+                            "node stuck: did not exit within {:?} \
+                             after shutdown was requested (process \
+                             killed)",
+                            cfg.wind_down
+                        ))
+                    }
+                }
+            }
+        };
+        outcomes.push(NodeOutcome {
+            name: node.name,
+            kind: node.kind,
+            result,
+        });
+    }
+    SuperviseReport { outcomes, degraded, restarts: total_restarts }
+}
+
+#[cfg(test)]
+#[cfg(unix)]
+mod tests {
+    use super::*;
+    use std::process::Command;
+
+    fn sh(script: &str) -> Child {
+        Command::new("sh").arg("-c").arg(script).spawn().unwrap()
+    }
+
+    fn quiet_cfg() -> SupervisorConfig {
+        SupervisorConfig {
+            restart: RetryPolicy::new(1, 4, 2),
+            // none of these children register on the control channel,
+            // so the startup deadline must stay out of the way
+            startup: Duration::from_secs(600),
+            heartbeat_stale: Duration::from_secs(600),
+            wind_down: Duration::from_secs(10),
+        }
+    }
+
+    fn server() -> (ControlServer, StopSignal) {
+        let stop = StopSignal::new();
+        let srv =
+            ControlServer::bind_supervised("127.0.0.1", stop.clone())
+                .unwrap();
+        (srv, stop)
+    }
+
+    #[test]
+    fn clean_exit_ends_the_run_ok() {
+        let (mut control, stop) = server();
+        let report = supervise(
+            &control,
+            &stop,
+            vec![SupervisedSpec {
+                name: "trainer".into(),
+                kind: NodeKind::Trainer,
+                supervision: Supervision::RestartThenFailStop,
+                child: sh("exit 0"),
+                spawn: Box::new(|_| {
+                    panic!("a clean exit must not be restarted")
+                }),
+            }],
+            &quiet_cfg(),
+        );
+        assert_eq!(report.restarts, 0);
+        assert!(report.degraded.is_empty());
+        assert!(report.outcomes[0].result.is_ok());
+        control.shutdown();
+    }
+
+    #[test]
+    fn crash_loop_spends_budget_then_degrades() {
+        let (mut control, stop) = server();
+        let report = supervise(
+            &control,
+            &stop,
+            vec![SupervisedSpec {
+                name: "executor_0".into(),
+                kind: NodeKind::Executor,
+                supervision: Supervision::RestartThenDegrade,
+                child: sh("exit 3"),
+                spawn: Box::new(|_| Ok(sh("exit 3"))),
+            }],
+            &quiet_cfg(),
+        );
+        assert_eq!(report.restarts, 2, "max_restarts respawns happened");
+        assert_eq!(report.degraded, vec!["executor_0".to_string()]);
+        // degradation is absorbed, not a run failure
+        assert!(report.outcomes[0].result.is_ok());
+        control.shutdown();
+    }
+
+    #[test]
+    fn trainer_crash_restarts_then_second_incarnation_finishes() {
+        let (mut control, stop) = server();
+        let report = supervise(
+            &control,
+            &stop,
+            vec![SupervisedSpec {
+                name: "trainer".into(),
+                kind: NodeKind::Trainer,
+                supervision: Supervision::RestartThenFailStop,
+                child: sh("exit 7"),
+                spawn: Box::new(|_| Ok(sh("exit 0"))),
+            }],
+            &quiet_cfg(),
+        );
+        assert_eq!(report.restarts, 1);
+        assert!(report.degraded.is_empty());
+        assert!(report.outcomes[0].result.is_ok());
+        control.shutdown();
+    }
+
+    #[test]
+    fn failstop_death_fails_the_run_without_restarting() {
+        let (mut control, stop) = server();
+        let report = supervise(
+            &control,
+            &stop,
+            vec![SupervisedSpec {
+                name: "param_server".into(),
+                kind: NodeKind::ParameterServer,
+                supervision: Supervision::FailStop,
+                child: sh("exit 5"),
+                spawn: Box::new(|_| {
+                    panic!("fail-stop nodes are never respawned")
+                }),
+            }],
+            &quiet_cfg(),
+        );
+        assert_eq!(report.restarts, 0);
+        let err = report.outcomes[0].result.as_ref().unwrap_err();
+        assert!(err.to_string().contains("process exited"));
+        assert!(stop.is_stopped(), "wind-down trips the stop signal");
+        control.shutdown();
+    }
+}

@@ -43,6 +43,7 @@ fn usage() -> ! {
          \x20     artifacts_dir log_dir eval_every_steps (alias\n\
          \x20     eval_interval) eval_episodes params_sync_every\n\
          \x20     serve_deadline_us serve_max_sessions\n\
+         \x20     heartbeat_interval_ms max_restarts checkpoint_interval\n\
          see `mava experiment --help` for the experiment harness\n\
          see `mava serve --help` for the inference service"
     );
@@ -132,13 +133,25 @@ fn launch_usage() {
          executor, trainer, executors, evaluator — wired over loopback\n\
          TCP (--bind_host to change). The driver discovers service\n\
          addresses through a control channel, supervises every child,\n\
-         and reports failures by node name; a node that dies trips the\n\
-         stop signal so its siblings wind down. Accepts every train\n\
-         config key, most relevantly:\n\
+         and reports failures by node name. Crashed or heartbeat-silent\n\
+         workers are restarted under a per-node budget (DESIGN.md §13):\n\
+         the trainer resumes from its checkpoint, executors and the\n\
+         evaluator degrade to the survivors once the budget is spent,\n\
+         and a dead stateful service (param server, replay shard) still\n\
+         ends the run. Accepts every train config key, most relevantly:\n\
          \x20 --num_executors N    executor processes (and replay shards)\n\
          \x20 --bind_host HOST     service bind host (default 127.0.0.1)\n\
          \x20 --dist_timeout_s S   wind-down grace before a straggler\n\
-         \x20                      is killed (default 60)"
+         \x20                      is killed (default 60)\n\
+         \x20 --heartbeat_interval_ms MS\n\
+         \x20                      node liveness beacon period; silence\n\
+         \x20                      for 4 intervals = wedged (default 250)\n\
+         \x20 --max_restarts N     per-node respawn budget (default 2,\n\
+         \x20                      0 = never restart)\n\
+         \x20 --checkpoint_interval K\n\
+         \x20                      trainer checkpoint every K train steps\n\
+         \x20                      to {{log_dir}}/trainer.ckpt, resumed on\n\
+         \x20                      trainer restart (default 0 = off)"
     );
 }
 

@@ -5,13 +5,27 @@
 //! The [`ControlServer`] lives in the `mava launch` driver process.
 //! Every spawned node connects a [`ControlClient`] at startup, sends
 //! one `Hello` frame carrying its name, role and advertised service
-//! address (empty for pure workers), then holds the connection open.
-//! That gives the driver three things from one socket: address
-//! discovery ([`ControlServer::wait_for`]), a broadcast stop channel
+//! address (empty for pure workers), then holds the connection open
+//! and beats a periodic `Heartbeat` frame on it
+//! ([`ControlClient::start_heartbeat`]). That gives the driver three
+//! things from one socket: address discovery
+//! ([`ControlServer::wait_for`]), a broadcast stop channel
 //! ([`ControlServer::stop_all`] → [`ControlClient::watch_stop`]), and
-//! *liveness* — a node that dies drops its connection, the server
-//! marks it lost and trips the driver's [`StopSignal`] so siblings
-//! wind down, exactly like a dead thread in the in-process launcher.
+//! *liveness* — a node that dies drops its connection and is marked
+//! lost at EOF, while a node that wedges (alive but silent) is caught
+//! by its heartbeat going stale ([`ControlServer::seen_within`])
+//! within a few `heartbeat_interval_ms`.
+//!
+//! What a loss *does* is the binder's choice: under [`ControlServer::bind`]
+//! (fail-fast, the pre-supervision behaviour the in-process launcher
+//! mirrors) a lost node trips the driver's [`StopSignal`] so siblings
+//! wind down; under [`ControlServer::bind_supervised`] losses are only
+//! recorded, and the supervisor in [`crate::launch::supervise`]
+//! decides between restart, degrade and fail-stop (DESIGN.md §13). A
+//! restarted node re-registers under the same name: the entry is
+//! replaced, its loss flag clears and
+//! [`ControlServer::hello_count`] increments so the supervisor can
+//! tell incarnations apart.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -38,6 +52,12 @@ pub struct NodeEntry {
     /// Whether the node's control connection dropped before shutdown
     /// was requested.
     pub lost: bool,
+    /// How many times this name has registered — a supervised restart
+    /// re-registers under the same name and increments this.
+    pub hellos: u64,
+    /// When the last frame (Hello or Heartbeat) arrived from this
+    /// node's current connection.
+    pub last_seen: Instant,
 }
 
 #[derive(Default)]
@@ -57,8 +77,25 @@ pub struct ControlServer {
 
 impl ControlServer {
     /// Bind on `host` (ephemeral port). A node connection that drops
-    /// before `stop` is tripped marks the node lost and trips `stop`.
+    /// before `stop` is tripped marks the node lost and trips `stop`
+    /// (fail-fast — every death ends the run).
     pub fn bind(host: &str, stop: StopSignal) -> Result<Self> {
+        Self::bind_with(host, stop, true)
+    }
+
+    /// Bind like [`ControlServer::bind`], but a lost node is only
+    /// *recorded*, never trips `stop`: the supervisor reads
+    /// [`ControlServer::lost`] / [`ControlServer::seen_within`] and
+    /// applies its restart policy instead.
+    pub fn bind_supervised(host: &str, stop: StopSignal) -> Result<Self> {
+        Self::bind_with(host, stop, false)
+    }
+
+    fn bind_with(
+        host: &str,
+        stop: StopSignal,
+        fail_fast: bool,
+    ) -> Result<Self> {
         let listener = std::net::TcpListener::bind((host, 0))
             .with_context(|| format!("bind control server on {host}"))?;
         let addr = listener.local_addr()?.to_string();
@@ -74,7 +111,13 @@ impl ControlServer {
             conns.clone(),
             "mava-ctl-srv",
             move |stream| {
-                serve_conn(stream, &conn_registry, &stop, &conn_halt);
+                serve_conn(
+                    stream,
+                    &conn_registry,
+                    &stop,
+                    &conn_halt,
+                    fail_fast,
+                );
             },
         );
         Ok(ControlServer {
@@ -119,6 +162,31 @@ impl ControlServer {
             .nodes
             .get(name)
             .is_some_and(|e| e.lost)
+    }
+
+    /// How many times `name` has registered (0 = never). A supervised
+    /// restart re-registers under the same name and increments this,
+    /// so a caller can wait for incarnation N+1's `Hello`.
+    pub fn hello_count(&self, name: &str) -> u64 {
+        self.registry
+            .lock()
+            .unwrap()
+            .nodes
+            .get(name)
+            .map_or(0, |e| e.hellos)
+    }
+
+    /// Whether `name`'s connection produced a frame (Hello or
+    /// Heartbeat) within the last `window`. `false` for unknown or
+    /// lost nodes — a stale-but-connected node here is *wedged*, alive
+    /// but not making progress, and the supervisor treats it as dead.
+    pub fn seen_within(&self, name: &str, window: Duration) -> bool {
+        self.registry
+            .lock()
+            .unwrap()
+            .nodes
+            .get(name)
+            .is_some_and(|e| !e.lost && e.last_seen.elapsed() <= window)
     }
 
     /// Names of nodes whose connections dropped unexpectedly.
@@ -166,52 +234,86 @@ impl Drop for ControlServer {
 }
 
 /// Serve one node's control connection: read the `Hello`, register,
-/// then watch for EOF (node death) until halted.
+/// then consume heartbeats (refreshing `last_seen`) and watch for EOF
+/// (node death) until halted.
 fn serve_conn(
     mut stream: TcpStream,
     registry: &Mutex<Registry>,
     stop: &StopSignal,
     halt: &AtomicBool,
+    fail_fast: bool,
 ) {
     let mut payload = Vec::new();
     let hello = read_frame_polled(&mut stream, &mut payload, &mut || {
         halt.load(Ordering::Acquire)
     });
-    let name = match hello {
+    let (name, incarnation) = match hello {
         Ok(Some(FrameKind::Hello)) => {
             let Ok((name, role, addr)) = wire::decode_hello(&payload) else {
                 return;
             };
             let mut reg = registry.lock().unwrap();
+            // a restarted node re-registers under its old name: drop
+            // the dead incarnation's writer so stop_all and the
+            // writers list don't grow across restarts
+            reg.writers.retain(|(n, _)| n != &name);
             if let Ok(writer) = stream.try_clone() {
                 reg.writers.push((name.clone(), writer));
             }
+            let hellos =
+                reg.nodes.get(&name).map_or(0, |e| e.hellos) + 1;
             reg.nodes.insert(
                 name.clone(),
-                NodeEntry { role, addr, lost: false },
+                NodeEntry {
+                    role,
+                    addr,
+                    lost: false,
+                    hellos,
+                    last_seen: Instant::now(),
+                },
             );
-            name
+            (name, hellos)
         }
         // anything else before a Hello is not a node: drop it
         _ => return,
     };
+    // only this connection's incarnation may touch the entry: a stale
+    // thread from a replaced connection must not mark the restarted
+    // node lost (or refresh its liveness)
+    let entry_is_mine = |e: &NodeEntry| e.hellos == incarnation;
     loop {
         match read_frame_polled(&mut stream, &mut payload, &mut || {
             halt.load(Ordering::Acquire)
         }) {
-            Ok(Some(_)) => {} // nodes don't send after Hello; ignore
+            Ok(Some(_)) => {
+                // Heartbeat (or any frame): the node is alive
+                if let Some(e) =
+                    registry.lock().unwrap().nodes.get_mut(&name)
+                {
+                    if entry_is_mine(e) {
+                        e.last_seen = Instant::now();
+                    }
+                }
+            }
             Ok(None) => return, // halted: clean driver shutdown
             Err(_) => {
                 // EOF or socket error: the node is gone. If shutdown
-                // was not already requested this is a *death* — name
-                // it and wind the program down.
+                // was not already requested this is a *death* — record
+                // it, and in fail-fast mode wind the program down (a
+                // supervised driver decides restart/degrade itself).
                 if !halt.load(Ordering::Acquire) && !stop.is_stopped() {
+                    let mut lost_current = false;
                     if let Some(e) =
                         registry.lock().unwrap().nodes.get_mut(&name)
                     {
-                        e.lost = true;
+                        if entry_is_mine(e) {
+                            e.lost = true;
+                            lost_current = true;
+                        }
                     }
-                    stop.stop();
+                    if fail_fast && lost_current {
+                        stop.stop();
+                    }
                 }
                 return;
             }
@@ -243,6 +345,38 @@ impl ControlClient {
         encode_frame(FrameKind::Hello, &pay, &mut frame);
         stream.write_all(&frame).context("send hello")?;
         Ok(ControlClient { stream })
+    }
+
+    /// Spawn a sender thread beating a `Heartbeat` frame every
+    /// `interval` until `stop` trips or the connection dies. The
+    /// driver reads the beats into the node's `last_seen`
+    /// ([`ControlServer::seen_within`]): a node that keeps its
+    /// connection open but stops beating is *wedged* and gets killed
+    /// and restarted by the supervisor instead of hanging the run.
+    pub fn start_heartbeat(
+        &self,
+        interval: Duration,
+        stop: StopSignal,
+    ) -> Result<JoinHandle<()>> {
+        let mut stream =
+            self.stream.try_clone().context("clone control")?;
+        let mut frame = Vec::new();
+        encode_frame(FrameKind::Heartbeat, &[], &mut frame);
+        Ok(std::thread::Builder::new()
+            .name("mava-ctl-beat".into())
+            .spawn(move || loop {
+                if !crate::net::retry::sleep_interruptible(
+                    interval,
+                    &mut || stop.is_stopped(),
+                ) {
+                    return;
+                }
+                if stream.write_all(&frame).is_err() {
+                    // driver gone: watch_stop trips the node's stop
+                    return;
+                }
+            })
+            .expect("spawn heartbeat sender"))
     }
 
     /// Spawn a watcher thread that trips `stop` when the driver sends
@@ -321,6 +455,82 @@ mod tests {
         assert!(stop.is_stopped(), "node death trips the stop signal");
         assert!(srv.lost("executor_0"));
         assert_eq!(srv.lost_nodes(), vec!["executor_0".to_string()]);
+    }
+
+    #[test]
+    fn heartbeats_refresh_liveness_and_silence_goes_stale() {
+        let stop = StopSignal::new();
+        let srv =
+            ControlServer::bind_supervised("127.0.0.1", stop.clone())
+                .unwrap();
+        let client =
+            ControlClient::connect(srv.addr(), "exec", "executor:0", "")
+                .unwrap();
+        srv.wait_for("exec", Duration::from_secs(5)).unwrap();
+        assert_eq!(srv.hello_count("exec"), 1);
+        // fresh Hello counts as seen
+        assert!(srv.seen_within("exec", Duration::from_secs(5)));
+
+        let hb_stop = StopSignal::new();
+        let beat = client
+            .start_heartbeat(Duration::from_millis(10), hb_stop.clone())
+            .unwrap();
+        // poll until a beat lands inside a tight window
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            std::thread::sleep(Duration::from_millis(15));
+            if srv.seen_within("exec", Duration::from_millis(60)) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "no heartbeat arrived");
+        }
+        // stop beating (node still connected = wedged): liveness decays
+        hb_stop.stop();
+        beat.join().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while srv.seen_within("exec", Duration::from_millis(60)) {
+            assert!(Instant::now() < deadline, "liveness never decayed");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // a wedged node is stale but NOT lost (its socket is open)
+        assert!(!srv.lost("exec"));
+        drop(client);
+    }
+
+    #[test]
+    fn supervised_loss_is_recorded_but_does_not_trip_stop() {
+        let stop = StopSignal::new();
+        let srv =
+            ControlServer::bind_supervised("127.0.0.1", stop.clone())
+                .unwrap();
+        let client =
+            ControlClient::connect(srv.addr(), "exec", "executor:0", "")
+                .unwrap();
+        srv.wait_for("exec", Duration::from_secs(5)).unwrap();
+        drop(client); // the node "dies"
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !srv.lost("exec") && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(srv.lost("exec"), "loss recorded");
+        assert!(
+            !stop.is_stopped(),
+            "supervised mode leaves the decision to the supervisor"
+        );
+
+        // a restarted node re-registers under the same name: the loss
+        // clears and the incarnation count increments
+        let client2 =
+            ControlClient::connect(srv.addr(), "exec", "executor:0", "")
+                .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while srv.hello_count("exec") < 2 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(srv.hello_count("exec"), 2);
+        assert!(!srv.lost("exec"), "re-registration clears the loss");
+        assert!(srv.seen_within("exec", Duration::from_secs(5)));
+        drop(client2);
     }
 
     #[test]

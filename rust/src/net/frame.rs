@@ -99,11 +99,15 @@ pub enum FrameKind {
     /// Serve: service → client the selected joint action (session id +
     /// params version + per-agent actions).
     ActResponse = 19,
+    /// Control: node → driver liveness beacon (empty payload), sent
+    /// every `heartbeat_interval_ms` so a wedged node is detected
+    /// within the interval instead of only at connection EOF.
+    Heartbeat = 20,
 }
 
 impl FrameKind {
     /// Every frame kind, for exhaustive round-trip tests.
-    pub const ALL: [FrameKind; 20] = [
+    pub const ALL: [FrameKind; 21] = [
         FrameKind::Hello,
         FrameKind::Stop,
         FrameKind::FetchParams,
@@ -124,6 +128,7 @@ impl FrameKind {
         FrameKind::SessionClosed,
         FrameKind::ActRequest,
         FrameKind::ActResponse,
+        FrameKind::Heartbeat,
     ];
 
     /// Parse a kind byte; `None` for unknown kinds.

@@ -9,8 +9,15 @@
 //!   shard, and trainer sampling via request/response with receive
 //!   buffers reused across batches;
 //! * [`control`] — the launch driver's registration + stop channel
-//!   (`Hello` / `Stop`), which also detects lost nodes by connection
-//!   EOF.
+//!   (`Hello` / `Stop`), which detects lost nodes by connection EOF
+//!   and — via periodic `Heartbeat` frames — by silence longer than
+//!   the configured `heartbeat_interval_ms` (DESIGN.md §13).
+//!
+//! Transient transport failures are retried under the deterministic
+//! capped-exponential-backoff schedule in [`retry`]: every client
+//! reconnects a bounded number of times before surfacing the error,
+//! and a success refills the budget, so a network blip never latches
+//! a node into a failed state.
 //!
 //! The `mava serve` inference protocol (session open/close +
 //! `ActRequest`/`ActResponse`, DESIGN.md §12) rides the same frame
@@ -29,4 +36,5 @@ pub mod control;
 pub mod frame;
 pub mod param;
 pub mod replay;
+pub mod retry;
 pub mod wire;

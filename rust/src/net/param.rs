@@ -23,6 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::net::frame::{
     encode_frame, read_frame_polled, FrameError, FrameKind,
 };
+use crate::net::retry::{Backoff, RetryPolicy};
 use crate::net::wire;
 use crate::params::{ParamStore, ParameterServer};
 
@@ -91,6 +92,26 @@ impl ParamService {
     pub fn bind(server: Arc<ParameterServer>, host: &str) -> Result<Self> {
         let listener = TcpListener::bind((host, 0))
             .with_context(|| format!("bind param service on {host}"))?;
+        Self::serve(server, listener)
+    }
+
+    /// Bind an exact `host:port` and serve `server` — how a restarted
+    /// service reclaims its advertised address so reconnecting clients
+    /// find it again (`SO_REUSEADDR` makes the rebind immediate on
+    /// Unix).
+    pub fn bind_at(
+        server: Arc<ParameterServer>,
+        addr: &str,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind param service at {addr}"))?;
+        Self::serve(server, listener)
+    }
+
+    fn serve(
+        server: Arc<ParameterServer>,
+        listener: TcpListener,
+    ) -> Result<Self> {
         let addr = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let halt = Arc::new(AtomicBool::new(false));
@@ -207,29 +228,52 @@ fn serve_conn(
 /// [`ParamService`]. One connection, serialized behind a mutex (each
 /// node holds its own client, so there is no contention to shard);
 /// receive buffers are reused across calls.
+///
+/// A transport failure mid-call (send error, reply timeout, torn
+/// frame) drops the connection and retries under the client's
+/// [`RetryPolicy`]: reconnect, resend, capped-exponential sleeps in
+/// between. The protocol is stateless request/response, so a resend
+/// after a lost reply is safe (a duplicated publish re-pushes the
+/// identical blob). Only a spent retry budget surfaces as an error —
+/// and a later success refills the budget, so a transient outage
+/// never latches the client dead.
 pub struct RemoteParamClient {
     conn: Mutex<ClientConn>,
     timeout: Duration,
 }
 
 struct ClientConn {
-    stream: TcpStream,
+    addr: String,
+    stream: Option<TcpStream>,
+    backoff: Backoff,
     payload: Vec<u8>,
     out: Vec<u8>,
     pay: Vec<u8>,
 }
 
 impl RemoteParamClient {
-    /// Connect to a [`ParamService`] at `addr`. `timeout` bounds every
+    /// Connect to a [`ParamService`] at `addr` under
+    /// [`RetryPolicy::net_default`]. `timeout` bounds every
     /// request/response round trip.
     pub fn connect(addr: &str, timeout: Duration) -> Result<Self> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connect param server {addr}"))?;
-        stream.set_read_timeout(Some(POLL))?;
-        stream.set_nodelay(true)?;
+        Self::connect_with(addr, timeout, RetryPolicy::net_default())
+    }
+
+    /// [`RemoteParamClient::connect`] with an explicit reconnect
+    /// policy. The *initial* connect is still eager and fail-fast —
+    /// a node that cannot reach its services at startup should die
+    /// (and be restarted by the supervisor) rather than spin.
+    pub fn connect_with(
+        addr: &str,
+        timeout: Duration,
+        policy: RetryPolicy,
+    ) -> Result<Self> {
+        let stream = Self::dial(addr)?;
         Ok(RemoteParamClient {
             conn: Mutex::new(ClientConn {
-                stream,
+                addr: addr.to_string(),
+                stream: Some(stream),
+                backoff: Backoff::new(policy),
                 payload: Vec::new(),
                 out: Vec::new(),
                 pay: Vec::new(),
@@ -238,25 +282,66 @@ impl RemoteParamClient {
         })
     }
 
-    /// One request/response round trip; returns the reply kind, with
-    /// the payload left in `conn.payload`.
+    fn dial(addr: &str) -> Result<TcpStream> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect param server {addr}"))?;
+        stream.set_read_timeout(Some(POLL))?;
+        stream.set_nodelay(true)?;
+        Ok(stream)
+    }
+
+    /// One request/response round trip with bounded
+    /// reconnect-with-backoff; returns the reply kind, with the
+    /// payload left in `conn.payload`.
     fn rpc(
         conn: &mut ClientConn,
         kind: FrameKind,
         timeout: Duration,
     ) -> Result<FrameKind> {
+        loop {
+            match Self::rpc_once(conn, kind, timeout) {
+                Ok(reply) => {
+                    conn.backoff.reset();
+                    return Ok(reply);
+                }
+                Err(e) => {
+                    // drop the (possibly desynced) connection; the
+                    // next attempt redials and resends
+                    conn.stream = None;
+                    let Some(delay) = conn.backoff.next_delay() else {
+                        return Err(e.context(format!(
+                            "param server {}: reconnect budget \
+                             exhausted",
+                            conn.addr
+                        )));
+                    };
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+    }
+
+    /// One attempt at a round trip on the current (or a freshly
+    /// dialed) connection.
+    fn rpc_once(
+        conn: &mut ClientConn,
+        kind: FrameKind,
+        timeout: Duration,
+    ) -> Result<FrameKind> {
+        if conn.stream.is_none() {
+            conn.stream = Some(Self::dial(&conn.addr)?);
+        }
+        let stream = conn.stream.as_mut().expect("dialed above");
         let mut out = std::mem::take(&mut conn.out);
         encode_frame(kind, &conn.pay, &mut out);
-        let sent = conn.stream.write_all(&out);
+        let sent = stream.write_all(&out);
         out.clear();
         conn.out = out;
         sent.context("param request send")?;
         let deadline = Instant::now() + timeout;
-        match read_frame_polled(
-            &mut conn.stream,
-            &mut conn.payload,
-            &mut || Instant::now() >= deadline,
-        ) {
+        match read_frame_polled(stream, &mut conn.payload, &mut || {
+            Instant::now() >= deadline
+        }) {
             Ok(Some(reply)) => Ok(reply),
             Ok(None) => bail!(
                 "param server reply timed out after {timeout:?}"
@@ -360,6 +445,29 @@ mod tests {
         assert_eq!(c.sync(0, &mut buf).unwrap(), Some(2));
         assert_eq!(buf, vec![5.0]);
         svc.shutdown();
+    }
+
+    #[test]
+    fn dead_server_spends_reconnect_budget_then_errors() {
+        let server = Arc::new(ParameterServer::new(Vec::new()));
+        let mut svc =
+            ParamService::bind(server.clone(), "127.0.0.1").unwrap();
+        let c = RemoteParamClient::connect_with(
+            svc.addr(),
+            Duration::from_secs(5),
+            RetryPolicy::new(1, 2, 2),
+        )
+        .unwrap();
+        ParamStore::push(&c, &[1.0]).unwrap();
+        svc.shutdown();
+        drop(svc);
+        // every reconnect refuses: the bounded budget (2 attempts at
+        // 1-2ms) spends quickly and surfaces a typed error
+        let err = ParamStore::push(&c, &[2.0]).unwrap_err();
+        assert!(
+            err.to_string().contains("reconnect budget exhausted"),
+            "typed exhaustion: {err:#}"
+        );
     }
 
     #[test]

@@ -8,12 +8,18 @@
 //! prefetches from, round-robin over every shard service — the remote
 //! mirror of [`crate::replay::ShardedTable`]'s skip-ahead sampling).
 //! Both reuse their receive/send buffers across calls, and both
-//! degrade on a lost connection instead of panicking: a dead sink
-//! reports through [`ItemSink::check`], a dead sampler shard is
-//! dropped from the rotation and sampling continues on the survivors.
+//! survive transport failures under the bounded
+//! [`crate::net::retry::RetryPolicy`] (DESIGN.md §13): the sink
+//! reconnects and resends inside the insert call (only a spent budget
+//! marks it dead, and a later successful reconnect *clears* that
+//! state), while the sampler parks a disconnected shard and re-probes
+//! it on a backoff schedule — a restarted shard service rejoins the
+//! rotation, a shard that answers `SourceClosed` (or exhausts its
+//! probe budget) is gone for good, and only when every shard is gone
+//! does sampling end.
 
 use std::io::Write;
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -23,6 +29,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::net::frame::{encode_frame, read_frame_polled, FrameKind};
 use crate::net::param::{frame_err, spawn_accept_loop, POLL};
+use crate::net::retry::{Backoff, Pacer, RetryPolicy};
 use crate::net::wire;
 use crate::replay::{Item, ItemSink, ItemSource, Table};
 
@@ -41,8 +48,22 @@ pub struct ReplayService {
 impl ReplayService {
     /// Bind on `host` (ephemeral port) and serve `table`.
     pub fn bind(table: Arc<Table>, host: &str) -> Result<Self> {
-        let listener = std::net::TcpListener::bind((host, 0))
+        let listener = TcpListener::bind((host, 0))
             .with_context(|| format!("bind replay service on {host}"))?;
+        Self::serve(table, listener)
+    }
+
+    /// Bind an exact `host:port` and serve `table` — how a restarted
+    /// shard process reclaims its advertised address so parked clients
+    /// re-probing it can rejoin (`SO_REUSEADDR` makes the rebind
+    /// immediate on Unix).
+    pub fn bind_at(table: Arc<Table>, addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind replay service at {addr}"))?;
+        Self::serve(table, listener)
+    }
+
+    fn serve(table: Arc<Table>, listener: TcpListener) -> Result<Self> {
         let addr = listener.local_addr()?.to_string();
         listener.set_nonblocking(true)?;
         let halt = Arc::new(AtomicBool::new(false));
@@ -171,16 +192,22 @@ fn serve_conn(mut stream: TcpStream, table: &Table, halt: &AtomicBool) {
 /// Inserts block until the shard acknowledges (mirroring the
 /// in-process rate-limiter blocking); the serialized item is always
 /// handed back for buffer recycling, so the adders' free lists work
-/// unchanged. A connection failure marks the sink dead: subsequent
-/// inserts are rejected and [`ItemSink::check`] reports the stored
-/// error so the executor node fails by name.
+/// unchanged. A transport failure reconnects and resends under the
+/// client's [`RetryPolicy`] (a duplicated insert after a lost ack is
+/// harmless replay data); only a spent budget marks the sink dead, at
+/// which point [`ItemSink::check`] reports the stored error so the
+/// executor node fails by name — and a later *successful* reconnect
+/// (the shard came back) clears the dead state rather than poisoning
+/// the executor forever.
 pub struct RemoteShardClient {
     conn: Mutex<ShardConn>,
     dead: AtomicBool,
 }
 
 struct ShardConn {
-    stream: TcpStream,
+    addr: String,
+    stream: Option<TcpStream>,
+    backoff: Backoff,
     payload: Vec<u8>,
     out: Vec<u8>,
     pay: Vec<u8>,
@@ -188,15 +215,22 @@ struct ShardConn {
 }
 
 impl RemoteShardClient {
-    /// Connect to a [`ReplayService`] at `addr`.
+    /// Connect to a [`ReplayService`] at `addr` under
+    /// [`RetryPolicy::net_default`].
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connect replay shard {addr}"))?;
-        stream.set_read_timeout(Some(POLL))?;
-        stream.set_nodelay(true)?;
+        Self::connect_with(addr, RetryPolicy::net_default())
+    }
+
+    /// [`RemoteShardClient::connect`] with an explicit reconnect
+    /// policy. The initial connect is eager and fail-fast (a node that
+    /// cannot reach its shard at startup should die and be restarted).
+    pub fn connect_with(addr: &str, policy: RetryPolicy) -> Result<Self> {
+        let stream = Self::dial(addr)?;
         Ok(RemoteShardClient {
             conn: Mutex::new(ShardConn {
-                stream,
+                addr: addr.to_string(),
+                stream: Some(stream),
+                backoff: Backoff::new(policy),
                 payload: Vec::new(),
                 out: Vec::new(),
                 pay: Vec::new(),
@@ -206,9 +240,47 @@ impl RemoteShardClient {
         })
     }
 
-    fn fail(&self, conn: &mut ShardConn, msg: String) {
-        conn.error.get_or_insert(msg);
-        self.dead.store(true, Ordering::Release);
+    fn dial(addr: &str) -> Result<TcpStream> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect replay shard {addr}"))?;
+        stream.set_read_timeout(Some(POLL))?;
+        stream.set_nodelay(true)?;
+        Ok(stream)
+    }
+
+    /// One insert attempt on the current (or freshly dialed)
+    /// connection. The request bytes are already in `conn.pay`.
+    fn insert_once(conn: &mut ShardConn) -> Result<bool> {
+        if conn.stream.is_none() {
+            conn.stream = Some(Self::dial(&conn.addr)?);
+        }
+        let stream = conn.stream.as_mut().expect("dialed above");
+        let mut out = std::mem::take(&mut conn.out);
+        encode_frame(FrameKind::InsertItem, &conn.pay, &mut out);
+        let sent = stream.write_all(&out);
+        out.clear();
+        conn.out = out;
+        sent.context("replay insert send")?;
+        // Wait for the ack without a deadline: the shard's rate
+        // limiter may legitimately hold the insert (the in-process
+        // adder blocks identically); a closed table acks
+        // accepted=false, a dead service surfaces as an IO error.
+        let mut payload = std::mem::take(&mut conn.payload);
+        let got =
+            read_frame_polled(stream, &mut payload, &mut || false);
+        conn.payload = payload;
+        match got {
+            Ok(Some(FrameKind::InsertAck)) => Ok(wire::decode_u64(
+                &conn.payload,
+            )
+            .map(|v| v != 0)
+            .unwrap_or(false)),
+            Ok(Some(other)) => {
+                bail!("unexpected insert reply {other:?}")
+            }
+            Ok(None) => unreachable!("halt closure is constant false"),
+            Err(e) => Err(frame_err(e, "replay insert")),
+        }
     }
 }
 
@@ -218,50 +290,33 @@ impl ItemSink for RemoteShardClient {
         item: Item,
         priority: f64,
     ) -> (bool, Option<Item>) {
-        if self.dead.load(Ordering::Acquire) {
-            return (false, Some(item));
-        }
         let mut conn = self.conn.lock().unwrap();
         conn.pay.clear();
         wire::encode_insert(&item, priority, &mut conn.pay);
-        let mut out = std::mem::take(&mut conn.out);
-        encode_frame(FrameKind::InsertItem, &conn.pay, &mut out);
-        let sent = conn.stream.write_all(&out);
-        out.clear();
-        conn.out = out;
-        if let Err(e) = sent {
-            self.fail(&mut conn, format!("replay insert send: {e}"));
-            return (false, Some(item));
-        }
-        // Wait for the ack without a deadline: the shard's rate
-        // limiter may legitimately hold the insert (the in-process
-        // adder blocks identically); a closed table acks
-        // accepted=false, a dead service surfaces as an IO error.
-        let mut payload = std::mem::take(&mut conn.payload);
-        let got = read_frame_polled(
-            &mut conn.stream,
-            &mut payload,
-            &mut || false,
-        );
-        conn.payload = payload;
-        match got {
-            Ok(Some(FrameKind::InsertAck)) => {
-                let accepted = wire::decode_u64(&conn.payload)
-                    .map(|v| v != 0)
-                    .unwrap_or(false);
-                (accepted, Some(item))
-            }
-            Ok(Some(other)) => {
-                self.fail(
-                    &mut conn,
-                    format!("unexpected insert reply {other:?}"),
-                );
-                (false, Some(item))
-            }
-            Ok(None) => unreachable!("halt closure is constant false"),
-            Err(e) => {
-                self.fail(&mut conn, format!("replay insert: {e}"));
-                (false, Some(item))
+        loop {
+            match Self::insert_once(&mut conn) {
+                Ok(accepted) => {
+                    // success clears the failure streak AND the dead
+                    // latch: a shard that came back un-poisons the
+                    // executor
+                    conn.backoff.reset();
+                    conn.error = None;
+                    self.dead.store(false, Ordering::Release);
+                    return (accepted, Some(item));
+                }
+                Err(e) => {
+                    // drop the (possibly desynced) connection; retry
+                    // redials and resends until the budget is spent
+                    conn.stream = None;
+                    match conn.backoff.next_delay() {
+                        Some(delay) => std::thread::sleep(delay),
+                        None => {
+                            conn.error.get_or_insert(format!("{e:#}"));
+                            self.dead.store(true, Ordering::Release);
+                            return (false, Some(item));
+                        }
+                    }
+                }
             }
         }
     }
@@ -281,14 +336,44 @@ impl ItemSink for RemoteShardClient {
 /// An [`ItemSource`] drawing batches from several remote shard
 /// services round-robin — the trainer-side end of the replay wire
 /// protocol, mirroring [`crate::replay::ShardedTable::sample`]'s
-/// skip-ahead rotation. A shard that answers `SourceClosed`, times
-/// out or drops its connection is removed from the rotation
-/// (degrading to the survivors); only when every shard is gone does
-/// [`ItemSource::sample_batch`] return `None`.
+/// skip-ahead rotation.
+///
+/// Shard loss is two-tier. A shard that answers `SourceClosed` shut
+/// down deliberately and leaves the rotation permanently. A shard
+/// that times out or drops its connection is *parked* instead: the
+/// rotation keeps serving from the survivors while a [`Pacer`]
+/// re-probes the parked address on the backoff schedule, so a
+/// restarted shard rejoins the rotation without the trainer
+/// restarting. Only when the probe budget is spent is the shard
+/// evicted for good; [`ItemSource::sample_batch`] returns `None` only
+/// once every shard is gone.
 pub struct RemoteReplaySampler {
-    shards: Vec<Mutex<Option<SamplerConn>>>,
+    shards: Vec<Mutex<Slot>>,
     cursor: AtomicUsize,
     timeout: Duration,
+    policy: RetryPolicy,
+}
+
+/// One shard's place in the rotation.
+enum Slot {
+    /// Connected and serving.
+    Live(SamplerConn),
+    /// Transport lost: parked, re-probed when the pacer says so.
+    Down { addr: String, pacer: Pacer },
+    /// Deliberately closed, or the probe budget is spent.
+    Gone,
+}
+
+/// Outcome of one sample request against one live shard.
+enum ShardPoll {
+    /// A batch of items.
+    Batch(Vec<Item>),
+    /// Healthy but not admissible yet (rate limiter).
+    NotReady,
+    /// The shard's table closed: leave the rotation permanently.
+    Closed,
+    /// Transport failure (timeout, disconnect, bad frame): park.
+    Lost(anyhow::Error),
 }
 
 struct SamplerConn {
@@ -300,49 +385,65 @@ struct SamplerConn {
 }
 
 impl RemoteReplaySampler {
-    /// Connect to every shard service in `addrs`. `timeout` bounds
-    /// each sample round trip (a healthy shard answers `SampleRetry`
-    /// immediately when not admissible, so replies are always fast —
-    /// a timeout means the shard is wedged and it is dropped).
+    /// Connect to every shard service in `addrs` under
+    /// [`RetryPolicy::net_default`]. `timeout` bounds each sample
+    /// round trip (a healthy shard answers `SampleRetry` immediately
+    /// when not admissible, so replies are always fast — a timeout
+    /// means the shard is wedged and it is parked).
     pub fn connect(addrs: &[String], timeout: Duration) -> Result<Self> {
+        Self::connect_with(addrs, timeout, RetryPolicy::net_default())
+    }
+
+    /// [`RemoteReplaySampler::connect`] with an explicit re-probe
+    /// policy for parked shards. The initial connects are eager and
+    /// fail-fast (a trainer that cannot reach replay at startup should
+    /// die and be restarted).
+    pub fn connect_with(
+        addrs: &[String],
+        timeout: Duration,
+        policy: RetryPolicy,
+    ) -> Result<Self> {
         anyhow::ensure!(!addrs.is_empty(), "no replay shard addresses");
         let mut shards = Vec::with_capacity(addrs.len());
         for addr in addrs {
-            let stream = TcpStream::connect(addr.as_str())
-                .with_context(|| format!("connect replay shard {addr}"))?;
-            stream.set_read_timeout(Some(POLL))?;
-            stream.set_nodelay(true)?;
-            shards.push(Mutex::new(Some(SamplerConn {
-                addr: addr.clone(),
-                stream,
-                payload: Vec::new(),
-                out: Vec::new(),
-                pay: Vec::new(),
-            })));
+            shards.push(Mutex::new(Slot::Live(Self::dial(addr)?)));
         }
         Ok(RemoteReplaySampler {
             shards,
             cursor: AtomicUsize::new(0),
             timeout,
+            policy,
         })
     }
 
-    /// Number of shards still in the rotation.
+    fn dial(addr: &str) -> Result<SamplerConn> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect replay shard {addr}"))?;
+        stream.set_read_timeout(Some(POLL))?;
+        stream.set_nodelay(true)?;
+        Ok(SamplerConn {
+            addr: addr.to_string(),
+            stream,
+            payload: Vec::new(),
+            out: Vec::new(),
+            pay: Vec::new(),
+        })
+    }
+
+    /// Number of shards currently connected and serving.
     pub fn live_shards(&self) -> usize {
         self.shards
             .iter()
-            .filter(|s| s.lock().unwrap().is_some())
+            .filter(|s| matches!(*s.lock().unwrap(), Slot::Live(_)))
             .count()
     }
 
-    /// One sample request against one shard. `Ok(Some)` is a batch,
-    /// `Ok(None)` means "retry later" (rate limiter), `Err` means the
-    /// shard is gone (closed, wedged or disconnected).
+    /// One sample request against one shard.
     fn try_shard(
         conn: &mut SamplerConn,
         n: usize,
         timeout: Duration,
-    ) -> Result<Option<Vec<Item>>> {
+    ) -> ShardPoll {
         conn.pay.clear();
         wire::encode_u64(n as u64, &mut conn.pay);
         let mut out = std::mem::take(&mut conn.out);
@@ -350,7 +451,11 @@ impl RemoteReplaySampler {
         let sent = conn.stream.write_all(&out);
         out.clear();
         conn.out = out;
-        sent.with_context(|| format!("sample request to {}", conn.addr))?;
+        if let Err(e) = sent {
+            return ShardPoll::Lost(anyhow::Error::new(e).context(
+                format!("sample request to {}", conn.addr),
+            ));
+        }
         let deadline = Instant::now() + timeout;
         let mut payload = std::mem::take(&mut conn.payload);
         let got = read_frame_polled(
@@ -361,22 +466,24 @@ impl RemoteReplaySampler {
         conn.payload = payload;
         match got {
             Ok(Some(FrameKind::SampleBatch)) => {
-                Ok(Some(wire::decode_batch(&conn.payload)?))
+                match wire::decode_batch(&conn.payload) {
+                    Ok(items) => ShardPoll::Batch(items),
+                    Err(e) => ShardPoll::Lost(e),
+                }
             }
-            Ok(Some(FrameKind::SampleRetry)) => Ok(None),
-            Ok(Some(FrameKind::SourceClosed)) => {
-                bail!("shard {} closed", conn.addr)
-            }
-            Ok(Some(other)) => {
-                bail!("unexpected sample reply {other:?} from {}", conn.addr)
-            }
-            Ok(None) => bail!(
+            Ok(Some(FrameKind::SampleRetry)) => ShardPoll::NotReady,
+            Ok(Some(FrameKind::SourceClosed)) => ShardPoll::Closed,
+            Ok(Some(other)) => ShardPoll::Lost(anyhow::anyhow!(
+                "unexpected sample reply {other:?} from {}",
+                conn.addr
+            )),
+            Ok(None) => ShardPoll::Lost(anyhow::anyhow!(
                 "shard {} sample timed out after {timeout:?}",
                 conn.addr
+            )),
+            Err(e) => ShardPoll::Lost(
+                frame_err(e, "sample reply").context(conn.addr.clone()),
             ),
-            Err(e) => {
-                Err(frame_err(e, "sample reply").context(conn.addr.clone()))
-            }
         }
     }
 }
@@ -386,28 +493,51 @@ impl ItemSource for RemoteReplaySampler {
         let k = self.shards.len();
         loop {
             let start = self.cursor.load(Ordering::Relaxed);
-            let mut live = 0usize;
+            let mut waiting = 0usize;
             for off in 0..k {
                 let idx = (start + off) % k;
                 let mut slot = self.shards[idx].lock().unwrap();
-                let Some(conn) = slot.as_mut() else {
-                    continue;
-                };
-                match Self::try_shard(conn, n, self.timeout) {
-                    Ok(Some(items)) => {
-                        self.cursor.store((idx + 1) % k, Ordering::Relaxed);
-                        return Some(items);
-                    }
-                    Ok(None) => live += 1,
-                    Err(_) => {
-                        // closed / wedged / disconnected: drop the
-                        // shard from the rotation, keep the survivors
-                        *slot = None;
+                // parked shards: evict on spent budget, redial when due
+                if let Slot::Down { addr, pacer } = &mut *slot {
+                    if pacer.exhausted() {
+                        *slot = Slot::Gone;
+                    } else if pacer.due() {
+                        match Self::dial(addr) {
+                            Ok(conn) => *slot = Slot::Live(conn),
+                            Err(_) => pacer.note_failure(),
+                        }
                     }
                 }
+                match &mut *slot {
+                    Slot::Live(conn) => {
+                        match Self::try_shard(conn, n, self.timeout) {
+                            ShardPoll::Batch(items) => {
+                                self.cursor.store(
+                                    (idx + 1) % k,
+                                    Ordering::Relaxed,
+                                );
+                                return Some(items);
+                            }
+                            ShardPoll::NotReady => waiting += 1,
+                            ShardPoll::Closed => *slot = Slot::Gone,
+                            ShardPoll::Lost(_) => {
+                                // park: the restart supervisor may
+                                // bring the shard back at this address
+                                let addr = conn.addr.clone();
+                                let mut pacer =
+                                    Pacer::system(self.policy);
+                                pacer.note_failure();
+                                *slot = Slot::Down { addr, pacer };
+                                waiting += 1;
+                            }
+                        }
+                    }
+                    Slot::Down { .. } => waiting += 1,
+                    Slot::Gone => {}
+                }
             }
-            if live == 0 {
-                // every shard gone: the source has ended
+            if waiting == 0 {
+                // every shard gone for good: the source has ended
                 return None;
             }
             std::thread::sleep(Duration::from_millis(2));
@@ -476,12 +606,18 @@ mod tests {
         let table = Arc::new(Table::uniform(16, 1, 0));
         let mut svc = ReplayService::bind(table.clone(), "127.0.0.1")
             .unwrap();
-        let sink = RemoteShardClient::connect(svc.addr()).unwrap();
+        // tiny reconnect budget so exhaustion is fast
+        let sink = RemoteShardClient::connect_with(
+            svc.addr(),
+            RetryPolicy::new(1, 2, 2),
+        )
+        .unwrap();
         assert!(sink.insert_item_reuse(item(1.0), 1.0).0);
         table.close();
         svc.shutdown();
         drop(svc);
-        // the service is gone: the next insert must fail and latch
+        // the service is gone: the insert spends its reconnect budget,
+        // then fails and latches
         let (accepted, recycled) = sink.insert_item_reuse(item(2.0), 1.0);
         assert!(!accepted);
         assert!(recycled.is_some());
@@ -490,5 +626,92 @@ mod tests {
             err.to_string().contains("connection lost"),
             "typed sink failure: {err}"
         );
+    }
+
+    #[test]
+    fn sink_reconnects_to_restarted_shard_and_unlatches() {
+        let table = Arc::new(Table::uniform(16, 1, 0));
+        let mut svc = ReplayService::bind(table.clone(), "127.0.0.1")
+            .unwrap();
+        let addr = svc.addr().to_string();
+        let sink = RemoteShardClient::connect_with(
+            &addr,
+            RetryPolicy::new(1, 2, 2),
+        )
+        .unwrap();
+        assert!(sink.insert_item_reuse(item(1.0), 1.0).0);
+
+        // kill the service (table stays open — a crash, not a close)
+        svc.shutdown();
+        drop(svc);
+        let (accepted, _) = sink.insert_item_reuse(item(2.0), 1.0);
+        assert!(!accepted, "budget spent against a dead service");
+        assert!(sink.check().is_err(), "failure latched");
+
+        // restart at the same address: the next insert redials,
+        // succeeds, and clears the latch
+        let mut svc2 =
+            ReplayService::bind_at(table.clone(), &addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let (accepted, _) = sink.insert_item_reuse(item(3.0), 1.0);
+            if accepted {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "sink never recovered after shard restart"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(sink.check().is_ok(), "success un-latches the sink");
+        table.close();
+        svc2.shutdown();
+    }
+
+    #[test]
+    fn sampler_reprobes_parked_shard_after_restart() {
+        let table = Arc::new(Table::uniform(64, 2, 0));
+        let mut svc = ReplayService::bind(table.clone(), "127.0.0.1")
+            .unwrap();
+        let addr = svc.addr().to_string();
+        let sink = RemoteShardClient::connect(&addr).unwrap();
+        for i in 0..4 {
+            assert!(sink.insert_item_reuse(item(i as f32), 1.0).0);
+        }
+        // generous probe budget: the shard must still be parked (not
+        // evicted) while it is down
+        let sampler = RemoteReplaySampler::connect_with(
+            &[addr.clone()],
+            Duration::from_secs(2),
+            RetryPolicy::new(5, 50, 100),
+        )
+        .unwrap();
+        assert_eq!(sampler.sample_batch(4).expect("batch").len(), 4);
+        assert_eq!(sampler.live_shards(), 1);
+
+        // crash the shard service; the sampler parks it
+        svc.shutdown();
+        drop(svc);
+        // restart at the same address in the background while the
+        // sampler is already blocked inside sample_batch re-probing
+        let t_addr = addr.clone();
+        let t_table = table.clone();
+        let restarter = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            ReplayService::bind_at(t_table, &t_addr).unwrap()
+        });
+        let batch = sampler
+            .sample_batch(4)
+            .expect("sampler rejoined the restarted shard");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(sampler.live_shards(), 1);
+        let mut svc2 = restarter.join().unwrap();
+        table.close();
+        assert!(
+            sampler.sample_batch(1).is_none(),
+            "deliberate close still ends the source"
+        );
+        svc2.shutdown();
     }
 }

@@ -1,0 +1,275 @@
+//! Deterministic retry with capped exponential backoff — the policy
+//! every wire client reconnects under (DESIGN.md §13).
+//!
+//! Three layers, pure to impure:
+//!
+//! * [`RetryPolicy`] — the schedule itself: `delay(attempt)` is a pure
+//!   function (base doubling per attempt, capped), so the property
+//!   tests pin it without touching time;
+//! * [`Backoff`] — a consumable iterator over one policy's delays,
+//!   used by the blocking clients ([`crate::net::param::RemoteParamClient`],
+//!   [`crate::net::replay::RemoteShardClient`]) that sleep between
+//!   reconnect attempts inside a call;
+//! * [`Pacer`] — a clock-paced probe schedule for non-blocking callers
+//!   ([`crate::net::replay::RemoteReplaySampler`] re-probing evicted
+//!   shards, the supervisor pacing node restarts). Time is read
+//!   through the injected [`Clock`] — the same seam the serve batcher
+//!   uses — so pacing decisions test hermetically under a
+//!   [`crate::serve::MockClock`].
+
+#![warn(missing_docs)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serve::{Clock, SystemClock};
+
+/// A deterministic capped-exponential-backoff schedule: attempt `a`
+/// waits `min(base * 2^a, cap)`, and a caller gives up after
+/// `max_attempts` consecutive failures. No jitter — the schedule is a
+/// pure function of the attempt index, which keeps fault-injection
+/// tests reproducible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Upper bound every delay saturates at.
+    pub cap: Duration,
+    /// Consecutive failures tolerated before the caller reports the
+    /// stored error instead of retrying (0 = never retry).
+    pub max_attempts: u32,
+}
+
+impl RetryPolicy {
+    /// A policy from millisecond figures.
+    pub const fn new(
+        base_ms: u64,
+        cap_ms: u64,
+        max_attempts: u32,
+    ) -> RetryPolicy {
+        RetryPolicy {
+            base: Duration::from_millis(base_ms),
+            cap: Duration::from_millis(cap_ms),
+            max_attempts,
+        }
+    }
+
+    /// The default schedule for wire clients: 50ms doubling to a 2s
+    /// cap over 6 attempts (~4s of total waiting), well inside the
+    /// default `dist_timeout_s`.
+    pub const fn net_default() -> RetryPolicy {
+        RetryPolicy::new(50, 2_000, 6)
+    }
+
+    /// Delay before retry `attempt` (0-based): `min(base * 2^attempt,
+    /// cap)`, saturating.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let base_ms = self.base.as_millis() as u64;
+        let mult = 1u64.checked_shl(attempt.min(63)).unwrap_or(u64::MAX);
+        let ms = base_ms.saturating_mul(mult);
+        Duration::from_millis(ms).min(self.cap)
+    }
+
+    /// Total time spent sleeping if every attempt fails — the bound on
+    /// how long a blocking client stalls before surfacing the error.
+    pub fn total_delay(&self) -> Duration {
+        (0..self.max_attempts).map(|a| self.delay(a)).sum()
+    }
+}
+
+/// One consumable pass over a [`RetryPolicy`]'s delays. Blocking
+/// clients drive it inside a call: `next_delay()` hands out the
+/// schedule until the budget is spent, `reset()` (on success) refills
+/// it so the *next* outage gets a fresh budget — transient errors
+/// never accumulate into a latched failure.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    policy: RetryPolicy,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// A fresh pass over `policy`.
+    pub fn new(policy: RetryPolicy) -> Backoff {
+        Backoff { policy, attempt: 0 }
+    }
+
+    /// Delay before the next retry, or `None` once `max_attempts`
+    /// delays have been handed out (the caller should give up).
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.attempt >= self.policy.max_attempts {
+            return None;
+        }
+        let d = self.policy.delay(self.attempt);
+        self.attempt += 1;
+        Some(d)
+    }
+
+    /// Failures recorded since the last [`Backoff::reset`].
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Refill the budget after a success.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// A clock-paced probe schedule for callers that must not block: each
+/// recorded failure arms the next probe `policy.delay(failures)` in
+/// the future, `due()` says whether that moment has passed, and
+/// `exhausted()` reports a spent budget. Reads time through the
+/// injected [`Clock`], so schedules test hermetically under a
+/// [`crate::serve::MockClock`].
+pub struct Pacer {
+    policy: RetryPolicy,
+    clock: Arc<dyn Clock>,
+    failures: u32,
+    next_due_us: u64,
+}
+
+impl Pacer {
+    /// A pacer over `policy` reading time from `clock`. The first
+    /// probe is due immediately.
+    pub fn new(policy: RetryPolicy, clock: Arc<dyn Clock>) -> Pacer {
+        let now = clock.now_us();
+        Pacer { policy, clock, failures: 0, next_due_us: now }
+    }
+
+    /// A pacer on wall-clock time.
+    pub fn system(policy: RetryPolicy) -> Pacer {
+        Pacer::new(policy, Arc::new(SystemClock::new()))
+    }
+
+    /// Whether the next probe may run now (always `false` once
+    /// exhausted).
+    pub fn due(&self) -> bool {
+        !self.exhausted() && self.clock.now_us() >= self.next_due_us
+    }
+
+    /// Whether `max_attempts` consecutive failures have been recorded.
+    pub fn exhausted(&self) -> bool {
+        self.failures >= self.policy.max_attempts
+    }
+
+    /// Consecutive failures since the last [`Pacer::reset`].
+    pub fn failures(&self) -> u32 {
+        self.failures
+    }
+
+    /// Record a failed probe: arms the next one `delay(failures)` from
+    /// now.
+    pub fn note_failure(&mut self) {
+        let d = self.policy.delay(self.failures);
+        self.failures = self.failures.saturating_add(1);
+        self.next_due_us =
+            self.clock.now_us().saturating_add(d.as_micros() as u64);
+    }
+
+    /// Record a success: the failure streak and pacing reset, so a
+    /// later outage gets the full budget again.
+    pub fn reset(&mut self) {
+        self.failures = 0;
+        self.next_due_us = self.clock.now_us();
+    }
+}
+
+/// Sleep `d` in [`crate::net::frame::POLL_INTERVAL`] slices, returning
+/// early (with `false`) as soon as `halt` reports true — the shared
+/// helper keeping blocking retry loops responsive to shutdown.
+pub fn sleep_interruptible(
+    d: Duration,
+    halt: &mut dyn FnMut() -> bool,
+) -> bool {
+    let mut left = d;
+    while !left.is_zero() {
+        if halt() {
+            return false;
+        }
+        let step = left.min(crate::net::frame::POLL_INTERVAL);
+        std::thread::sleep(step);
+        left -= step;
+    }
+    !halt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::MockClock;
+
+    #[test]
+    fn delay_doubles_and_caps() {
+        let p = RetryPolicy::new(50, 2_000, 8);
+        let ms: Vec<u64> =
+            (0..8).map(|a| p.delay(a).as_millis() as u64).collect();
+        assert_eq!(ms, vec![50, 100, 200, 400, 800, 1_600, 2_000, 2_000]);
+        // huge attempt indices saturate instead of overflowing
+        assert_eq!(p.delay(u32::MAX), Duration::from_millis(2_000));
+        assert_eq!(
+            p.total_delay(),
+            Duration::from_millis(50 + 100 + 200 + 400 + 800 + 1_600 + 2_000 + 2_000)
+        );
+    }
+
+    #[test]
+    fn backoff_hands_out_budget_then_none() {
+        let mut b = Backoff::new(RetryPolicy::new(10, 40, 3));
+        assert_eq!(b.next_delay(), Some(Duration::from_millis(10)));
+        assert_eq!(b.next_delay(), Some(Duration::from_millis(20)));
+        assert_eq!(b.next_delay(), Some(Duration::from_millis(40)));
+        assert_eq!(b.next_delay(), None, "budget spent");
+        assert_eq!(b.attempt(), 3);
+        b.reset();
+        assert_eq!(b.next_delay(), Some(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn zero_attempts_never_retries() {
+        let mut b = Backoff::new(RetryPolicy::new(10, 40, 0));
+        assert_eq!(b.next_delay(), None);
+        let clock = Arc::new(MockClock::new(0));
+        let p = Pacer::new(RetryPolicy::new(10, 40, 0), clock);
+        assert!(p.exhausted());
+        assert!(!p.due());
+    }
+
+    #[test]
+    fn pacer_schedules_on_the_injected_clock() {
+        let clock = Arc::new(MockClock::new(0));
+        let mut p =
+            Pacer::new(RetryPolicy::new(10, 40, 3), clock.clone());
+        assert!(p.due(), "first probe immediate");
+        p.note_failure();
+        assert!(!p.due(), "armed 10ms out");
+        clock.advance_us(9_999);
+        assert!(!p.due());
+        clock.advance_us(1);
+        assert!(p.due());
+        p.note_failure(); // next at +20ms
+        clock.advance_us(20_000);
+        assert!(p.due());
+        p.note_failure();
+        assert!(p.exhausted(), "3 failures spend the budget");
+        clock.advance_us(1_000_000);
+        assert!(!p.due(), "exhausted pacers never come due");
+        assert_eq!(p.failures(), 3);
+        p.reset();
+        assert!(!p.exhausted());
+        assert!(p.due(), "success refills the budget immediately");
+    }
+
+    #[test]
+    fn sleep_interruptible_halts_early() {
+        let t0 = std::time::Instant::now();
+        let done =
+            sleep_interruptible(Duration::from_secs(30), &mut || true);
+        assert!(!done);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(sleep_interruptible(
+            Duration::from_millis(1),
+            &mut || false
+        ));
+    }
+}

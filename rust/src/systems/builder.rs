@@ -483,6 +483,9 @@ impl System {
                 params0: params0.clone(),
                 opt0,
                 source: table.clone(),
+                checkpoint: crate::systems::nodes::trainer_checkpoint_path(
+                    &cfg,
+                ),
             };
             program.add_node("trainer", NodeKind::Trainer, move || {
                 node.run()

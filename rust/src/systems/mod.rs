@@ -48,14 +48,17 @@ pub use executor::{
     select_discrete_row, ActorState, Executor, VecExecutor,
 };
 pub use nodes::{
-    Adder, AdderFactory, EnvFactory, EvalPoint, EvaluatorNode,
-    ExecutorNode, SystemHandles, TrainerNode,
+    trainer_checkpoint_path, Adder, AdderFactory, EnvFactory, EvalPoint,
+    EvaluatorNode, ExecutorNode, SystemHandles, TrainerNode,
 };
 pub use prefetch::BatchPrefetcher;
 pub use spec::{
     env_for_preset, AdderKind, ExplorationMode, SystemSpec, SPECS,
 };
-pub use trainer::{Trainer, TrainerStats};
+pub use trainer::{
+    read_trainer_checkpoint, write_trainer_checkpoint, Trainer,
+    TrainerStats,
+};
 
 use anyhow::Result;
 

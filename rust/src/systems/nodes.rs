@@ -18,6 +18,7 @@
 
 #![warn(missing_docs)]
 
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -129,10 +130,26 @@ pub struct SystemHandles {
     pub started: Instant,
 }
 
+/// The trainer checkpoint location for `cfg`:
+/// `{log_dir}/trainer.ckpt` when checkpointing is on
+/// (`checkpoint_interval > 0`), else `None`. Shared by every
+/// [`TrainerNode`] construction site so a restarted trainer looks for
+/// its checkpoint exactly where the previous incarnation wrote it.
+pub fn trainer_checkpoint_path(cfg: &TrainConfig) -> Option<PathBuf> {
+    (cfg.checkpoint_interval > 0)
+        .then(|| PathBuf::from(&cfg.log_dir).join("trainer.ckpt"))
+}
+
 /// The trainer node: device-resident + prefetched train loop
 /// (DESIGN.md §8). Samples the sharded table round-robin, runs the
 /// fused train-step artifact and publishes parameters every
 /// `publish_interval` steps, with a final flush at shutdown.
+///
+/// With a [`TrainerNode::checkpoint`] path set, the node additionally
+/// saves a `MAVATRN1` checkpoint every `checkpoint_interval` train
+/// steps (and at clean shutdown), and *resumes* from an existing
+/// checkpoint at startup — the recovery half of the supervisor's
+/// trainer restart policy (DESIGN.md §13).
 pub struct TrainerNode {
     /// System being trained.
     pub spec: &'static SystemSpec,
@@ -149,6 +166,9 @@ pub struct TrainerNode {
     /// Where sample batches come from: the in-process
     /// [`crate::replay::ShardedTable`] or a remote replay sampler.
     pub source: Arc<dyn ItemSource + Send + Sync>,
+    /// Checkpoint file (`{log_dir}/trainer.ckpt` when
+    /// `checkpoint_interval > 0`, else `None` = no checkpointing).
+    pub checkpoint: Option<PathBuf>,
 }
 
 impl TrainerNode {
@@ -205,7 +225,25 @@ impl TrainerNode {
             )?
         };
         trainer.set_publish_interval(self.cfg.publish_interval);
-        trainer.init_target_from_params()?;
+        let resumed = match &self.checkpoint {
+            Some(path) if path.exists() => {
+                trainer.load_checkpoint(path).with_context(|| {
+                    format!("resume from checkpoint {}", path.display())
+                })?;
+                eprintln!(
+                    "[trainer] resumed from {} at step {}",
+                    path.display(),
+                    trainer.stats.steps
+                );
+                true
+            }
+            _ => false,
+        };
+        if !resumed {
+            // fresh start only: on resume the restored target network
+            // must NOT be clobbered with a copy of the online params
+            trainer.init_target_from_params()?;
+        }
         h.server.push(trainer.params())?;
         // sample+assemble runs on a prefetch thread; only plain
         // HostTensors cross the channel (no PJRT handle leaves this
@@ -221,11 +259,24 @@ impl TrainerNode {
             prefetch.recycle(batch);
             h.counters.add_train_step();
             trainer.maybe_publish(h.server.as_ref())?;
+            if let Some(path) = &self.checkpoint {
+                if self.cfg.checkpoint_interval > 0
+                    && trainer.stats.steps % self.cfg.checkpoint_interval
+                        == 0
+                {
+                    trainer.save_checkpoint(path)?;
+                }
+            }
             if self.cfg.max_train_steps > 0
                 && trainer.stats.steps >= self.cfg.max_train_steps
             {
                 break;
             }
+        }
+        // a final checkpoint so a post-run restart resumes at the end
+        // state instead of replaying the last cadence window
+        if let Some(path) = &self.checkpoint {
+            trainer.save_checkpoint(path)?;
         }
         // the publish cadence may be mid-window at shutdown: flush the
         // final parameters unconditionally; a remote store may already

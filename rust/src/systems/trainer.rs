@@ -598,26 +598,21 @@ impl Trainer {
     /// state, step counter) as a little-endian f32/u64 blob so long runs
     /// survive restarts. On the device path this forces a download of
     /// all three state tensors (the blob format — `MAVATRN1` — is
-    /// unchanged from the host-resident trainer).
+    /// unchanged from the host-resident trainer). The write is atomic
+    /// (temp file + rename), so a trainer killed mid-save leaves the
+    /// previous checkpoint intact — see [`write_trainer_checkpoint`].
     pub fn save_checkpoint(
         &mut self,
         path: impl AsRef<std::path::Path>,
     ) -> Result<()> {
-        use std::io::Write;
         self.sync_mirrors_full()?;
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(b"MAVATRN1")?;
-        w.write_all(&self.stats.steps.to_le_bytes())?;
-        for t in [&self.params, &self.target, &self.opt] {
-            w.write_all(&(t.len() as u64).to_le_bytes())?;
-            // one bulk write per tensor, not one per element
-            w.write_all(f32_bytes(t.as_f32()))?;
-        }
-        Ok(())
+        write_trainer_checkpoint(
+            path.as_ref(),
+            self.stats.steps,
+            self.params.as_f32(),
+            self.target.as_f32(),
+            self.opt.as_f32(),
+        )
     }
 
     /// Restore state saved by [`Trainer::save_checkpoint`]. Shapes must
@@ -627,24 +622,21 @@ impl Trainer {
         &mut self,
         path: impl AsRef<std::path::Path>,
     ) -> Result<()> {
-        use std::io::Read;
-        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == b"MAVATRN1", "not a trainer checkpoint");
-        let mut b8 = [0u8; 8];
-        r.read_exact(&mut b8)?;
-        self.stats.steps = u64::from_le_bytes(b8);
-        for t in [&mut self.params, &mut self.target, &mut self.opt] {
-            r.read_exact(&mut b8)?;
-            let n = u64::from_le_bytes(b8) as usize;
+        let (steps, params, target, opt) =
+            read_trainer_checkpoint(path.as_ref())?;
+        self.stats.steps = steps;
+        for (t, src) in [
+            (&mut self.params, &params),
+            (&mut self.target, &target),
+            (&mut self.opt, &opt),
+        ] {
             anyhow::ensure!(
-                n == t.len(),
-                "checkpoint tensor len {n} != expected {}",
+                src.len() == t.len(),
+                "checkpoint tensor len {} != expected {}",
+                src.len(),
                 t.len()
             );
-            // one bulk read straight into the tensor, not one per element
-            r.read_exact(f32_bytes_mut(t.as_f32_mut()))?;
+            t.as_f32_mut().copy_from_slice(src);
         }
         self.params_mirror_fresh = true;
         self.aux_mirror_fresh = true;
@@ -665,6 +657,86 @@ impl Trainer {
         }
         Ok(())
     }
+}
+
+/// Write a `MAVATRN1` trainer checkpoint blob: magic, step counter,
+/// then the three length-prefixed f32 tensors (online params, target
+/// params, optimiser state), all little-endian. The blob is staged to
+/// `{path}.tmp` and renamed into place, so readers never observe a
+/// torn file and a crash mid-save leaves the previous checkpoint
+/// intact (rename is atomic on POSIX filesystems).
+///
+/// Free function (rather than a [`Trainer`] method) so the recovery
+/// machinery — and its fault-injection tests — can produce and consume
+/// real checkpoint blobs without building a trainer.
+pub fn write_trainer_checkpoint(
+    path: &std::path::Path,
+    steps: u64,
+    params: &[f32],
+    target: &[f32],
+    opt: &[f32],
+) -> Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    {
+        let mut w =
+            std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(b"MAVATRN1")?;
+        w.write_all(&steps.to_le_bytes())?;
+        for t in [params, target, opt] {
+            w.write_all(&(t.len() as u64).to_le_bytes())?;
+            // one bulk write per tensor, not one per element
+            w.write_all(f32_bytes(t))?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("commit checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a blob written by [`write_trainer_checkpoint`]: returns
+/// `(steps, params, target, opt)`. Validates the magic and that the
+/// file ends exactly after the last tensor.
+pub fn read_trainer_checkpoint(
+    path: &std::path::Path,
+) -> Result<(u64, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    use std::io::Read;
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| {
+            format!("open checkpoint {}", path.display())
+        })?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == b"MAVATRN1", "not a trainer checkpoint");
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let steps = u64::from_le_bytes(b8);
+    let mut tensors = Vec::with_capacity(3);
+    for _ in 0..3 {
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        let mut t = vec![0f32; n];
+        // one bulk read straight into the tensor, not one per element
+        r.read_exact(f32_bytes_mut(&mut t))?;
+        tensors.push(t);
+    }
+    anyhow::ensure!(
+        r.read(&mut [0u8; 1])? == 0,
+        "trailing bytes after checkpoint tensors"
+    );
+    let opt = tensors.pop().expect("three tensors");
+    let target = tensors.pop().expect("three tensors");
+    let params = tensors.pop().expect("three tensors");
+    Ok((steps, params, target, opt))
 }
 
 /// Run one data-parallel step over `dp`'s lanes. Returns the

@@ -426,6 +426,120 @@ fn prop_frame_corruption_is_typed_error() {
     }
 }
 
+/// The reconnect backoff schedule (DESIGN.md §13) under random
+/// policies: `delay(attempt)` is deterministic, monotone nondecreasing,
+/// bounded by `cap`, and a [`Backoff`] pass hands out exactly
+/// `max_attempts` delays matching the policy before giving up —
+/// `reset()` refills the budget so transient outages never latch.
+#[test]
+fn prop_backoff_schedule_deterministic_capped_monotone() {
+    use mava::net::retry::{Backoff, RetryPolicy};
+    use std::time::Duration;
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(800 + seed);
+        let base_ms = 1 + rng.below(100) as u64;
+        let cap_ms = base_ms + rng.below(2_000) as u64;
+        let attempts = rng.below(14) as u32;
+        let p = RetryPolicy::new(base_ms, cap_ms, attempts);
+
+        let mut prev = Duration::ZERO;
+        for a in 0..attempts.max(8) {
+            let d = p.delay(a);
+            assert_eq!(d, p.delay(a), "seed {seed}: nondeterministic");
+            assert!(d >= prev, "seed {seed}: schedule not monotone");
+            assert!(
+                d <= Duration::from_millis(cap_ms),
+                "seed {seed}: delay above cap"
+            );
+            assert!(
+                d >= Duration::from_millis(base_ms).min(p.cap),
+                "seed {seed}: delay below base"
+            );
+            prev = d;
+        }
+        // enormous attempt indices saturate at the cap, no overflow
+        assert_eq!(p.delay(u32::MAX), Duration::from_millis(cap_ms));
+
+        // a Backoff pass replays the policy exactly, then dries up
+        let mut b = Backoff::new(p);
+        for a in 0..attempts {
+            assert_eq!(
+                b.next_delay(),
+                Some(p.delay(a)),
+                "seed {seed}: pass diverges from policy at {a}"
+            );
+        }
+        assert_eq!(b.next_delay(), None, "seed {seed}: budget overrun");
+        assert_eq!(b.attempt(), attempts, "seed {seed}");
+        assert_eq!(
+            p.total_delay(),
+            (0..attempts).map(|a| p.delay(a)).sum::<Duration>(),
+            "seed {seed}: total_delay is not the schedule sum"
+        );
+
+        // success refills: the next outage sees the same fresh schedule
+        b.reset();
+        assert_eq!(b.attempt(), 0, "seed {seed}");
+        if attempts > 0 {
+            assert_eq!(b.next_delay(), Some(p.delay(0)), "seed {seed}");
+        } else {
+            assert_eq!(b.next_delay(), None, "seed {seed}");
+        }
+    }
+}
+
+/// The heartbeat liveness frame (DESIGN.md §13): empty payload, a
+/// pinned wire kind byte (old and new binaries must agree on it), an
+/// exact header-sized encoding, and the same typed-error guarantees as
+/// every other frame under truncation and corruption.
+#[test]
+fn prop_heartbeat_frame_codec() {
+    use mava::net::frame::{
+        decode_slice, encode_frame, FrameKind, HEADER_LEN,
+    };
+    let mut clean = Vec::new();
+    encode_frame(FrameKind::Heartbeat, &[], &mut clean);
+    assert_eq!(clean.len(), HEADER_LEN, "heartbeat is header-only");
+    // header layout: magic[0..2] version[2] kind[3] len[4..8] crc[8..12]
+    assert_eq!(clean[3], 20, "heartbeat wire kind byte is pinned");
+    assert_eq!(&clean[4..8], &[0, 0, 0, 0], "payload length is zero");
+
+    // round-trip, with trailing bytes left unconsumed
+    let mut framed = clean.clone();
+    framed.extend_from_slice(&[0xde, 0xad]);
+    let (kind, payload, consumed) = decode_slice(&framed).unwrap();
+    assert_eq!(kind, FrameKind::Heartbeat);
+    assert!(payload.is_empty());
+    assert_eq!(consumed, HEADER_LEN);
+
+    // every truncation is a typed error, never a panic
+    for cut in 0..clean.len() {
+        let err = decode_slice(&clean[..cut]).expect_err("truncated");
+        let _ = err.to_string();
+    }
+
+    // flipping any checked header bit (magic, version, crc) is a typed
+    // error; arbitrary corruption anywhere never panics or over-reads
+    let mut rng = Rng::new(900);
+    for &pos in &[0usize, 1, 2, 8, 9, 10, 11] {
+        let mut bad = clean.clone();
+        bad[pos] ^= 1 << rng.below(8);
+        if bad == clean {
+            continue;
+        }
+        let err =
+            decode_slice(&bad).expect_err("corruption must not decode");
+        let _ = err.to_string();
+    }
+    for _ in 0..200 {
+        let mut bad = clean.clone();
+        bad[rng.below(bad.len())] = rng.below(256) as u8;
+        if let Ok((_, _, consumed)) = decode_slice(&bad) {
+            assert!(consumed <= bad.len(), "over-read");
+        }
+    }
+}
+
 /// Replay items survive the wire: random transitions and sequences
 /// round-trip bit-exactly through the insert and batch payloads.
 #[test]
