@@ -5,7 +5,7 @@
 PYTHON ?= python
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test test-dist test-serve test-fault serve experiment check-bench-schema bench-vector bench-trainer bench-serve bench-build check fmt clippy doc
+.PHONY: artifacts build test test-dist test-serve test-fault serve experiment check-bench-schema bench-vector bench-trainer bench-serve bench-build check fmt clippy lint doc
 
 # lower every AOT artifact: policies (the full POLICY_BATCHES bucket
 # ladder 1..64), fused train steps, and the _dp{2,4}/_apply
@@ -87,10 +87,19 @@ fmt:
 clippy:
 	cargo clippy -- -D warnings
 
+# the repo's own invariant checker (DESIGN.md §14): six mechanical
+# rules over rust/src + rust/tests (config-registry coherence, frame
+# registry, clock seam, panic-free wire decode, engine-per-thread, no
+# timing sleeps in tests). Named exceptions live in lint.allow; stale
+# entries fail the gate. Runs the checker's own fixture tests first.
+lint:
+	cargo test -q -p xtask
+	cargo xtask lint
+
 # doc gate: -D warnings turns rustdoc lints (missing docs on the
 # public System API surface — systems/{spec,nodes,builder}.rs — broken
 # intra-doc links) into failures; CI runs this same target
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
-check: fmt clippy test doc
+check: fmt clippy lint test doc

@@ -401,7 +401,7 @@ fn run_remote_evaluator(
         let synced = server.sync(evaluator.params_version(), &mut buf)?;
         let Some(v) = synced else {
             // nothing new published yet
-            std::thread::sleep(Duration::from_millis(50));
+            std::thread::sleep(crate::net::frame::POLL_INTERVAL);
             continue;
         };
         evaluator.set_params(v, &buf);

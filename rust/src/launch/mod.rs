@@ -203,7 +203,7 @@ impl LaunchHandle {
             if !pending || Instant::now() >= deadline {
                 break;
             }
-            std::thread::sleep(Duration::from_millis(10));
+            std::thread::sleep(crate::net::frame::POLL_INTERVAL);
         }
         for (i, slot) in slots.into_iter().enumerate() {
             if let Some((name, kind, _abandoned)) = slot {
@@ -357,7 +357,17 @@ mod tests {
             Ok(())
         });
         let h = LocalLauncher::launch(p, stop.clone());
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        // poll for the observable condition (the worker has spun)
+        // rather than sleeping a guessed duration (R6, DESIGN.md §14)
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while spins.load(Ordering::Relaxed) == 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "worker never started spinning"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
         let outcomes = h.stop_and_join();
         assert!(spins.load(Ordering::Relaxed) > 0);
         assert!(stop.is_stopped());
@@ -413,8 +423,11 @@ mod tests {
         let stop = StopSignal::new();
         let mut p = Program::new();
         let s = stop.clone();
+        let spins = Arc::new(AtomicUsize::new(0));
+        let spins2 = spins.clone();
         p.add_node("executor_0", NodeKind::Executor, move || {
             while !s.is_stopped() {
+                spins2.fetch_add(1, Ordering::Relaxed);
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
             Ok(())
@@ -427,7 +440,17 @@ mod tests {
             }
         });
         let h = LocalLauncher::launch(p, stop.clone());
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        // both nodes are up once the sibling is observably spinning;
+        // poll for that instead of sleeping a guessed duration
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while spins.load(Ordering::Relaxed) == 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "sibling never started spinning"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
         stop.stop();
         let outcomes =
             h.join_deadline(std::time::Duration::from_millis(200));

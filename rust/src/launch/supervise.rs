@@ -360,7 +360,7 @@ pub fn supervise(
                     match child.try_wait() {
                         Ok(Some(status)) => break Some(status),
                         Ok(None) if Instant::now() < deadline => {
-                            std::thread::sleep(Duration::from_millis(10))
+                            std::thread::sleep(POLL_INTERVAL)
                         }
                         _ => break None,
                     }

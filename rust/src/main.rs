@@ -37,13 +37,14 @@ fn usage() -> ! {
         "usage: mava <train|eval|launch|node|experiment|serve|check-bench|list|info>\n\
          \x20           [--config FILE] [--key value ...]\n\
          keys: system preset arch num_executors num_envs_per_executor\n\
-         \x20     num_devices max_env_steps lr tau n_step eps_start eps_end\n\
-         \x20     eps_decay_steps noise_sigma replay_size min_replay\n\
-         \x20     samples_per_insert publish_interval seed seeds\n\
+         \x20     num_devices max_env_steps max_train_steps lr tau n_step\n\
+         \x20     eps_start eps_end eps_decay_steps noise_sigma replay_size\n\
+         \x20     min_replay samples_per_insert publish_interval seed seeds\n\
          \x20     artifacts_dir log_dir eval_every_steps (alias\n\
          \x20     eval_interval) eval_episodes params_sync_every\n\
-         \x20     serve_deadline_us serve_max_sessions\n\
-         \x20     heartbeat_interval_ms max_restarts checkpoint_interval\n\
+         \x20     serve_deadline_us serve_max_sessions bind_host\n\
+         \x20     dist_timeout_s heartbeat_interval_ms max_restarts\n\
+         \x20     checkpoint_interval\n\
          see `mava experiment --help` for the experiment harness\n\
          see `mava serve --help` for the inference service"
     );

@@ -149,7 +149,7 @@ impl ControlServer {
                      within {timeout:?}"
                 );
             }
-            std::thread::sleep(Duration::from_millis(10));
+            std::thread::sleep(crate::net::frame::POLL_INTERVAL);
         }
     }
 

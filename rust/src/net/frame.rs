@@ -348,8 +348,11 @@ pub fn read_frame_polled<R: Read>(
     let (kind, len, crc) = parse_header(&header)?;
     payload.clear();
     payload.resize(len, 0);
+    // the constant-false halt makes `Ok(false)` impossible, but decode
+    // paths are panic-free (R4): map it to Truncated instead of proving
+    // the impossibility with an abort
     if !read_full(r, payload, &mut || false)? {
-        unreachable!("halt closure is constant false");
+        return Err(FrameError::Truncated);
     }
     let got = crc32(payload);
     if got != crc {
@@ -365,7 +368,9 @@ pub fn read_frame_into<R: Read>(
 ) -> Result<FrameKind, FrameError> {
     match read_frame_polled(r, payload, &mut || false)? {
         Some(kind) => Ok(kind),
-        None => unreachable!("halt closure is constant false"),
+        // impossible with a constant-false halt; decode paths stay
+        // panic-free (R4) so the dead arm maps to Truncated
+        None => Err(FrameError::Truncated),
     }
 }
 
@@ -439,6 +444,32 @@ mod tests {
     fn eof_is_truncated_not_io() {
         let bytes = frame_bytes(FrameKind::Params, &[1, 2, 3, 4]);
         let mut cursor = std::io::Cursor::new(&bytes[..bytes.len() - 1]);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_frame_into(&mut cursor, &mut buf),
+            Err(FrameError::Truncated)
+        ));
+    }
+
+    // R4 regressions for the two converted `unreachable!` sites: a
+    // stream that dies mid-frame must yield Truncated from both the
+    // polled and the blocking reader, never a panic.
+
+    #[test]
+    fn read_frame_polled_truncated_payload_is_typed() {
+        let bytes = frame_bytes(FrameKind::Params, &[1, 2, 3, 4]);
+        let mut cursor =
+            std::io::Cursor::new(&bytes[..HEADER_LEN + 2]);
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_frame_polled(&mut cursor, &mut buf, &mut || false),
+            Err(FrameError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn read_frame_into_empty_stream_is_typed() {
+        let mut cursor = std::io::Cursor::new(Vec::<u8>::new());
         let mut buf = Vec::new();
         assert!(matches!(
             read_frame_into(&mut cursor, &mut buf),

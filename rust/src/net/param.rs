@@ -315,7 +315,9 @@ impl RemoteParamClient {
                             conn.addr
                         )));
                     };
-                    std::thread::sleep(delay);
+                    // POLL_INTERVAL-sliced sleep: the computed backoff
+                    // delay stays on the sanctioned pacing seam (R3)
+                    crate::net::retry::sleep_interruptible(delay, &mut || false);
                 }
             }
         }

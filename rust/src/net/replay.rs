@@ -309,7 +309,11 @@ impl ItemSink for RemoteShardClient {
                     // redials and resends until the budget is spent
                     conn.stream = None;
                     match conn.backoff.next_delay() {
-                        Some(delay) => std::thread::sleep(delay),
+                        // POLL_INTERVAL-sliced sleep keeps the computed
+                        // backoff on the sanctioned pacing seam (R3)
+                        Some(delay) => {
+                            crate::net::retry::sleep_interruptible(delay, &mut || false);
+                        }
                         None => {
                             conn.error.get_or_insert(format!("{e:#}"));
                             self.dead.store(true, Ordering::Release);

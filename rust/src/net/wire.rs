@@ -42,6 +42,16 @@ impl<'a> WireReader<'a> {
         Ok(s)
     }
 
+    /// `N` bytes as a fixed array. The length check lives in `take`,
+    /// so the copy is infallible — keeping every primitive below free
+    /// of `unwrap` on the decode path (R4).
+    fn arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        a.copy_from_slice(s);
+        Ok(a)
+    }
+
     /// One byte.
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
@@ -49,27 +59,27 @@ impl<'a> WireReader<'a> {
 
     /// Little-endian u32.
     pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.arr()?))
     }
 
     /// Little-endian u64.
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.arr()?))
     }
 
     /// Little-endian f32.
     pub fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.arr()?))
     }
 
     /// Little-endian f64.
     pub fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.arr()?))
     }
 
     /// A u16-length-prefixed UTF-8 string.
     pub fn str(&mut self) -> Result<String> {
-        let n = u16::from_le_bytes(self.take(2)?.try_into().unwrap());
+        let n = u16::from_le_bytes(self.arr()?);
         let bytes = self.take(n as usize)?;
         Ok(std::str::from_utf8(bytes)
             .map_err(|e| anyhow::anyhow!("wire string not utf-8: {e}"))?
@@ -85,7 +95,9 @@ impl<'a> WireReader<'a> {
         dst.clear();
         dst.reserve(n);
         for c in bytes.chunks_exact(4) {
-            dst.push(f32::from_le_bytes(c.try_into().unwrap()));
+            // chunks_exact(4) guarantees the width; spell the array out
+            // so the decode path carries no unwrap (R4)
+            dst.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
         Ok(())
     }
@@ -103,7 +115,7 @@ impl<'a> WireReader<'a> {
         let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
         let mut v = Vec::with_capacity(n);
         for c in bytes.chunks_exact(4) {
-            v.push(i32::from_le_bytes(c.try_into().unwrap()));
+            v.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
         Ok(v)
     }
@@ -468,5 +480,55 @@ mod tests {
         encode_u64(3, &mut out);
         out.push(0);
         assert!(decode_u64(&out).is_err());
+    }
+
+    // R4 regressions: every fixed-width primitive used to convert via
+    // `try_into().unwrap()`; each must now surface truncation as a
+    // typed error, never a panic, when the buffer is short.
+
+    #[test]
+    fn truncated_u32_errors() {
+        assert!(WireReader::new(&[1, 2, 3]).u32().is_err());
+    }
+
+    #[test]
+    fn truncated_u64_errors() {
+        assert!(WireReader::new(&[1, 2, 3, 4, 5, 6, 7]).u64().is_err());
+    }
+
+    #[test]
+    fn truncated_f32_errors() {
+        assert!(WireReader::new(&[0x40]).f32().is_err());
+    }
+
+    #[test]
+    fn truncated_f64_errors() {
+        assert!(WireReader::new(&[0x40, 0x09]).f64().is_err());
+    }
+
+    #[test]
+    fn truncated_str_prefix_and_body_error() {
+        // one byte cannot hold the u16 length prefix
+        assert!(WireReader::new(&[5]).str().is_err());
+        // prefix says 5 bytes, only 2 present
+        assert!(WireReader::new(&[5, 0, b'h', b'i']).str().is_err());
+    }
+
+    #[test]
+    fn truncated_f32_vec_errors() {
+        // count says 2 floats (8 bytes), only 4 present
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut dst = Vec::new();
+        assert!(WireReader::new(&buf).f32_vec_into(&mut dst).is_err());
+    }
+
+    #[test]
+    fn truncated_i32_vec_errors() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&7i32.to_le_bytes());
+        assert!(WireReader::new(&buf).i32_vec().is_err());
     }
 }

@@ -525,7 +525,7 @@ impl System {
         let stop = handles.stop.clone();
         let handle = LocalLauncher::launch(program, stop.clone());
         loop {
-            std::thread::sleep(Duration::from_millis(20));
+            std::thread::sleep(crate::net::frame::POLL_INTERVAL);
             if handles.counters.env_steps() >= cfg.max_env_steps {
                 break;
             }

@@ -20,7 +20,7 @@
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -464,7 +464,7 @@ impl EvaluatorNode {
         while !h.stop.is_stopped() {
             let steps = h.counters.env_steps();
             if steps < next_eval_at {
-                std::thread::sleep(Duration::from_millis(10));
+                std::thread::sleep(crate::net::frame::POLL_INTERVAL);
                 continue;
             }
             next_eval_at = steps + self.cfg.eval_every_steps;

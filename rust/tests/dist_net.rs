@@ -39,6 +39,9 @@ use mava::net::replay::{
 use mava::params::{ParamStore, ParameterServer};
 use mava::replay::{Item, ItemSink, ItemSource, Table, Transition};
 
+mod support;
+use support::poll_until;
+
 fn tr(v: f32) -> Item {
     Item::Transition(Transition { obs: vec![v], ..Default::default() })
 }
@@ -258,28 +261,35 @@ fn fault_injection_dead_executor_is_named_and_siblings_wind_down() {
             Ok(())
         });
     }
+    let crash_gate = Arc::new(AtomicBool::new(false));
     {
         let addr = addr.clone();
+        let gate = crash_gate.clone();
         program.add_node("executor_0", NodeKind::Executor, move || {
-            // register, run briefly, then die: the dropped connection
-            // is the only signal the driver gets
+            // register, hold until the driver has seen every node,
+            // then die: the dropped connection is the only signal the
+            // driver gets, and gating the crash on full registration
+            // keeps the scenario order-deterministic
             let ctl =
                 ControlClient::connect(&addr, "executor_0", "executor_0", "")?;
-            thread::sleep(Duration::from_millis(50));
+            while !gate.load(Ordering::Acquire) {
+                thread::sleep(Duration::from_millis(5));
+            }
             drop(ctl);
             anyhow::bail!("simulated crash")
         });
     }
     let handle = LocalLauncher::launch(program, launcher_stop.clone());
+    for name in ["trainer", "executor_1", "executor_0"] {
+        control.wait_for(name, Duration::from_secs(30)).unwrap();
+    }
+    crash_gate.store(true, Ordering::Release);
 
     // the driver's supervise loop: wait for the wire to report death
-    let deadline = Instant::now() + Duration::from_secs(10);
-    while !driver_stop.is_stopped() && Instant::now() < deadline {
-        thread::sleep(Duration::from_millis(5));
-    }
-    assert!(
-        driver_stop.is_stopped(),
-        "executor death never tripped the driver stop signal"
+    poll_until(
+        "executor death trips the driver stop signal",
+        Duration::from_secs(10),
+        || driver_stop.is_stopped(),
     );
     assert!(control.lost("executor_0"));
     assert_eq!(control.lost_nodes(), vec!["executor_0".to_string()]);
@@ -546,7 +556,12 @@ fn chaos_cfg() -> SupervisorConfig {
 fn watchdog(stop: &StopSignal, secs: u64) {
     let stop = stop.clone();
     thread::spawn(move || {
-        thread::sleep(Duration::from_secs(secs));
+        // early-exit poll: the thread winds down with the scenario
+        // instead of outliving the test by the full budget
+        let end = Instant::now() + Duration::from_secs(secs);
+        while !stop.is_stopped() && Instant::now() < end {
+            thread::sleep(Duration::from_millis(25));
+        }
         stop.stop();
     });
 }
@@ -556,15 +571,6 @@ fn watchdog(stop: &StopSignal, secs: u64) {
 /// loaded CI box. Polls exit the moment the condition holds.
 #[cfg(unix)]
 const CHAOS_WAIT: Duration = Duration::from_secs(60);
-
-#[cfg(unix)]
-fn poll_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
-    let end = Instant::now() + deadline;
-    while !cond() {
-        assert!(Instant::now() < end, "timed out waiting: {what}");
-        thread::sleep(Duration::from_millis(5));
-    }
-}
 
 /// Chaos scenario 1: SIGKILL an executor mid-run. The supervisor must
 /// detect the death, respawn the node (a second `Hello` arrives under

@@ -2,6 +2,7 @@
 //! drive invariants with seeded xoshiro randomness — failures print the
 //! seed, so every case is reproducible).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use mava::core::{Actions, StepType, TimeStep};
@@ -10,6 +11,9 @@ use mava::replay::{
     TransitionAdder,
 };
 use mava::rng::Rng;
+
+mod support;
+use support::poll_until;
 
 fn ts(obs: f32, rew: f32, last: bool, n: usize) -> TimeStep {
     TimeStep {
@@ -274,17 +278,21 @@ fn prop_sharded_table_round_robin_aggregates() {
             },
             7,
         ));
+        // per-shard sample counts live in shared atomics so the main
+        // thread can poll for "every shard reached the sampler"
+        // instead of guessing how long the reader needs
+        let seen: Arc<Vec<AtomicU64>> =
+            Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
         let reader = {
             let t = table.clone();
+            let seen = seen.clone();
             std::thread::spawn(move || {
-                let mut seen = vec![0u64; shards];
                 while let Some(batch) = t.sample_batch(2) {
                     for item in batch {
                         let v = item.as_transition().obs[0] as usize;
-                        seen[v / 1000] += 1;
+                        seen[v / 1000].fetch_add(1, Ordering::Relaxed);
                     }
                 }
-                seen
             })
         };
         let writers: Vec<_> = (0..shards)
@@ -306,13 +314,18 @@ fn prop_sharded_table_round_robin_aggregates() {
         for w in writers {
             w.join().unwrap();
         }
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        poll_until(
+            "every shard's data reaches the sampler",
+            std::time::Duration::from_secs(10),
+            || seen.iter().all(|n| n.load(Ordering::Relaxed) > 0),
+        );
         let st = table.stats();
         table.close();
-        let seen = reader.join().unwrap();
+        reader.join().unwrap();
         assert_eq!(st.inserts, 200 * shards as u64, "shards={shards}");
         assert_eq!(st.size, 200 * shards, "no eviction expected");
-        for (k, &n) in seen.iter().enumerate() {
+        for (k, n) in seen.iter().enumerate() {
+            let n = n.load(Ordering::Relaxed);
             assert!(n > 0, "shard {k} never sampled (shards={shards})");
         }
         // aggregate flow control: sample calls stay within the summed

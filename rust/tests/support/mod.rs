@@ -1,0 +1,20 @@
+//! Shared helpers for the integration suites. Each test binary pulls
+//! this in with `mod support;`, so items unused by one binary are
+//! expected — hence the file-wide allow.
+#![allow(dead_code)]
+
+use std::time::{Duration, Instant};
+
+/// Poll `cond` every few milliseconds until it holds, panicking with
+/// `what` if `deadline` elapses first. The R6 lint (DESIGN.md §14)
+/// bans bare `thread::sleep` waits in tests; this is the sanctioned
+/// replacement: the wait exits the moment the condition holds instead
+/// of encoding a guess about scheduler timing, and a hang fails with
+/// a named condition instead of wedging the suite.
+pub fn poll_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let end = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < end, "timed out waiting: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}

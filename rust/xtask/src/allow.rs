@@ -1,0 +1,192 @@
+//! The `lint.allow` baseline: named, justified exceptions.
+//!
+//! Format, one entry per line (`#` comments and blanks ignored):
+//!
+//! ```text
+//! R3 rust/src/net/control.rs "Instant::now" supervision deadline is wall-clock by design
+//! ```
+//!
+//! `rule` and `file` must match the finding exactly; the quoted needle
+//! must be a substring of the finding's *text* (the trimmed source
+//! line), which keeps entries stable across unrelated line-number
+//! churn. The trailing free text is the mandatory justification —
+//! entries without one are rejected, and entries that no longer match
+//! any finding are reported as `R0` so the baseline cannot rot.
+
+use crate::findings::Finding;
+use std::fs;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    pub needle: String,
+    pub reason: String,
+    /// 1-based line in lint.allow, for R0 reporting.
+    pub line_no: usize,
+}
+
+pub struct AllowList {
+    pub entries: Vec<AllowEntry>,
+    pub path: String,
+}
+
+impl AllowList {
+    /// Parse baseline text; malformed entries are hard errors so a bad
+    /// baseline cannot silently allow everything.
+    pub fn parse(text: &str, path: &str) -> Result<AllowList, String> {
+        let mut entries = Vec::new();
+        for (i, raw_line) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw_line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let err = |what: &str| format!("{path}:{line_no}: {what}: `{line}`");
+            let mut head = line.splitn(3, char::is_whitespace);
+            let rule = head.next().unwrap_or("").to_string();
+            let file = head.next().unwrap_or("").to_string();
+            let rest = head.next().unwrap_or("").trim_start();
+            if rule.len() < 2
+                || !rule.starts_with('R')
+                || !rule[1..].chars().all(|c| c.is_ascii_digit())
+            {
+                return Err(err("entry must start with a rule id like R3"));
+            }
+            if file.is_empty() {
+                return Err(err("missing file path"));
+            }
+            if !rest.starts_with('"') {
+                return Err(err("missing quoted needle after the file path"));
+            }
+            let close = match rest[1..].rfind('"') {
+                Some(p) if p > 0 => p + 1,
+                _ => return Err(err("unterminated needle quote")),
+            };
+            let needle = rest[1..close].to_string();
+            let reason = rest[close + 1..]
+                .trim()
+                .trim_start_matches(['-', '—'])
+                .trim()
+                .to_string();
+            if needle.is_empty() {
+                return Err(err("empty needle"));
+            }
+            if reason.is_empty() {
+                return Err(err("missing justification (every exception must say why)"));
+            }
+            entries.push(AllowEntry { rule, file, needle, reason, line_no });
+        }
+        Ok(AllowList { entries, path: path.to_string() })
+    }
+
+    /// Load from disk; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<AllowList, String> {
+        let shown = path.to_string_lossy().to_string();
+        match fs::read_to_string(path) {
+            Ok(text) => Self::parse(&text, &shown),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Ok(AllowList { entries: Vec::new(), path: shown })
+            }
+            Err(e) => Err(format!("{shown}: {e}")),
+        }
+    }
+
+    /// Split findings into (remaining, baselined); stale entries that
+    /// matched nothing come back as R0 findings appended to remaining
+    /// by the caller.
+    pub fn apply(&self, findings: Vec<Finding>) -> (Vec<Finding>, Vec<Finding>, Vec<Finding>) {
+        let mut used = vec![false; self.entries.len()];
+        let mut remaining = Vec::new();
+        let mut baselined = Vec::new();
+        for f in findings {
+            let hit = self.entries.iter().enumerate().find(|(_, e)| {
+                e.rule == f.rule && e.file == f.file && f.text.contains(&e.needle)
+            });
+            match hit {
+                Some((i, _)) => {
+                    used[i] = true;
+                    baselined.push(f);
+                }
+                None => remaining.push(f),
+            }
+        }
+        let stale = self
+            .entries
+            .iter()
+            .zip(used.iter())
+            .filter(|(_, &u)| !u)
+            .map(|(e, _)| {
+                Finding::new(
+                    "R0",
+                    &self.path,
+                    e.line_no,
+                    format!("stale baseline entry: {} {} \"{}\"", e.rule, e.file, e.needle),
+                    "the exception no longer matches any finding; delete the entry \
+                     (or fix its needle if the flagged line merely moved)",
+                )
+            })
+            .collect();
+        (remaining, baselined, stale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, text: &str) -> Finding {
+        Finding::new(rule, file, 3, text.to_string(), "h")
+    }
+
+    #[test]
+    fn entry_suppresses_matching_finding_only() {
+        let al = AllowList::parse(
+            "# comment\nR3 rust/src/a.rs \"Instant::now\" wall-clock by design\n",
+            "lint.allow",
+        )
+        .unwrap();
+        let fs = vec![
+            finding("R3", "rust/src/a.rs", "let t = Instant::now();"),
+            finding("R3", "rust/src/b.rs", "let t = Instant::now();"),
+            finding("R6", "rust/src/a.rs", "let t = Instant::now();"),
+        ];
+        let (remaining, baselined, stale) = al.apply(fs);
+        assert_eq!(baselined.len(), 1);
+        assert_eq!(remaining.len(), 2);
+        assert!(stale.is_empty());
+    }
+
+    #[test]
+    fn stale_entries_surface_as_r0() {
+        let al = AllowList::parse("R6 rust/tests/x.rs \"sleep(99)\" gone\n", "lint.allow").unwrap();
+        let (remaining, baselined, stale) = al.apply(vec![]);
+        assert!(remaining.is_empty() && baselined.is_empty());
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].rule, "R0");
+        assert_eq!(stale[0].line, 1);
+    }
+
+    #[test]
+    fn malformed_entries_are_rejected() {
+        assert!(AllowList::parse("R3 a.rs \"x\"\n", "l").is_err()); // no reason
+        assert!(AllowList::parse("R3 a.rs x reason\n", "l").is_err()); // no needle
+        assert!(AllowList::parse("X3 a.rs \"x\" reason\n", "l").is_err()); // bad rule
+        assert!(AllowList::parse("R3 \"x\" reason\n", "l").is_err()); // no file
+        assert!(AllowList::parse("", "l").unwrap().entries.is_empty());
+    }
+
+    #[test]
+    fn one_entry_can_cover_repeated_sites_in_one_file() {
+        let al =
+            AllowList::parse("R3 rust/src/a.rs \"Instant::now\" deadline\n", "lint.allow").unwrap();
+        let fs = vec![
+            finding("R3", "rust/src/a.rs", "a Instant::now() b"),
+            finding("R3", "rust/src/a.rs", "c Instant::now() d"),
+        ];
+        let (remaining, baselined, _) = al.apply(fs);
+        assert!(remaining.is_empty());
+        assert_eq!(baselined.len(), 2);
+    }
+}

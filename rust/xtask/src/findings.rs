@@ -1,0 +1,118 @@
+//! Lint findings and their two output forms: human-readable
+//! `file:line [rule] text — hint` lines and machine-readable JSON
+//! (hand-rolled, like `rust/src/bench/report.rs`).
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id: "R1".."R6", or "R0" for baseline hygiene.
+    pub rule: &'static str,
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-based line; 0 for file-level findings.
+    pub line: usize,
+    /// Trimmed source line (or a synthesized description). `lint.allow`
+    /// needles match against this text, so it is line-number stable.
+    pub text: String,
+    /// How to fix it.
+    pub hint: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &str, line: usize, text: String, hint: &str) -> Finding {
+        Finding { rule, file: file.to_string(), line, text, hint: hint.to_string() }
+    }
+}
+
+/// Deterministic ordering: file, then line, then rule.
+pub fn sort(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+/// `file:line [rule] text` with an indented fix hint, one finding per
+/// block.
+pub fn render_human(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{} [{}] {}\n    fix: {}\n", f.file, f.line, f.rule, f.text, f.hint));
+    }
+    out
+}
+
+/// A JSON array of finding objects.
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"rule\": {}, \"file\": {}, \"line\": {}, \"text\": {}, \"hint\": {}}}",
+            json_str(f.rule),
+            json_str(&f.file),
+            f.line,
+            json_str(&f.text),
+            json_str(&f.hint)
+        ));
+    }
+    out.push_str(if findings.is_empty() { "]" } else { "\n]" });
+    out.push('\n');
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_output_has_location_rule_and_hint() {
+        let f = vec![Finding::new("R3", "rust/src/a.rs", 7, "x".into(), "use Clock")];
+        let h = render_human(&f);
+        assert!(h.contains("rust/src/a.rs:7 [R3] x"));
+        assert!(h.contains("fix: use Clock"));
+    }
+
+    #[test]
+    fn json_output_escapes_and_is_wellformed() {
+        let f = vec![Finding::new("R1", "a.rs", 1, "say \"hi\"\t".into(), "h")];
+        let j = render_json(&f);
+        assert!(j.contains("\\\"hi\\\""));
+        assert!(j.contains("\\t"));
+        assert!(j.trim_end().starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert_eq!(render_json(&[]).trim_end(), "[]");
+    }
+
+    #[test]
+    fn sort_is_by_file_line_rule() {
+        let mut f = vec![
+            Finding::new("R6", "b.rs", 1, String::new(), ""),
+            Finding::new("R3", "a.rs", 9, String::new(), ""),
+            Finding::new("R1", "a.rs", 2, String::new(), ""),
+        ];
+        sort(&mut f);
+        assert_eq!(f[0].file, "a.rs");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[2].file, "b.rs");
+    }
+}

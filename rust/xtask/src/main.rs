@@ -1,0 +1,219 @@
+//! `cargo xtask lint` — the repo's invariant checker (DESIGN.md §14).
+//!
+//! Scans `rust/src` + `rust/tests` and enforces rules R1–R6 against
+//! the `lint.allow` baseline. Exit codes: 0 clean, 1 findings, 2
+//! usage or I/O error.
+
+mod allow;
+mod findings;
+mod rules;
+mod scan;
+
+use findings::Finding;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+usage: cargo xtask lint [--json] [--allow PATH] [--root PATH]
+
+Checks the DESIGN.md \u{a7}14 invariants over rust/src and rust/tests:
+  R1 config-registry coherence   R2 frame-kind registry
+  R3 clock-seam                  R4 panic-free wire decode
+  R5 engine-per-thread           R6 no timing sleeps in tests
+plus R0, baseline hygiene (stale lint.allow entries).
+
+  --json        machine-readable findings on stdout
+  --allow PATH  baseline file (default: <root>/lint.allow)
+  --root PATH   repo root (default: the workspace this xtask belongs to)
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => lint(&args[1..]),
+        Some("--help") | Some("-h") | Some("help") => {
+            print!("{USAGE}");
+            ExitCode::SUCCESS
+        }
+        _ => {
+            eprint!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint(args: &[String]) -> ExitCode {
+    let mut json = false;
+    let mut root = default_root();
+    let mut allow_path: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--allow" => match it.next() {
+                Some(p) => allow_path = Some(PathBuf::from(p)),
+                None => return usage_err("--allow needs a path"),
+            },
+            "--root" => match it.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => return usage_err("--root needs a path"),
+            },
+            other => return usage_err(&format!("unknown argument `{other}`")),
+        }
+    }
+    let allow_path = allow_path.unwrap_or_else(|| root.join("lint.allow"));
+    match run_lint(&root, &allow_path) {
+        Ok((remaining, baselined)) => {
+            if json {
+                print!("{}", findings::render_json(&remaining));
+            } else {
+                print!("{}", findings::render_human(&remaining));
+            }
+            eprintln!(
+                "xtask lint: {} finding(s), {} baselined ({})",
+                remaining.len(),
+                baselined,
+                allow_path.display()
+            );
+            if remaining.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage_err(msg: &str) -> ExitCode {
+    eprintln!("xtask: {msg}");
+    eprint!("{USAGE}");
+    ExitCode::from(2)
+}
+
+/// Repo root = two levels above this crate (rust/xtask → repo).
+fn default_root() -> PathBuf {
+    let mani = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    mani.parent()
+        .and_then(|p| p.parent())
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Scan, rule-check, baseline-filter. Returns the actionable findings
+/// (rule violations plus R0 stale-baseline entries, sorted) and the
+/// count of baselined ones.
+fn run_lint(root: &Path, allow_path: &Path) -> Result<(Vec<Finding>, usize), String> {
+    let tree = scan::Tree::load(root).map_err(|e| format!("scanning {}: {e}", root.display()))?;
+    if tree.files.is_empty() {
+        return Err(format!("no .rs files under {}/rust/{{src,tests}}", root.display()));
+    }
+    let raw = rules::run_all(&tree);
+    let allow = allow::AllowList::load(allow_path)?;
+    let (mut remaining, baselined, stale) = allow.apply(raw);
+    remaining.extend(stale);
+    findings::sort(&mut remaining);
+    Ok((remaining, baselined.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    /// A throwaway on-disk repo with the minimal coherent R1/R2 core
+    /// plus the given extra files.
+    fn scratch_repo(extra: &[(&str, &str)]) -> PathBuf {
+        let seq = DIR_SEQ.fetch_add(1, Ordering::SeqCst);
+        let root =
+            std::env::temp_dir().join(format!("xtask-lint-{}-{seq}", std::process::id()));
+        let base: &[(&str, &str)] = &[
+            (
+                "rust/src/config/mod.rs",
+                "pub struct TrainConfig { pub lr: f64 }\n\
+                 impl TrainConfig {\n\
+                 pub fn from_raw(&mut self) { self.lr = 0.0; }\n\
+                 pub fn set(&mut self) { self.lr = 1.0; }\n\
+                 pub fn to_cli_args(&self) { kv(\"lr\"); }\n\
+                 pub fn validate(&self) {}\n}\n",
+            ),
+            ("rust/src/main.rs", "fn usage() { print(\"keys: lr\"); }\nfn main() {}\n"),
+            (
+                "rust/src/net/frame.rs",
+                "pub enum FrameKind { Hello = 0 }\n\
+                 impl FrameKind {\n\
+                 pub const ALL: [FrameKind; 1] = [FrameKind::Hello];\n\
+                 pub fn from_byte(b: u8) -> Option<FrameKind> { ALL.get(b as usize).copied() }\n\
+                 }\n",
+            ),
+            ("rust/src/net/wire.rs", "fn go() { let _ = FrameKind::Hello; }\n"),
+        ];
+        for (rel, body) in base.iter().chain(extra.iter()) {
+            let p = root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(p, body).unwrap();
+        }
+        root
+    }
+
+    #[test]
+    fn end_to_end_clean_tree_is_clean() {
+        let root = scratch_repo(&[]);
+        let (remaining, baselined) = run_lint(&root, &root.join("lint.allow")).unwrap();
+        assert!(remaining.is_empty(), "{remaining:?}");
+        assert_eq!(baselined, 0);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn end_to_end_finding_then_baseline_then_stale() {
+        let root = scratch_repo(&[(
+            "rust/src/net/control.rs",
+            "fn tick() { let t = Instant::now(); }\n",
+        )]);
+        // 1. the violation is reported
+        let (remaining, _) = run_lint(&root, &root.join("lint.allow")).unwrap();
+        assert_eq!(remaining.len(), 1, "{remaining:?}");
+        assert_eq!(remaining[0].rule, "R3");
+        // 2. a justified baseline entry suppresses it
+        fs::write(
+            root.join("lint.allow"),
+            "R3 rust/src/net/control.rs \"Instant::now\" heartbeat is wall-clock by design\n",
+        )
+        .unwrap();
+        let (remaining, baselined) = run_lint(&root, &root.join("lint.allow")).unwrap();
+        assert!(remaining.is_empty(), "{remaining:?}");
+        assert_eq!(baselined, 1);
+        // 3. fixing the code makes the entry stale -> R0
+        fs::write(root.join("rust/src/net/control.rs"), "fn tick() {}\n").unwrap();
+        let (remaining, _) = run_lint(&root, &root.join("lint.allow")).unwrap();
+        assert_eq!(remaining.len(), 1, "{remaining:?}");
+        assert_eq!(remaining[0].rule, "R0");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn end_to_end_deleting_a_usage_row_fails_r1() {
+        let root = scratch_repo(&[]);
+        fs::write(root.join("rust/src/main.rs"), "fn usage() { print(\"keys:\"); }\n").unwrap();
+        let (remaining, _) = run_lint(&root, &root.join("lint.allow")).unwrap();
+        assert_eq!(remaining.len(), 1, "{remaining:?}");
+        assert_eq!(remaining[0].rule, "R1");
+        assert!(remaining[0].text.contains("`lr`"));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn malformed_baseline_is_a_hard_error() {
+        let root = scratch_repo(&[]);
+        fs::write(root.join("lint.allow"), "R3 rust/src/a.rs \"x\"\n").unwrap();
+        assert!(run_lint(&root, &root.join("lint.allow")).is_err());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,137 @@
+//! R3 — the clock seam.
+//!
+//! Deadline logic must stay deterministic under `MockClock`, so
+//! production code reads time through `serve::clock::Clock` and paces
+//! polls with `net::frame::POLL_INTERVAL`. Raw `Instant::now`,
+//! `SystemTime::now` and ad-hoc `thread::sleep` durations are flagged
+//! outside the sanctioned seams:
+//!
+//! - `rust/src/serve/clock.rs` (the seam itself: `SystemClock`)
+//! - `rust/src/net/retry.rs` (backoff/pacing primitives built on it)
+//! - `thread::sleep(POLL_INTERVAL)` / `thread::sleep(POLL)` pacing
+//! - `#[cfg(test)]` code (R6 governs tests instead)
+//!
+//! Anything else needs a one-line justification in `lint.allow`.
+
+use crate::findings::Finding;
+use crate::scan::{self, SourceFile, Tree};
+
+const SEAM_FILES: [&str; 2] = ["rust/src/serve/clock.rs", "rust/src/net/retry.rs"];
+
+pub fn check(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !f.rel.starts_with("rust/src/") || SEAM_FILES.contains(&f.rel.as_str()) {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime::now"] {
+            let mut from = 0usize;
+            while let Some(at) = scan::find_word_from(&f.masked, pat, from) {
+                from = at + 1;
+                if f.in_test(at) {
+                    continue;
+                }
+                out.push(Finding::new(
+                    "R3",
+                    &f.rel,
+                    f.line_of(at),
+                    f.line_text(f.line_of(at)).to_string(),
+                    "read time through serve::clock::Clock (now_us) so MockClock can \
+                     drive it; if wall-clock is genuinely required, baseline it with \
+                     a reason in lint.allow",
+                ));
+            }
+        }
+        let mut from = 0usize;
+        while let Some(at) = scan::find_word_from(&f.masked, "thread::sleep", from) {
+            from = at + 1;
+            if f.in_test(at) || sleep_arg_is_poll(f, at) {
+                continue;
+            }
+            out.push(Finding::new(
+                "R3",
+                &f.rel,
+                f.line_of(at),
+                f.line_text(f.line_of(at)).to_string(),
+                "pace polls with net::frame::POLL_INTERVAL (or \
+                 net::retry::sleep_interruptible for computed delays); baseline with \
+                 a reason if a raw sleep is inherent",
+            ));
+        }
+    }
+    out
+}
+
+/// `thread::sleep(POLL_INTERVAL)` (any path to it) and the `POLL`
+/// re-export are the sanctioned poll cadence.
+fn sleep_arg_is_poll(f: &SourceFile, at: usize) -> bool {
+    let b = f.masked.as_bytes();
+    let mut k = at + "thread::sleep".len();
+    while k < b.len() && b[k].is_ascii_whitespace() {
+        k += 1;
+    }
+    if k >= b.len() || b[k] != b'(' {
+        return false;
+    }
+    let close = match scan::match_delim(&f.masked, k, b'(', b')') {
+        Some(c) => c,
+        None => return false,
+    };
+    let arg = f.masked[k + 1..close].trim();
+    arg == "POLL" || arg == "POLL_INTERVAL" || arg.ends_with("::POLL_INTERVAL")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allow::AllowList;
+    use crate::scan::fixture_tree;
+
+    #[test]
+    fn fires_on_raw_instant_and_ad_hoc_sleep() {
+        let src = "fn f() { let t = Instant::now(); \
+                   std::thread::sleep(Duration::from_millis(10)); }";
+        let tree = fixture_tree(&[("rust/src/net/control.rs", src)]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "R3"));
+    }
+
+    #[test]
+    fn passes_on_poll_interval_pacing_seam_files_and_tests() {
+        let paced = "fn f() { std::thread::sleep(POLL_INTERVAL); \
+                     std::thread::sleep(crate::net::frame::POLL_INTERVAL); \
+                     std::thread::sleep(POLL); }";
+        let seam = "pub fn new() -> SystemClock { SystemClock { start: Instant::now() } }";
+        let test = "fn p() {}\n#[cfg(test)]\nmod tests { fn t() { \
+                    std::thread::sleep(Duration::from_millis(1)); } }";
+        let tree = fixture_tree(&[
+            ("rust/src/net/param.rs", paced),
+            ("rust/src/serve/clock.rs", seam),
+            ("rust/src/serve/service.rs", test),
+        ]);
+        assert!(check(&tree).is_empty(), "{:?}", check(&tree));
+    }
+
+    #[test]
+    fn masked_strings_do_not_fire() {
+        let src = "fn f() { log(\"Instant::now is banned\"); }";
+        let tree = fixture_tree(&[("rust/src/metrics/mod.rs", src)]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn baselined_fixture_is_suppressed() {
+        let src = "fn f() { let started = Instant::now(); }";
+        let tree = fixture_tree(&[("rust/src/launch/mod.rs", src)]);
+        let al = AllowList::parse(
+            "R3 rust/src/launch/mod.rs \"Instant::now\" supervising real OS processes\n",
+            "lint.allow",
+        )
+        .unwrap();
+        let (remaining, baselined, stale) = al.apply(check(&tree));
+        assert!(remaining.is_empty());
+        assert_eq!(baselined.len(), 1);
+        assert!(stale.is_empty());
+    }
+}

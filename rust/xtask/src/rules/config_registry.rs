@@ -1,0 +1,264 @@
+//! R1 — config-registry coherence.
+//!
+//! `TrainConfig` keys live in five hand-maintained places: the struct
+//! itself, the file parser (`from_raw`), the CLI override parser
+//! (`set`), the re-serializer (`to_cli_args`) and the usage text in
+//! `main.rs`. PRs 6–9 each re-maintained that quintuple by memory;
+//! this rule makes the struct the source of truth and flags any key
+//! missing from the other four. (The reverse direction — a registry
+//! naming a field that does not exist — is already a compile error,
+//! and `validate()` is only required to exist: not every key has an
+//! invariant worth validating.)
+
+use crate::findings::Finding;
+use crate::scan::{self, SourceFile, Tree};
+
+const CONFIG: &str = "rust/src/config/mod.rs";
+const MAIN: &str = "rust/src/main.rs";
+
+pub fn check(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let cfg = match tree.file(CONFIG) {
+        Some(f) => f,
+        None => {
+            out.push(missing_file(CONFIG));
+            return out;
+        }
+    };
+    let fields = struct_fields(cfg, "TrainConfig");
+    if fields.is_empty() {
+        out.push(Finding::new(
+            "R1",
+            CONFIG,
+            0,
+            "struct TrainConfig not found (or has no pub fields)".into(),
+            "R1 treats TrainConfig's pub fields as the key registry of record",
+        ));
+        return out;
+    }
+    for (fn_name, label, hint) in [
+        ("from_raw", "the file parser", "parse the key in TrainConfig::from_raw"),
+        ("set", "the CLI override parser", "add a match arm for the key in TrainConfig::set"),
+        (
+            "to_cli_args",
+            "to_cli_args",
+            "emit the key in TrainConfig::to_cli_args so launch re-serializes it for workers",
+        ),
+    ] {
+        check_registry(cfg, fn_name, label, hint, &fields, &mut out);
+    }
+    if fn_bodies(cfg, "validate").is_empty() {
+        out.push(Finding::new(
+            "R1",
+            CONFIG,
+            0,
+            "fn validate not found in config/mod.rs".into(),
+            "TrainConfig::validate is a required registry place; do not delete it",
+        ));
+    }
+    match tree.file(MAIN) {
+        Some(main) => check_registry(
+            main,
+            "usage",
+            "the usage text",
+            "list the key in the usage() text in main.rs",
+            &fields,
+            &mut out,
+        ),
+        None => out.push(missing_file(MAIN)),
+    }
+    out
+}
+
+fn missing_file(rel: &str) -> Finding {
+    Finding::new(
+        "R1",
+        rel,
+        0,
+        format!("expected file {rel} is missing"),
+        "R1 needs both config/mod.rs and main.rs to cross-check the key registry",
+    )
+}
+
+/// Flag every struct field not mentioned (as identifier or inside a
+/// string literal) in any same-named non-test fn of `file`.
+fn check_registry(
+    file: &SourceFile,
+    fn_name: &str,
+    label: &str,
+    hint: &str,
+    fields: &[String],
+    out: &mut Vec<Finding>,
+) {
+    let bodies = fn_bodies(file, fn_name);
+    if bodies.is_empty() {
+        out.push(Finding::new(
+            "R1",
+            &file.rel,
+            0,
+            format!("fn {fn_name} not found in {}", file.rel),
+            hint,
+        ));
+        return;
+    }
+    let line = file.line_of(bodies[0].0);
+    for key in fields {
+        let seen = bodies.iter().any(|&(lo, hi)| mentions(file, lo, hi, key));
+        if !seen {
+            out.push(Finding::new(
+                "R1",
+                &file.rel,
+                line,
+                format!("config key `{key}` is missing from {label} (fn {fn_name})"),
+                hint,
+            ));
+        }
+    }
+}
+
+/// `(sig_start, body_end)` spans of all non-test fns named `name`.
+fn fn_bodies(file: &SourceFile, name: &str) -> Vec<(usize, usize)> {
+    file.fns
+        .iter()
+        .filter(|f| f.name == name && !file.in_test(f.sig_start))
+        .map(|f| (f.sig_start, f.body_end))
+        .collect()
+}
+
+/// Does the span mention `key`, either as a code identifier or as a
+/// whole word inside a string literal (match arms and usage text name
+/// keys as strings)?
+fn mentions(file: &SourceFile, lo: usize, hi: usize, key: &str) -> bool {
+    scan::has_word(&file.masked[lo..hi], key)
+        || file.strings_in(lo, hi).iter().any(|s| scan::has_word(s, key))
+}
+
+/// Ordered pub field names of `struct <name>`.
+fn struct_fields(file: &SourceFile, name: &str) -> Vec<String> {
+    let b = file.masked.as_bytes();
+    let ids = scan::idents(&file.masked, 0, file.masked.len());
+    for w in ids.windows(2) {
+        if w[0].1 != "struct" || w[1].1 != name {
+            continue;
+        }
+        let mut k = w[1].0 + name.len();
+        while k < b.len() && b[k] != b'{' && b[k] != b';' {
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b'{' {
+            return Vec::new();
+        }
+        let close = scan::match_brace(&file.masked, k).unwrap_or(file.masked.len());
+        let inner = scan::idents(&file.masked, k, close);
+        let mut fields = Vec::new();
+        let mut i = 0usize;
+        while i + 1 < inner.len() {
+            if inner[i].1 == "pub" {
+                let mut fi = i + 1;
+                if inner[fi].1 == "crate" && fi + 1 < inner.len() {
+                    fi += 1; // pub(crate) visibility
+                }
+                let (off, fname) = inner[fi];
+                let mut j = off + fname.len();
+                while j < b.len() && b[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b':' {
+                    fields.push(fname.to_string());
+                }
+                i = fi + 1;
+            } else {
+                i += 1;
+            }
+        }
+        return fields;
+    }
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allow::AllowList;
+    use crate::scan::fixture_tree;
+
+    const GOOD_CONFIG: &str = r#"
+pub struct TrainConfig { pub lr: f64, pub seed: u64 }
+impl TrainConfig {
+    pub fn from_raw(&mut self) { self.lr = 0.0; self.seed = 1; }
+    pub fn set(&mut self, k: &str) { match k { "lr" => {}, "seed" => {}, _ => {} } }
+    pub fn to_cli_args(&self) -> Vec<String> { vec![kv("lr"), kv("seed")] }
+    pub fn validate(&self) {}
+}
+"#;
+
+    #[test]
+    fn passes_when_every_key_is_in_every_registry() {
+        let tree = fixture_tree(&[
+            ("rust/src/config/mod.rs", GOOD_CONFIG),
+            ("rust/src/main.rs", "fn usage() { print(\"keys: lr seed\"); }"),
+        ]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn fires_on_key_missing_from_usage_text() {
+        let tree = fixture_tree(&[
+            ("rust/src/config/mod.rs", GOOD_CONFIG),
+            ("rust/src/main.rs", "fn usage() { print(\"keys: lr\"); }"),
+        ]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "R1");
+        assert_eq!(f[0].file, "rust/src/main.rs");
+        assert!(f[0].text.contains("`seed`"));
+        assert!(f[0].text.contains("usage"));
+    }
+
+    #[test]
+    fn fires_on_key_missing_from_to_cli_args() {
+        let cfg = GOOD_CONFIG.replace(", kv(\"seed\")", "");
+        let tree = fixture_tree(&[
+            ("rust/src/config/mod.rs", cfg.as_str()),
+            ("rust/src/main.rs", "fn usage() { print(\"keys: lr seed\"); }"),
+        ]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].text.contains("to_cli_args"));
+    }
+
+    #[test]
+    fn substring_keys_do_not_mask_each_other() {
+        // `max_train_steps` present must not satisfy a `train_steps` key
+        let cfg = "pub struct TrainConfig { pub train_steps: u64 }\n\
+                   impl TrainConfig {\n\
+                   pub fn from_raw(&mut self) { self.train_steps = 1; }\n\
+                   pub fn set(&mut self) { self.train_steps = 2; }\n\
+                   pub fn to_cli_args(&self) { kv(\"train_steps\"); }\n\
+                   pub fn validate(&self) {}\n}\n";
+        let tree = fixture_tree(&[
+            ("rust/src/config/mod.rs", cfg),
+            ("rust/src/main.rs", "fn usage() { print(\"keys: max_train_steps\"); }"),
+        ]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].text.contains("`train_steps`"));
+    }
+
+    #[test]
+    fn baselined_fixture_is_suppressed() {
+        let tree = fixture_tree(&[
+            ("rust/src/config/mod.rs", GOOD_CONFIG),
+            ("rust/src/main.rs", "fn usage() { print(\"keys: lr\"); }"),
+        ]);
+        let al = AllowList::parse(
+            "R1 rust/src/main.rs \"missing from the usage text\" legacy key, hidden on purpose\n",
+            "lint.allow",
+        )
+        .unwrap();
+        let (remaining, baselined, stale) = al.apply(check(&tree));
+        assert!(remaining.is_empty());
+        assert_eq!(baselined.len(), 1);
+        assert!(stale.is_empty());
+    }
+}

@@ -1,0 +1,188 @@
+//! R5 — engine-per-thread.
+//!
+//! PJRT artifacts are `Rc`-based and must stay on the thread that
+//! loaded them; `serve/service.rs` crosses threads with a `Send`
+//! *backend factory* and builds the `Engine` on the worker thread.
+//! Two things defeat that discipline and are flagged: `unsafe impl
+//! Send/Sync` anywhere (which would let `Rc` state cross threads
+//! behind the compiler's back), and a `let` binding of engine/`Rc`
+//! state that is then captured by a `thread::spawn(..)`/`.spawn(..)`
+//! closure in the same function.
+
+use crate::findings::Finding;
+use crate::scan::{self, SourceFile, Tree};
+
+const RC_MARKERS: [&str; 5] = ["Engine::load(", "Rc::new(", ".artifact(", "Rc<", ": Engine"];
+
+pub fn check(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !f.rel.starts_with("rust/src/") {
+            continue;
+        }
+        check_unsafe_send(f, &mut out);
+        check_spawn_captures(f, &mut out);
+    }
+    out
+}
+
+/// `unsafe impl Send/Sync` is never acceptable in this codebase, tests
+/// included.
+fn check_unsafe_send(f: &SourceFile, out: &mut Vec<Finding>) {
+    let ids = scan::idents(&f.masked, 0, f.masked.len());
+    for w in ids.windows(2) {
+        if w[0].1 != "unsafe" || w[1].1 != "impl" {
+            continue;
+        }
+        let open = f.masked[w[1].0..].find('{').map(|p| w[1].0 + p).unwrap_or(f.masked.len());
+        let header = &f.masked[w[0].0..open];
+        if scan::has_word(header, "Send") || scan::has_word(header, "Sync") {
+            out.push(Finding::new(
+                "R5",
+                &f.rel,
+                f.line_of(w[0].0),
+                f.line_text(f.line_of(w[0].0)).to_string(),
+                "never assert Send/Sync for engine state: keep Rc<Artifact>/Engine \
+                 on one thread and cross threads with a Send factory instead \
+                 (see serve/service.rs)",
+            ));
+        }
+    }
+}
+
+/// A `let` whose initializer or type mentions engine/`Rc` state, later
+/// named inside a `spawn(..)` argument, is a cross-thread capture.
+fn check_spawn_captures(f: &SourceFile, out: &mut Vec<Finding>) {
+    let b = f.masked.as_bytes();
+    let mut from = 0usize;
+    while let Some(at) = scan::find_word_from(&f.masked, "spawn", from) {
+        from = at + 1;
+        if f.in_test(at) {
+            continue;
+        }
+        // only call sites: `thread::spawn(..)` / `builder.spawn(..)`
+        let is_call = at >= 1 && (b[at - 1] == b'.' || (at >= 2 && &f.masked[at - 2..at] == "::"));
+        if !is_call {
+            continue;
+        }
+        let mut k = at + "spawn".len();
+        while k < b.len() && b[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b'(' {
+            continue;
+        }
+        let close = match scan::match_delim(&f.masked, k, b'(', b')') {
+            Some(c) => c,
+            None => continue,
+        };
+        let enclosing = match f.enclosing_fn(at) {
+            Some(s) => s,
+            None => continue,
+        };
+        let arg = &f.masked[k..close + 1];
+        for (name, stmt) in let_bindings(f, enclosing.body_start, at) {
+            // a closure initializer (`let make_backend = move || Engine::load(..)`)
+            // defers construction to the spawned thread — that IS the
+            // sanctioned factory pattern, not a capture of live state
+            let init_is_closure = stmt
+                .splitn(2, '=')
+                .nth(1)
+                .map(|s| {
+                    let t = s.trim_start();
+                    t.starts_with('|') || t.starts_with("move")
+                })
+                .unwrap_or(false);
+            let suspicious = !init_is_closure && RC_MARKERS.iter().any(|m| stmt.contains(m));
+            if suspicious && scan::has_word(arg, &name) {
+                out.push(Finding::new(
+                    "R5",
+                    &f.rel,
+                    f.line_of(at),
+                    format!("`{name}` (engine/Rc state) is captured by a spawn closure"),
+                    "build the engine on the worker thread via a Send factory closure; \
+                     Rc<Artifact>/Engine must not cross thread::spawn",
+                ));
+            }
+        }
+    }
+}
+
+/// `(binding name, full let-statement text)` for every `let` in the
+/// span.
+fn let_bindings(f: &SourceFile, lo: usize, hi: usize) -> Vec<(String, String)> {
+    let ids = scan::idents(&f.masked, lo, hi);
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < ids.len() {
+        if ids[i].1 == "let" {
+            let mut ni = i + 1;
+            if ni < ids.len() && ids[ni].1 == "mut" {
+                ni += 1;
+            }
+            if ni < ids.len() {
+                let (off, name) = ids[ni];
+                let end = f.masked[off..hi.min(f.masked.len())]
+                    .find(';')
+                    .map(|p| off + p)
+                    .unwrap_or(hi.min(f.masked.len()));
+                out.push((name.to_string(), f.masked[ids[i].0..end].to_string()));
+            }
+            i = ni + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allow::AllowList;
+    use crate::scan::fixture_tree;
+
+    #[test]
+    fn fires_on_engine_captured_by_spawn() {
+        let src = "fn serve() {\n\
+                   let engine = Engine::load(&art);\n\
+                   std::thread::spawn(move || engine.run());\n}\n";
+        let tree = fixture_tree(&[("rust/src/serve/service.rs", src)]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].text.contains("`engine`"));
+    }
+
+    #[test]
+    fn fires_on_unsafe_impl_send() {
+        let src = "struct E(Rc<u8>);\nunsafe impl Send for E {}\n";
+        let tree = fixture_tree(&[("rust/src/engine/mod.rs", src)]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].text.contains("unsafe impl Send"));
+    }
+
+    #[test]
+    fn passes_on_send_factory_pattern() {
+        let src = "fn serve(art: Artifact) {\n\
+                   let make_backend = move || Engine::load(&art);\n\
+                   std::thread::spawn(move || { let engine = make_backend(); engine.run() });\n}\n";
+        let tree = fixture_tree(&[("rust/src/serve/service.rs", src)]);
+        assert!(check(&tree).is_empty(), "{:?}", check(&tree));
+    }
+
+    #[test]
+    fn baselined_fixture_is_suppressed() {
+        let src = "fn f() { let shared = Rc::new(3); std::thread::spawn(move || shared); }";
+        let tree = fixture_tree(&[("rust/src/systems/mod.rs", src)]);
+        let al = AllowList::parse(
+            "R5 rust/src/systems/mod.rs \"`shared`\" audited: value is moved, not aliased\n",
+            "lint.allow",
+        )
+        .unwrap();
+        let (remaining, baselined, stale) = al.apply(check(&tree));
+        assert!(remaining.is_empty());
+        assert_eq!(baselined.len(), 1);
+        assert!(stale.is_empty());
+    }
+}

@@ -1,0 +1,325 @@
+//! R2 — frame-kind registry coherence.
+//!
+//! `FrameKind::from_byte` decodes by indexing `ALL` with the wire
+//! discriminant, so four things must stay true at once: discriminants
+//! are exactly `0..n-1` in declaration order, `ALL` lists every
+//! variant in that same order, `from_byte` actually decodes via the
+//! registry, and every kind is referenced somewhere outside the
+//! registry file (a kind nobody sends or handles is silent drift).
+
+use crate::findings::Finding;
+use crate::scan::{self, SourceFile, Tree};
+
+const FRAME: &str = "rust/src/net/frame.rs";
+
+pub fn check(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let f = match tree.file(FRAME) {
+        Some(f) => f,
+        None => {
+            out.push(Finding::new(
+                "R2",
+                FRAME,
+                0,
+                "net/frame.rs is missing".into(),
+                "the FrameKind registry lives in net/frame.rs",
+            ));
+            return out;
+        }
+    };
+    let variants = enum_variants(f, "FrameKind");
+    if variants.is_empty() {
+        out.push(Finding::new(
+            "R2",
+            FRAME,
+            0,
+            "enum FrameKind not found".into(),
+            "net/frame.rs must declare the FrameKind wire registry",
+        ));
+        return out;
+    }
+    // discriminants: 0..n-1 in declaration order (from_byte indexes ALL)
+    let mut next = 0u64;
+    for (i, (off, name, disc)) in variants.iter().enumerate() {
+        let v = disc.unwrap_or(next);
+        next = v + 1;
+        if v != i as u64 {
+            out.push(Finding::new(
+                "R2",
+                FRAME,
+                f.line_of(*off),
+                format!("FrameKind::{name} has discriminant {v}, expected {i}"),
+                "from_byte indexes ALL by discriminant; keep discriminants dense, \
+                 ascending and in declaration order",
+            ));
+        }
+    }
+    let names: Vec<&str> = variants.iter().map(|(_, n, _)| n.as_str()).collect();
+    match all_array(f) {
+        Some((all_off, declared_len, items)) => {
+            let line = f.line_of(all_off);
+            if declared_len != names.len() || items.len() != names.len() {
+                out.push(Finding::new(
+                    "R2",
+                    FRAME,
+                    line,
+                    format!(
+                        "ALL registry has {} entries (declared {declared_len}) for {} variants",
+                        items.len(),
+                        names.len()
+                    ),
+                    "every FrameKind variant must appear in ALL exactly once",
+                ));
+            }
+            for (i, it) in items.iter().enumerate() {
+                if names.get(i) != Some(&it.as_str()) {
+                    out.push(Finding::new(
+                        "R2",
+                        FRAME,
+                        line,
+                        format!(
+                            "ALL[{i}] is {it}, but declaration order says {}",
+                            names.get(i).copied().unwrap_or("<nothing>")
+                        ),
+                        "ALL must list the variants in declaration order so indexing \
+                         by discriminant round-trips",
+                    ));
+                    break; // one ordering finding, not a cascade
+                }
+            }
+        }
+        None => out.push(Finding::new(
+            "R2",
+            FRAME,
+            0,
+            "const ALL: [FrameKind; N] registry not found".into(),
+            "declare the ALL registry next to the enum; from_byte decodes through it",
+        )),
+    }
+    let from_byte: Vec<&scan::FnSpan> =
+        f.fns.iter().filter(|s| s.name == "from_byte" && !f.in_test(s.sig_start)).collect();
+    match from_byte.first() {
+        Some(fb) => {
+            let body = &f.masked[fb.body_start..fb.body_end];
+            let via_registry = scan::has_word(body, "ALL");
+            let names_all = names.iter().all(|n| scan::has_word(body, n));
+            if !via_registry && !names_all {
+                out.push(Finding::new(
+                    "R2",
+                    FRAME,
+                    f.line_of(fb.sig_start),
+                    "from_byte does not decode via the ALL registry".into(),
+                    "decode with ALL.get(byte) (or handle every variant explicitly) so \
+                     new kinds cannot be silently undecodable",
+                ));
+            }
+        }
+        None => out.push(Finding::new(
+            "R2",
+            FRAME,
+            0,
+            "fn from_byte not found".into(),
+            "FrameKind::from_byte is the only sanctioned wire decoder for kinds",
+        )),
+    }
+    // every kind must be referenced outside the registry file
+    for (off, name, _) in &variants {
+        let pat = format!("FrameKind::{name}");
+        let used = tree.files.iter().any(|g| {
+            g.rel != FRAME && g.rel.starts_with("rust/src/") && scan::has_word(&g.masked, &pat)
+        });
+        if !used {
+            out.push(Finding::new(
+                "R2",
+                FRAME,
+                f.line_of(*off),
+                format!("FrameKind::{name} is never referenced outside net/frame.rs"),
+                "a kind nobody sends or handles is dead wire surface: wire it into \
+                 net/wire.rs / its subsystem, or delete the variant",
+            ));
+        }
+    }
+    out
+}
+
+/// `(offset, name, explicit discriminant)` for each variant of
+/// `enum <name>`.
+fn enum_variants(f: &SourceFile, name: &str) -> Vec<(usize, String, Option<u64>)> {
+    let b = f.masked.as_bytes();
+    let ids = scan::idents(&f.masked, 0, f.masked.len());
+    for w in ids.windows(2) {
+        if w[0].1 != "enum" || w[1].1 != name {
+            continue;
+        }
+        let mut k = w[1].0 + name.len();
+        while k < b.len() && b[k] != b'{' {
+            k += 1;
+        }
+        let close = match scan::match_brace(&f.masked, k) {
+            Some(c) => c,
+            None => return Vec::new(),
+        };
+        let mut out = Vec::new();
+        let mut i = k + 1;
+        while i < close {
+            if b[i].is_ascii_whitespace() || b[i] == b',' {
+                i += 1;
+            } else if b[i] == b'#' && b.get(i + 1) == Some(&b'[') {
+                i = scan::match_delim(&f.masked, i + 1, b'[', b']').map(|c| c + 1).unwrap_or(close);
+            } else if scan::is_ident_byte(b[i]) && !b[i].is_ascii_digit() {
+                let start = i;
+                while i < close && scan::is_ident_byte(b[i]) {
+                    i += 1;
+                }
+                let vname = f.masked[start..i].to_string();
+                let mut j = i;
+                while j < close && b[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                let mut disc = None;
+                if j < close && b[j] == b'=' {
+                    j += 1;
+                    while j < close && b[j].is_ascii_whitespace() {
+                        j += 1;
+                    }
+                    let ds = j;
+                    while j < close && b[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                    if j > ds {
+                        disc = f.masked[ds..j].parse::<u64>().ok();
+                    }
+                }
+                out.push((start, vname, disc));
+                // skip to the variant-separating comma (robust to tuple
+                // or struct payloads, though FrameKind has neither)
+                while j < close && b[j] != b',' {
+                    match b[j] {
+                        b'(' => {
+                            j = scan::match_delim(&f.masked, j, b'(', b')')
+                                .map(|c| c + 1)
+                                .unwrap_or(close)
+                        }
+                        b'{' => {
+                            j = scan::match_brace(&f.masked, j).map(|c| c + 1).unwrap_or(close)
+                        }
+                        _ => j += 1,
+                    }
+                }
+                i = j;
+            } else {
+                i += 1;
+            }
+        }
+        return out;
+    }
+    Vec::new()
+}
+
+/// The `const ALL: [FrameKind; N] = [...]` registry:
+/// `(offset, declared_len, item names)`.
+fn all_array(f: &SourceFile) -> Option<(usize, usize, Vec<String>)> {
+    let b = f.masked.as_bytes();
+    let mut from = 0usize;
+    while let Some(off) = scan::find_word_from(&f.masked, "ALL", from) {
+        from = off + 1;
+        let mut k = off + 3;
+        while k < b.len() && b[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b':' {
+            continue; // a use like `Self::ALL.get(..)`, not the declaration
+        }
+        while k < b.len() && b[k] != b'[' && b[k] != b';' {
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b'[' {
+            continue;
+        }
+        let ty_close = scan::match_delim(&f.masked, k, b'[', b']')?;
+        let declared_len: usize =
+            f.masked[k + 1..ty_close].rsplit(';').next()?.trim().parse().ok()?;
+        let mut m = ty_close + 1;
+        while m < b.len() && b[m] != b'[' && b[m] != b';' {
+            m += 1;
+        }
+        if m >= b.len() || b[m] != b'[' {
+            continue;
+        }
+        let lit_close = scan::match_delim(&f.masked, m, b'[', b']')?;
+        let items = scan::idents(&f.masked, m, lit_close)
+            .into_iter()
+            .map(|(_, w)| w.to_string())
+            .filter(|w| w != "FrameKind" && w != "Self")
+            .collect();
+        return Some((off, declared_len, items));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allow::AllowList;
+    use crate::scan::fixture_tree;
+
+    const GOOD_FRAME: &str = "pub enum FrameKind { Hello = 0, Data = 1 }\n\
+        impl FrameKind {\n\
+        pub const ALL: [FrameKind; 2] = [FrameKind::Hello, FrameKind::Data];\n\
+        pub fn from_byte(b: u8) -> Option<FrameKind> { Self::ALL.get(b as usize).copied() }\n\
+        }\n";
+    const USER: &str = "fn go() { let _ = (FrameKind::Hello, FrameKind::Data); }\n";
+
+    #[test]
+    fn passes_on_coherent_registry() {
+        let tree =
+            fixture_tree(&[("rust/src/net/frame.rs", GOOD_FRAME), ("rust/src/net/wire.rs", USER)]);
+        assert!(check(&tree).is_empty(), "{:?}", check(&tree));
+    }
+
+    #[test]
+    fn fires_on_duplicate_discriminant() {
+        let bad = GOOD_FRAME.replace("Data = 1", "Data = 0");
+        let tree =
+            fixture_tree(&[("rust/src/net/frame.rs", bad.as_str()), ("rust/src/net/wire.rs", USER)]);
+        let f = check(&tree);
+        assert!(f.iter().any(|x| x.rule == "R2" && x.text.contains("discriminant 0, expected 1")));
+    }
+
+    #[test]
+    fn fires_on_all_registry_out_of_order_or_short() {
+        let bad = GOOD_FRAME.replace(
+            "[FrameKind::Hello, FrameKind::Data]",
+            "[FrameKind::Data, FrameKind::Hello]",
+        );
+        let tree =
+            fixture_tree(&[("rust/src/net/frame.rs", bad.as_str()), ("rust/src/net/wire.rs", USER)]);
+        assert!(check(&tree).iter().any(|x| x.text.contains("declaration order")));
+    }
+
+    #[test]
+    fn fires_on_unreferenced_kind() {
+        let user = "fn go() { let _ = FrameKind::Hello; }\n";
+        let tree =
+            fixture_tree(&[("rust/src/net/frame.rs", GOOD_FRAME), ("rust/src/net/wire.rs", user)]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].text.contains("FrameKind::Data is never referenced"));
+    }
+
+    #[test]
+    fn baselined_fixture_is_suppressed() {
+        let user = "fn go() { let _ = FrameKind::Hello; }\n";
+        let tree =
+            fixture_tree(&[("rust/src/net/frame.rs", GOOD_FRAME), ("rust/src/net/wire.rs", user)]);
+        let al = AllowList::parse(
+            "R2 rust/src/net/frame.rs \"FrameKind::Data is never referenced\" reserved kind\n",
+            "lint.allow",
+        )
+        .unwrap();
+        let (remaining, baselined, stale) = al.apply(check(&tree));
+        assert!(remaining.is_empty());
+        assert_eq!(baselined.len(), 1);
+        assert!(stale.is_empty());
+    }
+}

@@ -1,0 +1,24 @@
+//! The lint rules (DESIGN.md §14). Each rule is a pure function from
+//! the scanned [`Tree`] to findings, with its own fixture tests.
+
+pub mod clock_seam;
+pub mod config_registry;
+pub mod engine_thread;
+pub mod frame_registry;
+pub mod panic_free_decode;
+pub mod test_sleeps;
+
+use crate::findings::Finding;
+use crate::scan::Tree;
+
+/// Run every rule in id order.
+pub fn run_all(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(config_registry::check(tree)); // R1
+    out.extend(frame_registry::check(tree)); // R2
+    out.extend(clock_seam::check(tree)); // R3
+    out.extend(panic_free_decode::check(tree)); // R4
+    out.extend(engine_thread::check(tree)); // R5
+    out.extend(test_sleeps::check(tree)); // R6
+    out
+}

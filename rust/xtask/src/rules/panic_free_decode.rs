@@ -1,0 +1,114 @@
+//! R4 — panic-free wire decode.
+//!
+//! A malformed or truncated frame from a peer must surface as a typed
+//! `FrameError`, never as a panic that takes the worker down. The rule
+//! scans every non-test decode-path function in `rust/src/net/` —
+//! functions named `decode*`/`parse*`/`read*`/`from_byte`, plus every
+//! method of a `WireReader` impl — for `.unwrap()`, `.expect(..)` and
+//! the aborting macros.
+
+use crate::findings::Finding;
+use crate::scan::{self, Tree};
+
+const MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+const NAME_PREFIXES: [&str; 4] = ["decode", "parse", "read", "from_byte"];
+
+pub fn check(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        if !f.rel.starts_with("rust/src/net/") {
+            continue;
+        }
+        let b = f.masked.as_bytes();
+        let reader_impls: Vec<(usize, usize)> = f
+            .impls
+            .iter()
+            .filter(|im| im.header.contains("WireReader"))
+            .map(|im| (im.body_start, im.body_end))
+            .collect();
+        for span in &f.fns {
+            if f.in_test(span.sig_start) {
+                continue;
+            }
+            let in_reader =
+                reader_impls.iter().any(|&(lo, hi)| span.sig_start >= lo && span.sig_start < hi);
+            let named = NAME_PREFIXES.iter().any(|p| span.name.starts_with(p));
+            if !in_reader && !named {
+                continue;
+            }
+            for (off, w) in scan::idents(&f.masked, span.body_start, span.body_end) {
+                let panicky = match w {
+                    "unwrap" | "expect" => off > 0 && b[off - 1] == b'.',
+                    m if MACROS.contains(&m) => b.get(off + w.len()) == Some(&b'!'),
+                    _ => false,
+                };
+                if panicky {
+                    out.push(Finding::new(
+                        "R4",
+                        &f.rel,
+                        f.line_of(off),
+                        f.line_text(f.line_of(off)).to_string(),
+                        "decode paths must be panic-free: return a typed FrameError \
+                         (Truncated/BadKind/...) and let the caller decide",
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allow::AllowList;
+    use crate::scan::fixture_tree;
+
+    #[test]
+    fn fires_on_unwrap_in_named_decode_fn_and_in_wirereader_impl() {
+        let src = "fn decode_header(b: &[u8]) -> u32 { \
+                   u32::from_le_bytes(b[..4].try_into().unwrap()) }\n\
+                   impl<'a> WireReader<'a> {\n\
+                   fn skip(&mut self) { self.take(4).expect(\"short\"); }\n\
+                   }\n";
+        let tree = fixture_tree(&[("rust/src/net/wire.rs", src)]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "R4"));
+    }
+
+    #[test]
+    fn fires_on_abort_macros_but_not_on_unwrap_or_variants() {
+        let src = "fn read_frame(b: &[u8]) -> u8 { \
+                   if b.is_empty() { unreachable!(\"no\") } \
+                   b.first().copied().unwrap_or(0) }";
+        let tree = fixture_tree(&[("rust/src/net/frame.rs", src)]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].text.contains("unreachable!"));
+    }
+
+    #[test]
+    fn passes_outside_decode_paths_and_in_tests() {
+        let src = "fn encode(v: u16) -> u8 { u8::try_from(v).expect(\"fits\") }\n\
+                   #[cfg(test)]\nmod tests {\n\
+                   fn read_case() { decode(b\"x\").unwrap(); }\n}\n";
+        let tree = fixture_tree(&[("rust/src/net/wire.rs", src)]);
+        assert!(check(&tree).is_empty(), "{:?}", check(&tree));
+    }
+
+    #[test]
+    fn baselined_fixture_is_suppressed() {
+        let src = "fn parse_peer(s: &str) -> u16 { s.parse().unwrap() }";
+        let tree = fixture_tree(&[("rust/src/net/control.rs", src)]);
+        let al = AllowList::parse(
+            "R4 rust/src/net/control.rs \"s.parse().unwrap()\" operator-supplied, not wire input\n",
+            "lint.allow",
+        )
+        .unwrap();
+        let (remaining, baselined, stale) = al.apply(check(&tree));
+        assert!(remaining.is_empty());
+        assert_eq!(baselined.len(), 1);
+        assert!(stale.is_empty());
+    }
+}

@@ -1,0 +1,99 @@
+//! R6 — no timing sleeps in tests.
+//!
+//! A bare `thread::sleep(fixed duration)` in a test encodes a guess
+//! about scheduler timing and is exactly how chaos-tier tests go
+//! flaky. Tests must *poll* for the condition they wait on
+//! (`support::poll_until`). A sleep that is lexically inside a
+//! `while`/`for`/`loop` body is pacing such a poll and passes; a bare
+//! sleep standing in for a condition is flagged. Scope: all of
+//! `rust/tests/` plus `#[cfg(test)]` code in `rust/src/`.
+
+use crate::findings::Finding;
+use crate::scan::{self, Tree};
+
+pub fn check(tree: &Tree) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        let whole_file = f.rel.starts_with("rust/tests/");
+        if !whole_file && !f.rel.starts_with("rust/src/") {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(at) = scan::find_word_from(&f.masked, "thread::sleep", from) {
+            from = at + 1;
+            if !whole_file && !f.in_test(at) {
+                continue; // production code is R3's jurisdiction
+            }
+            let anchor = f.enclosing_fn(at).map(|s| s.body_start).unwrap_or(0);
+            if f.inside_loop(anchor, at) {
+                continue; // pacing a polling loop
+            }
+            out.push(Finding::new(
+                "R6",
+                &f.rel,
+                f.line_of(at),
+                f.line_text(f.line_of(at)).to_string(),
+                "poll for the condition instead of sleeping a fixed duration: \
+                 support::poll_until(what, deadline, cond) (rust/tests/support/mod.rs)",
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allow::AllowList;
+    use crate::scan::fixture_tree;
+
+    #[test]
+    fn fires_on_bare_sleep_in_tests_tree() {
+        let src = "#[test]\nfn t() {\n    start();\n    \
+                   std::thread::sleep(Duration::from_millis(50));\n    assert!(done());\n}\n";
+        let tree = fixture_tree(&[("rust/tests/dist_net.rs", src)]);
+        let f = check(&tree);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "R6");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn fires_in_cfg_test_regions_of_src() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n#[test]\nfn t() { \
+                   std::thread::sleep(D); }\n}\n";
+        let tree = fixture_tree(&[("rust/src/launch/mod.rs", src)]);
+        assert_eq!(check(&tree).len(), 1);
+    }
+
+    #[test]
+    fn passes_when_sleep_paces_a_polling_loop() {
+        let src = "#[test]\nfn t() {\n    while !done() {\n        \
+                   std::thread::sleep(Duration::from_millis(5));\n    }\n\
+                   for _ in 0..3 { std::thread::sleep(TICK); }\n}\n";
+        let tree = fixture_tree(&[("rust/tests/serve.rs", src)]);
+        assert!(check(&tree).is_empty(), "{:?}", check(&tree));
+    }
+
+    #[test]
+    fn production_sleeps_are_not_double_flagged() {
+        let src = "fn prod() { std::thread::sleep(D); }";
+        let tree = fixture_tree(&[("rust/src/net/param.rs", src)]);
+        assert!(check(&tree).is_empty());
+    }
+
+    #[test]
+    fn baselined_fixture_is_suppressed() {
+        let src = "#[test]\nfn t() { std::thread::sleep(Duration::from_millis(150)); }\n";
+        let tree = fixture_tree(&[("rust/tests/dist_net.rs", src)]);
+        let al = AllowList::parse(
+            "R6 rust/tests/dist_net.rs \"from_millis(150)\" scripted restart delay, not a wait\n",
+            "lint.allow",
+        )
+        .unwrap();
+        let (remaining, baselined, stale) = al.apply(check(&tree));
+        assert!(remaining.is_empty());
+        assert_eq!(baselined.len(), 1);
+        assert!(stale.is_empty());
+    }
+}

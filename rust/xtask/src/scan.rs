@@ -1,0 +1,659 @@
+//! Masked-source scanning: the parsing substrate shared by every lint
+//! rule (DESIGN.md §14).
+//!
+//! `syn` is unavailable in the offline container, so this module does
+//! what the hand-rolled TOML subset in `rust/src/config/raw.rs` does
+//! for config files: a small, deterministic, dependency-free scanner
+//! that is exactly strong enough for the invariants we check. The core
+//! trick is *masking* — comments and string contents are blanked to
+//! spaces (newlines preserved) so that token searches, brace matching
+//! and span extraction never trip over `"thread::sleep"` inside a doc
+//! comment. String contents are kept separately for rules that need
+//! them (R1 matches config keys that appear as literals).
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// A string literal in the original source. `start..end` spans the
+/// delimiters; `inner_start..inner_end` spans the content only.
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    pub start: usize,
+    pub end: usize,
+    pub inner_start: usize,
+    pub inner_end: usize,
+}
+
+/// A `fn` item with a body. `sig_start` is the offset of the `fn`
+/// keyword, `body_start..body_end` the byte span between (and
+/// including) the body braces.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub sig_start: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// An `impl` block: the header text (between `impl` and `{`) and the
+/// body span.
+#[derive(Debug, Clone)]
+pub struct ImplSpan {
+    pub header: String,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// One parsed source file.
+pub struct SourceFile {
+    /// Path relative to the repo root, `/`-separated.
+    pub rel: String,
+    /// Original text.
+    pub raw: String,
+    /// Comment- and string-masked text (same length as `raw`).
+    pub masked: String,
+    /// All string literals, in source order.
+    pub strings: Vec<StrLit>,
+    /// `#[cfg(test)]` item spans.
+    pub test_regions: Vec<(usize, usize)>,
+    /// All `fn` items that have a body, in source order.
+    pub fns: Vec<FnSpan>,
+    /// All `impl` blocks, in source order.
+    pub impls: Vec<ImplSpan>,
+    line_starts: Vec<usize>,
+}
+
+pub fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && is_ident_byte(b[i - 1])
+}
+
+/// Blank comments and string contents; return the masked text plus the
+/// extracted string literals.
+pub fn mask(raw: &str) -> (String, Vec<StrLit>) {
+    let b = raw.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut strings = Vec::new();
+    let blank = |out: &mut Vec<u8>, lo: usize, hi: usize| {
+        for p in lo..hi.min(out.len()) {
+            if out[p] != b'\n' {
+                out[p] = b' ';
+            }
+        }
+    };
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            blank(&mut out, start, i);
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i);
+        } else if c == b'"' {
+            let start = i;
+            i += 1;
+            while i < n {
+                if b[i] == b'\\' && i + 1 < n {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    break;
+                }
+                i += 1;
+            }
+            let inner_end = i.min(n);
+            blank(&mut out, start + 1, inner_end);
+            if i < n {
+                i += 1; // consume the closing quote
+            }
+            strings.push(StrLit { start, end: i, inner_start: start + 1, inner_end });
+        } else if c == b'r' && !prev_is_ident(b, i) && raw_string_at(b, i).is_some() {
+            let (inner_start, inner_end, end) = raw_string_at(b, i).unwrap();
+            blank(&mut out, inner_start, inner_end);
+            strings.push(StrLit { start: i, end, inner_start, inner_end });
+            i = end;
+        } else if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char literal: '\n', '\'', '\u{1F600}', ...
+                let start = i;
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                let close = if j < n { j + 1 } else { n };
+                blank(&mut out, start + 1, close.saturating_sub(1));
+                i = close;
+            } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                // simple char literal 'x' — blank the payload so it is
+                // not mistaken for an identifier
+                out[i + 1] = b' ';
+                i += 3;
+            } else {
+                // lifetime — leave intact
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    let masked = String::from_utf8(out).expect("masking preserves utf-8");
+    (masked, strings)
+}
+
+/// If `b[i]` starts a raw string (`r"…"` / `r#"…"#`), return
+/// `(inner_start, inner_end, end)`.
+fn raw_string_at(b: &[u8], i: usize) -> Option<(usize, usize, usize)> {
+    let n = b.len();
+    let mut j = i + 1;
+    let mut hashes = 0usize;
+    while j < n && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || b[j] != b'"' {
+        return None;
+    }
+    let inner_start = j + 1;
+    let mut k = inner_start;
+    while k < n {
+        if b[k] == b'"' {
+            let mut h = 0usize;
+            let mut m = k + 1;
+            while m < n && h < hashes && b[m] == b'#' {
+                h += 1;
+                m += 1;
+            }
+            if h == hashes {
+                return Some((inner_start, k, m));
+            }
+        }
+        k += 1;
+    }
+    Some((inner_start, n, n))
+}
+
+/// Index of the `}` matching the `{` at `open`, if any.
+pub fn match_brace(masked: &str, open: usize) -> Option<usize> {
+    match_delim(masked, open, b'{', b'}')
+}
+
+/// Generic delimiter matcher over masked text.
+pub fn match_delim(masked: &str, open: usize, oc: u8, cc: u8) -> Option<usize> {
+    let b = masked.as_bytes();
+    if open >= b.len() || b[open] != oc {
+        return None;
+    }
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < b.len() {
+        if b[i] == oc {
+            depth += 1;
+        } else if b[i] == cc {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// All identifiers in `masked[lo..hi]` as `(offset, text)` pairs.
+pub fn idents(masked: &str, lo: usize, hi: usize) -> Vec<(usize, &str)> {
+    let b = masked.as_bytes();
+    let hi = hi.min(b.len());
+    let mut v = Vec::new();
+    let mut i = lo;
+    while i < hi {
+        if is_ident_byte(b[i]) && !b[i].is_ascii_digit() && !prev_is_ident(b, i) {
+            let start = i;
+            while i < hi && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            v.push((start, &masked[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    v
+}
+
+/// First occurrence of `w` in `s` with identifier boundaries on both
+/// sides (so `find_word("sleep_ms", "sleep")` is `None`).
+pub fn find_word(s: &str, w: &str) -> Option<usize> {
+    find_word_from(s, w, 0)
+}
+
+/// As [`find_word`], starting the search at byte offset `from`.
+pub fn find_word_from(s: &str, w: &str, mut from: usize) -> Option<usize> {
+    let sb = s.as_bytes();
+    while from <= s.len() {
+        let p = s[from..].find(w)?;
+        let at = from + p;
+        let after = at + w.len();
+        let before_ok = at == 0 || !is_ident_byte(sb[at - 1]);
+        let after_ok = after >= sb.len() || !is_ident_byte(sb[after]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// Whether `s` contains `w` as a whole identifier.
+pub fn has_word(s: &str, w: &str) -> bool {
+    find_word(s, w).is_some()
+}
+
+impl SourceFile {
+    pub fn parse(rel: String, raw: String) -> SourceFile {
+        let (masked, strings) = mask(&raw);
+        let mut line_starts = vec![0usize];
+        for (i, c) in raw.bytes().enumerate() {
+            if c == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        let test_regions = find_test_regions(&masked);
+        let fns = find_fns(&masked);
+        let impls = find_impls(&masked);
+        SourceFile { rel, raw, masked, strings, test_regions, fns, impls, line_starts }
+    }
+
+    /// 1-based line number of byte offset `off`.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_starts.binary_search(&off) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Trimmed original text of 1-based line `line`.
+    pub fn line_text(&self, line: usize) -> &str {
+        let lo = self.line_starts[line - 1];
+        let hi = self
+            .line_starts
+            .get(line)
+            .map(|&h| h.saturating_sub(1))
+            .unwrap_or(self.raw.len());
+        self.raw[lo..hi.max(lo)].trim()
+    }
+
+    /// Whether `off` falls inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, off: usize) -> bool {
+        self.test_regions.iter().any(|&(lo, hi)| off >= lo && off < hi)
+    }
+
+    /// Contents of every string literal that starts in `[lo, hi)`.
+    pub fn strings_in(&self, lo: usize, hi: usize) -> Vec<&str> {
+        self.strings
+            .iter()
+            .filter(|s| s.start >= lo && s.start < hi)
+            .map(|s| &self.raw[s.inner_start..s.inner_end])
+            .collect()
+    }
+
+    /// Innermost `fn` whose body contains `off`.
+    pub fn enclosing_fn(&self, off: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| off >= f.body_start && off < f.body_end)
+            .min_by_key(|f| f.body_end - f.body_start)
+    }
+
+    /// Whether `off` is lexically inside a `while`/`for`/`loop` block
+    /// that opened at or after `from`. Used by R6: a sleep that paces a
+    /// polling loop is fine, a bare sleep that stands in for a
+    /// condition is not.
+    pub fn inside_loop(&self, from: usize, off: usize) -> bool {
+        let b = self.masked.as_bytes();
+        let mut stack: Vec<bool> = Vec::new();
+        let mut i = from;
+        while i < off && i < b.len() {
+            match b[i] {
+                b'{' => stack.push(self.is_loop_brace(i)),
+                b'}' => {
+                    stack.pop();
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        stack.iter().any(|&l| l)
+    }
+
+    /// Whether the `{` at `open` begins a loop body: scan back to the
+    /// previous statement boundary and look for a loop keyword.
+    fn is_loop_brace(&self, open: usize) -> bool {
+        let b = self.masked.as_bytes();
+        let mut j = open;
+        while j > 0 {
+            j -= 1;
+            if matches!(b[j], b';' | b'{' | b'}') {
+                j += 1;
+                break;
+            }
+        }
+        let head = &self.masked[j..open];
+        has_word(head, "while") || has_word(head, "for") || has_word(head, "loop")
+    }
+}
+
+/// Spans of `#[cfg(test)]` items (attribute through closing brace or
+/// semicolon).
+fn find_test_regions(masked: &str) -> Vec<(usize, usize)> {
+    let b = masked.as_bytes();
+    let mut regions = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = masked[from..].find("#[cfg(test)]") {
+        let at = from + p;
+        let mut j = at + "#[cfg(test)]".len();
+        // skip whitespace and any further attributes
+        loop {
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j + 1 < b.len() && b[j] == b'#' && b[j + 1] == b'[' {
+                match match_delim(masked, j + 1, b'[', b']') {
+                    Some(close) => j = close + 1,
+                    None => break,
+                }
+            } else {
+                break;
+            }
+        }
+        // the item ends at the first top-level `{…}` or `;`
+        let mut depth = 0i32;
+        let mut end = masked.len();
+        let mut k = j;
+        while k < b.len() {
+            match b[k] {
+                b'(' | b'[' | b'<' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'>' => {
+                    if k > 0 && b[k - 1] != b'-' && b[k - 1] != b'=' {
+                        depth -= 1;
+                    }
+                }
+                b';' if depth <= 0 => {
+                    end = k + 1;
+                    break;
+                }
+                b'{' => {
+                    end = match_brace(masked, k).map(|c| c + 1).unwrap_or(masked.len());
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        regions.push((at, end));
+        from = end.max(at + 1);
+    }
+    regions
+}
+
+/// All `fn` items that have a body.
+fn find_fns(masked: &str) -> Vec<FnSpan> {
+    let b = masked.as_bytes();
+    let mut out = Vec::new();
+    for (off, word) in idents(masked, 0, masked.len()) {
+        if word != "fn" {
+            continue;
+        }
+        // the name is the next identifier; `fn(` pointer types have none
+        let mut j = off + 2;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j >= b.len() || !is_ident_byte(b[j]) || b[j].is_ascii_digit() {
+            continue;
+        }
+        let name_start = j;
+        while j < b.len() && is_ident_byte(b[j]) {
+            j += 1;
+        }
+        let name = masked[name_start..j].to_string();
+        // find the body `{`, tracking (), [], <> so that a `{` inside a
+        // where-clause bound or default argument never fools us
+        let mut depth = 0i32;
+        let mut body = None;
+        let mut k = j;
+        while k < b.len() {
+            match b[k] {
+                b'(' | b'[' | b'<' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'>' => {
+                    if k > 0 && b[k - 1] != b'-' && b[k - 1] != b'=' {
+                        depth -= 1;
+                    }
+                }
+                b';' if depth <= 0 => break, // bodyless declaration
+                b'{' if depth <= 0 => {
+                    body = Some(k);
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        if let Some(open) = body {
+            if let Some(close) = match_brace(masked, open) {
+                out.push(FnSpan { name, sig_start: off, body_start: open, body_end: close + 1 });
+            }
+        }
+    }
+    out
+}
+
+/// All `impl` blocks.
+fn find_impls(masked: &str) -> Vec<ImplSpan> {
+    let b = masked.as_bytes();
+    let mut out = Vec::new();
+    for (off, word) in idents(masked, 0, masked.len()) {
+        if word != "impl" {
+            continue;
+        }
+        // `impl` in type position (`-> impl Iterator`) is preceded by
+        // non-item context; a real block follows `;`, `}`, `{`, `]`,
+        // start-of-file, or the `unsafe` keyword
+        let mut j = off;
+        while j > 0 && b[j - 1].is_ascii_whitespace() {
+            j -= 1;
+        }
+        let item_pos = j == 0
+            || matches!(b[j - 1], b';' | b'}' | b'{' | b']')
+            || masked[..j].ends_with("unsafe");
+        if !item_pos {
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut k = off + 4;
+        while k < b.len() {
+            match b[k] {
+                b'(' | b'[' | b'<' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'>' => {
+                    if k > 0 && b[k - 1] != b'-' && b[k - 1] != b'=' {
+                        depth -= 1;
+                    }
+                }
+                b';' if depth <= 0 => break,
+                b'{' if depth <= 0 => {
+                    if let Some(close) = match_brace(masked, k) {
+                        out.push(ImplSpan {
+                            header: masked[off..k].trim().to_string(),
+                            body_start: k,
+                            body_end: close + 1,
+                        });
+                    }
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+    out
+}
+
+/// The scanned `rust/src` + `rust/tests` tree.
+pub struct Tree {
+    pub files: Vec<SourceFile>,
+}
+
+impl Tree {
+    /// Scan every `.rs` file under `rust/src` and `rust/tests`,
+    /// sorted so output ordering is deterministic.
+    pub fn load(root: &Path) -> io::Result<Tree> {
+        let mut paths = Vec::new();
+        for sub in ["rust/src", "rust/tests"] {
+            let dir = root.join(sub);
+            if dir.is_dir() {
+                walk(&dir, &mut paths)?;
+            }
+        }
+        let mut files = Vec::new();
+        for p in paths {
+            let raw = fs::read_to_string(&p)?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            files.push(SourceFile::parse(rel, raw));
+        }
+        Ok(Tree { files })
+    }
+
+    /// Look up a file by exact repo-relative path.
+    pub fn file(&self, rel: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.rel == rel)
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Build an in-memory tree from `(rel_path, source)` pairs — the
+/// fixture harness used by every rule's tests.
+#[cfg(test)]
+pub fn fixture_tree(files: &[(&str, &str)]) -> Tree {
+    Tree {
+        files: files
+            .iter()
+            .map(|(rel, src)| SourceFile::parse(rel.to_string(), src.to_string()))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_blanks_comments_and_strings_preserving_layout() {
+        let src = "let a = \"thread::sleep\"; // thread::sleep\nlet b = 1;\n";
+        let (masked, strings) = mask(src);
+        assert_eq!(masked.len(), src.len());
+        assert!(!masked.contains("thread::sleep"));
+        assert!(masked.contains("let b = 1;"));
+        assert_eq!(strings.len(), 1);
+        assert_eq!(&src[strings[0].inner_start..strings[0].inner_end], "thread::sleep");
+    }
+
+    #[test]
+    fn masking_handles_char_literals_and_lifetimes() {
+        let (masked, _) = mask("fn f<'a>(x: &'a str) -> char { '\"' }");
+        // the quote char literal must not open a string
+        assert!(masked.contains("str"));
+        let (masked2, strings2) = mask("let c = 'x'; let s = \"ab\";");
+        assert!(!masked2.contains('x'));
+        assert_eq!(strings2.len(), 1);
+    }
+
+    #[test]
+    fn masking_handles_nested_block_comments_and_raw_strings() {
+        let (masked, _) = mask("/* outer /* inner */ still */ fn ok() {}");
+        assert!(masked.contains("fn ok"));
+        assert!(!masked.contains("outer"));
+        let (masked2, strings2) = mask("let r = r#\"panic!(\"x\")\"#; fn g() {}");
+        assert!(!masked2.contains("panic"));
+        assert_eq!(strings2.len(), 1);
+        assert!(masked2.contains("fn g"));
+    }
+
+    #[test]
+    fn fn_and_test_region_spans() {
+        let src = "fn prod() { a(); }\n#[cfg(test)]\nmod tests {\n    fn t() { b(); }\n}\n";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        assert_eq!(f.fns.len(), 2);
+        assert_eq!(f.fns[0].name, "prod");
+        assert_eq!(f.test_regions.len(), 1);
+        let t_off = f.masked.find("b()").unwrap();
+        assert!(f.in_test(t_off));
+        assert!(!f.in_test(f.masked.find("a()").unwrap()));
+    }
+
+    #[test]
+    fn fn_body_found_past_return_types_and_where_clauses() {
+        let src = "fn g<F>(f: F) -> Vec<u8> where F: FnMut() -> bool { body() }";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        assert_eq!(f.fns.len(), 1);
+        let span = &f.fns[0];
+        assert!(f.masked[span.body_start..span.body_end].contains("body()"));
+    }
+
+    #[test]
+    fn loop_detection_is_lexical() {
+        let src = "fn f() { while go() { step(); } after(); for x in v { y(); } }";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        let body = f.fns[0].body_start;
+        assert!(f.inside_loop(body, f.masked.find("step").unwrap()));
+        assert!(!f.inside_loop(body, f.masked.find("after").unwrap()));
+        assert!(f.inside_loop(body, f.masked.find("y()").unwrap()));
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(has_word("thread::sleep(d)", "sleep"));
+        assert!(!has_word("sleep_interruptible(d)", "sleep"));
+        assert!(find_word("max_train_steps", "train_steps").is_none());
+    }
+}
